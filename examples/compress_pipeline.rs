@@ -1,0 +1,58 @@
+//! End-to-end driver (the DESIGN.md §end-to-end validation run):
+//! load the build-time-trained transformer, stream calibration through
+//! the PJRT artifacts, compress every projection with COALA at several
+//! ratios, and report perplexity + probe-task accuracy before/after —
+//! against the SVD-LLM baseline.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example compress_pipeline
+//! ```
+
+use coala::calib::dataset::{Corpus, TaskBank};
+use coala::coala::{Method, MuRule};
+use coala::coordinator::{CompressionJob, Pipeline};
+use coala::eval::{eval_tasks, perplexity};
+use coala::model::ModelWeights;
+use coala::runtime::Executor;
+
+fn main() -> coala::Result<()> {
+    let ex = Executor::new("artifacts")?;
+    let corpus = Corpus::load("artifacts")?;
+    let spec = ex.manifest.config("tiny")?.clone();
+    let weights = ModelWeights::load("artifacts", &spec)?;
+    let bank = TaskBank::load("artifacts", "base", &ex.manifest.task_names)?;
+
+    println!(
+        "model `tiny`: {} params, pretrain loss {:.2} → {:.2}, build ppl {:.2}",
+        weights.param_count(),
+        weights.pretrain_loss.first().unwrap_or(&f32::NAN),
+        weights.pretrain_loss.last().unwrap_or(&f32::NAN),
+        weights.build_val_ppl
+    );
+    let val = corpus.split("val")?;
+    let base_ppl = perplexity(&ex, &spec, &weights, val, 4)?;
+    let base_acc = eval_tasks(&ex, &spec, &weights, &bank, Some(256))?.average();
+    println!("baseline: ppl {base_ppl:.2}, probe avg {base_acc:.1}%\n");
+
+    let pipe = Pipeline::new(&ex, spec.clone(), &weights);
+    for ratio in [0.8, 0.5, 0.3] {
+        for (label, method) in [
+            ("COALA(λ=3)", Method::Coala(MuRule::Adaptive { lambda: 3.0 })),
+            ("SVD-LLM", Method::SvdLlm),
+        ] {
+            let mut job = CompressionJob::new("tiny", method, ratio);
+            job.calib_batches = 4;
+            let out = pipe.run(&job, &corpus)?;
+            let rec = out.model.reconstruct_into(&weights)?;
+            let ppl = perplexity(&ex, &spec, &rec, val, 4)?;
+            let acc = eval_tasks(&ex, &spec, &rec, &bank, Some(256))?.average();
+            println!(
+                "{label:<12} keep {:>3.0}%: ppl {ppl:7.2}  acc {acc:5.1}%  ({:.1}s, achieved {:.3})",
+                ratio * 100.0,
+                out.timings.total_s,
+                out.model.achieved_ratio(&weights, &spec),
+            );
+        }
+    }
+    Ok(())
+}

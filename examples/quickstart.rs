@@ -1,0 +1,40 @@
+//! Quickstart: factor one weight matrix with COALA in 30 lines.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use coala::coala::coala_from_x;
+use coala::tensor::ops::context_rel_err;
+use coala::tensor::Matrix;
+
+fn main() -> coala::Result<()> {
+    // a weight matrix and some calibration activations X (n × k)
+    let w: Matrix<f64> = Matrix::randn(64, 48, 1);
+    let x: Matrix<f64> = Matrix::randn(48, 400, 2);
+
+    // Algorithm 1: QR of Xᵀ → SVD of W·Rᵀ → W′ = U_r U_rᵀ W.
+    // No Gram matrix, no inversion, no rank assumptions on X.
+    let full = coala_from_x(&w, &x, 30)?;
+
+    for rank in [4, 8, 16, 32] {
+        let f = full.truncate(rank);
+        let err = context_rel_err(&w, &f.reconstruct()?, &x)?;
+        println!(
+            "rank {rank:>2}: ‖(W−W′)X‖/‖WX‖ = {err:.4}   ({} → {} params)",
+            w.rows * w.cols,
+            f.param_count()
+        );
+    }
+
+    // the regularized variant (Alg. 2) for low-data robustness:
+    let x_tiny: Matrix<f64> = Matrix::randn(48, 12, 3); // fewer samples than dims!
+    let r = coala::linalg::qr_r_square(&x_tiny.transpose())?;
+    let f = coala::coala::coala_regularized(&w, &r, 1e-2, 30)?.truncate(8);
+    println!(
+        "low-data (k=12 < n=48) with μ=1e-2: finite={} err={:.4}",
+        f.a.all_finite(),
+        context_rel_err(&w, &f.reconstruct()?, &x_tiny)?
+    );
+    Ok(())
+}

@@ -1,0 +1,87 @@
+"""L2: low-rank adapter (LoRA-style) fine-tuning graphs — Table 4 substrate.
+
+The PEFT-initialization experiment adapts a frozen base model with rank-r
+factors per projection:  W_eff = W_res + A·B  (A: out×r, B: r×in).  The
+*initialization* of (A, B, W_res) is what differs between LoRA / PiSSA /
+CorDA / COALA-α — that part happens in the rust coordinator using the
+factorization artifacts; the graphs here only do the generic adapted
+forward + one Adam step over the adapters, exported as
+`ft_step_<cfg>_r<r>` / `ft_logits_<cfg>_r<r>`.
+
+Adapter ABI (order matters — recorded in the manifest):
+  frozen params  : cfg.param_names() order (projections hold W_res)
+  adapters       : for each cfg.compressible() projection, A then B
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+
+
+def adapter_shapes(cfg: M.ModelConfig, rank: int) -> list[tuple[str, tuple[int, int]]]:
+    """Ordered [(name, shape)] list: '<proj>.A' (out, r), '<proj>.B' (r, in)."""
+    shapes = cfg.param_shapes()
+    out = []
+    for proj in cfg.compressible():
+        o, i = shapes[proj]
+        out.append((f"{proj}.A", (o, rank)))
+        out.append((f"{proj}.B", (rank, i)))
+    return out
+
+
+def _layer_adapted(cfg, frozen, adapters, i, h):
+    def proj(x, name):
+        w = frozen[f"l{i}.{name}"]
+        a = adapters[f"l{i}.{name}.A"]
+        b = adapters[f"l{i}.{name}.B"]
+        return x @ w.T + (x @ b.T) @ a.T
+
+    x_attn = M.rms_norm(h, frozen[f"l{i}.ln1"])
+    q, k, v = proj(x_attn, "wq"), proj(x_attn, "wk"), proj(x_attn, "wv")
+    mix = M._attention(cfg, q, k, v)
+    h = h + proj(mix, "wo")
+    x_up = M.rms_norm(h, frozen[f"l{i}.ln2"])
+    up = jax.nn.gelu(proj(x_up, "w_up"))
+    h = h + proj(up, "w_down")
+    return h
+
+
+def forward_adapted(cfg: M.ModelConfig, frozen, adapters, tokens):
+    h = jnp.take(frozen["tok_emb"], tokens, axis=0) + frozen["pos_emb"][None, : tokens.shape[1]]
+    for i in range(cfg.n_layers):
+        h = _layer_adapted(cfg, frozen, adapters, i, h)
+    h = M.rms_norm(h, frozen["ln_f"])
+    return h @ frozen["lm_head"].T
+
+
+def loss_adapted(cfg: M.ModelConfig, frozen, adapters, tokens):
+    # one-hot instead of take_along_axis: see model.loss_fn (conformance)
+    logits = forward_adapted(cfg, frozen, adapters, tokens[:, :-1])
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(targets, cfg.vocab, dtype=logp.dtype)
+    return -jnp.mean(jnp.sum(logp * onehot, axis=-1))
+
+
+def adapter_train_step(cfg: M.ModelConfig, frozen, adapters, m, v, tokens, lr, step):
+    """One Adam step on the adapters only (frozen base untouched).
+
+    Returns (loss, adapters′, m′, v′).  ``lr`` and ``step`` are traced
+    scalars so the rust trainer controls schedule + bias correction.
+    """
+    b1, b2, eps = 0.9, 0.95, 1e-8
+    loss, grads = jax.value_and_grad(lambda a: loss_adapted(cfg, frozen, a, tokens))(adapters)
+    t = step + 1.0
+    new_a, new_m, new_v = {}, {}, {}
+    for k in adapters:
+        g = grads[k]
+        m_k = b1 * m[k] + (1 - b1) * g
+        v_k = b2 * v[k] + (1 - b2) * g * g
+        mhat = m_k / (1 - b1**t)
+        vhat = v_k / (1 - b2**t)
+        new_a[k] = adapters[k] - lr * mhat / (jnp.sqrt(vhat) + eps)
+        new_m[k], new_v[k] = m_k, v_k
+    return loss, new_a, new_m, new_v

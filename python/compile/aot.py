@@ -1,0 +1,357 @@
+"""AOT entry point: lower every compute graph to HLO **text** + build data.
+
+`make artifacts` runs `python -m compile.aot --out-dir ../artifacts` once;
+after that the rust binary is fully self-contained.  Interchange is HLO
+text (NOT `lowered.compiler_ir(...).serialize()`): jax ≥ 0.5 emits protos
+with 64-bit instruction ids that the pinned xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Outputs (all under artifacts/):
+  <name>.hlo.txt      one per compute-graph × shape variant
+  manifest.json       name → file + input/output specs + model configs
+  weights_<cfg>.cbt   trained parameters (+ pretrain loss curve)
+  corpus.cbt          train/val/calib/ft token streams
+  tasks.cbt           probe-task banks (base + fine-tune fact sets)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import adapters as A
+from . import coala as C
+from . import data as D
+from . import linalg as L
+from . import model as M
+from . import pretrain as P
+from . import serialize
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+ABI_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+class Emitter:
+    """Collects lowered artifacts + their manifest entries."""
+
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.entries: dict[str, dict] = {}
+        os.makedirs(out_dir, exist_ok=True)
+
+    def emit(self, name: str, fn, arg_specs: list, arg_names: list[str]):
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        out_tree = jax.eval_shape(fn, *arg_specs)
+        flat_out, _ = jax.tree.flatten(out_tree)
+        self.entries[name] = {
+            "file": fname,
+            "inputs": [
+                {
+                    "name": n,
+                    "dtype": str(s.dtype),
+                    "shape": list(s.shape),
+                }
+                for n, s in zip(arg_names, arg_specs)
+            ],
+            "outputs": [
+                {"dtype": str(o.dtype), "shape": list(o.shape)} for o in flat_out
+            ],
+        }
+        print(
+            f"  [aot] {name:<28} {len(text)/1024:8.1f} KiB  "
+            f"in={len(arg_specs):3d} out={len(flat_out):3d}  ({time.time()-t0:.1f}s)",
+            flush=True,
+        )
+
+
+# ---------------------------------------------------------------------------
+# per-config artifact families
+# ---------------------------------------------------------------------------
+
+
+def sweeps_for(n: int) -> int:
+    """Jacobi sweep count per problem size (validated in python/tests)."""
+    return 8 if n >= 512 else 10
+
+
+def emit_model_artifacts(em: Emitter, cfg: M.ModelConfig):
+    names = cfg.param_names()
+    shapes = cfg.param_shapes()
+    param_specs = [spec(shapes[n]) for n in names]
+    tok_spec = spec((cfg.batch, cfg.seq_len), I32)
+    tok1_spec = spec((cfg.batch, cfg.seq_len + 1), I32)
+
+    def fwd_logits(tokens, *flat):
+        return M.forward(cfg, M.list_to_params(cfg, list(flat)), tokens)
+
+    def fwd_acts(tokens, *flat):
+        logits, acts = M.forward_with_acts(cfg, M.list_to_params(cfg, list(flat)), tokens)
+        flat_acts = [acts[i][s] for i in range(cfg.n_layers) for s in M.ACT_STREAMS]
+        return (logits, *flat_acts)
+
+    def loss(tokens, *flat):
+        return M.loss_fn(cfg, M.list_to_params(cfg, list(flat)), tokens)
+
+    arg_names = ["tokens", *names]
+    em.emit(f"fwd_logits_{cfg.name}", fwd_logits, [tok_spec, *param_specs], arg_names)
+    em.emit(f"fwd_acts_{cfg.name}", fwd_acts, [tok_spec, *param_specs], arg_names)
+    em.emit(f"loss_{cfg.name}", loss, [tok1_spec, *param_specs], arg_names)
+
+
+def emit_factorize_artifacts(em: Emitter, cfg: M.ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    c = cfg.batch * cfg.seq_len  # calibration chunk = one forward batch
+    widths = sorted({d, f})
+    pairs = sorted({(d, d), (d, f), (f, d)})
+
+    for n in widths:
+        sw = sweeps_for(n)
+        em.emit(
+            f"tsqr_step_{n}x{c}",
+            lambda r, x: L.tsqr_step(r, x),
+            [spec((n, n)), spec((c, n))],
+            ["r_prev", "xt_chunk"],
+        )
+        em.emit(
+            f"tsqr_merge_{n}",
+            lambda ra, rb: L.tsqr_merge(ra, rb),
+            [spec((n, n)), spec((n, n))],
+            ["r_a", "r_b"],
+        )
+        em.emit(
+            f"qr_aug_{n}",
+            lambda r, mu: C.regularized_r(r, mu),
+            [spec((n, n)), spec((), F32)],
+            ["r", "mu"],
+        )
+        em.emit(
+            f"gram_update_{n}x{c}",
+            lambda g, x: C.mm.tiled_matmul(x.T, x) + g,
+            [spec((n, n)), spec((c, n))],
+            ["g", "xt_chunk"],
+        )
+
+    for m, n in pairs:
+        sw = sweeps_for(max(m, n))
+        p = min(m, n)
+        em.emit(
+            f"factorize_{m}x{n}",
+            lambda w, r, _s=sw: C.coala_factorize(w, r, sweeps=_s),
+            [spec((m, n)), spec((n, n))],
+            ["w", "r"],
+        )
+        em.emit(
+            f"factorize_reg_{m}x{n}",
+            lambda w, r, mu, _s=sw: C.coala_factorize_regularized(w, r, mu, sweeps=_s),
+            [spec((m, n)), spec((n, n)), spec((), F32)],
+            ["w", "r", "mu"],
+        )
+        em.emit(
+            f"alpha2_{m}x{n}",
+            lambda w, r, _s=sw: C.alpha_factorize(w, r, 2, sweeps=_s),
+            [spec((m, n)), spec((n, n))],
+            ["w", "r"],
+        )
+        em.emit(
+            f"plainsvd_{m}x{n}",
+            lambda w, _s=sw: C.plain_svd_factorize(w, sweeps=_s),
+            [spec((m, n))],
+            ["w"],
+        )
+        em.emit(
+            f"mu_terms_{m}x{n}",
+            lambda w, u, pp, r, mask: C.mu_from_lambda(w, u, pp, r, mask),
+            [spec((m, n)), spec((m, p)), spec((p, n)), spec((n, n)), spec((p,))],
+            ["w", "u", "p", "r", "rank_mask"],
+        )
+        em.emit(
+            f"svdllm_{m}x{n}",
+            lambda w, g, _s=sw: C.svdllm_factorize(w, g, sweeps=_s),
+            [spec((m, n)), spec((n, n))],
+            ["w", "gram"],
+        )
+        em.emit(
+            f"svdllm2_{m}x{n}",
+            lambda w, g, _s=sw: C.svdllm_v2_factorize(w, g, sweeps=_s),
+            [spec((m, n)), spec((n, n))],
+            ["w", "gram"],
+        )
+        em.emit(
+            f"corda_{m}x{n}",
+            lambda w, g, _s=sw: C.corda_unrobust(w, g, sweeps=_s),
+            [spec((m, n)), spec((n, n))],
+            ["w", "gram"],
+        )
+        em.emit(
+            f"asvd_{m}x{n}",
+            lambda w, s, _s=sw: C.asvd_factorize(w, s, sweeps=_s),
+            [spec((m, n)), spec((n,))],
+            ["w", "col_scales"],
+        )
+
+
+def emit_finetune_artifacts(em: Emitter, cfg: M.ModelConfig, rank: int):
+    names = cfg.param_names()
+    shapes = cfg.param_shapes()
+    ad_shapes = A.adapter_shapes(cfg, rank)
+    ad_names = [n for n, _ in ad_shapes]
+    frozen_specs = [spec(shapes[n]) for n in names]
+    ad_specs = [spec(s) for _, s in ad_shapes]
+    tok1_spec = spec((cfg.batch, cfg.seq_len + 1), I32)
+    tok_spec = spec((cfg.batch, cfg.seq_len), I32)
+
+    n_f, n_a = len(names), len(ad_names)
+
+    def ft_step(tokens, lr, step, *flat):
+        frozen = M.list_to_params(cfg, list(flat[:n_f]))
+        ads = dict(zip(ad_names, flat[n_f : n_f + n_a]))
+        m = dict(zip(ad_names, flat[n_f + n_a : n_f + 2 * n_a]))
+        v = dict(zip(ad_names, flat[n_f + 2 * n_a :]))
+        loss, a2, m2, v2 = A.adapter_train_step(cfg, frozen, ads, m, v, tokens, lr, step)
+        return (
+            loss,
+            *[a2[k] for k in ad_names],
+            *[m2[k] for k in ad_names],
+            *[v2[k] for k in ad_names],
+        )
+
+    def ft_logits(tokens, *flat):
+        frozen = M.list_to_params(cfg, list(flat[:n_f]))
+        ads = dict(zip(ad_names, flat[n_f:]))
+        return A.forward_adapted(cfg, frozen, ads, tokens)
+
+    em.emit(
+        f"ft_step_{cfg.name}_r{rank}",
+        ft_step,
+        [tok1_spec, spec((), F32), spec((), F32), *frozen_specs, *ad_specs, *ad_specs, *ad_specs],
+        ["tokens", "lr", "step", *names, *ad_names,
+         *[f"m.{n}" for n in ad_names], *[f"v.{n}" for n in ad_names]],
+    )
+    em.emit(
+        f"ft_logits_{cfg.name}_r{rank}",
+        ft_logits,
+        [tok_spec, *frozen_specs, *ad_specs],
+        ["tokens", *names, *ad_names],
+    )
+
+
+# ---------------------------------------------------------------------------
+# data + weights
+# ---------------------------------------------------------------------------
+
+
+def build_data(out_dir: str, seq_len: int):
+    lang = D.SyntheticLanguage(D.LanguageSpec(), fact_seed=0)
+    lang_ft = D.SyntheticLanguage(D.LanguageSpec(), fact_seed=1)
+
+    splits = D.build_splits(lang, seq_len, train_tokens=600_000, val_tokens=60_000, calib_tokens=120_000)
+    ft_train = lang_ft.sample_stream(120_000, seed=404)
+    ft_calib = lang_ft.sample_stream(24 * seq_len, seed=505)  # 24 examples: low-data regime
+    corpus = {**splits, "ft_train": ft_train, "ft_calib": ft_calib}
+    serialize.save_cbt(os.path.join(out_dir, "corpus.cbt"), corpus)
+
+    tasks_base = lang.make_tasks(seq_len, per_task=64, seed=606)
+    tasks_ft = lang_ft.make_tasks(seq_len, per_task=64, seed=707)
+    tasks = {f"base.{k}": v for k, v in tasks_base.items()}
+    tasks.update({f"ft.{k}": v for k, v in tasks_ft.items()})
+    tasks["task_names"] = np.arange(len(D.TASK_NAMES), dtype=np.int32)  # names in manifest
+    serialize.save_cbt(os.path.join(out_dir, "tasks.cbt"), tasks)
+    print(f"  [aot] corpus.cbt + tasks.cbt written ({len(splits['train'])} train tokens)")
+    return corpus
+
+
+def build_weights(out_dir: str, cfg: M.ModelConfig, corpus, steps: int):
+    path = os.path.join(out_dir, f"weights_{cfg.name}.cbt")
+    if os.path.exists(path):
+        print(f"  [aot] {path} exists — skipping pretrain")
+        return
+    params, losses = P.pretrain(cfg, corpus["train"], steps=steps)
+    ppl = P.eval_ppl(cfg, params, corpus["val"])
+    print(f"  [aot] {cfg.name}: val ppl {ppl:.2f} (uniform would be {cfg.vocab})")
+    tensors = {k: np.asarray(v) for k, v in params.items()}
+    tensors["pretrain_loss"] = losses
+    tensors["val_ppl"] = np.array([ppl], np.float32)
+    serialize.save_cbt(path, tensors)
+
+
+# ---------------------------------------------------------------------------
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--configs", default="tiny,small")
+    ap.add_argument("--steps", type=int, default=700)
+    ap.add_argument("--ft-rank", type=int, default=8)
+    ap.add_argument("--skip-train", action="store_true")
+    args = ap.parse_args()
+
+    em = Emitter(args.out_dir)
+    cfgs = [M.CONFIGS[c] for c in args.configs.split(",")]
+
+    corpus = build_data(args.out_dir, cfgs[0].seq_len)
+    for cfg in cfgs:
+        if not args.skip_train:
+            build_weights(args.out_dir, cfg, corpus, steps=args.steps)
+        emit_model_artifacts(em, cfg)
+        emit_factorize_artifacts(em, cfg)
+    emit_finetune_artifacts(em, cfgs[0], args.ft_rank)
+
+    manifest = {
+        "abi_version": ABI_VERSION,
+        "task_names": D.TASK_NAMES,
+        "configs": {
+            cfg.name: {
+                "vocab": cfg.vocab,
+                "d_model": cfg.d_model,
+                "n_layers": cfg.n_layers,
+                "n_heads": cfg.n_heads,
+                "d_ff": cfg.d_ff,
+                "seq_len": cfg.seq_len,
+                "batch": cfg.batch,
+                "param_names": cfg.param_names(),
+                "param_shapes": {k: list(v) for k, v in cfg.param_shapes().items()},
+                "compressible": cfg.compressible(),
+                "proj_input_stream": M.PROJ_INPUT_STREAM,
+                "act_streams": list(M.ACT_STREAMS),
+                "weights_file": f"weights_{cfg.name}.cbt",
+            }
+            for cfg in cfgs
+        },
+        "ft_rank": args.ft_rank,
+        "artifacts": em.entries,
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {len(em.entries)} artifacts + manifest to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

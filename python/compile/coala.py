@@ -1,0 +1,197 @@
+"""L2: COALA factorization graphs (Alg. 1 / Alg. 2 / Prop. 4) + baselines.
+
+Every function here is pure jnp/lax over the hand-rolled numerics in
+``linalg`` so the whole graph lowers to plain HLO for the rust runtime.
+
+Rank is *not* an argument: each graph returns full-size factors
+(U, σ, P = UᵀW or B = ΣVᵀS⁻¹) and the rust coordinator slices the first
+r rows/columns host-side.  That keeps one compiled executable per matrix
+*shape* instead of per (shape, rank) pair — the rank sweep in Fig. 1 then
+reuses a single artifact.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import linalg
+from .kernels import matmul as mm
+
+
+def _svd_any(a: jax.Array, sweeps: int = 12):
+    """Jacobi SVD for any aspect ratio (transpose trick for wide inputs)."""
+    m, n = a.shape
+    if m >= n:
+        return linalg.jacobi_svd(a, sweeps=sweeps)
+    v, s, u = linalg.jacobi_svd(a.T, sweeps=sweeps)
+    return u, s, v
+
+
+# ---------------------------------------------------------------------------
+# COALA (this paper)
+# ---------------------------------------------------------------------------
+
+
+def coala_factorize(w: jax.Array, r_factor: jax.Array, sweeps: int = 12):
+    """Alg. 1 core given the preprocessed R (RᵀR = XXᵀ): inversion-free.
+
+    w        : (m, n) weight matrix.
+    r_factor : (n, n) upper-triangular R from (TS)QR of Xᵀ.
+    Returns (U, σ, P) with  WRᵀ = U·diag(σ)·Vᵀ  and  P = UᵀW.
+    The rank-r approximation is  W'_r = U[:, :r] · P[:r, :]  — no Gram
+    matrix, no inversion, no full-column-rank assumption on X.
+    """
+    wr_t = mm.tiled_matmul(w, r_factor.T)  # (m, n) — L1 hot spot
+    u, sigma, _v = _svd_any(wr_t, sweeps=sweeps)
+    p = mm.tiled_matmul(u.T, w)  # (min(m,n), n)
+    return u, sigma, p
+
+
+def coala_factorize_from_x(w: jax.Array, x: jax.Array, sweeps: int = 12):
+    """Alg. 1 end-to-end from raw X (n × k): QR preprocessing + core."""
+    r = linalg.qr_r_square(x.T)
+    return coala_factorize(w, r, sweeps=sweeps)
+
+
+def regularized_r(r_factor: jax.Array, mu: jax.Array) -> jax.Array:
+    """Alg. 2 absorbed into the R factor.
+
+    Prop. 3: the regularized problem is the plain problem with
+    X̃ = [X  √μ·I].  Since only RᵀR = X̃X̃ᵀ = XXᵀ + μI matters
+    (Prop. 2 remark), we re-factor [R ; √μ·I] — an (2n × n) QR instead of
+    touching the raw calibration stream again.  μ is a runtime *input*
+    (traced scalar), so one artifact serves the whole λ sweep of Fig. 5.
+    """
+    n = r_factor.shape[0]
+    aug = jnp.concatenate(
+        [r_factor, jnp.sqrt(mu) * jnp.eye(n, dtype=r_factor.dtype)], axis=0
+    )
+    return linalg.qr_r_square(aug)
+
+
+def coala_factorize_regularized(
+    w: jax.Array, r_factor: jax.Array, mu: jax.Array, sweeps: int = 12
+):
+    """Alg. 2: regularized COALA = Alg. 1 on the μ-augmented R."""
+    return coala_factorize(w, regularized_r(r_factor, mu), sweeps=sweeps)
+
+
+def mu_from_lambda(
+    w: jax.Array, u: jax.Array, p: jax.Array, r_factor: jax.Array, rank_mask: jax.Array
+):
+    """Eq. (5) numerator/denominator for the layer-adaptive μ rule.
+
+    Given the *unregularized* solution factors (U, P) and a 0/1 mask over
+    the spectrum selecting the first r directions, returns
+    (‖W₀X − WX‖²_F, ‖W₀ − W‖²_F);  μ = λ · num / den.
+    ‖·X‖ is evaluated through R (‖AX‖_F = ‖ARᵀ‖_F), so no raw X needed.
+    """
+    w0 = mm.tiled_matmul(u * rank_mask[None, :], p)  # U_r P_r with masked columns
+    diff = w0 - w
+    num = jnp.sum(mm.tiled_matmul(diff, r_factor.T) ** 2)
+    den = jnp.sum(diff**2)
+    return num, den
+
+
+# ---------------------------------------------------------------------------
+# Prop. 4 α-family (PiSSA α=0, new method α=1, robust CorDA α=2)
+# ---------------------------------------------------------------------------
+
+
+def alpha_factorize(w: jax.Array, r_factor: jax.Array, alpha: int, sweeps: int = 12):
+    """min tr((W−W')(XXᵀ)^α(W−W')ᵀ) solved inversion-free (Prop. 4).
+
+    α = 0 → PiSSA (plain SVD of W); α = 1 → the paper's new method
+    (≡ Alg. 1); α = 2 → robustified CorDA.  All three reduce to an SVD of
+    W·(XXᵀ)^{α/2}·(rotation):  since only the *left* singular vectors are
+    used (W' = U_rU_rᵀW, Prop. 4), any M with M·Mᵀ = W(XXᵀ)^αWᵀ gives the
+    same U — so α=1 uses W·Rᵀ and α=2 uses W·RᵀR (RᵀR = XXᵀ from QR of
+    Xᵀ), and no Gram matrix, square root, or inversion ever appears.
+    Returns (U, σ, P = UᵀW).
+    """
+    if alpha == 0:
+        target = w
+    elif alpha == 1:
+        target = mm.tiled_matmul(w, r_factor.T)
+    elif alpha == 2:
+        target = mm.tiled_matmul(mm.tiled_matmul(w, r_factor.T), r_factor)
+    else:
+        raise ValueError(f"alpha ∈ {{0, 1, 2}} supported, got {alpha}")
+    u, sigma, _ = _svd_any(target, sweeps=sweeps)
+    p = mm.tiled_matmul(u.T, w)
+    return u, sigma, p
+
+
+def corda_unrobust(w: jax.Array, g: jax.Array, sweeps: int = 12):
+    """The *original* CorDA construction (Remark 1), kept as the baseline
+    whose inversion of XXᵀ blows up on singular calibration — Table 4's
+    collapsing row.  W' = U_r Σ_r V_rᵀ (XXᵀ)⁻¹ with UΣVᵀ = W·XXᵀ.
+
+    g : the explicitly-formed Gram matrix XXᵀ (n × n), accumulated the
+    way CorDA does it (streamed XᵢXᵢᵀ adds).
+    Returns (U, σ, B_full = ΣVᵀ(XXᵀ)⁻¹); rank-slice host-side.
+    The inverse is applied via the eigendecomposition of the Gram matrix
+    with *no* clamping of tiny eigenvalues (faithful to the failure mode).
+    """
+    wg = mm.tiled_matmul(w, g)
+    u, sigma, v = _svd_any(wg, sweeps=sweeps)
+    lam, q = linalg.eigh_psd(g, sweeps=sweeps)
+    ginv = (q / lam[None, :]) @ q.T
+    b = mm.tiled_matmul(sigma[:, None] * v.T, ginv)
+    return u, sigma, b
+
+
+# ---------------------------------------------------------------------------
+# Gram-based baselines (SVD-LLM / SVD-LLM v2 / ASVD / plain SVD)
+# ---------------------------------------------------------------------------
+
+
+def svdllm_factorize(w: jax.Array, gram: jax.Array, sweeps: int = 12):
+    """SVD-LLM (Alg. 3): Cholesky of XXᵀ, SVD of W·Lᵀ…, B = ΣVᵀ·S⁻¹.
+
+    Uses S = Lᵀ (upper) with SᵀS… — any S with S·Sᵀ = XXᵀ works; we take
+    S = L (lower Cholesky), exactly mirroring the reference pseudocode up
+    to transposition convention.  Near-singular Gram ⇒ NaNs/garbage, which
+    is the instability Fig. 1 measures.
+    Returns (U, σ, B_full = ΣVᵀL⁻¹  (applied via triangular solve)).
+    """
+    l = linalg.cholesky(gram)
+    ws = mm.tiled_matmul(w, l)
+    u, sigma, v = _svd_any(ws, sweeps=sweeps)
+    # B = Σ Vᵀ L⁻¹  ⇔  solve Lᵀ · Bᵀ = V·Σ
+    bt = linalg.solve_triangular(l, v * sigma[None, :], lower=True, trans=True)
+    return u, sigma, bt.T
+
+
+def svdllm_v2_factorize(w: jax.Array, gram: jax.Array, sweeps: int = 12):
+    """SVD-LLM v2 (Alg. 4): eig of XXᵀ, S = U_s·Λ^{1/2}, …, B = ΣVᵀΛ^{-1/2}U_sᵀ.
+
+    Inverts Λ^{1/2} elementwise — the second Gram-based failure mode.
+    """
+    lam, us = linalg.eigh_psd(gram, sweeps=sweeps)
+    sqrt_lam = jnp.sqrt(jnp.maximum(lam, 0.0))
+    m_mat = mm.tiled_matmul(w, us * sqrt_lam[None, :])
+    u, sigma, v = _svd_any(m_mat, sweeps=sweeps)
+    inv_sqrt = 1.0 / sqrt_lam  # no clamping: faithful
+    b = mm.tiled_matmul((sigma[:, None] * v.T) * inv_sqrt[None, :], us.T)
+    return u, sigma, b
+
+
+def asvd_factorize(w: jax.Array, col_scales: jax.Array, sweeps: int = 12):
+    """ASVD: scale columns of W by activation magnitudes, SVD, unscale.
+
+    col_scales : (n,) — typically (mean |X| over the calibration set)^0.5.
+    W' = U_r Σ_r V_rᵀ · D⁻¹ with UΣVᵀ = W·D.  Suboptimal for problem (1)
+    (per the paper) but a required comparison row in Tables 2/3.
+    """
+    d = col_scales
+    u, sigma, v = _svd_any(w * d[None, :], sweeps=sweeps)
+    b = (sigma[:, None] * v.T) / d[None, :]
+    return u, sigma, b
+
+
+def plain_svd_factorize(w: jax.Array, sweeps: int = 12):
+    """Eckart–Young: context-free truncated SVD of W (the α=0 row)."""
+    u, sigma, v = _svd_any(w, sweeps=sweeps)
+    return u, sigma, sigma[:, None] * v.T

@@ -1,0 +1,133 @@
+"""Conformance suite: prove the lowered HLO computes what jax computed.
+
+The pinned xla_extension 0.5.1 runtime is old enough to *miscompile* some
+valid HLO (observed: gathers/scatters with runtime-computed index arrays
+inside while-loop bodies silently misbehave).  Numerical parity between
+the jax execution and the rust/PJRT execution therefore cannot be
+assumed — it is *tested*, routine by routine:
+
+  python -m compile.conformance --out-dir ../artifacts/conformance
+
+emits, for every core routine, a small `<case>.hlo.txt` plus a CBT file
+holding the inputs and the jax-computed expected outputs.  The rust
+integration test `tests/conformance.rs` (and `coala selfcheck`) loads
+each case, executes it through the PJRT runtime, and asserts allclose.
+
+Any new jnp construct used on the request path MUST gain a case here.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import coala as C
+from . import linalg as L
+from . import serialize
+from .kernels import gram, matmul, trailing
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+class Suite:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.names: list[str] = []
+        os.makedirs(out_dir, exist_ok=True)
+
+    def case(self, name: str, fn, inputs: list[np.ndarray], tol: float = 1e-3):
+        specs = [jax.ShapeDtypeStruct(x.shape, x.dtype) for x in inputs]
+        lowered = jax.jit(fn).lower(*specs)
+        with open(os.path.join(self.out_dir, f"{name}.hlo.txt"), "w") as f:
+            f.write(to_hlo_text(lowered))
+        outs = jax.jit(fn)(*[jnp.asarray(x) for x in inputs])
+        flat, _ = jax.tree.flatten(outs)
+        tensors: dict[str, np.ndarray] = {"__tol": np.array([tol], np.float32)}
+        for i, x in enumerate(inputs):
+            tensors[f"in{i}"] = np.asarray(x)
+        for i, o in enumerate(flat):
+            tensors[f"out{i}"] = np.asarray(o)
+        serialize.save_cbt(os.path.join(self.out_dir, f"{name}.cbt"), tensors)
+        self.names.append(name)
+        print(f"  [conformance] {name:<28} in={len(inputs)} out={len(flat)}")
+
+    def finish(self):
+        with open(os.path.join(self.out_dir, "cases.txt"), "w") as f:
+            f.write("\n".join(self.names) + "\n")
+        print(f"[conformance] {len(self.names)} cases -> {self.out_dir}")
+
+
+def rand(seed, *shape, dtype=np.float32):
+    return np.random.default_rng(seed).standard_normal(shape).astype(dtype)
+
+
+def build(out_dir: str):
+    s = Suite(out_dir)
+    # --- L1 kernels ---------------------------------------------------------
+    s.case("matmul", lambda x, y: matmul.tiled_matmul(x, y, block=(32, 32, 32)),
+           [rand(0, 70, 50), rand(1, 50, 90)])
+    s.case("gram_update", lambda g, x: gram.gram_update(g, x, block=(32, 32)),
+           [np.zeros((40, 40), np.float32), rand(2, 77, 40)])
+    s.case("trailing", trailing.trailing_update,
+           [rand(3, 60, 30), rand(4, 60, 8), np.triu(rand(5, 8, 8))])
+    # --- QR family ----------------------------------------------------------
+    s.case("householder_qr", L.householder_qr_r, [rand(6, 48, 16)])
+    s.case("blocked_qr", lambda a: L.blocked_qr_r(a, panel=32), [rand(7, 96, 64)])
+    s.case("tsqr_step", L.tsqr_step, [np.triu(rand(8, 16, 16)), rand(9, 24, 16)])
+    s.case("tsqr_merge", L.tsqr_merge, [np.triu(rand(10, 16, 16)), np.triu(rand(11, 16, 16))])
+    s.case("qr_aug", C.regularized_r, [np.triu(rand(12, 16, 16)), np.array(0.25, np.float32)])
+    # --- Jacobi family (the miscompile hot-zone) ------------------------------
+    s.case("jacobi_svd", lambda a: L.jacobi_svd(a, sweeps=10), [rand(13, 24, 12)])
+    s.case("jacobi_svd_odd", lambda a: L.jacobi_svd(a, sweeps=10), [rand(14, 15, 7)])
+    s.case("eigh_psd", lambda g: L.eigh_psd(g, sweeps=10),
+           [(lambda a: a.T @ a)(rand(15, 20, 12)).astype(np.float32)])
+    # --- Cholesky / solves ----------------------------------------------------
+    g = rand(16, 24, 16)
+    g = (g.T @ g + 0.5 * np.eye(16)).astype(np.float32)
+    s.case("cholesky", L.cholesky, [g])
+    t = (np.tril(rand(17, 12, 12)) + 3 * np.eye(12)).astype(np.float32)
+    s.case("solve_lower", lambda tt, b: L.solve_triangular(tt, b, lower=True), [t, rand(18, 12, 5)])
+    s.case("solve_lower_t", lambda tt, b: L.solve_triangular(tt, b, lower=True, trans=True),
+           [t, rand(19, 12, 5)])
+    # --- factorization graphs -------------------------------------------------
+    w, x = rand(20, 16, 12), rand(21, 12, 40)
+    r = np.linalg.qr(x.T)[1].astype(np.float32)
+    gm = (x @ x.T).astype(np.float32)
+    s.case("coala_factorize", lambda ww, rr: C.coala_factorize(ww, rr, sweeps=10), [w, r])
+    s.case("coala_reg", lambda ww, rr, mu: C.coala_factorize_regularized(ww, rr, mu, sweeps=10),
+           [w, r, np.array(0.1, np.float32)])
+    s.case("alpha2", lambda ww, rr: C.alpha_factorize(ww, rr, 2, sweeps=10), [w, r])
+    s.case("plainsvd", lambda ww: C.plain_svd_factorize(ww, sweeps=10), [w])
+    s.case("svdllm", lambda ww, gg: C.svdllm_factorize(ww, gg, sweeps=10), [w, gm])
+    s.case("svdllm2", lambda ww, gg: C.svdllm_v2_factorize(ww, gg, sweeps=10), [w, gm], tol=5e-3)
+    s.case("corda", lambda ww, gg: C.corda_unrobust(ww, gg, sweeps=10), [w, gm], tol=5e-3)
+    s.case("asvd", lambda ww, sc: C.asvd_factorize(ww, sc, sweeps=10),
+           [w, (np.abs(x).mean(axis=1) ** 0.5 + 1e-3).astype(np.float32)])
+    s.case("mu_terms", C.mu_from_lambda,
+           [w, *[np.asarray(o) for o in (lambda u, sg, p: (u, p))(*C.coala_factorize(jnp.asarray(w), jnp.asarray(r), sweeps=10))],
+            r, (np.arange(12) < 4).astype(np.float32)])
+    # wide W (the down-projection aspect)
+    w2 = rand(22, 12, 30)
+    r2 = np.linalg.qr(rand(23, 40, 30))[1].astype(np.float32)
+    s.case("coala_factorize_wide", lambda ww, rr: C.coala_factorize(ww, rr, sweeps=10), [w2, r2])
+    s.finish()
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts/conformance")
+    args = ap.parse_args()
+    build(args.out_dir)

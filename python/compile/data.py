@@ -1,0 +1,175 @@
+"""Synthetic corpus + probe-task generator (build-time, deterministic).
+
+Stands in for WikiText2 / the commonsense-reasoning suite (DESIGN.md
+§substitutions).  The language has enough structure that (a) a small
+transformer really learns it (ppl drops ~vocab → ~20), (b) activation
+matrices develop the ill-conditioned spectra the paper exploits, and
+(c) "knowledge" probes analogous to boolQ/PIQA/… can be scored exactly.
+
+Construction
+  * bigram Markov backbone: each token has 24 successors with Dirichlet
+    weights; successor sets follow a Zipfian popularity so the unigram
+    distribution is heavy-tailed (like natural text).
+  * facts: (subject s, relation p, object o) triples.  Relations are
+    drawn from 8 disjoint relation-token groups — one group per probe
+    task.  Whenever the generator emits "s p", the next token is o with
+    probability 0.95.  Fine-tune adaptation uses a *disjoint* fact set
+    over the same relation groups (new knowledge, same format).
+  * probe tasks: contexts ending in "… s p" with 4 candidate objects
+    (1 correct + 3 distractors that are objects of *other* facts of the
+    same relation group).  Accuracy = argmax over the 4 choice logits —
+    the multiple-choice scoring used by lm-eval-harness.
+
+Everything is seeded; the rust side only ever reads the CBT outputs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+TASK_NAMES = [
+    "boolq_px",
+    "piqa_px",
+    "siqa_px",
+    "hswag_px",
+    "winog_px",
+    "arc_e_px",
+    "arc_c_px",
+    "obqa_px",
+]
+
+
+@dataclasses.dataclass
+class LanguageSpec:
+    vocab: int = 512
+    n_successors: int = 24
+    n_relation_groups: int = 8
+    relations_per_group: int = 4
+    n_subjects: int = 96
+    n_objects: int = 96
+    facts_per_group: int = 24
+    fact_prob: float = 0.12
+    seed: int = 1234
+
+
+class SyntheticLanguage:
+    """Deterministic generator for the corpus and its probe tasks."""
+
+    def __init__(self, spec: LanguageSpec, fact_seed: int = 0):
+        self.spec = spec
+        rng = np.random.default_rng(spec.seed)
+        v = spec.vocab
+
+        # --- token inventory -------------------------------------------------
+        # [0, 4) reserved; relations next; subjects/objects after; rest free.
+        n_rel = spec.n_relation_groups * spec.relations_per_group
+        self.relation_tokens = 4 + np.arange(n_rel)
+        self.subject_tokens = 4 + n_rel + np.arange(spec.n_subjects)
+        self.object_tokens = 4 + n_rel + spec.n_subjects + np.arange(spec.n_objects)
+
+        # --- Zipfian bigram backbone -----------------------------------------
+        ranks = np.arange(1, v + 1, dtype=np.float64)
+        zipf = 1.0 / ranks**1.1
+        zipf /= zipf.sum()
+        self.successors = np.empty((v, spec.n_successors), np.int64)
+        self.succ_probs = np.empty((v, spec.n_successors), np.float64)
+        for t in range(v):
+            succ = rng.choice(v, size=spec.n_successors, replace=False, p=zipf)
+            w = rng.dirichlet(np.full(spec.n_successors, 0.4))
+            self.successors[t] = succ
+            self.succ_probs[t] = w
+
+        # --- facts ------------------------------------------------------------
+        # fact_seed selects the fact universe (base vs fine-tune adaptation).
+        frng = np.random.default_rng(spec.seed * 7919 + 17 + fact_seed)
+        self.facts: list[list[tuple[int, int, int]]] = []
+        for g in range(spec.n_relation_groups):
+            rels = self.relation_tokens[
+                g * spec.relations_per_group : (g + 1) * spec.relations_per_group
+            ]
+            group = []
+            # subjects unique within a group so (s, p) determines o
+            subs = frng.choice(self.subject_tokens, size=spec.facts_per_group, replace=False)
+            for s in subs:
+                p = int(frng.choice(rels))
+                o = int(frng.choice(self.object_tokens))
+                group.append((int(s), p, o))
+            self.facts.append(group)
+
+    # -------------------------------------------------------------------------
+    def sample_stream(self, n_tokens: int, seed: int) -> np.ndarray:
+        """Sample a token stream (used for train/val/calibration splits)."""
+        spec = self.spec
+        rng = np.random.default_rng(seed)
+        flat_facts = [f for group in self.facts for f in group]
+        out = np.empty(n_tokens, np.int32)
+        t = int(rng.integers(4, spec.vocab))
+        i = 0
+        while i < n_tokens:
+            if rng.random() < spec.fact_prob and i + 3 <= n_tokens:
+                s, p, o = flat_facts[int(rng.integers(len(flat_facts)))]
+                out[i : i + 2] = (s, p)
+                # 0.95 consistency: occasionally corrupt the object
+                out[i + 2] = o if rng.random() < 0.95 else int(rng.choice(self.object_tokens))
+                i += 3
+                t = int(out[i - 1])
+            else:
+                j = rng.choice(spec.n_successors, p=self.succ_probs[t])
+                t = int(self.successors[t, j])
+                out[i] = t
+                i += 1
+        return out
+
+    # -------------------------------------------------------------------------
+    def make_tasks(
+        self, seq_len: int, per_task: int, seed: int
+    ) -> dict[str, np.ndarray]:
+        """Build the 8 probe tasks.
+
+        Returns CBT-ready arrays: contexts (N, seq_len) i32 (the fact query
+        "… s p" right-aligned over backbone text), choices (N, 4) i32,
+        labels (N,) i32 (index of correct choice), task_ids (N,) i32.
+        """
+        rng = np.random.default_rng(seed)
+        n = per_task * self.spec.n_relation_groups
+        contexts = np.empty((n, seq_len), np.int32)
+        choices = np.empty((n, 4), np.int32)
+        labels = np.empty(n, np.int32)
+        task_ids = np.empty(n, np.int32)
+        row = 0
+        for g, group in enumerate(self.facts):
+            objects_in_group = np.array(sorted({o for (_, _, o) in group}), np.int64)
+            for _ in range(per_task):
+                s, p, o = group[int(rng.integers(len(group)))]
+                ctx = self.sample_stream(seq_len, int(rng.integers(1 << 30)))
+                ctx[-2:] = (s, p)
+                distract_pool = objects_in_group[objects_in_group != o]
+                if len(distract_pool) < 3:
+                    distract_pool = self.object_tokens[self.object_tokens != o]
+                d = rng.choice(distract_pool, size=3, replace=False)
+                opts = np.array([o, *d], np.int32)
+                perm = rng.permutation(4)
+                contexts[row] = ctx
+                choices[row] = opts[perm]
+                labels[row] = int(np.where(perm == 0)[0][0])
+                task_ids[row] = g
+                row += 1
+        return {
+            "contexts": contexts,
+            "choices": choices,
+            "labels": labels,
+            "task_ids": task_ids,
+        }
+
+
+def build_splits(
+    lang: SyntheticLanguage, seq_len: int, train_tokens: int, val_tokens: int, calib_tokens: int
+) -> dict[str, np.ndarray]:
+    """Train / validation / calibration token streams (disjoint seeds)."""
+    return {
+        "train": lang.sample_stream(train_tokens, seed=101),
+        "val": lang.sample_stream(val_tokens, seed=202),
+        "calib": lang.sample_stream(calib_tokens, seed=303),
+    }

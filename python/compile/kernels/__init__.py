@@ -1,0 +1,10 @@
+"""L1: Pallas kernels for COALA's compute hot-spots (interpret=True on CPU).
+
+Modules:
+  matmul   — MXU-tiled GEMM (the universal BLAS-3 primitive here)
+  gram     — streamed Gram-chunk accumulation (baseline path, Fig. 3R)
+  trailing — blocked-Householder compact-WY trailing update (QR hot spot)
+  ref      — naive jnp oracles for all of the above
+"""
+
+from . import gram, matmul, ref, trailing  # noqa: F401

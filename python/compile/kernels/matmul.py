@@ -1,0 +1,112 @@
+"""L1 Pallas kernel: tiled matmul, the BLAS-3 hot spot of COALA.
+
+Every FLOP-heavy step of the pipeline (W·Rᵀ, the Householder trailing
+update, Gram accumulation for the baselines, the UᵀW projection) reduces
+to GEMM.  On TPU the kernel below is shaped for the MXU systolic array:
+
+  * blocks default to 128×128×128 so each `jnp.dot` maps onto full MXU
+    passes (the TPU analogue of a CUDA WMMA tensor-core tile);
+  * `BlockSpec` index maps express the HBM→VMEM streaming schedule the
+    paper's GPU implementation gets from threadblock tiling: the output
+    tile (i, j) stays resident in VMEM while the K dimension is streamed
+    (grid order (i, j, k) with k innermost → revisiting accumulation);
+  * VMEM footprint per step is (bm·bk + bk·bn + bm·bn)·4 bytes, far under
+    the ≈16 MiB VMEM budget for the default tile (192 KiB).
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered to plain HLO (the numbers are
+identical; real-TPU perf is *estimated* in DESIGN.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default MXU-shaped tile.  Overridable per call for the block-shape sweep
+# in the §Perf pass and for small matrices.
+DEFAULT_BLOCK = (128, 128, 128)
+
+
+def _pad_to(x: jax.Array, rows: int, cols: int) -> jax.Array:
+    """Zero-pad a 2-D array up to (rows, cols)."""
+    m, n = x.shape
+    if m == rows and n == cols:
+        return x
+    return jnp.pad(x, ((0, rows - m), (0, cols - n)))
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, k_steps: int):
+    """Grid point (i, j, k): accumulate one K-panel into output tile (i, j).
+
+    The output BlockSpec maps every k to the same (i, j) tile, so o_ref is
+    *revisited* across the innermost grid dimension — the canonical MXU
+    accumulation schedule (zero on first visit, add afterwards).
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def tiled_matmul(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    block: tuple[int, int, int] | None = None,
+) -> jax.Array:
+    """Compute ``x @ y`` with an MXU-tiled Pallas kernel.
+
+    Arbitrary (static) shapes are supported by zero-padding up to the tile
+    grid; the result is sliced back.  For matrices smaller than one tile
+    the block collapses to the (padded) matrix itself.
+    """
+    if x.ndim != 2 or y.ndim != 2:
+        raise ValueError(f"tiled_matmul expects 2-D operands, got {x.shape} @ {y.shape}")
+    m, k = x.shape
+    k2, n = y.shape
+    if k != k2:
+        raise ValueError(f"inner dims mismatch: {x.shape} @ {y.shape}")
+
+    bm, bn, bk = block or DEFAULT_BLOCK
+    bm, bn, bk = min(bm, _round_up(m, 8)), min(bn, _round_up(n, 8)), min(bk, _round_up(k, 8))
+
+    mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(k, bk)
+    xp = _pad_to(x, mp, kp)
+    yp = _pad_to(y, kp, np_)
+    k_steps = kp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, k_steps=k_steps),
+        grid=(mp // bm, np_ // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=True,
+    )(xp, yp)
+    return out[:m, :n]
+
+
+def matmul_flops(m: int, n: int, k: int) -> int:
+    """FLOPs of one GEMM (for the MXU-utilization estimates in §Perf)."""
+    return 2 * m * n * k
+
+
+def vmem_bytes(block: tuple[int, int, int] = DEFAULT_BLOCK, dtype_bytes: int = 4) -> int:
+    """Per-grid-step VMEM residency of the kernel (three tiles)."""
+    bm, bn, bk = block
+    return (bm * bk + bk * bn + bm * bn) * dtype_bytes

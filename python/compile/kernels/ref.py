@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the correctness references the pytest suite (and the build-time
+`make artifacts` self-check) compares the kernels against with
+``assert_allclose``.  They are deliberately the most naive possible
+formulations — a single un-tiled op each — so that any tiling /
+revisiting / padding bug in the kernels shows up as a numeric diff.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Oracle for kernels.matmul.tiled_matmul."""
+    return jnp.dot(x, y, preferred_element_type=x.dtype)
+
+
+def gram_update_ref(g: jax.Array, xt_chunk: jax.Array) -> jax.Array:
+    """Oracle for kernels.gram.gram_update."""
+    return g + jnp.dot(xt_chunk.T, xt_chunk, preferred_element_type=g.dtype)
+
+
+def trailing_update_ref(a: jax.Array, v: jax.Array, t: jax.Array) -> jax.Array:
+    """Oracle for kernels.trailing.trailing_update."""
+    return a - v @ (t @ (v.T @ a))

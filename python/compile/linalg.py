@@ -1,0 +1,429 @@
+"""L2: inversion-free numerics, hand-rolled in pure jnp/lax.
+
+Why from scratch: `jnp.linalg.{qr,svd,cholesky,eigh}` lower on CPU to
+`lapack_*` custom-calls that the pinned xla_extension 0.5.1 runtime (the
+`xla` 0.1.6 rust crate) cannot resolve, so every factorization used on
+the request path is written here from first principles using only ops
+that lower to plain HLO (while/fori loops, gathers/scatters, dots).
+
+Contents:
+  householder_qr_r        — unblocked masked Householder QR → R
+  blocked_qr_r            — blocked (compact-WY) QR; trailing updates via
+                            the L1 Pallas kernel (the FLOP hot spot)
+  tsqr_step               — streaming TSQR: QR of [R ; Xᵀ-chunk]
+  jacobi_svd              — one-sided Jacobi SVD with round-robin
+                            *parallel* orderings (all n/2 disjoint column
+                            pairs rotated per step — the TPU-friendly
+                            formulation of the paper's `gesvd` calls)
+  eigh_psd                — eigendecomposition of a PSD matrix (via
+                            one-sided Jacobi; for SVD-LLM v2)
+  cholesky                — unblocked masked Cholesky (for SVD-LLM)
+  solve_triangular        — forward/back substitution (for baselines'
+                            S⁻¹ application — COALA itself never inverts)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .kernels import trailing as trailing_kernel
+
+# ---------------------------------------------------------------------------
+# Householder QR
+# ---------------------------------------------------------------------------
+
+
+def _householder_vector(x: jax.Array, j: jnp.int32, m: int):
+    """Householder vector annihilating x[j+1:] , masked for rows < j.
+
+    Returns (v, beta, alpha): H = I - beta·vvᵀ, H x = alpha·e_j.
+    Safe for the zero column (beta = 0 → H = I).
+    """
+    rows = jnp.arange(m)
+    xm = jnp.where(rows >= j, x, 0.0)
+    normx = jnp.sqrt(jnp.sum(xm * xm))
+    xj = xm[j]
+    # sign chosen to avoid cancellation
+    alpha = jnp.where(xj >= 0, -normx, normx)
+    v = xm.at[j].add(-alpha)
+    vnorm2 = jnp.sum(v * v)
+    beta = jnp.where(vnorm2 > 0, 2.0 / jnp.where(vnorm2 > 0, vnorm2, 1.0), 0.0)
+    return v, beta, alpha
+
+
+def householder_qr_r(a: jax.Array) -> jax.Array:
+    """R factor of the QR decomposition of ``a`` (m × n, any aspect).
+
+    Unblocked masked Householder via fori_loop: one while-loop in HLO, no
+    per-column unrolling.  Returns the (min(m,n) × n) upper-triangular R
+    padded/cut to (n × n) when m ≥ n (the COALA use-case: Rᵀ with
+    RᵀR = XXᵀ).
+    """
+    m, n = a.shape
+    steps = min(m, n)
+
+    def body(j, acc):
+        v, beta, _ = _householder_vector(acc[:, j], j, m)
+        w = beta * (v @ acc)
+        return acc - jnp.outer(v, w)
+
+    r = lax.fori_loop(0, steps, body, a)
+    k = min(m, n)
+    r = r[:k, :]
+    # numerical noise below the diagonal is exactly zeroed
+    return jnp.triu(r) if m >= n else jnp.triu(r)
+
+
+def qr_r_square(a: jax.Array, *, panel: int = 64) -> jax.Array:
+    """R as a square (n × n) matrix for m ≥ n inputs (zero-pad if m < n).
+
+    Dispatches to the blocked (Pallas-accelerated) algorithm whenever the
+    width is an exact multiple of the panel size and large enough for the
+    trailing GEMMs to dominate; falls back to the unblocked loop.
+    """
+    m, n = a.shape
+    if n >= 2 * panel and n % panel == 0 and m >= n:
+        r = blocked_qr_r(a, panel=panel)
+    else:
+        r = householder_qr_r(a)
+    if r.shape[0] < n:
+        r = jnp.pad(r, ((0, n - r.shape[0]), (0, 0)))
+    return r[:n, :n]
+
+
+def _panel_factor(a_panel: jax.Array, col0: int, b: int, m: int):
+    """Factor an m × b panel whose pivot rows start at ``col0``.
+
+    Returns (v_panel, t, r_panel): compact-WY with Q = I − V·T·Vᵀ.
+    Loops over the b panel columns with a fori_loop (VPU-ish O(m·b²)).
+    """
+
+    def body(jj, carry):
+        acc, v_acc, beta_acc = carry
+        j = col0 + jj
+        v, beta, _ = _householder_vector(acc[:, jj], j, m)
+        w = beta * (v @ acc)
+        acc = acc - jnp.outer(v, w)
+        v_acc = v_acc.at[:, jj].set(v)
+        beta_acc = beta_acc.at[jj].set(beta)
+        return acc, v_acc, beta_acc
+
+    v0 = jnp.zeros((m, b), a_panel.dtype)
+    b0 = jnp.zeros((b,), a_panel.dtype)
+    r_panel, v_panel, betas = lax.fori_loop(0, b, body, (a_panel, v0, b0))
+
+    # Build T (upper triangular) from V and betas:
+    #   T[0,0] = beta_0 ;  T[:j, j] = -beta_j · T[:j,:j] · (Vᵀ[:, j] of V[:j])
+    vtv = v_panel.T @ v_panel  # (b, b)
+
+    def t_body(j, t):
+        col = -betas[j] * (t @ vtv[:, j])
+        col = jnp.where(jnp.arange(b) < j, col, 0.0)
+        col = col.at[j].set(betas[j])
+        return t.at[:, j].set(col)
+
+    t = lax.fori_loop(0, b, t_body, jnp.zeros((b, b), a_panel.dtype))
+    return v_panel, t, r_panel
+
+
+def blocked_qr_r(a: jax.Array, panel: int = 64, use_kernel: bool = False) -> jax.Array:
+    """Blocked Householder QR → R, compact-WY trailing updates.
+
+    The panel loop is a static python loop (n/panel iterations unrolled in
+    HLO); within each panel the column loop is a fori_loop.  ``use_kernel``
+    switches the trailing GEMMs between the tiled Pallas kernel and plain
+    jnp dots.
+
+    §Perf note (measured, see EXPERIMENTS.md): under ``interpret=True`` on
+    the CPU runtime the Pallas grid becomes a scan of dynamic-sliced tile
+    dots that XLA cannot fuse — 13× slower than the plain-jnp trailing
+    update at (1792×768).  Interpret mode is a *correctness* vehicle; the
+    CPU artifacts therefore default to the fused jnp path (panel=64), and
+    a real-TPU build flips ``use_kernel=True`` so the MXU-tiled kernel
+    (validated against the same oracle) takes over.
+    """
+    m, n = a.shape
+    if n % panel != 0:
+        pad = panel - n % panel
+        a = jnp.pad(a, ((0, 0), (0, pad)))
+        return blocked_qr_r(a, panel=panel, use_kernel=use_kernel)[:, :n][: min(m, n), :]
+
+    update = (
+        trailing_kernel.trailing_update
+        if use_kernel
+        else (lambda x, v, t: x - v @ (t @ (v.T @ x)))
+    )
+
+    acc = a
+    for p in range(n // panel):
+        col0 = p * panel
+        v, t, r_panel = _panel_factor(acc[:, col0 : col0 + panel], col0, panel, m)
+        rest = acc[:, col0 + panel :]
+        if rest.shape[1] > 0:
+            # apply Qᵀ = (I − V·T·Vᵀ)ᵀ = I − V·Tᵀ·Vᵀ to the trailing columns
+            rest = update(rest, v, t.T)
+        acc = jnp.concatenate([acc[:, :col0], r_panel, rest], axis=1)
+    k = min(m, n)
+    return jnp.triu(acc[:k, :])
+
+
+def tsqr_step(r_prev: jax.Array, xt_chunk: jax.Array) -> jax.Array:
+    """One streaming-TSQR step: R′ from QR of [R_prev ; Xᵀ-chunk].
+
+    r_prev   : (n, n) upper triangular (R of everything seen so far;
+               zeros on the first step).
+    xt_chunk : (c, n) new chunk of Xᵀ.
+    Satisfies  R′ᵀR′ = R_prevᵀR_prev + chunkᵀ·chunk  — i.e. exactly the
+    Gram information, but accumulated in factored (stable) form.
+    """
+    stacked = jnp.concatenate([r_prev, xt_chunk], axis=0)
+    return qr_r_square(stacked)
+
+
+def tsqr_merge(r_a: jax.Array, r_b: jax.Array) -> jax.Array:
+    """Tree-TSQR reduction: combine two R factors (both n × n)."""
+    return qr_r_square(jnp.concatenate([r_a, r_b], axis=0))
+
+
+# ---------------------------------------------------------------------------
+# One-sided Jacobi SVD (round-robin parallel orderings)
+# ---------------------------------------------------------------------------
+
+
+def _brent_luk_perm(n: int) -> np.ndarray:
+    """Static Brent–Luk column-position permutation for parallel Jacobi.
+
+    Columns live in 2p = n positions: "left" slots 0..p−1 paired with
+    "right" slots p..2p−1 (pair i = positions (i, p+i) — *static* slices).
+    After each round the columns move one step around the tournament ring
+    (left slot 0 pinned), which is the same constant permutation every
+    round:
+
+        new[0]     = old[0]
+        new[1]     = old[p]          (R₀ promotes to L₁)
+        new[i]     = old[i−1]        2 ≤ i < p
+        new[p+i]   = old[p+i+1]      0 ≤ i < p−1
+        new[2p−1]  = old[p−1]        (L_{p−1} demotes to R_{p−1})
+
+    n−1 rounds make every pair of columns meet exactly once (the circle
+    method).  Crucially this needs **no runtime-computed gather indices**
+    — the pinned xla_extension 0.5.1 runtime miscompiles gathers/scatters
+    with dynamic index operands inside while-loop bodies (verified by the
+    conformance probes), and this is also exactly the systolic ordering
+    Brent & Luk designed for processor arrays — i.e. the right TPU shape.
+    """
+    assert n % 2 == 0
+    p = n // 2
+    if p == 1:
+        return np.array([0, 1], np.int32)  # single pair: nothing to rotate
+    idx = np.empty(n, np.int32)
+    idx[0] = 0
+    idx[1] = p
+    for i in range(2, p):
+        idx[i] = i - 1
+    for i in range(p - 1):
+        idx[p + i] = p + i + 1
+    idx[n - 1] = p - 1
+    return idx
+
+
+def _round_robin_pairs(n: int) -> np.ndarray:
+    """(n−1, 2, n/2) pair schedule implied by `_brent_luk_perm` (testing aid).
+
+    Tracks which *logical* columns occupy the paired positions in each
+    round; used by the tests to prove all n(n−1)/2 pairs meet once.
+    """
+    assert n % 2 == 0
+    p = n // 2
+    perm = _brent_luk_perm(n)
+    pos = np.arange(n)  # pos[slot] = logical column currently in slot
+    rounds = []
+    for _ in range(n - 1):
+        left, right = pos[:p], pos[p:]
+        rounds.append(np.stack([np.minimum(left, right), np.maximum(left, right)]))
+        pos = pos[perm]
+    return np.stack(rounds).astype(np.int32)
+
+
+def jacobi_svd(
+    a: jax.Array, sweeps: int = 12, sort: bool = True
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One-sided Jacobi SVD of ``a`` (m × n, m ≥ n): returns (U, σ, V).
+
+    a = U·diag(σ)·Vᵀ with U (m × n) orthonormal columns, V (n × n).
+    Parallel one-sided Jacobi in the Brent–Luk systolic ordering: each
+    fori step rotates all n/2 position-pairs (first half vs second half —
+    static slices) to orthogonalize them, then applies the constant
+    ring permutation.  A and V are permuted identically, so their columns
+    stay aligned and no inverse permutation is ever needed.
+    ``sweeps`` full sweeps of (n−1) rounds are run (no data-dependent
+    early exit → static HLO; 12 sweeps ≫ what's needed in practice).
+    """
+    m, n = a.shape
+    if m < n:
+        raise ValueError(f"jacobi_svd requires m ≥ n, got {a.shape}")
+    n_pad = n + (n % 2)
+    if n_pad != n:
+        a = jnp.pad(a, ((0, 0), (0, 1)))
+    half = n_pad // 2
+    rounds = n_pad - 1
+
+    def ring_shift(mat):
+        """Apply `_brent_luk_perm` as pure static slices + concat.
+
+        NOT a gather: the pinned runtime miscompiles even constant-index
+        gathers inside loop bodies at some (non-power-of-two) widths —
+        bisected in the conformance suite.  Slice/concatenate lower to
+        plain HLO slice ops and are safe everywhere.
+        """
+        if half == 1:
+            return mat
+        return jnp.concatenate(
+            [
+                mat[:, :1],                # L0 stays
+                mat[:, half : half + 1],   # R0 promotes to L1
+                mat[:, 1 : half - 1],      # L shifts right
+                mat[:, half + 1 :],        # R shifts left
+                mat[:, half - 1 : half],   # L_{p-1} demotes to R_{p-1}
+            ],
+            axis=1,
+        )
+
+    v0 = jnp.eye(n_pad, dtype=a.dtype)
+
+    def body(_step, carry):
+        acc, v = carry
+        ap, aq = acc[:, :half], acc[:, half:]
+        app = jnp.sum(ap * ap, axis=0)
+        aqq = jnp.sum(aq * aq, axis=0)
+        apq = jnp.sum(ap * aq, axis=0)
+        # closed-form Jacobi rotation zeroing the (p,q) inner product
+        denom_ok = jnp.abs(apq) > 1e-30
+        tau = (aqq - app) / (2.0 * jnp.where(denom_ok, apq, 1.0))
+        tden = jnp.abs(tau) + jnp.sqrt(1.0 + tau * tau)
+        tan = jnp.where(tau >= 0, 1.0 / tden, -1.0 / tden)
+        cos = 1.0 / jnp.sqrt(1.0 + tan * tan)
+        sin = cos * tan
+        cos = jnp.where(denom_ok, cos, 1.0)
+        sin = jnp.where(denom_ok, sin, 0.0)
+
+        def rotate_and_shift(mat):
+            cp, cq = mat[:, :half], mat[:, half:]
+            new_p = cos * cp - sin * cq
+            new_q = sin * cp + cos * cq
+            return ring_shift(jnp.concatenate([new_p, new_q], axis=1))
+
+        return rotate_and_shift(acc), rotate_and_shift(v)
+
+    acc, v = lax.fori_loop(0, sweeps * rounds, body, (a, v0))
+
+    sigma = jnp.sqrt(jnp.sum(acc * acc, axis=0))
+    if sort:
+        # Descending reorder WITHOUT a computed-index gather (argsort +
+        # fancy indexing miscompiles on xla_extension 0.5.1 — see the
+        # conformance suite).  lax.sort with a broadcast key and
+        # is_stable=True applies the same permutation to every row.
+        neg = -sigma
+        key_a = jnp.broadcast_to(neg[None, :], acc.shape)
+        _, acc = lax.sort((key_a, acc), dimension=1, is_stable=True, num_keys=1)
+        key_v = jnp.broadcast_to(neg[None, :], v.shape)
+        _, v = lax.sort((key_v, v), dimension=1, is_stable=True, num_keys=1)
+        sigma = -jnp.sort(neg)
+    safe = jnp.where(sigma > 0, sigma, 1.0)
+    u = acc / safe[None, :]
+    # drop padding column (it stays exactly zero → sorted last)
+    if n_pad != n:
+        u, sigma, v = u[:, :n], sigma[:n], v[:n, :n]
+    return u, sigma, v
+
+
+def eigh_psd(s: jax.Array, sweeps: int = 12) -> tuple[jax.Array, jax.Array]:
+    """Eigendecomposition of a symmetric PSD matrix: S = U·diag(λ)·Uᵀ.
+
+    For PSD S the left singular vectors coincide with eigenvectors and
+    singular values with eigenvalues, so one-sided Jacobi suffices (this
+    is the SVD-LLM v2 substrate; COALA never needs it).
+    Returns (λ descending, U).
+    """
+    u, sigma, _ = jacobi_svd(s, sweeps=sweeps)
+    return sigma, u
+
+
+# ---------------------------------------------------------------------------
+# Cholesky + triangular solves (baseline substrate)
+# ---------------------------------------------------------------------------
+
+
+def cholesky(s: jax.Array) -> jax.Array:
+    """Lower Cholesky factor L with L·Lᵀ = S (masked right-looking).
+
+    No pivoting and no regularization — deliberately the textbook
+    algorithm SVD-LLM uses, so the numerical breakdown on near-singular
+    Gram matrices (Fig. 1 / Example G.1) is reproduced faithfully.
+    NaNs from a negative pivot propagate (as they do in torch.cholesky).
+    """
+    n = s.shape[0]
+    rows = jnp.arange(n)
+
+    def body(j, l):
+        # pivot
+        d = jnp.sqrt(l[j, j])
+        col = l[:, j] / d
+        col = jnp.where(rows >= j, col, 0.0)
+        l = l.at[:, j].set(col)
+        # rank-1 update of the trailing submatrix (masked)
+        mask = ((rows[:, None] > j) & (rows[None, :] > j)).astype(l.dtype)
+        l = l - mask * jnp.outer(col, col)
+        return l
+
+    l = lax.fori_loop(0, n, body, s)
+    return jnp.tril(l)
+
+
+def solve_triangular(
+    l_or_u: jax.Array, b: jax.Array, *, lower: bool, trans: bool = False
+) -> jax.Array:
+    """Solve T·X = B (or Tᵀ·X = B) by substitution, T triangular (n × n).
+
+    Used only by the Gram-based baselines (their B = Σ_r V_rᵀ S⁻¹ step).
+    Column-oriented fori_loop; B is (n, k).
+    """
+    t = l_or_u.T if trans else l_or_u
+    t_lower = lower != trans
+    n = t.shape[0]
+
+    if not t_lower:
+        # Reverse rows/cols to reduce to the lower-triangular case.  Uses
+        # jnp.flip (the HLO `reverse` op) — NOT index-array gathers, which
+        # the pinned runtime miscompiles (see conformance suite).
+        x = solve_triangular(jnp.flip(t, (0, 1)), jnp.flip(b, 0), lower=True)
+        return jnp.flip(x, 0)
+
+    def body(i, x):
+        # x[i] = (b[i] - T[i, :i] @ x[:i]) / T[i, i]
+        partial = t[i, :] @ x  # rows > i of x are still 0 → only :i counts…
+        # careful: x rows ≥ i may be nonzero from init; we init x to 0 so fine
+        xi = (b[i] - partial) / t[i, i]
+        return x.at[i, :].set(xi)
+
+    x0 = jnp.zeros_like(b)
+    return lax.fori_loop(0, n, body, x0)
+
+
+def matrix_power_half(x: jax.Array, alpha: int, sweeps: int = 12):
+    """(XXᵀ)^{α/2} without forming XXᵀ (Prop. 4 substrate).
+
+    SVD X = UΣVᵀ ⇒ (XXᵀ)^{α/2} = U·Σ^α·Uᵀ.  Needs m ≤ k (X is n × k with
+    k ≥ n in the α-family use-case); computed via Jacobi SVD of Xᵀ.
+    """
+    n, k = x.shape
+    if k < n:
+        raise ValueError("matrix_power_half expects wide X (k ≥ n)")
+    u_t, sigma, v_t = jacobi_svd(x.T, sweeps=sweeps)  # Xᵀ = u_t σ v_tᵀ ⇒ X = v_t σ u_tᵀ
+    ux = v_t  # left singular vectors of X
+    return (ux * (sigma[None, :] ** alpha)) @ ux.T

@@ -1,0 +1,225 @@
+"""L2: the compression target — a from-scratch pre-norm transformer LM.
+
+Stands in for LLaMA3-1B / Mistral-7B (see DESIGN.md §substitutions): the
+COALA pipeline acts per weight matrix on captured activations, so a small
+*really trained* model reproduces all the numerics that matter
+(ill-conditioned activation Grams, depth-wise norm growth, outliers).
+
+Architecture (LLaMA-flavoured, but with learned positions and GELU MLP to
+stay in plain-HLO ops): token emb + pos emb → L × [RMSNorm → causal MHA →
+residual → RMSNorm → MLP → residual] → RMSNorm → tied-untied LM head via
+the token embedding transpose.
+
+Weight convention matches the paper and the rust side: every projection
+is stored as W ∈ R^{out × in} and applied as  h · Wᵀ  (so the paper's
+"input activation matrix X ∈ R^{n×k}" has n = in-features and k = tokens;
+our row-major activation chunks are Xᵀ).
+
+``forward_with_acts`` additionally returns, per layer, the four
+activation streams the compression pipeline calibrates on:
+  x_attn — input of q/k/v projections (post-ln1)
+  x_o    — input of the o projection (attention mix output)
+  x_up   — input of the up projection (post-ln2)
+  x_down — input of the down projection (GELU(up(h)))
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    seq_len: int
+    batch: int  # batch used for the AOT-fixed fwd shapes
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def param_names(self) -> list[str]:
+        """Flat, *ordered* parameter list — this order IS the artifact ABI.
+
+        The rust side reads the same list from manifest.json; any change
+        here is a breaking ABI change and bumps manifest "abi_version".
+        """
+        names = ["tok_emb", "pos_emb"]
+        for i in range(self.n_layers):
+            names += [
+                f"l{i}.ln1",
+                f"l{i}.wq",
+                f"l{i}.wk",
+                f"l{i}.wv",
+                f"l{i}.wo",
+                f"l{i}.ln2",
+                f"l{i}.w_up",
+                f"l{i}.w_down",
+            ]
+        names.append("ln_f")
+        names.append("lm_head")
+        return names
+
+    def param_shapes(self) -> dict[str, tuple[int, ...]]:
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        shapes: dict[str, tuple[int, ...]] = {
+            "tok_emb": (v, d),
+            "pos_emb": (self.seq_len, d),
+            "ln_f": (d,),
+            "lm_head": (v, d),
+        }
+        for i in range(self.n_layers):
+            shapes[f"l{i}.ln1"] = (d,)
+            shapes[f"l{i}.wq"] = (d, d)
+            shapes[f"l{i}.wk"] = (d, d)
+            shapes[f"l{i}.wv"] = (d, d)
+            shapes[f"l{i}.wo"] = (d, d)
+            shapes[f"l{i}.ln2"] = (d,)
+            shapes[f"l{i}.w_up"] = (f, d)
+            shapes[f"l{i}.w_down"] = (d, f)
+        return shapes
+
+    def compressible(self) -> list[str]:
+        """The projections the paper compresses: Q, K, V, O, Up, Down."""
+        out = []
+        for i in range(self.n_layers):
+            out += [f"l{i}.{p}" for p in ("wq", "wk", "wv", "wo", "w_up", "w_down")]
+        return out
+
+
+TINY = ModelConfig("tiny", vocab=512, d_model=192, n_layers=4, n_heads=4, d_ff=768, seq_len=128, batch=8)
+SMALL = ModelConfig("small", vocab=512, d_model=256, n_layers=6, n_heads=8, d_ff=1024, seq_len=128, batch=8)
+
+CONFIGS = {c.name: c for c in (TINY, SMALL)}
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> dict[str, jax.Array]:
+    """Scaled-normal init (GPT-2 style: residual projections down-scaled)."""
+    rng = np.random.default_rng(seed)
+    shapes = cfg.param_shapes()
+    params: dict[str, jax.Array] = {}
+    resid_scale = 1.0 / np.sqrt(2 * cfg.n_layers)
+    for name in cfg.param_names():
+        shp = shapes[name]
+        if name.endswith((".ln1", ".ln2")) or name == "ln_f":
+            arr = np.ones(shp, np.float32)
+        else:
+            std = 0.02 if name in ("tok_emb", "pos_emb", "lm_head") else (1.0 / np.sqrt(shp[1]))
+            arr = (rng.standard_normal(shp) * std).astype(np.float32)
+            if name.endswith((".wo", ".w_down")):
+                arr *= resid_scale
+        params[name] = jnp.asarray(arr)
+    return params
+
+
+def rms_norm(h: jax.Array, gain: jax.Array, eps: float = 1e-5) -> jax.Array:
+    scale = jax.lax.rsqrt(jnp.mean(h * h, axis=-1, keepdims=True) + eps)
+    return h * scale * gain
+
+
+def _attention(cfg: ModelConfig, q, k, v):
+    """Causal multi-head attention over (B, T, d) projections."""
+    b, t, d = q.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+
+    def split(x):
+        return x.reshape(b, t, h, hd).transpose(0, 2, 1, 3)  # (B, H, T, hd)
+
+    qh, kh, vh = split(q), split(k), split(v)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", qh, kh) / np.sqrt(hd)
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    mix = jnp.einsum("bhqk,bhkd->bhqd", probs, vh)
+    return mix.transpose(0, 2, 1, 3).reshape(b, t, d)
+
+
+def _layer(cfg: ModelConfig, p: dict[str, jax.Array], i: int, h: jax.Array):
+    """One transformer block; returns (h_out, activation dict)."""
+    acts: dict[str, jax.Array] = {}
+    x_attn = rms_norm(h, p[f"l{i}.ln1"])
+    acts["attn"] = x_attn
+    q = x_attn @ p[f"l{i}.wq"].T
+    k = x_attn @ p[f"l{i}.wk"].T
+    v = x_attn @ p[f"l{i}.wv"].T
+    mix = _attention(cfg, q, k, v)
+    acts["o"] = mix
+    h = h + mix @ p[f"l{i}.wo"].T
+
+    x_up = rms_norm(h, p[f"l{i}.ln2"])
+    acts["up"] = x_up
+    up = jax.nn.gelu(x_up @ p[f"l{i}.w_up"].T)
+    acts["down"] = up
+    h = h + up @ p[f"l{i}.w_down"].T
+    return h, acts
+
+
+def forward(cfg: ModelConfig, params: dict[str, jax.Array], tokens: jax.Array):
+    """tokens (B, T) int32 → logits (B, T, vocab)."""
+    h = jnp.take(params["tok_emb"], tokens, axis=0) + params["pos_emb"][None, : tokens.shape[1]]
+    for i in range(cfg.n_layers):
+        h, _ = _layer(cfg, params, i, h)
+    h = rms_norm(h, params["ln_f"])
+    return h @ params["lm_head"].T
+
+
+def forward_with_acts(cfg: ModelConfig, params: dict[str, jax.Array], tokens: jax.Array):
+    """Like ``forward`` but also returns the calibration activations.
+
+    Output: (logits, [per-layer dict(attn, o, up, down)]) — flattened into
+    a tuple by the AOT wrapper in a fixed order (layer-major, then
+    attn/o/up/down), which the manifest records.
+    """
+    h = jnp.take(params["tok_emb"], tokens, axis=0) + params["pos_emb"][None, : tokens.shape[1]]
+    all_acts = []
+    for i in range(cfg.n_layers):
+        h, acts = _layer(cfg, params, i, h)
+        all_acts.append(acts)
+    h = rms_norm(h, params["ln_f"])
+    return h @ params["lm_head"].T, all_acts
+
+
+ACT_STREAMS = ("attn", "o", "up", "down")
+
+# projection → which activation stream feeds it
+PROJ_INPUT_STREAM = {
+    "wq": "attn",
+    "wk": "attn",
+    "wv": "attn",
+    "wo": "o",
+    "w_up": "up",
+    "w_down": "down",
+}
+
+
+def loss_fn(cfg: ModelConfig, params: dict[str, jax.Array], tokens: jax.Array):
+    """Next-token cross entropy, mean over (B, T−1).
+
+    One-hot formulation instead of take_along_axis: gathers with computed
+    index arrays miscompile on the pinned xla_extension 0.5.1 runtime
+    (conformance-tested), and this graph ships to that runtime as the
+    perplexity-eval artifact.
+    """
+    logits = forward(cfg, params, tokens[:, :-1])
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(targets, cfg.vocab, dtype=logp.dtype)
+    return -jnp.mean(jnp.sum(logp * onehot, axis=-1))
+
+
+def params_to_list(cfg: ModelConfig, params: dict[str, jax.Array]) -> list[jax.Array]:
+    return [params[n] for n in cfg.param_names()]
+
+
+def list_to_params(cfg: ModelConfig, flat: list[Any]) -> dict[str, Any]:
+    return dict(zip(cfg.param_names(), flat))

@@ -1,0 +1,98 @@
+"""Build-time pretraining of the compression-target transformer (L2).
+
+Runs exactly once inside `make artifacts` (skipped when the weights CBT
+already exists).  Hand-rolled Adam + cosine schedule — still only jnp, so
+the train step could itself be exported (we export it for the record as
+`train_step_<cfg>` but the rust request path never calls it; fine-tuning
+uses the dedicated adapter artifacts instead).
+
+The loss curve is saved into the weights CBT (`pretrain_loss`) and
+reported in EXPERIMENTS.md — the end-to-end evidence that the model the
+pipeline compresses is *really trained*, not noise.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+
+
+def adam_init(params: dict[str, jax.Array]):
+    zeros = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return zeros, {k: jnp.zeros_like(v) for k, v in params.items()}
+
+
+def make_train_step(cfg: M.ModelConfig, base_lr: float, total_steps: int):
+    b1, b2, eps, wd = 0.9, 0.95, 1e-8, 0.01
+
+    def step_fn(params, m, v, tokens, step):
+        loss, grads = jax.value_and_grad(lambda p: M.loss_fn(cfg, p, tokens))(params)
+        warmup = 20.0
+        lr = base_lr * jnp.minimum(1.0, step / warmup)
+        lr = lr * 0.5 * (1.0 + jnp.cos(jnp.pi * jnp.minimum(step / total_steps, 1.0) * 0.9))
+        t = step + 1.0
+        new_p, new_m, new_v = {}, {}, {}
+        for k in params:
+            g = grads[k]
+            m_k = b1 * m[k] + (1 - b1) * g
+            v_k = b2 * v[k] + (1 - b2) * g * g
+            mhat = m_k / (1 - b1**t)
+            vhat = v_k / (1 - b2**t)
+            upd = mhat / (jnp.sqrt(vhat) + eps)
+            if k not in ("ln_f",) and not k.endswith((".ln1", ".ln2")):
+                upd = upd + wd * params[k]
+            new_p[k] = params[k] - lr * upd
+            new_m[k], new_v[k] = m_k, v_k
+        return new_p, new_m, new_v, loss
+
+    return jax.jit(step_fn)
+
+
+def batches(stream: np.ndarray, batch: int, seq_len: int, steps: int, seed: int):
+    """Sample (batch, seq_len+1) windows for next-token training."""
+    rng = np.random.default_rng(seed)
+    hi = len(stream) - seq_len - 1
+    for _ in range(steps):
+        idx = rng.integers(0, hi, size=batch)
+        yield np.stack([stream[i : i + seq_len + 1] for i in idx]).astype(np.int32)
+
+
+def pretrain(
+    cfg: M.ModelConfig,
+    train_stream: np.ndarray,
+    steps: int = 600,
+    base_lr: float = 3e-3,
+    log_every: int = 25,
+    seed: int = 0,
+) -> tuple[dict[str, jax.Array], np.ndarray]:
+    """Train from scratch; returns (params, loss curve (steps,) f32)."""
+    params = M.init_params(cfg, seed=seed)
+    m, v = adam_init(params)
+    step_fn = make_train_step(cfg, base_lr, steps)
+    losses = np.empty(steps, np.float32)
+    t0 = time.time()
+    for i, tok in enumerate(batches(train_stream, cfg.batch, cfg.seq_len, steps, seed + 1)):
+        params, m, v, loss = step_fn(params, m, v, jnp.asarray(tok), jnp.float32(i))
+        losses[i] = float(loss)
+        if i % log_every == 0 or i == steps - 1:
+            print(
+                f"[pretrain {cfg.name}] step {i:4d}/{steps}  loss {losses[i]:.4f}  "
+                f"({time.time() - t0:.1f}s)",
+                flush=True,
+            )
+    return params, losses
+
+
+def eval_ppl(cfg: M.ModelConfig, params, stream: np.ndarray, n_batches: int = 8) -> float:
+    """Held-out perplexity (python-side sanity; rust re-measures via HLO)."""
+    loss_j = jax.jit(functools.partial(M.loss_fn, cfg))
+    tot = 0.0
+    for i, tok in enumerate(batches(stream, cfg.batch, cfg.seq_len, n_batches, seed=7)):
+        tot += float(loss_j(params, jnp.asarray(tok)))
+    return float(np.exp(tot / n_batches))

@@ -1,0 +1,64 @@
+"""CBT — the COALA Binary Tensor format (build-time writer).
+
+A deliberately boring container shared between the python compile path
+(writer) and the rust runtime (reader, `rust/src/runtime/cbt.rs`):
+
+    magic   : 4 bytes  b"CBT1"
+    count   : u32 LE   number of tensors
+    per tensor:
+      name_len : u16 LE
+      name     : utf-8 bytes
+      dtype    : u8   (0 = f32, 1 = i32, 2 = f64)
+      ndim     : u8
+      dims     : ndim × u32 LE
+      data     : row-major little-endian payload
+
+Everything the rust binary needs at run time (trained weights, corpora,
+probe-task banks, pretrain loss curve) ships as CBT files next to the
+HLO artifacts.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"CBT1"
+_DTYPES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1, np.dtype(np.float64): 2}
+_RDTYPES = {0: np.float32, 1: np.int32, 2: np.float64}
+
+
+def save_cbt(path: str, tensors: dict[str, np.ndarray]) -> None:
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr)
+            if arr.dtype not in _DTYPES:
+                raise TypeError(f"{name}: unsupported dtype {arr.dtype}")
+            nb = name.encode()
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", _DTYPES[arr.dtype], arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes())
+
+
+def load_cbt(path: str) -> dict[str, np.ndarray]:
+    out: dict[str, np.ndarray] = {}
+    with open(path, "rb") as f:
+        if f.read(4) != MAGIC:
+            raise ValueError(f"{path}: not a CBT file")
+        (count,) = struct.unpack("<I", f.read(4))
+        for _ in range(count):
+            (nlen,) = struct.unpack("<H", f.read(2))
+            name = f.read(nlen).decode()
+            dt, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
+            dtype = np.dtype(_RDTYPES[dt])
+            n_items = int(np.prod(dims)) if ndim else 1
+            data = f.read(n_items * dtype.itemsize)
+            out[name] = np.frombuffer(data, dtype=dtype).reshape(dims).copy()
+    return out

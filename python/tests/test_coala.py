@@ -1,0 +1,215 @@
+"""COALA algorithm properties: optimality, equivalences, convergence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import coala as C
+from compile import linalg as L
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(seed, *shape):
+    return np.random.default_rng(seed).standard_normal(shape).astype(np.float32)
+
+
+def reconstruct(u, p, r):
+    """W'_r from full factors (the host-side slicing rule)."""
+    return np.asarray(u)[:, :r] @ np.asarray(p)[:r, :]
+
+
+def ctx_err(w, wp, x):
+    return np.linalg.norm((w - wp) @ x)
+
+
+def optimal_err(w, x, r):
+    """Closed-form optimum of problem (3) via numpy (Prop. 1 in fp64)."""
+    wx = w.astype(np.float64) @ x.astype(np.float64)
+    u, _, _ = np.linalg.svd(wx, full_matrices=False)
+    ur = u[:, :r]
+    wp = ur @ ur.T @ w
+    return ctx_err(w, wp, x)
+
+
+# ---------------------------------------------------------------- Alg. 1
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.integers(4, 30),
+    n=st.integers(4, 24),
+    k=st.integers(24, 60),
+    seed=st.integers(0, 2**16),
+)
+def test_coala_attains_the_optimum(m, n, k, seed):
+    """‖(W−W'_r)X‖ must match the Prop.-1 optimum for every rank."""
+    w, x = rand(seed, m, n), rand(seed + 1, n, k)
+    u, s, p = C.coala_factorize_from_x(jnp.asarray(w), jnp.asarray(x))
+    scale = np.linalg.norm(w @ x)
+    for r in (1, min(m, n) // 2, min(m, n)):
+        got = ctx_err(w, reconstruct(u, p, r), x)
+        want = optimal_err(w, x, r)
+        assert got <= want * (1 + 5e-3) + 5e-5 * scale, (r, got, want)
+
+
+def test_coala_rank_is_bounded():
+    w, x = rand(0, 12, 10), rand(1, 10, 40)
+    u, s, p = C.coala_factorize_from_x(jnp.asarray(w), jnp.asarray(x))
+    wp = reconstruct(u, p, 3)
+    assert np.linalg.matrix_rank(wp, tol=1e-4) <= 3
+
+
+def test_coala_handles_rank_deficient_x():
+    """No full-column-rank assumption (the paper's key robustness claim)."""
+    w = rand(2, 8, 10)
+    x_thin = rand(3, 10, 4)  # only 4 samples < n=10
+    u, s, p = C.coala_factorize_from_x(jnp.asarray(w), jnp.asarray(x_thin))
+    assert np.all(np.isfinite(np.asarray(u))) and np.all(np.isfinite(np.asarray(p)))
+    got = ctx_err(w, reconstruct(u, p, 3), x_thin)
+    want = optimal_err(w, x_thin, 3)
+    assert got <= want * 1.01 + 1e-4
+
+
+def test_factorize_from_r_equals_from_x():
+    w, x = rand(4, 10, 12), rand(5, 12, 50)
+    r = L.qr_r_square(jnp.asarray(x).T)
+    u1, s1, p1 = C.coala_factorize(jnp.asarray(w), r)
+    u2, s2, p2 = C.coala_factorize_from_x(jnp.asarray(w), jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(
+        np.abs(reconstruct(u1, p1, 4)), np.abs(reconstruct(u2, p2, 4)), rtol=0, atol=1e-3
+    )
+
+
+# ---------------------------------------------------------------- Alg. 2 (regularization)
+
+
+def test_regularized_r_matches_augmented_x():
+    """Prop. 3: R of [X √μI] ≡ augmenting R itself."""
+    x = rand(6, 9, 33)
+    mu = 0.37
+    r0 = L.qr_r_square(jnp.asarray(x).T)
+    r_aug = np.asarray(C.regularized_r(r0, jnp.float32(mu)))
+    want = x @ x.T + mu * np.eye(9, dtype=np.float32)
+    np.testing.assert_allclose(r_aug.T @ r_aug, want, rtol=2e-3, atol=2e-3)
+
+
+def test_regularized_solution_converges_linearly_in_mu():
+    """Thm 1: ‖W₀ − W_μ‖_F = O(μ) with the predicted constant as bound."""
+    m, n, k, r = 10, 8, 20, 3
+    w, x = rand(7, m, n), rand(8, n, k)
+    u0, _, p0 = C.coala_factorize_from_x(jnp.asarray(w), jnp.asarray(x))
+    w0 = reconstruct(u0, p0, r)
+
+    wx = w @ x
+    s = np.linalg.svd(wx, compute_uv=False)
+    gap2 = s[r - 1] ** 2 - s[r] ** 2
+    const = 2 * np.linalg.norm(w, 2) ** 2 * np.linalg.norm(w) / gap2
+
+    r_factor = L.qr_r_square(jnp.asarray(x).T)
+    errs = []
+    mus = [1e-3, 1e-2, 1e-1]
+    for mu in mus:
+        u, _, p = C.coala_factorize_regularized(jnp.asarray(w), r_factor, jnp.float32(mu))
+        errs.append(np.linalg.norm(w0 - reconstruct(u, p, r)))
+    for mu, err in zip(mus, errs):
+        assert err <= const * mu + 5e-3, (mu, err, const * mu)
+    # roughly linear decay (allowing fp32 noise floor)
+    assert errs[0] < errs[2]
+
+
+def test_mu_from_lambda_terms():
+    """Eq. (5) numerator/denominator against a direct computation."""
+    m, n, k, r = 8, 6, 30, 2
+    w, x = rand(9, m, n), rand(10, n, k)
+    rf = L.qr_r_square(jnp.asarray(x).T)
+    u, s, p = C.coala_factorize(jnp.asarray(w), rf)
+    mask = (np.arange(min(m, n)) < r).astype(np.float32)
+    num, den = C.mu_from_lambda(jnp.asarray(w), u, p, rf, jnp.asarray(mask))
+    w0 = reconstruct(u, p, r)
+    np.testing.assert_allclose(float(num), np.linalg.norm((w0 - w) @ x) ** 2, rtol=2e-2)
+    np.testing.assert_allclose(float(den), np.linalg.norm(w0 - w) ** 2, rtol=2e-2)
+
+
+# ---------------------------------------------------------------- α-family
+
+
+def test_alpha0_equals_plain_svd():
+    w = rand(11, 9, 7)
+    rf = L.qr_r_square(jnp.asarray(rand(12, 7, 30)).T)
+    u0, s0, p0 = C.alpha_factorize(jnp.asarray(w), rf, alpha=0)
+    u1, s1, b1 = C.plain_svd_factorize(jnp.asarray(w))
+    np.testing.assert_allclose(np.asarray(s0), np.asarray(s1), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(reconstruct(u0, p0, 3), reconstruct(u1, b1, 3), atol=1e-3)
+
+
+def test_alpha1_equals_coala():
+    w, x = rand(13, 8, 6), rand(14, 6, 40)
+    rf = L.qr_r_square(jnp.asarray(x).T)
+    ua, sa, pa = C.alpha_factorize(jnp.asarray(w), rf, alpha=1)
+    uc, sc, pc = C.coala_factorize(jnp.asarray(w), rf)
+    np.testing.assert_allclose(np.asarray(sa), np.asarray(sc), rtol=1e-4)
+    np.testing.assert_allclose(reconstruct(ua, pa, 3), reconstruct(uc, pc, 3), atol=1e-3)
+
+
+def test_alpha2_equals_corda_on_well_conditioned_data():
+    """Remark 1: robust α=2 ≡ original CorDA when XXᵀ is well conditioned."""
+    m, n, k, r = 8, 6, 60, 3
+    w, x = rand(15, m, n), rand(16, n, k)
+    rf = L.qr_r_square(jnp.asarray(x).T)
+    u2, s2, p2 = C.alpha_factorize(jnp.asarray(w), rf, alpha=2)
+    g = (x @ x.T).astype(np.float32)
+    uc, sc, bc = C.corda_unrobust(jnp.asarray(w), jnp.asarray(g))
+    np.testing.assert_allclose(reconstruct(u2, p2, r), reconstruct(uc, bc, r), rtol=0, atol=5e-3)
+
+
+def test_alpha_rejects_unknown():
+    with pytest.raises(ValueError):
+        C.alpha_factorize(jnp.ones((4, 4)), jnp.eye(4), alpha=3)
+
+
+# ---------------------------------------------------------------- Gram baselines
+
+
+def test_svdllm_matches_coala_when_well_conditioned():
+    m, n, k, r = 10, 8, 80, 4
+    w, x = rand(17, m, n), rand(18, n, k)
+    g = (x @ x.T).astype(np.float32)
+    u, s, b = C.svdllm_factorize(jnp.asarray(w), jnp.asarray(g))
+    err = ctx_err(w, reconstruct(u, b, r), x)
+    want = optimal_err(w, x, r)
+    assert err <= want * 1.02 + 1e-3
+
+
+def test_svdllm_v2_matches_coala_when_well_conditioned():
+    m, n, k, r = 10, 8, 80, 4
+    w, x = rand(19, m, n), rand(20, n, k)
+    g = (x @ x.T).astype(np.float32)
+    u, s, b = C.svdllm_v2_factorize(jnp.asarray(w), jnp.asarray(g))
+    err = ctx_err(w, reconstruct(u, b, r), x)
+    want = optimal_err(w, x, r)
+    assert err <= want * 1.02 + 1e-3
+
+
+def test_svdllm_breaks_on_singular_gram_but_coala_does_not():
+    """The paper's headline stability claim, in miniature."""
+    m, n, k, r = 6, 8, 4, 2  # k < n ⇒ XXᵀ singular
+    w, x = rand(21, m, n), rand(22, n, k)
+    g = (x @ x.T).astype(np.float32)
+    u, s, b = C.svdllm_factorize(jnp.asarray(w), jnp.asarray(g))
+    assert not np.all(np.isfinite(np.asarray(b)))  # Cholesky of singular G
+    uc, sc, pc = C.coala_factorize_from_x(jnp.asarray(w), jnp.asarray(x))
+    assert np.all(np.isfinite(reconstruct(uc, pc, r)))
+
+
+def test_asvd_is_suboptimal_but_finite():
+    m, n, k, r = 10, 8, 60, 3
+    w, x = rand(23, m, n), rand(24, n, k)
+    scales = (np.mean(np.abs(x), axis=1) ** 0.5 + 1e-3).astype(np.float32)
+    u, s, b = C.asvd_factorize(jnp.asarray(w), jnp.asarray(scales))
+    err = ctx_err(w, reconstruct(u, b, r), x)
+    assert np.isfinite(err)
+    assert err >= optimal_err(w, x, r) * 0.999  # never beats the optimum

@@ -1,0 +1,99 @@
+"""L1 kernel vs pure-jnp oracle — the CORE correctness signal.
+
+Hypothesis sweeps shapes (including non-multiples of the tile so the
+padding path is exercised) and block sizes; assert_allclose against
+ref.py.  f32 everywhere (the artifact dtype); f64 smoke-checked too.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gram, matmul, ref, trailing
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(rng, *shape, dtype=np.float32):
+    return rng.standard_normal(shape).astype(dtype)
+
+
+dims = st.integers(min_value=1, max_value=97)
+blocks = st.sampled_from([(8, 8, 8), (16, 32, 8), (32, 32, 32), (128, 128, 128)])
+
+
+@settings(max_examples=30, deadline=None)
+@given(m=dims, k=dims, n=dims, block=blocks, seed=st.integers(0, 2**16))
+def test_tiled_matmul_matches_ref(m, k, n, block, seed):
+    rng = np.random.default_rng(seed)
+    x, y = rand(rng, m, k), rand(rng, k, n)
+    got = matmul.tiled_matmul(jnp.asarray(x), jnp.asarray(y), block=block)
+    want = ref.matmul_ref(jnp.asarray(x), jnp.asarray(y))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(2, 80),
+    c=st.integers(1, 200),
+    block=st.sampled_from([(16, 16), (32, 64), (128, 128)]),
+    seed=st.integers(0, 2**16),
+)
+def test_gram_update_matches_ref(n, c, block, seed):
+    rng = np.random.default_rng(seed)
+    g = rand(rng, n, n)
+    g = g + g.T  # symmetric running Gram
+    xt = rand(rng, c, n)
+    got = gram.gram_update(jnp.asarray(g), jnp.asarray(xt), block=block)
+    want = ref.gram_update_ref(jnp.asarray(g), jnp.asarray(xt))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(4, 120),
+    n=st.integers(1, 60),
+    b=st.sampled_from([2, 4, 8, 16]),
+    seed=st.integers(0, 2**16),
+)
+def test_trailing_update_matches_ref(m, n, b, seed):
+    rng = np.random.default_rng(seed)
+    a, v, t = rand(rng, m, n), rand(rng, m, b), np.triu(rand(rng, b, b))
+    got = trailing.trailing_update(jnp.asarray(a), jnp.asarray(v), jnp.asarray(t))
+    want = ref.trailing_update_ref(jnp.asarray(a), jnp.asarray(v), jnp.asarray(t))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_matmul_f64():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((33, 17))
+    y = rng.standard_normal((17, 29))
+    with jax.enable_x64(True):
+        got = matmul.tiled_matmul(jnp.asarray(x), jnp.asarray(y), block=(16, 16, 16))
+        np.testing.assert_allclose(np.asarray(got), x @ y, rtol=1e-12)
+
+
+def test_matmul_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        matmul.tiled_matmul(jnp.ones((2, 3)), jnp.ones((4, 5)))
+    with pytest.raises(ValueError):
+        matmul.tiled_matmul(jnp.ones((2, 3, 4)), jnp.ones((4, 5)))
+
+
+def test_gram_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        gram.gram_update(jnp.ones((3, 3)), jnp.ones((5, 4)))
+
+
+def test_trailing_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        trailing.trailing_update(jnp.ones((4, 4)), jnp.ones((5, 2)), jnp.ones((2, 2)))
+
+
+def test_vmem_and_flops_helpers():
+    assert matmul.vmem_bytes((128, 128, 128)) == 3 * 128 * 128 * 4
+    assert matmul.matmul_flops(2, 3, 4) == 48
+    assert gram.gram_flops(4, 10) == 320
+    assert trailing.trailing_flops(8, 4, 2) == 2 * 2 * 4 * 8 + 2 * 4 * 4 + 2 * 8 * 4 * 2

@@ -1,0 +1,199 @@
+"""Hand-rolled L2 numerics vs numpy — QR/TSQR/SVD/eig/Cholesky/solves."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import linalg as L
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(seed, *shape):
+    return np.random.default_rng(seed).standard_normal(shape).astype(np.float32)
+
+
+# ---------------------------------------------------------------- QR
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(1, 120), n=st.integers(1, 60), seed=st.integers(0, 2**16))
+def test_householder_qr_gram_identity(m, n, seed):
+    """RᵀR must equal AᵀA — the only property COALA needs from R."""
+    a = rand(seed, m, n)
+    r = np.asarray(L.householder_qr_r(jnp.asarray(a)))
+    assert r.shape == (min(m, n), n)
+    np.testing.assert_allclose(r.T @ r, a.T @ a, rtol=5e-4, atol=5e-4)
+    # upper triangular
+    np.testing.assert_array_equal(np.tril(r, -1), np.zeros_like(np.tril(r, -1)))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.integers(64, 200),
+    npanels=st.integers(2, 4),
+    seed=st.integers(0, 2**16),
+)
+def test_blocked_qr_matches_unblocked(m, npanels, seed):
+    n = 32 * npanels
+    m = max(m, n)
+    a = rand(seed, m, n)
+    r_b = np.asarray(L.blocked_qr_r(jnp.asarray(a), panel=32))
+    np.testing.assert_allclose(r_b.T @ r_b, a.T @ a, rtol=2e-3, atol=2e-3)
+
+
+def test_blocked_qr_kernel_vs_oracle_path():
+    a = rand(3, 150, 64)
+    r1 = np.asarray(L.blocked_qr_r(jnp.asarray(a), panel=32, use_kernel=True))
+    r2 = np.asarray(L.blocked_qr_r(jnp.asarray(a), panel=32, use_kernel=False))
+    np.testing.assert_allclose(r1, r2, rtol=1e-4, atol=1e-4)
+
+
+def test_qr_r_square_pads_wide_input():
+    a = rand(5, 3, 8)  # m < n
+    r = np.asarray(L.qr_r_square(jnp.asarray(a)))
+    assert r.shape == (8, 8)
+    np.testing.assert_allclose(r.T @ r, a.T @ a, rtol=1e-3, atol=1e-3)
+
+
+def test_qr_rank_deficient_is_finite():
+    a = np.ones((40, 10), np.float32)  # rank 1
+    r = np.asarray(L.householder_qr_r(jnp.asarray(a)))
+    assert np.all(np.isfinite(r))
+    np.testing.assert_allclose(r.T @ r, a.T @ a, rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------- TSQR
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(2, 24), chunks=st.integers(1, 5), c=st.integers(4, 40), seed=st.integers(0, 2**16))
+def test_tsqr_stream_equals_full_qr(n, chunks, c, seed):
+    xs = [rand(seed + i, c, n) for i in range(chunks)]
+    r = jnp.zeros((n, n), jnp.float32)
+    for xc in xs:
+        r = L.tsqr_step(r, jnp.asarray(xc))
+    full = np.concatenate(xs, axis=0)
+    np.testing.assert_allclose(
+        np.asarray(r).T @ np.asarray(r), full.T @ full, rtol=2e-3, atol=2e-3
+    )
+
+
+def test_tsqr_tree_merge_matches_sequential():
+    n, c = 12, 30
+    xs = [rand(50 + i, c, n) for i in range(4)]
+    leaves = [L.qr_r_square(jnp.asarray(x)) for x in xs]
+    merged = L.tsqr_merge(L.tsqr_merge(leaves[0], leaves[1]), L.tsqr_merge(leaves[2], leaves[3]))
+    full = np.concatenate(xs, axis=0)
+    np.testing.assert_allclose(
+        np.asarray(merged).T @ np.asarray(merged), full.T @ full, rtol=2e-3, atol=2e-3
+    )
+
+
+# ---------------------------------------------------------------- Jacobi SVD
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(2, 60), n=st.integers(2, 24), seed=st.integers(0, 2**16))
+def test_jacobi_svd_reconstructs(m, n, seed):
+    m = max(m, n)
+    a = rand(seed, m, n)
+    u, s, v = (np.asarray(t) for t in L.jacobi_svd(jnp.asarray(a)))
+    np.testing.assert_allclose(u @ np.diag(s) @ v.T, a, rtol=0, atol=5e-4 * max(1, np.abs(a).max()))
+    np.testing.assert_allclose(u.T @ u, np.eye(n), atol=5e-4)
+    np.testing.assert_allclose(v.T @ v, np.eye(n), atol=5e-4)
+    # singular values match numpy, descending
+    s_np = np.linalg.svd(a, compute_uv=False)
+    np.testing.assert_allclose(s, s_np, rtol=1e-3, atol=1e-3)
+    assert np.all(np.diff(s) <= 1e-5)
+
+
+def test_jacobi_svd_odd_width_pads():
+    a = rand(11, 9, 7)
+    u, s, v = (np.asarray(t) for t in L.jacobi_svd(jnp.asarray(a)))
+    assert u.shape == (9, 7) and s.shape == (7,) and v.shape == (7, 7)
+    np.testing.assert_allclose(u @ np.diag(s) @ v.T, a, atol=1e-3)
+
+
+def test_jacobi_svd_rank_deficient():
+    a = np.outer(rand(1, 20), rand(2, 8)).astype(np.float32)
+    u, s, v = (np.asarray(t) for t in L.jacobi_svd(jnp.asarray(a)))
+    assert s[0] > 1e-3 and np.all(s[1:] < 1e-4)
+    np.testing.assert_allclose(u @ np.diag(s) @ v.T, a, atol=1e-4)
+
+
+def test_jacobi_svd_requires_tall():
+    with pytest.raises(ValueError):
+        L.jacobi_svd(jnp.ones((3, 5)))
+
+
+def test_eigh_psd_matches_numpy():
+    a = rand(7, 30, 18)
+    g = (a.T @ a).astype(np.float32)
+    lam, u = (np.asarray(t) for t in L.eigh_psd(jnp.asarray(g)))
+    lam_np = np.linalg.eigvalsh(g)[::-1]
+    np.testing.assert_allclose(lam, lam_np, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(u @ np.diag(lam) @ u.T, g, rtol=0, atol=2e-2)
+
+
+# ---------------------------------------------------------------- Cholesky / solves
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 40), seed=st.integers(0, 2**16))
+def test_cholesky_matches_numpy(n, seed):
+    a = rand(seed, n + 5, n)
+    g = a.T @ a + 0.1 * np.eye(n, dtype=np.float32)
+    l = np.asarray(L.cholesky(jnp.asarray(g)))
+    np.testing.assert_allclose(l @ l.T, g, rtol=1e-3, atol=1e-3)
+    np.testing.assert_array_equal(np.triu(l, 1), np.zeros_like(np.triu(l, 1)))
+
+
+def test_cholesky_singular_produces_nonfinite():
+    """The SVD-LLM failure mode: singular Gram ⇒ NaN/Inf factor."""
+    g = np.ones((6, 6), np.float32)  # rank 1, singular
+    l = np.asarray(L.cholesky(jnp.asarray(g)))
+    assert not np.all(np.isfinite(l))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(1, 30),
+    k=st.integers(1, 10),
+    lower=st.booleans(),
+    trans=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+def test_solve_triangular(n, k, lower, trans, seed):
+    rng = np.random.default_rng(seed)
+    t = rng.standard_normal((n, n)).astype(np.float32)
+    t = (np.tril(t) if lower else np.triu(t)) + 3 * np.eye(n, dtype=np.float32)
+    b = rng.standard_normal((n, k)).astype(np.float32)
+    x = np.asarray(L.solve_triangular(jnp.asarray(t), jnp.asarray(b), lower=lower, trans=trans))
+    lhs = (t.T if trans else t) @ x
+    np.testing.assert_allclose(lhs, b, rtol=2e-3, atol=2e-3)
+
+
+def test_matrix_power_half():
+    x = rand(9, 10, 25)  # n=10, k=25
+    got = np.asarray(L.matrix_power_half(jnp.asarray(x), alpha=1))
+    g = x @ x.T
+    lam, u = np.linalg.eigh(g)
+    want = (u * np.sqrt(np.maximum(lam, 0))[None, :]) @ u.T
+    np.testing.assert_allclose(got, want, rtol=1e-2, atol=1e-3)
+
+
+def test_round_robin_schedule_covers_all_pairs():
+    for n in (4, 8, 14):
+        sched = L._round_robin_pairs(n)
+        assert sched.shape == (n - 1, 2, n // 2)
+        seen = set()
+        for rnd in sched:
+            cols = set(rnd[0]) | set(rnd[1])
+            assert cols == set(range(n))  # disjoint cover each round
+            for p, q in zip(rnd[0], rnd[1]):
+                assert p < q
+                seen.add((int(p), int(q)))
+        assert len(seen) == n * (n - 1) // 2  # every pair exactly once

@@ -1,0 +1,112 @@
+"""Transformer L2 graph: shapes, causality, trainability, adapters."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import adapters as A
+from compile import model as M
+from compile import pretrain as P
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.ModelConfig("test", vocab=64, d_model=32, n_layers=2, n_heads=2, d_ff=64, seq_len=16, batch=2)
+
+
+def toks(seed=0, batch=2, t=16):
+    return jnp.asarray(np.random.default_rng(seed).integers(0, CFG.vocab, (batch, t)), jnp.int32)
+
+
+def test_forward_shapes():
+    params = M.init_params(CFG)
+    logits = M.forward(CFG, params, toks())
+    assert logits.shape == (2, 16, CFG.vocab)
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+def test_param_inventory_consistent():
+    names = CFG.param_names()
+    shapes = CFG.param_shapes()
+    assert len(names) == len(set(names))
+    assert set(names) == set(shapes)
+    assert len(CFG.compressible()) == 6 * CFG.n_layers
+    for p in CFG.compressible():
+        assert p in shapes
+
+
+def test_causality():
+    """Changing a future token must not affect past logits."""
+    params = M.init_params(CFG)
+    t1 = toks(1)
+    t2 = t1.at[:, 10].set((t1[:, 10] + 1) % CFG.vocab)
+    l1 = np.asarray(M.forward(CFG, params, t1))
+    l2 = np.asarray(M.forward(CFG, params, t2))
+    np.testing.assert_allclose(l1[:, :10], l2[:, :10], atol=1e-5)
+    assert np.abs(l1[:, 10:] - l2[:, 10:]).max() > 1e-6
+
+
+def test_activation_capture_matches_forward():
+    params = M.init_params(CFG)
+    logits1 = M.forward(CFG, params, toks(2))
+    logits2, acts = M.forward_with_acts(CFG, params, toks(2))
+    np.testing.assert_allclose(np.asarray(logits1), np.asarray(logits2), atol=1e-6)
+    assert len(acts) == CFG.n_layers
+    for layer in acts:
+        assert set(layer) == set(M.ACT_STREAMS)
+        assert layer["attn"].shape == (2, 16, CFG.d_model)
+        assert layer["down"].shape == (2, 16, CFG.d_ff)
+
+
+def test_activations_feed_the_right_projection():
+    """W'·x over captured acts must reproduce each projection output."""
+    params = M.init_params(CFG)
+    _, acts = M.forward_with_acts(CFG, params, toks(3))
+    x = np.asarray(acts[0]["attn"]).reshape(-1, CFG.d_model)
+    q = x @ np.asarray(params["l0.wq"]).T
+    assert q.shape == (32, CFG.d_model)
+    assert np.isfinite(q).all()
+
+
+def test_loss_decreases_with_training():
+    lang_stream = np.random.default_rng(5).integers(0, CFG.vocab, 8000).astype(np.int32)
+    # make it learnable: deterministic successor pattern
+    lang_stream[1::2] = (lang_stream[0::2] * 7 + 3) % CFG.vocab
+    big = M.ModelConfig("test", vocab=64, d_model=32, n_layers=2, n_heads=2, d_ff=64, seq_len=16, batch=8)
+    params, losses = P.pretrain(big, lang_stream, steps=200, base_lr=1e-2, log_every=1000)
+    assert losses[-5:].mean() < losses[:5].mean() * 0.8
+
+
+def test_adapter_forward_matches_base_when_zero():
+    params = M.init_params(CFG)
+    ads = {n: jnp.zeros(s) for n, s in A.adapter_shapes(CFG, 4)}
+    l_base = M.forward(CFG, params, toks(4))
+    l_ad = A.forward_adapted(CFG, params, ads, toks(4))
+    np.testing.assert_allclose(np.asarray(l_base), np.asarray(l_ad), atol=1e-5)
+
+
+def test_adapter_train_step_reduces_loss():
+    params = M.init_params(CFG)
+    rng = np.random.default_rng(6)
+    ads = {}
+    for n, s in A.adapter_shapes(CFG, 4):
+        if n.endswith(".A"):
+            ads[n] = jnp.asarray(rng.standard_normal(s).astype(np.float32) * 0.02)
+        else:
+            ads[n] = jnp.zeros(s)
+    m = {k: jnp.zeros_like(v) for k, v in ads.items()}
+    v = {k: jnp.zeros_like(v_) for k, v_ in ads.items()}
+    batch = toks(7, 2, 17)
+    step = jax.jit(lambda a, mm, vv, t, s: A.adapter_train_step(CFG, params, a, mm, vv, t, jnp.float32(1e-2), s))
+    loss0 = None
+    for i in range(12):
+        loss, ads, m, v = step(ads, m, v, batch, jnp.float32(i))
+        if loss0 is None:
+            loss0 = float(loss)
+    assert float(loss) < loss0 - 1e-3
+
+
+def test_adapter_shapes_abi():
+    shp = A.adapter_shapes(CFG, 8)
+    assert len(shp) == 2 * 6 * CFG.n_layers
+    assert shp[0][0] == "l0.wq.A" and shp[0][1] == (CFG.d_model, 8)
+    assert shp[1][0] == "l0.wq.B" and shp[1][1] == (8, CFG.d_model)

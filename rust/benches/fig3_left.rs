@@ -1,0 +1,24 @@
+//! Bench: Fig. 3 (left) — QR of Xᵀ vs Gram+eig as the column count grows
+//! (host linalg; the crossover claim of §4.2).
+
+use coala::linalg::{eigh, qr_r_square};
+use coala::tensor::ops::gram_t;
+use coala::tensor::Matrix;
+use coala::util::bench::{bench, BenchOpts};
+
+fn main() {
+    let rows = 192usize;
+    let opts = BenchOpts { max_iters: 5, min_iters: 2, ..BenchOpts::default() }.from_env();
+    println!("== Fig.3 left bench: S with SSᵀ = XXᵀ, X ∈ R^{rows}×k ==");
+    for k in [256usize, 512, 1024, 2048, 4096, 8192] {
+        let x: Matrix<f32> = Matrix::randn(rows, k, 7);
+        let xt = x.transpose();
+        bench(&format!("qr/k={k}"), &opts, || {
+            std::hint::black_box(qr_r_square(&xt).unwrap());
+        });
+        bench(&format!("gram+eig/k={k}"), &opts, || {
+            let g = gram_t(&xt);
+            std::hint::black_box(eigh(&g, 30).unwrap());
+        });
+    }
+}

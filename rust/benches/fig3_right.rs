@@ -1,0 +1,31 @@
+//! Bench: Fig. 3 (right) — streamed TSQR chunk-size sweep vs chunked
+//! Gram accumulation at fixed total width.
+
+use coala::linalg::{eigh, tsqr_sequential, tsqr_tree};
+use coala::tensor::ops::gram_t;
+use coala::tensor::Matrix;
+use coala::util::bench::{bench, BenchOpts};
+
+fn main() {
+    let rows = 192usize;
+    let total_k = 16384usize;
+    let opts = BenchOpts::heavy().from_env();
+    println!("== Fig.3 right bench: X ∈ R^{rows}×{total_k} in chunks ==");
+    for c in [512usize, 1024, 2048, 4096] {
+        let chunks: Vec<Matrix<f32>> =
+            (0..total_k / c).map(|i| Matrix::randn(c, rows, i as u64)).collect();
+        bench(&format!("tsqr-seq/chunk={c}"), &opts, || {
+            std::hint::black_box(tsqr_sequential(&chunks).unwrap());
+        });
+        bench(&format!("tsqr-tree4/chunk={c}"), &opts, || {
+            std::hint::black_box(tsqr_tree(&chunks, 4).unwrap());
+        });
+        bench(&format!("gram-chunked/chunk={c}"), &opts, || {
+            let mut g = Matrix::<f32>::zeros(rows, rows);
+            for ch in &chunks {
+                g = g.add(&gram_t(ch)).unwrap();
+            }
+            std::hint::black_box(eigh(&g, 30).unwrap());
+        });
+    }
+}

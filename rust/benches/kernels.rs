@@ -1,0 +1,52 @@
+//! Bench: the PJRT-executed factorization artifacts (the request-path
+//! hot ops) + host-linalg equivalents for the speedup ratio.
+
+use coala::linalg::qr_r_square;
+use coala::runtime::{ops, Executor};
+use coala::tensor::Matrix;
+use coala::util::bench::{bench, BenchOpts};
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("kernels bench: artifacts/ missing — run `make artifacts` first");
+        return;
+    }
+    let ex = Executor::new("artifacts").unwrap();
+    let cfg = ex.manifest.config("tiny").unwrap().clone();
+    let (n, f, c) = (cfg.d_model, cfg.d_ff, cfg.chunk_cols());
+    let opts = BenchOpts::default().from_env();
+    println!("== artifact op benches (tiny shapes) ==");
+
+    let chunk_n = Matrix::<f32>::randn(c, n, 1);
+    let chunk_f = Matrix::<f32>::randn(c, f, 2);
+    let r0n = Matrix::<f32>::zeros(n, n);
+    let r0f = Matrix::<f32>::zeros(f, f);
+    bench(&format!("pjrt/tsqr_step {n}x{c}"), &opts, || {
+        std::hint::black_box(ops::tsqr_step(&ex, &r0n, &chunk_n).unwrap());
+    });
+    bench(&format!("pjrt/tsqr_step {f}x{c}"), &opts, || {
+        std::hint::black_box(ops::tsqr_step(&ex, &r0f, &chunk_f).unwrap());
+    });
+    bench(&format!("host/qr {c}x{n}"), &opts, || {
+        std::hint::black_box(qr_r_square(&chunk_n).unwrap());
+    });
+
+    let w = Matrix::<f32>::randn(n, n, 3);
+    let r = ops::tsqr_step(&ex, &r0n, &chunk_n).unwrap();
+    bench(&format!("pjrt/factorize {n}x{n}"), &opts, || {
+        std::hint::black_box(ops::factorize(&ex, &w, &r).unwrap());
+    });
+    bench(&format!("pjrt/factorize_reg {n}x{n}"), &opts, || {
+        std::hint::black_box(ops::factorize_reg(&ex, &w, &r, 1e-2).unwrap());
+    });
+    let g = ops::gram_update(&ex, &Matrix::zeros(n, n), &chunk_n).unwrap();
+    bench(&format!("pjrt/svdllm {n}x{n}"), &opts, || {
+        std::hint::black_box(ops::svdllm(&ex, &w, &g).unwrap());
+    });
+    bench(&format!("pjrt/svdllm2 {n}x{n}"), &opts, || {
+        std::hint::black_box(ops::svdllm2(&ex, &w, &g).unwrap());
+    });
+    bench(&format!("host/coala_factorize {n}x{n}"), &opts, || {
+        std::hint::black_box(coala::coala::coala_factorize(&w, &r, 12).unwrap());
+    });
+}

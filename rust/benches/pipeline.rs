@@ -1,0 +1,46 @@
+//! Bench: end-to-end pipeline stages + the overlapped scheduler vs the
+//! sequential calibration (the §Perf L3 target).
+
+use coala::calib::dataset::Corpus;
+use coala::coala::{Method, MuRule};
+use coala::coordinator::scheduler::calibrate_overlapped;
+use coala::coordinator::{CompressionJob, Pipeline, TsqrTreeRunner};
+use coala::model::ModelWeights;
+use coala::runtime::Executor;
+use coala::tensor::Matrix;
+use coala::util::bench::{bench, BenchOpts};
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("pipeline bench: artifacts/ missing — run `make artifacts` first");
+        return;
+    }
+    let ex = Executor::new("artifacts").unwrap();
+    let corpus = Corpus::load("artifacts").unwrap();
+    let spec = ex.manifest.config("tiny").unwrap().clone();
+    let w = ModelWeights::load("artifacts", &spec).unwrap();
+    let opts = BenchOpts::heavy().from_env();
+
+    let pipe = Pipeline::new(&ex, spec.clone(), &w);
+    let mut job = CompressionJob::new("tiny", Method::Coala(MuRule::None), 0.5);
+    job.calib_batches = 4;
+    bench("pipeline/coala e2e (4 batches)", &opts, || {
+        std::hint::black_box(pipe.run(&job, &corpus).unwrap());
+    });
+
+    let batches = corpus.batches("calib", spec.batch, spec.seq_len, 4).unwrap();
+    bench("scheduler/overlapped calibrate", &opts, || {
+        std::hint::black_box(
+            calibrate_overlapped("artifacts", "tiny", batches.clone(), 2).unwrap(),
+        );
+    });
+
+    let chunks: Vec<Matrix<f32>> =
+        (0..8).map(|i| Matrix::randn(spec.chunk_cols(), spec.d_model, i as u64)).collect();
+    for workers in [1usize, 2, 4] {
+        let runner = TsqrTreeRunner::new("artifacts", workers);
+        bench(&format!("tsqr-tree/workers={workers}"), &opts, || {
+            std::hint::black_box(runner.run(chunks.clone()).unwrap());
+        });
+    }
+}

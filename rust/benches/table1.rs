@@ -1,0 +1,38 @@
+//! Bench: Table 1 — full-model compression wall-clock per method.
+//! (criterion is not vendorable offline; uses the crate's bench harness
+//! with the same warmup/mean±std methodology.)
+
+use coala::calib::dataset::Corpus;
+use coala::coala::{Method, MuRule};
+use coala::coordinator::{CompressionJob, Pipeline};
+use coala::model::ModelWeights;
+use coala::runtime::Executor;
+use coala::util::bench::{bench, BenchOpts};
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("table1 bench: artifacts/ missing — run `make artifacts` first");
+        return;
+    }
+    let ex = Executor::new("artifacts").unwrap();
+    let corpus = Corpus::load("artifacts").unwrap();
+    let opts = BenchOpts::heavy().from_env();
+    println!("== Table 1 bench: compression wall-clock ==");
+    for cfg_name in ["tiny", "small"] {
+        let spec = ex.manifest.config(cfg_name).unwrap().clone();
+        let w = ModelWeights::load("artifacts", &spec).unwrap();
+        let pipe = Pipeline::new(&ex, spec.clone(), &w);
+        for (label, method) in [
+            ("SVD-LLM", Method::SvdLlm),
+            ("SVD-LLM-v2", Method::SvdLlmV2),
+            ("COALA", Method::Coala(MuRule::None)),
+        ] {
+            let mut job = CompressionJob::new(cfg_name, method, 0.3);
+            job.calib_batches = 4;
+            bench(&format!("{cfg_name}/{label}"), &opts, || {
+                let out = pipe.run(&job, &corpus).unwrap();
+                std::hint::black_box(out.model.factored_params());
+            });
+        }
+    }
+}

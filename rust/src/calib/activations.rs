@@ -1,0 +1,140 @@
+//! Activation capture: one `fwd_acts` execution → per-stream calibration
+//! chunks, each a (B·T × width) row-block of Xᵀ ready for TSQR / Gram
+//! streaming.
+
+use crate::error::{Error, Result};
+use crate::model::weights::ModelWeights;
+use crate::runtime::executor::{Executor, Value};
+use crate::runtime::manifest::ModelSpec;
+use crate::tensor::Matrix;
+
+/// The calibration rows for one (layer, stream) from one batch.
+#[derive(Debug)]
+pub struct CalibChunk {
+    pub layer: usize,
+    pub stream: String,
+    /// (B·T × width) — rows are activation vectors (Xᵀ chunk).
+    pub xt: Matrix<f32>,
+}
+
+/// Runs `fwd_acts_<cfg>` and splits the outputs into calibration chunks.
+pub struct ActivationCapture<'a> {
+    pub ex: &'a Executor,
+    pub spec: &'a ModelSpec,
+    artifact: String,
+}
+
+impl<'a> ActivationCapture<'a> {
+    pub fn new(ex: &'a Executor, spec: &'a ModelSpec) -> ActivationCapture<'a> {
+        ActivationCapture { ex, spec, artifact: format!("fwd_acts_{}", spec.name) }
+    }
+
+    /// Forward one token batch; returns (logits value, chunks).
+    ///
+    /// Output ABI (aot.py): [logits, l0.attn, l0.o, l0.up, l0.down,
+    /// l1.attn, …] — layer-major, stream order = spec.act_streams.
+    pub fn capture(&self, tokens: &Value, weights: &ModelWeights) -> Result<(Value, Vec<CalibChunk>)> {
+        let mut inputs = vec![tokens.clone()];
+        inputs.extend(weights.to_values(self.spec)?);
+        let mut out = self.ex.run(&self.artifact, &inputs)?;
+        if out.len() != 1 + self.spec.n_layers * self.spec.act_streams.len() {
+            return Err(Error::shape(format!(
+                "fwd_acts returned {} outputs",
+                out.len()
+            )));
+        }
+        let rest = out.split_off(1);
+        let logits = out.pop().unwrap();
+        let rows = self.spec.batch * self.spec.seq_len;
+        let mut chunks = Vec::with_capacity(rest.len());
+        for (idx, v) in rest.into_iter().enumerate() {
+            let layer = idx / self.spec.act_streams.len();
+            let stream = self.spec.act_streams[idx % self.spec.act_streams.len()].clone();
+            let dims = v.dims().to_vec();
+            if dims.len() != 3 || dims[0] * dims[1] != rows {
+                return Err(Error::shape(format!("activation dims {dims:?}")));
+            }
+            let width = dims[2];
+            // (B, T, width) row-major flattens directly to (B·T, width)
+            let xt = Matrix::from_vec(rows, width, v.f32s()?.to_vec())?;
+            chunks.push(CalibChunk { layer, stream, xt });
+        }
+        Ok((logits, chunks))
+    }
+
+    /// Which (layer, stream) chunk feeds a given projection name.
+    pub fn chunk_for<'c>(
+        &self,
+        chunks: &'c [CalibChunk],
+        proj: &str,
+    ) -> Result<&'c CalibChunk> {
+        let layer: usize = proj
+            .strip_prefix('l')
+            .and_then(|s| s.split('.').next())
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| Error::Config(format!("bad projection name `{proj}`")))?;
+        let stream = self.spec.stream_of(proj)?;
+        chunks
+            .iter()
+            .find(|c| c.layer == layer && c.stream == stream)
+            .ok_or_else(|| Error::Config(format!("no chunk for `{proj}`")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calib::dataset::Corpus;
+
+    fn setup() -> Option<(Executor, Corpus)> {
+        if !std::path::Path::new("artifacts/manifest.json").exists() {
+            return None;
+        }
+        Some((Executor::new("artifacts").unwrap(), Corpus::load("artifacts").unwrap()))
+    }
+
+    #[test]
+    fn captures_all_streams_with_sane_stats() {
+        let Some((ex, corpus)) = setup() else { return };
+        let spec = ex.manifest.config("tiny").unwrap().clone();
+        let w = ModelWeights::load("artifacts", &spec).unwrap();
+        let cap = ActivationCapture::new(&ex, &spec);
+        let tokens = corpus.batches("calib", spec.batch, spec.seq_len, 1).unwrap();
+        let (logits, chunks) = cap.capture(&tokens[0], &w).unwrap();
+        assert_eq!(logits.dims(), &[spec.batch, spec.seq_len, spec.vocab]);
+        assert_eq!(chunks.len(), spec.n_layers * 4);
+        for c in &chunks {
+            assert!(c.xt.all_finite(), "layer {} {}", c.layer, c.stream);
+            let width = if c.stream == "down" { spec.d_ff } else { spec.d_model };
+            assert_eq!(c.xt.cols, width);
+            assert_eq!(c.xt.rows, spec.batch * spec.seq_len);
+            // real activations are not all-zero
+            let norm = crate::tensor::ops::fro(&c.xt);
+            assert!(norm > 1.0, "layer {} {} norm {norm}", c.layer, c.stream);
+        }
+        // routing
+        let q = cap.chunk_for(&chunks, "l2.wq").unwrap();
+        assert_eq!((q.layer, q.stream.as_str()), (2, "attn"));
+        let d = cap.chunk_for(&chunks, "l0.w_down").unwrap();
+        assert_eq!((d.layer, d.stream.as_str()), (0, "down"));
+        assert!(cap.chunk_for(&chunks, "garbage").is_err());
+    }
+
+    #[test]
+    fn logits_match_fwd_logits_artifact() {
+        let Some((ex, corpus)) = setup() else { return };
+        let spec = ex.manifest.config("tiny").unwrap().clone();
+        let w = ModelWeights::load("artifacts", &spec).unwrap();
+        let cap = ActivationCapture::new(&ex, &spec);
+        let tokens = corpus.batches("calib", spec.batch, spec.seq_len, 1).unwrap();
+        let (logits_a, _) = cap.capture(&tokens[0], &w).unwrap();
+        let mut inputs = vec![tokens[0].clone()];
+        inputs.extend(w.to_values(&spec).unwrap());
+        let logits_b = ex.run(&format!("fwd_logits_{}", spec.name), &inputs).unwrap();
+        let a = logits_a.f32s().unwrap();
+        let b = logits_b[0].f32s().unwrap();
+        for (x, y) in a.iter().zip(b).step_by(97) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+    }
+}

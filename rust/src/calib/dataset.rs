@@ -1,0 +1,177 @@
+//! Corpus + probe-task banks (generated deterministically at build time
+//! by `python/compile/data.py`, shipped as CBT).
+
+use crate::error::{Error, Result};
+use crate::runtime::cbt::Cbt;
+use crate::runtime::executor::Value;
+use crate::util::prng::Rng;
+
+/// Token streams: train / val / calib / ft_train / ft_calib.
+#[derive(Debug)]
+pub struct Corpus {
+    pub splits: std::collections::BTreeMap<String, Vec<i32>>,
+}
+
+impl Corpus {
+    pub fn load(dir: &str) -> Result<Corpus> {
+        let cbt = Cbt::load(&format!("{dir}/corpus.cbt"))?;
+        let mut splits = std::collections::BTreeMap::new();
+        for (name, t) in &cbt.tensors {
+            splits.insert(name.clone(), t.i32s()?.to_vec());
+        }
+        Ok(Corpus { splits })
+    }
+
+    pub fn split(&self, name: &str) -> Result<&[i32]> {
+        self.splits
+            .get(name)
+            .map(|v| v.as_slice())
+            .ok_or_else(|| Error::Config(format!("no corpus split `{name}`")))
+    }
+
+    /// Deterministic sequential batches of shape (batch, seq_len) used
+    /// for calibration forward passes.
+    pub fn batches(&self, split: &str, batch: usize, seq_len: usize, count: usize) -> Result<Vec<Value>> {
+        let s = self.split(split)?;
+        let need = batch * seq_len;
+        if s.len() < need {
+            return Err(Error::Config(format!("split `{split}` too small: {}", s.len())));
+        }
+        let mut out = Vec::with_capacity(count);
+        for b in 0..count {
+            let start = (b * need) % (s.len() - need + 1);
+            out.push(Value::I32(vec![batch, seq_len], s[start..start + need].to_vec()));
+        }
+        Ok(out)
+    }
+
+    /// Random (seeded) batches with one extra token (LM targets) — the
+    /// fine-tuning feed.
+    pub fn train_batches(
+        &self,
+        split: &str,
+        batch: usize,
+        seq_len: usize,
+        count: usize,
+        seed: u64,
+    ) -> Result<Vec<Value>> {
+        let s = self.split(split)?;
+        let win = seq_len + 1;
+        if s.len() < win + 1 {
+            return Err(Error::Config(format!("split `{split}` too small")));
+        }
+        let mut rng = Rng::new(seed);
+        let mut out = Vec::with_capacity(count);
+        for _ in 0..count {
+            let mut data = Vec::with_capacity(batch * win);
+            for _ in 0..batch {
+                let start = rng.below(s.len() - win);
+                data.extend_from_slice(&s[start..start + win]);
+            }
+            out.push(Value::I32(vec![batch, win], data));
+        }
+        Ok(out)
+    }
+}
+
+/// One probe-task bank: contexts ending with an (s, p) fact query and
+/// four candidate objects.
+#[derive(Debug)]
+pub struct TaskBank {
+    pub contexts: Vec<i32>, // (n, seq_len) row-major
+    pub choices: Vec<i32>,  // (n, 4)
+    pub labels: Vec<i32>,   // (n,)
+    pub task_ids: Vec<i32>, // (n,)
+    pub n: usize,
+    pub seq_len: usize,
+    pub task_names: Vec<String>,
+}
+
+impl TaskBank {
+    /// `which` ∈ {"base", "ft"}.
+    pub fn load(dir: &str, which: &str, task_names: &[String]) -> Result<TaskBank> {
+        let cbt = Cbt::load(&format!("{dir}/tasks.cbt"))?;
+        let ctx = cbt.get(&format!("{which}.contexts"))?;
+        let dims = ctx.dims().to_vec();
+        Ok(TaskBank {
+            contexts: ctx.i32s()?.to_vec(),
+            choices: cbt.get(&format!("{which}.choices"))?.i32s()?.to_vec(),
+            labels: cbt.get(&format!("{which}.labels"))?.i32s()?.to_vec(),
+            task_ids: cbt.get(&format!("{which}.task_ids"))?.i32s()?.to_vec(),
+            n: dims[0],
+            seq_len: dims[1],
+            task_names: task_names.to_vec(),
+        })
+    }
+
+    pub fn context(&self, i: usize) -> &[i32] {
+        &self.contexts[i * self.seq_len..(i + 1) * self.seq_len]
+    }
+
+    pub fn choice_row(&self, i: usize) -> &[i32] {
+        &self.choices[i * 4..(i + 1) * 4]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have() -> bool {
+        std::path::Path::new("artifacts/corpus.cbt").exists()
+    }
+
+    #[test]
+    fn corpus_splits_present() {
+        if !have() {
+            return;
+        }
+        let c = Corpus::load("artifacts").unwrap();
+        for s in ["train", "val", "calib", "ft_train", "ft_calib"] {
+            assert!(c.split(s).unwrap().len() > 1000, "{s}");
+        }
+        assert!(c.split("nope").is_err());
+    }
+
+    #[test]
+    fn batches_shapes_and_determinism() {
+        if !have() {
+            return;
+        }
+        let c = Corpus::load("artifacts").unwrap();
+        let b1 = c.batches("calib", 8, 128, 4).unwrap();
+        let b2 = c.batches("calib", 8, 128, 4).unwrap();
+        assert_eq!(b1.len(), 4);
+        for (x, y) in b1.iter().zip(&b2) {
+            assert_eq!(x.dims(), &[8, 128]);
+            match (x, y) {
+                (Value::I32(_, a), Value::I32(_, b)) => assert_eq!(a, b),
+                _ => panic!(),
+            }
+        }
+        let t = c.train_batches("ft_train", 4, 16, 3, 42).unwrap();
+        assert_eq!(t[0].dims(), &[4, 17]);
+    }
+
+    #[test]
+    fn task_bank_well_formed() {
+        if !have() {
+            return;
+        }
+        let names: Vec<String> = (0..8).map(|i| format!("t{i}")).collect();
+        for which in ["base", "ft"] {
+            let tb = TaskBank::load("artifacts", which, &names).unwrap();
+            assert!(tb.n >= 100);
+            assert_eq!(tb.labels.len(), tb.n);
+            for i in 0..tb.n {
+                let lab = tb.labels[i];
+                assert!((0..4).contains(&lab));
+                let row = tb.choice_row(i);
+                assert_eq!(row.len(), 4);
+                // context's last two tokens are the (s, p) query
+                let ctx = tb.context(i);
+                assert_eq!(ctx.len(), tb.seq_len);
+            }
+        }
+    }
+}

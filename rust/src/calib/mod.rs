@@ -1,0 +1,8 @@
+//! Calibration data plumbing (S11): corpus, batching, and activation
+//! capture through the `fwd_acts` artifact.
+
+pub mod activations;
+pub mod dataset;
+
+pub use activations::{ActivationCapture, CalibChunk};
+pub use dataset::{Corpus, TaskBank};

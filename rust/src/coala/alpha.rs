@@ -1,0 +1,108 @@
+//! Prop. 4: the (XXᵀ)^α family unifying PiSSA (α=0), the new α=1 method
+//! (≡ Alg. 1), and robustified CorDA (α=2) — all inversion-free.
+
+use super::factorize::{svd_any, FullFactors};
+use crate::error::{Error, Result};
+use crate::tensor::ops::matmul;
+use crate::tensor::{Matrix, Scalar};
+
+/// Solve min tr((W−W′)(XXᵀ)^α(W−W′)ᵀ) given the square R (RᵀR = XXᵀ).
+///
+/// Only the left singular vectors matter (W′ = U_rU_rᵀW), so any M with
+/// M·Mᵀ = W(XXᵀ)^αWᵀ yields the same U:
+///   α = 0 → M = W;   α = 1 → M = W·Rᵀ;   α = 2 → M = W·Rᵀ·R.
+/// No Gram matrix, matrix square root, or inversion appears for any α.
+pub fn alpha_factorize<T: Scalar>(
+    w: &Matrix<T>,
+    r_factor: &Matrix<T>,
+    alpha: u32,
+    sweeps: usize,
+) -> Result<FullFactors<T>> {
+    let target = match alpha {
+        0 => w.clone(),
+        1 => matmul(w, &r_factor.transpose())?,
+        2 => matmul(&matmul(w, &r_factor.transpose())?, r_factor)?,
+        a => return Err(Error::Config(format!("alpha ∈ {{0,1,2}}, got {a}"))),
+    };
+    let (u, sigma) = svd_any(&target, sweeps)?;
+    let p = matmul(&u.transpose(), w)?;
+    Ok(FullFactors { u, sigma, p })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coala::factorize::coala_factorize;
+    use crate::linalg::qr_r_square;
+    use crate::tensor::ops::{fro, gram_t};
+
+    fn setup(seed: u64) -> (Matrix<f64>, Matrix<f64>, Matrix<f64>) {
+        let w: Matrix<f64> = Matrix::randn(9, 7, seed);
+        let x: Matrix<f64> = Matrix::randn(7, 40, seed + 1);
+        let r = qr_r_square(&x.transpose()).unwrap();
+        (w, x, r)
+    }
+
+    #[test]
+    fn alpha1_equals_coala() {
+        let (w, _x, r) = setup(1);
+        let a1 = alpha_factorize(&w, &r, 1, 60).unwrap().truncate(3).reconstruct().unwrap();
+        let cf = coala_factorize(&w, &r, 60).unwrap().truncate(3).reconstruct().unwrap();
+        assert!(fro(&a1.sub(&cf).unwrap()) < 1e-10);
+    }
+
+    #[test]
+    fn alpha0_is_plain_svd_truncation() {
+        let (w, _x, r) = setup(2);
+        let a0 = alpha_factorize(&w, &r, 0, 60).unwrap().truncate(3).reconstruct().unwrap();
+        let svd = crate::linalg::jacobi_svd(&w, 60).unwrap();
+        let best = svd.truncate(3);
+        assert!(fro(&a0.sub(&best).unwrap()) < 1e-9);
+    }
+
+    #[test]
+    fn alpha2_matches_corda_objective() {
+        // W' from α=2 must solve min ‖(W−W')XXᵀ‖_F: compare against the
+        // direct (Gram-forming) construction on well-conditioned data.
+        let (w, x, r) = setup(3);
+        let a2 = alpha_factorize(&w, &r, 2, 60).unwrap().truncate(3).reconstruct().unwrap();
+        let g = gram_t(&x.transpose());
+        // direct: left singular vectors of W·G
+        let wg = matmul(&w, &g).unwrap();
+        let (u, _) = super::svd_any(&wg, 60).unwrap();
+        let ur = u.first_cols(3);
+        let direct = matmul(&ur, &matmul(&ur.transpose(), &w).unwrap()).unwrap();
+        assert!(fro(&a2.sub(&direct).unwrap()) < 1e-8 * (1.0 + fro(&direct)));
+    }
+
+    #[test]
+    fn alpha_objective_ordering() {
+        // each α solution must minimize ITS objective at least as well as
+        // the other α solutions do.
+        let (w, _x, r) = setup(4);
+        let obj = |wp: &Matrix<f64>, alpha: u32| -> f64 {
+            let diff = w.sub(wp).unwrap();
+            let t = match alpha {
+                0 => diff.clone(),
+                1 => matmul(&diff, &r.transpose()).unwrap(),
+                _ => matmul(&matmul(&diff, &r.transpose()).unwrap(), &r).unwrap(),
+            };
+            fro(&t)
+        };
+        let sols: Vec<Matrix<f64>> = (0..3u32)
+            .map(|a| alpha_factorize(&w, &r, a, 60).unwrap().truncate(2).reconstruct().unwrap())
+            .collect();
+        for a in 0..3u32 {
+            let own = obj(&sols[a as usize], a);
+            for b in 0..3u32 {
+                assert!(own <= obj(&sols[b as usize], a) * (1.0 + 1e-8) + 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn invalid_alpha_rejected() {
+        let (w, _x, r) = setup(5);
+        assert!(alpha_factorize(&w, &r, 3, 10).is_err());
+    }
+}

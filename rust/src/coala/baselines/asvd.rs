@@ -1,0 +1,95 @@
+//! ASVD: activation-aware SVD — scale W's columns by activation
+//! magnitudes, truncate, unscale.  Reasonable but provably suboptimal
+//! for problem (1) (the paper's Related-Work discussion).
+
+use crate::coala::factorize::{svd_any, FullFactors};
+use crate::error::{Error, Result};
+use crate::tensor::{Matrix, Scalar};
+
+/// ASVD with per-input-channel scales d (typically (mean |X|)^{1/2}).
+/// W′ = U_rΣ_rV_rᵀ·D⁻¹ with UΣVᵀ = W·D.
+pub fn asvd_factorize<T: Scalar>(
+    w: &Matrix<T>,
+    col_scales: &[T],
+    sweeps: usize,
+) -> Result<FullFactors<T>> {
+    if col_scales.len() != w.cols {
+        return Err(Error::shape(format!(
+            "asvd: {} scales for {} columns",
+            col_scales.len(),
+            w.cols
+        )));
+    }
+    let mut ws = w.clone();
+    for i in 0..w.rows {
+        let row = ws.row_mut(i);
+        for (j, r) in row.iter_mut().enumerate() {
+            *r = *r * col_scales[j];
+        }
+    }
+    let (u, sigma) = svd_any(&ws, sweeps)?;
+    let sv = crate::tensor::ops::matmul(&u.transpose(), &ws)?; // ΣVᵀ
+    let mut p = sv;
+    for i in 0..p.rows {
+        let row = p.row_mut(i);
+        for (j, r) in row.iter_mut().enumerate() {
+            *r = *r / col_scales[j];
+        }
+    }
+    Ok(FullFactors { u, sigma, p })
+}
+
+/// The scale rule used in the paper's comparisons: (mean |X| + ε)^{1/2}.
+pub fn activation_scales<T: Scalar>(x: &Matrix<T>) -> Vec<T> {
+    (0..x.rows)
+        .map(|i| {
+            let mean_abs =
+                x.row(i).iter().map(|v| v.to_f64().abs()).sum::<f64>() / x.cols.max(1) as f64;
+            T::from_f64((mean_abs + 1e-6).sqrt())
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coala::factorize::coala_from_x;
+    use crate::tensor::ops::context_rel_err;
+
+    #[test]
+    fn finite_but_suboptimal() {
+        let w: Matrix<f64> = Matrix::randn(10, 8, 1);
+        // heteroscedastic activations so the context matters
+        let mut x: Matrix<f64> = Matrix::randn(8, 60, 2);
+        for j in 0..60 {
+            for i in 0..8 {
+                x.set(i, j, x.get(i, j) * (1.0 + 5.0 * (i as f64)));
+            }
+        }
+        let scales = activation_scales(&x);
+        let f = asvd_factorize(&w, &scales, 60).unwrap().truncate(3);
+        let e_asvd = context_rel_err(&w, &f.reconstruct().unwrap(), &x).unwrap();
+        assert!(e_asvd.is_finite());
+        let e_opt = {
+            let c = coala_from_x(&w, &x, 60).unwrap().truncate(3).reconstruct().unwrap();
+            context_rel_err(&w, &c, &x).unwrap()
+        };
+        assert!(e_asvd >= e_opt * (1.0 - 1e-9), "{e_asvd} vs optimal {e_opt}");
+    }
+
+    #[test]
+    fn identity_scales_reduce_to_plain_svd() {
+        let w: Matrix<f64> = Matrix::randn(6, 5, 3);
+        let ones = vec![1.0f64; 5];
+        let f = asvd_factorize(&w, &ones, 60).unwrap().truncate(2).reconstruct().unwrap();
+        let svd = crate::linalg::jacobi_svd(&w, 60).unwrap();
+        let best = svd.truncate(2);
+        assert!(crate::tensor::ops::fro(&f.sub(&best).unwrap()) < 1e-9);
+    }
+
+    #[test]
+    fn scale_arity_checked() {
+        let w: Matrix<f64> = Matrix::randn(3, 4, 5);
+        assert!(asvd_factorize(&w, &[1.0, 2.0], 10).is_err());
+    }
+}

@@ -1,0 +1,72 @@
+//! CorDA, *original* construction (Remark 1): W′ = U_rΣ_rV_rᵀ(XXᵀ)⁻¹
+//! with UΣVᵀ = SVD(W·XXᵀ).  Kept exactly as published — including the
+//! explicit Gram inversion through an unclamped eigendecomposition —
+//! because Table 4 measures precisely this construction collapsing while
+//! the robustified α=2 solution (coala::alpha) does not.
+
+use crate::coala::factorize::{svd_any, FullFactors};
+use crate::error::Result;
+use crate::linalg::eigh;
+use crate::tensor::ops::matmul;
+use crate::tensor::{Matrix, Scalar};
+
+/// CorDA from the explicitly-formed Gram matrix G = XXᵀ.
+pub fn corda_factorize<T: Scalar>(
+    w: &Matrix<T>,
+    gram: &Matrix<T>,
+    sweeps: usize,
+) -> Result<FullFactors<T>> {
+    let n = gram.rows;
+    let wg = matmul(w, gram)?;
+    let (u, sigma) = svd_any(&wg, sweeps)?;
+    let sv = matmul(&u.transpose(), &wg)?; // ΣVᵀ
+    // G⁻¹ = Q Λ⁻¹ Qᵀ, no clamping of tiny λ (the published failure mode)
+    let (lam, q) = eigh(gram, sweeps)?;
+    let mut q_scaled = q.clone();
+    for i in 0..n {
+        for j in 0..n {
+            let inv = 1.0 / lam[j].to_f64();
+            q_scaled.set(i, j, T::from_f64(q.get(i, j).to_f64() * inv));
+        }
+    }
+    let ginv = matmul(&q_scaled, &q.transpose())?;
+    let p = matmul(&sv, &ginv)?;
+    Ok(FullFactors { u, sigma, p })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coala::alpha::alpha_factorize;
+    use crate::linalg::qr_r_square;
+    use crate::tensor::ops::{fro, gram_t};
+
+    #[test]
+    fn matches_alpha2_when_well_conditioned() {
+        let w: Matrix<f64> = Matrix::randn(8, 6, 1);
+        let x: Matrix<f64> = Matrix::randn(6, 60, 2);
+        let g = gram_t(&x.transpose());
+        let c = corda_factorize(&w, &g, 60).unwrap().truncate(3).reconstruct().unwrap();
+        let r = qr_r_square(&x.transpose()).unwrap();
+        let a2 = alpha_factorize(&w, &r, 2, 60).unwrap().truncate(3).reconstruct().unwrap();
+        assert!(fro(&c.sub(&a2).unwrap()) < 1e-6 * (1.0 + fro(&a2)));
+    }
+
+    #[test]
+    fn b_factor_explodes_on_singular_gram() {
+        // Exactly-singular Gram (k < n, the low-data regime of Table 4):
+        // CorDA's B = Σ_rV_rᵀG⁻¹ inflates by ~1/λ_min.  The rank-r
+        // *reconstruction* partially cancels the inverse, but the factor
+        // pair itself — which is what initializes the (A, B) adapters —
+        // is garbage: ‖B‖ ≫ ‖W‖.  The robust α=2 factors stay bounded.
+        let w: Matrix<f64> = Matrix::randn(6, 10, 3);
+        let x: Matrix<f64> = Matrix::randn(10, 4, 4);
+        let g = gram_t(&x.transpose());
+        let fc = corda_factorize(&w, &g, 60).unwrap();
+        let r = qr_r_square(&x.transpose()).unwrap();
+        let a2 = alpha_factorize(&w, &r, 2, 60).unwrap();
+        let inflated = !fc.p.all_finite() || fro(&fc.p) > 10.0 * fro(&w);
+        assert!(inflated, "CorDA B should explode: ‖B‖={} ‖W‖={}", fro(&fc.p), fro(&w));
+        assert!(fro(&a2.p) <= 2.0 * fro(&w), "robust B bounded: {}", fro(&a2.p));
+    }
+}

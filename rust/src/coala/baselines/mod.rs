@@ -1,0 +1,19 @@
+//! Every comparator the paper evaluates against (S4).
+//!
+//! All baselines are implemented from their reference pseudocode
+//! (Appendix B, Remark 1, the ASVD paper) — including their failure
+//! modes: Gram formation, Cholesky of near-singular matrices, inversion
+//! of tiny eigenvalues.  Nothing is "fixed", because the instabilities
+//! are the phenomenon under study.
+
+pub mod asvd;
+pub mod corda;
+pub mod plain_svd;
+pub mod svdllm;
+pub mod svdllm_v2;
+
+pub use asvd::asvd_factorize;
+pub use corda::corda_factorize;
+pub use plain_svd::plain_svd_factorize;
+pub use svdllm::svdllm_factorize;
+pub use svdllm_v2::svdllm_v2_factorize;

@@ -1,0 +1,43 @@
+//! Eckart–Young: context-free truncated SVD of W (≡ PiSSA's projection,
+//! α = 0 in Prop. 4).  The weakest baseline for compression, the
+//! strongest prior for adapter init.
+
+use crate::coala::factorize::{svd_any, FullFactors};
+use crate::error::Result;
+use crate::tensor::ops::matmul;
+use crate::tensor::{Matrix, Scalar};
+
+/// Plain truncated SVD, in the common (U, σ, P) factor ABI.
+pub fn plain_svd_factorize<T: Scalar>(w: &Matrix<T>, sweeps: usize) -> Result<FullFactors<T>> {
+    let (u, sigma) = svd_any(w, sweeps)?;
+    let p = matmul(&u.transpose(), w)?; // = ΣVᵀ for the plain case
+    Ok(FullFactors { u, sigma, p })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::fro;
+
+    #[test]
+    fn matches_eckart_young() {
+        let w: Matrix<f64> = Matrix::randn(11, 6, 1);
+        let f = plain_svd_factorize(&w, 60).unwrap();
+        for r in [1, 3, 6] {
+            let wp = f.truncate(r).reconstruct().unwrap();
+            let err = fro(&wp.sub(&w).unwrap());
+            let svd = crate::linalg::jacobi_svd(&w, 60).unwrap();
+            let want: f64 = svd.s[r..].iter().map(|s| s * s).sum::<f64>().sqrt();
+            assert!((err - want).abs() < 1e-9, "r={r}");
+        }
+    }
+
+    #[test]
+    fn wide_matrices() {
+        let w: Matrix<f64> = Matrix::randn(4, 12, 2);
+        let f = plain_svd_factorize(&w, 60).unwrap().truncate(2);
+        assert_eq!((f.a.rows, f.a.cols), (4, 2));
+        assert_eq!((f.b.rows, f.b.cols), (2, 12));
+        assert!(f.a.all_finite());
+    }
+}

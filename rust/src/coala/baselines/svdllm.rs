@@ -1,0 +1,73 @@
+//! SVD-LLM (Appendix B, Alg. 3): whitening via the Cholesky factor of
+//! the explicitly-formed Gram matrix, then S⁻¹ by triangular solve.
+
+use crate::coala::factorize::{svd_any, FullFactors};
+use crate::error::Result;
+use crate::linalg::cholesky::cholesky_unchecked;
+use crate::tensor::ops::matmul;
+use crate::tensor::{Matrix, Scalar};
+
+/// SVD-LLM from the Gram matrix G = XXᵀ.
+///
+/// S = L (lower Cholesky, L·Lᵀ = G); SVD(W·L) = UΣVᵀ;
+/// A = U_r, B = Σ_rV_rᵀL⁻¹ (via Lᵀ·Bᵀ = V·Σ forward/back substitution).
+/// On near-singular G the Cholesky pivots underflow and B blows up —
+/// faithfully (this is the Fig. 1 red curve).
+pub fn svdllm_factorize<T: Scalar>(
+    w: &Matrix<T>,
+    gram: &Matrix<T>,
+    sweeps: usize,
+) -> Result<FullFactors<T>> {
+    let l = cholesky_unchecked(gram)?;
+    let ws = matmul(w, &l)?;
+    let (u, sigma) = svd_any(&ws, sweeps)?;
+    // B = Σ Vᵀ L⁻¹. Recover ΣVᵀ = Uᵀ·W·L, then solve (·)L⁻¹ via Lᵀxᵀ…
+    // Equivalent and simpler: B = Uᵀ·W·L·L⁻¹ = Uᵀ W?  NO — that would be
+    // COALA's projection.  SVD-LLM defines B through the whitened SVD:
+    //   ΣVᵀ = Uᵀ·(W·L)  ⇒  B = (Uᵀ W L) L⁻¹  computed by substitution,
+    // which is numerically NOT the same as Uᵀ W once L is ill-conditioned
+    // (that numerical difference is the whole point of the comparison).
+    let sv = matmul(&u.transpose(), &ws)?; // Σ Vᵀ (p × n)
+    // solve B·L = ΣVᵀ  ⇔  Lᵀ·Bᵀ = (ΣVᵀ)ᵀ: lower-solve with Lᵀ reversed…
+    // Lᵀ is upper; use upper solve on Bᵀ.
+    let bt = crate::linalg::triangular::solve_upper(&l.transpose(), &sv.transpose())?;
+    let p = bt.transpose();
+    Ok(FullFactors { u, sigma, p })
+}
+
+/// Convenience: form the Gram matrix from X and factorize (the end-to-end
+/// path Table 1 times, including the XXᵀ formation cost).
+pub fn svdllm_from_x<T: Scalar>(w: &Matrix<T>, x: &Matrix<T>, sweeps: usize) -> Result<FullFactors<T>> {
+    let gram = crate::tensor::ops::gram_t(&x.transpose());
+    svdllm_factorize(w, &gram, sweeps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coala::factorize::coala_from_x;
+    use crate::tensor::ops::{context_rel_err, gram_t};
+
+    #[test]
+    fn optimal_on_well_conditioned_data() {
+        let w: Matrix<f64> = Matrix::randn(10, 8, 1);
+        let x: Matrix<f64> = Matrix::randn(8, 60, 2);
+        let f = svdllm_from_x(&w, &x, 60).unwrap().truncate(4);
+        let wp = f.reconstruct().unwrap();
+        let coala = coala_from_x(&w, &x, 60).unwrap().truncate(4).reconstruct().unwrap();
+        let e1 = context_rel_err(&w, &wp, &x).unwrap();
+        let e2 = context_rel_err(&w, &coala, &x).unwrap();
+        assert!((e1 - e2).abs() < 1e-8, "{e1} vs {e2}");
+    }
+
+    #[test]
+    fn breaks_on_singular_gram() {
+        // k < n ⇒ singular Gram ⇒ non-finite factors (the headline claim)
+        let w: Matrix<f64> = Matrix::randn(6, 9, 3);
+        let x: Matrix<f64> = Matrix::randn(9, 4, 4);
+        let gram = gram_t(&x.transpose());
+        let f = svdllm_factorize(&w, &gram, 60).unwrap();
+        let finite = f.u.all_finite() && f.p.all_finite();
+        assert!(!finite, "SVD-LLM should break on singular Gram");
+    }
+}

@@ -1,0 +1,83 @@
+//! SVD-LLM v2 (Appendix B, Alg. 4): whitening through the eigendecompo-
+//! sition of the Gram matrix; inverts Λ^{1/2} elementwise.
+
+use crate::coala::factorize::{svd_any, FullFactors};
+use crate::error::Result;
+use crate::linalg::eigh;
+use crate::tensor::ops::matmul;
+use crate::tensor::{Matrix, Scalar};
+
+/// SVD-LLM v2 from the Gram matrix G = XXᵀ.
+///
+/// eig(G) = U_sΛU_sᵀ; M = W·U_s·Λ^{1/2}; SVD(M) = UΣVᵀ;
+/// B = Σ_rV_rᵀ·Λ^{-1/2}·U_sᵀ.  The elementwise 1/√λ on nearly-zero
+/// eigenvalues is the failure mode (Fig. 1 orange curve) — deliberately
+/// unclamped.
+pub fn svdllm_v2_factorize<T: Scalar>(
+    w: &Matrix<T>,
+    gram: &Matrix<T>,
+    sweeps: usize,
+) -> Result<FullFactors<T>> {
+    let n = gram.rows;
+    let (lam, us) = eigh(gram, sweeps)?;
+    let sqrt_lam: Vec<f64> = lam.iter().map(|l| l.to_f64().max(0.0).sqrt()).collect();
+
+    // M = W · (U_s scaled by √λ per column)
+    let mut us_scaled = us.clone();
+    for i in 0..n {
+        for j in 0..n {
+            us_scaled.set(i, j, T::from_f64(us.get(i, j).to_f64() * sqrt_lam[j]));
+        }
+    }
+    let m_mat = matmul(w, &us_scaled)?;
+    let (u, sigma) = svd_any(&m_mat, sweeps)?;
+
+    // B = (ΣVᵀ) Λ^{-1/2} U_sᵀ, with ΣVᵀ = Uᵀ M
+    let sv = matmul(&u.transpose(), &m_mat)?;
+    let mut sv_scaled = sv.clone();
+    for i in 0..sv.rows {
+        for j in 0..n {
+            let inv = 1.0 / sqrt_lam[j]; // unclamped: may be inf
+            sv_scaled.set(i, j, T::from_f64(sv.get(i, j).to_f64() * inv));
+        }
+    }
+    let p = matmul(&sv_scaled, &us.transpose())?;
+    Ok(FullFactors { u, sigma, p })
+}
+
+/// End-to-end from X (forms the Gram matrix; Table 1 timing path).
+pub fn svdllm_v2_from_x<T: Scalar>(
+    w: &Matrix<T>,
+    x: &Matrix<T>,
+    sweeps: usize,
+) -> Result<FullFactors<T>> {
+    let gram = crate::tensor::ops::gram_t(&x.transpose());
+    svdllm_v2_factorize(w, &gram, sweeps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coala::factorize::coala_from_x;
+    use crate::tensor::ops::{context_rel_err, gram_t};
+
+    #[test]
+    fn optimal_on_well_conditioned_data() {
+        let w: Matrix<f64> = Matrix::randn(9, 7, 1);
+        let x: Matrix<f64> = Matrix::randn(7, 50, 2);
+        let f = svdllm_v2_from_x(&w, &x, 60).unwrap().truncate(3);
+        let e1 = context_rel_err(&w, &f.reconstruct().unwrap(), &x).unwrap();
+        let coala = coala_from_x(&w, &x, 60).unwrap().truncate(3).reconstruct().unwrap();
+        let e2 = context_rel_err(&w, &coala, &x).unwrap();
+        assert!((e1 - e2).abs() < 1e-7, "{e1} vs {e2}");
+    }
+
+    #[test]
+    fn breaks_on_singular_gram() {
+        let w: Matrix<f64> = Matrix::randn(5, 8, 3);
+        let x: Matrix<f64> = Matrix::randn(8, 3, 4);
+        let gram = gram_t(&x.transpose());
+        let f = svdllm_v2_factorize(&w, &gram, 60).unwrap();
+        assert!(!(f.u.all_finite() && f.p.all_finite()));
+    }
+}

@@ -1,0 +1,149 @@
+//! Algorithm 1: the stable, inversion-free COALA factorization.
+
+use crate::error::Result;
+use crate::linalg::{jacobi_svd, qr_r_square};
+use crate::tensor::ops::matmul;
+use crate::tensor::{Matrix, Scalar};
+
+/// Low-rank factor pair: W′ = A·B with A (m × r), B (r × n).
+#[derive(Debug, Clone)]
+pub struct Factors<T: Scalar> {
+    pub a: Matrix<T>,
+    pub b: Matrix<T>,
+    /// Full singular spectrum of the factorization target (diagnostics,
+    /// rank selection, Eq. 5).
+    pub spectrum: Vec<T>,
+}
+
+impl<T: Scalar> Factors<T> {
+    pub fn rank(&self) -> usize {
+        self.a.cols
+    }
+
+    /// Dense reconstruction W′ = A·B.
+    pub fn reconstruct(&self) -> Result<Matrix<T>> {
+        matmul(&self.a, &self.b)
+    }
+
+    /// Parameters stored by the factored form.
+    pub fn param_count(&self) -> usize {
+        self.a.rows * self.a.cols + self.b.rows * self.b.cols
+    }
+}
+
+/// Full-spectrum COALA factors (rank = min(m, n)); slice with
+/// [`truncate`] for a specific rank.  This mirrors the artifact ABI:
+/// (U, σ, P = UᵀW).
+#[derive(Debug, Clone)]
+pub struct FullFactors<T: Scalar> {
+    pub u: Matrix<T>,
+    pub sigma: Vec<T>,
+    pub p: Matrix<T>,
+}
+
+impl<T: Scalar> FullFactors<T> {
+    /// Rank-r slice: A = U[:, :r], B = P[:r, :].
+    pub fn truncate(&self, r: usize) -> Factors<T> {
+        let r = r.min(self.sigma.len()).max(1);
+        Factors {
+            a: self.u.first_cols(r),
+            b: self.p.first_rows(r),
+            spectrum: self.sigma.clone(),
+        }
+    }
+}
+
+/// Algorithm 1 given the preprocessed square R (RᵀR = XXᵀ):
+/// SVD(W·Rᵀ) → U, then W′_r = U_r·U_rᵀ·W.  No Gram matrix, no inverse,
+/// no rank assumptions on X.
+pub fn coala_factorize<T: Scalar>(
+    w: &Matrix<T>,
+    r_factor: &Matrix<T>,
+    sweeps: usize,
+) -> Result<FullFactors<T>> {
+    let target = matmul(w, &r_factor.transpose())?;
+    let svd = svd_any(&target, sweeps)?;
+    let p = matmul(&svd.0.transpose(), w)?;
+    Ok(FullFactors { u: svd.0, sigma: svd.1, p })
+}
+
+/// Algorithm 1 end-to-end from raw X (n × k): Prop. 2 QR preprocessing.
+pub fn coala_from_x<T: Scalar>(w: &Matrix<T>, x: &Matrix<T>, sweeps: usize) -> Result<FullFactors<T>> {
+    let r = qr_r_square(&x.transpose())?;
+    coala_factorize(w, &r, sweeps)
+}
+
+/// SVD for any aspect ratio, returning (U, σ) — the transpose trick for
+/// wide matrices (only left vectors are needed by Prop. 1).
+pub(crate) fn svd_any<T: Scalar>(a: &Matrix<T>, sweeps: usize) -> Result<(Matrix<T>, Vec<T>)> {
+    if a.rows >= a.cols {
+        let s = jacobi_svd(a, sweeps)?;
+        Ok((s.u, s.s))
+    } else {
+        let s = jacobi_svd(&a.transpose(), sweeps)?;
+        Ok((s.v, s.s))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::{context_rel_err, fro, matmul};
+
+    /// Closed-form optimum of problem (3) in f64 (Prop. 1 via full SVD).
+    fn optimal_err(w: &Matrix<f64>, x: &Matrix<f64>, r: usize) -> f64 {
+        let wx = matmul(w, x).unwrap();
+        let (u, _) = svd_any(&wx, 60).unwrap();
+        let ur = u.first_cols(r);
+        let wp = matmul(&ur, &matmul(&ur.transpose(), w).unwrap()).unwrap();
+        let diff = matmul(&w.sub(&wp).unwrap(), x).unwrap();
+        fro(&diff)
+    }
+
+    #[test]
+    fn attains_optimum_every_rank() {
+        let w: Matrix<f64> = Matrix::randn(14, 10, 1);
+        let x: Matrix<f64> = Matrix::randn(10, 50, 2);
+        let full = coala_from_x(&w, &x, 60).unwrap();
+        for r in [1, 3, 5, 10] {
+            let wp = full.truncate(r).reconstruct().unwrap();
+            let got = fro(&matmul(&w.sub(&wp).unwrap(), &x).unwrap());
+            let want = optimal_err(&w, &x, r);
+            assert!(got <= want * (1.0 + 1e-8) + 1e-9, "r={r}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn handles_rank_deficient_x() {
+        // fewer samples than features: Gram is singular, COALA is fine
+        let w: Matrix<f64> = Matrix::randn(8, 12, 3);
+        let x: Matrix<f64> = Matrix::randn(12, 5, 4);
+        let full = coala_from_x(&w, &x, 60).unwrap();
+        let f = full.truncate(3);
+        assert!(f.a.all_finite() && f.b.all_finite());
+        let got = context_rel_err(&w, &f.reconstruct().unwrap(), &x).unwrap();
+        assert!(got.is_finite());
+    }
+
+    #[test]
+    fn factor_shapes_and_rank() {
+        let w: Matrix<f64> = Matrix::randn(6, 9, 5);
+        let x: Matrix<f64> = Matrix::randn(9, 30, 6);
+        let full = coala_from_x(&w, &x, 40).unwrap();
+        let f = full.truncate(4);
+        assert_eq!((f.a.rows, f.a.cols), (6, 4));
+        assert_eq!((f.b.rows, f.b.cols), (4, 9));
+        assert_eq!(f.param_count(), 6 * 4 + 4 * 9);
+        assert_eq!(f.rank(), 4);
+    }
+
+    #[test]
+    fn full_rank_reproduces_wx() {
+        let w: Matrix<f64> = Matrix::randn(7, 5, 7);
+        let x: Matrix<f64> = Matrix::randn(5, 22, 8);
+        let full = coala_from_x(&w, &x, 60).unwrap();
+        let wp = full.truncate(5).reconstruct().unwrap();
+        let err = context_rel_err(&w, &wp, &x).unwrap();
+        assert!(err < 1e-10, "{err}");
+    }
+}

@@ -1,0 +1,156 @@
+//! Unified method descriptor so the coordinator, evaluator, and benches
+//! can sweep compression methods uniformly.
+
+use super::baselines;
+use super::factorize::FullFactors;
+use super::{alpha, coala_factorize, coala_regularized, MuRule};
+use crate::error::Result;
+use crate::linalg::qr_r_square;
+use crate::tensor::ops::gram_t;
+use crate::tensor::{Matrix, Scalar};
+
+/// Every factorization method the experiments compare.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Method {
+    /// COALA (Alg. 1 / Alg. 2) with a μ rule.
+    Coala(MuRule),
+    /// SVD-LLM: Cholesky-of-Gram whitening.
+    SvdLlm,
+    /// SVD-LLM v2: eig-of-Gram whitening.
+    SvdLlmV2,
+    /// ASVD activation scaling.
+    Asvd,
+    /// Plain truncated SVD (Eckart–Young; PiSSA's projection).
+    PlainSvd,
+    /// Original CorDA (Gram inversion).
+    Corda,
+    /// Prop. 4 α-family, inversion-free (α ∈ {0, 1, 2}).
+    Alpha(u32),
+}
+
+impl Method {
+    pub fn name(&self) -> String {
+        match self {
+            Method::Coala(MuRule::None) => "COALA(mu=0)".into(),
+            Method::Coala(r) => format!("COALA[{}]", r.label()),
+            Method::SvdLlm => "SVD-LLM".into(),
+            Method::SvdLlmV2 => "SVD-LLM-v2".into(),
+            Method::Asvd => "ASVD".into(),
+            Method::PlainSvd => "SVD".into(),
+            Method::Corda => "CorDA".into(),
+            Method::Alpha(a) => format!("COALA(a={a})"),
+        }
+    }
+
+    /// Does this method consume the QR route (R factor) or the Gram route?
+    pub fn needs_gram(&self) -> bool {
+        matches!(self, Method::SvdLlm | Method::SvdLlmV2 | Method::Corda)
+    }
+
+    /// Host-edition end-to-end factorization from raw calibration X.
+    ///
+    /// `rank` only matters for the adaptive-μ rule (which needs the
+    /// unregularized rank-r solution first); truncation itself is the
+    /// caller's job via [`FullFactors::truncate`].
+    pub fn factorize_host<T: Scalar>(
+        &self,
+        w: &Matrix<T>,
+        x: &Matrix<T>,
+        rank: usize,
+        sweeps: usize,
+    ) -> Result<FullFactors<T>> {
+        match self {
+            Method::Coala(MuRule::None) => {
+                let r = qr_r_square(&x.transpose())?;
+                coala_factorize(w, &r, sweeps)
+            }
+            Method::Coala(MuRule::Adaptive { lambda }) => {
+                let r = qr_r_square(&x.transpose())?;
+                let f0 = coala_factorize(w, &r, sweeps)?;
+                let mu = super::mu_from_lambda(w, &f0, &r, rank, *lambda)?;
+                coala_regularized(w, &r, mu, sweeps)
+            }
+            Method::Coala(MuRule::Constant { mu }) => {
+                let r = qr_r_square(&x.transpose())?;
+                coala_regularized(w, &r, *mu, sweeps)
+            }
+            Method::SvdLlm => {
+                let g = gram_t(&x.transpose());
+                baselines::svdllm_factorize(w, &g, sweeps)
+            }
+            Method::SvdLlmV2 => {
+                let g = gram_t(&x.transpose());
+                baselines::svdllm_v2_factorize(w, &g, sweeps)
+            }
+            Method::Asvd => {
+                let scales = baselines::asvd::activation_scales(x);
+                baselines::asvd_factorize(w, &scales, sweeps)
+            }
+            Method::PlainSvd => baselines::plain_svd_factorize(w, sweeps),
+            Method::Corda => {
+                let g = gram_t(&x.transpose());
+                baselines::corda_factorize(w, &g, sweeps)
+            }
+            Method::Alpha(a) => {
+                let r = qr_r_square(&x.transpose())?;
+                alpha::alpha_factorize(w, &r, *a, sweeps)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::context_rel_err;
+
+    #[test]
+    fn all_methods_run_on_good_data() {
+        let w: Matrix<f64> = Matrix::randn(8, 6, 1);
+        let x: Matrix<f64> = Matrix::randn(6, 48, 2);
+        let methods = [
+            Method::Coala(MuRule::None),
+            Method::Coala(MuRule::Adaptive { lambda: 2.0 }),
+            Method::Coala(MuRule::Constant { mu: 1e-2 }),
+            Method::SvdLlm,
+            Method::SvdLlmV2,
+            Method::Asvd,
+            Method::PlainSvd,
+            Method::Corda,
+            Method::Alpha(0),
+            Method::Alpha(1),
+            Method::Alpha(2),
+        ];
+        for m in methods {
+            let f = m.factorize_host(&w, &x, 3, 60).unwrap().truncate(3);
+            let err = context_rel_err(&w, &f.reconstruct().unwrap(), &x).unwrap();
+            assert!(err.is_finite(), "{}: {err}", m.name());
+            assert!(err < 1.0, "{}: {err}", m.name());
+        }
+    }
+
+    #[test]
+    fn names_unique() {
+        let methods = [
+            Method::Coala(MuRule::None),
+            Method::SvdLlm,
+            Method::SvdLlmV2,
+            Method::Asvd,
+            Method::PlainSvd,
+            Method::Corda,
+            Method::Alpha(2),
+        ];
+        let mut names: Vec<String> = methods.iter().map(|m| m.name()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), methods.len());
+    }
+
+    #[test]
+    fn gram_route_flag() {
+        assert!(Method::SvdLlm.needs_gram());
+        assert!(Method::Corda.needs_gram());
+        assert!(!Method::Coala(MuRule::None).needs_gram());
+        assert!(!Method::Alpha(2).needs_gram());
+    }
+}

@@ -1,0 +1,19 @@
+//! The paper's algorithms, host edition (S3/S4).
+//!
+//! Every method produces a [`Factors`] pair (A: m × r, B: r × n) so the
+//! coordinator, evaluator, and benches treat methods uniformly.  The
+//! PJRT-accelerated editions of the same algorithms live behind
+//! `runtime::ops`; these host versions are the fp64 ground truth and the
+//! arbitrary-precision laboratory for the stability studies.
+
+pub mod alpha;
+pub mod baselines;
+pub mod factorize;
+pub mod method;
+pub mod mu;
+pub mod regularized;
+
+pub use factorize::{coala_factorize, coala_from_x, Factors};
+pub use method::Method;
+pub use mu::{mu_from_lambda, MuRule};
+pub use regularized::{coala_regularized, regularized_r};

@@ -1,0 +1,101 @@
+//! Eq. (5): the layer-adaptive regularization rule.
+//!
+//! μ = λ · ‖W₀X − WX‖²_F / ‖W₀ − W‖²_F, where W₀ is the unregularized
+//! rank-r solution.  The ‖·X‖ norms are evaluated through R
+//! (‖AX‖_F = ‖ARᵀ‖_F), so the raw calibration stream never needs to be
+//! re-read — this is what makes the rule cheap enough to apply per layer.
+
+use super::factorize::FullFactors;
+use crate::error::Result;
+use crate::tensor::ops::{fro, matmul};
+use crate::tensor::{Matrix, Scalar};
+
+/// How μ is chosen for a layer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum MuRule {
+    /// μ = 0 (the unregularized COALA_{μ=0} rows of Tables 2/3).
+    None,
+    /// Layer-adaptive Eq. (5) with hyperparameter λ.
+    Adaptive { lambda: f64 },
+    /// A single constant μ for every layer (the Fig. 4 strawman).
+    Constant { mu: f64 },
+}
+
+impl MuRule {
+    pub fn label(&self) -> String {
+        match self {
+            MuRule::None => "mu=0".into(),
+            MuRule::Adaptive { lambda } => format!("adaptive(λ={lambda})"),
+            MuRule::Constant { mu } => format!("const(μ={mu})"),
+        }
+    }
+}
+
+/// Eq. (5): compute μ from the unregularized solution at rank `r`.
+pub fn mu_from_lambda<T: Scalar>(
+    w: &Matrix<T>,
+    full: &FullFactors<T>,
+    r_factor: &Matrix<T>,
+    rank: usize,
+    lambda: f64,
+) -> Result<f64> {
+    let w0 = full.truncate(rank).reconstruct()?;
+    let diff = w0.sub(w)?;
+    let num = fro(&matmul(&diff, &r_factor.transpose())?).powi(2);
+    let den = fro(&diff).powi(2);
+    let scale = fro(w).powi(2);
+    if den <= 1e-20 * scale.max(1e-300) {
+        return Ok(0.0); // (numerically) exact reconstruction: nothing to regularize
+    }
+    Ok(lambda * num / den)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coala::factorize::coala_from_x;
+    use crate::linalg::qr_r_square;
+
+    #[test]
+    fn matches_direct_formula() {
+        let w: Matrix<f64> = Matrix::randn(8, 6, 1);
+        let x: Matrix<f64> = Matrix::randn(6, 30, 2);
+        let full = coala_from_x(&w, &x, 60).unwrap();
+        let r = qr_r_square(&x.transpose()).unwrap();
+        let mu = mu_from_lambda(&w, &full, &r, 2, 2.0).unwrap();
+
+        let w0 = full.truncate(2).reconstruct().unwrap();
+        let diff = w0.sub(&w).unwrap();
+        let num = fro(&matmul(&diff, &x).unwrap()).powi(2);
+        let den = fro(&diff).powi(2);
+        assert!((mu - 2.0 * num / den).abs() < 1e-8 * mu.abs().max(1.0));
+    }
+
+    #[test]
+    fn scales_linearly_in_lambda() {
+        let w: Matrix<f64> = Matrix::randn(8, 6, 3);
+        let x: Matrix<f64> = Matrix::randn(6, 30, 4);
+        let full = coala_from_x(&w, &x, 60).unwrap();
+        let r = qr_r_square(&x.transpose()).unwrap();
+        let m1 = mu_from_lambda(&w, &full, &r, 3, 1.0).unwrap();
+        let m5 = mu_from_lambda(&w, &full, &r, 3, 5.0).unwrap();
+        assert!((m5 - 5.0 * m1).abs() < 1e-9 * m5.abs());
+    }
+
+    #[test]
+    fn full_rank_gives_zero() {
+        let w: Matrix<f64> = Matrix::randn(5, 5, 5);
+        let x: Matrix<f64> = Matrix::randn(5, 25, 6);
+        let full = coala_from_x(&w, &x, 60).unwrap();
+        let r = qr_r_square(&x.transpose()).unwrap();
+        let mu = mu_from_lambda(&w, &full, &r, 5, 3.0).unwrap();
+        assert!(mu.abs() < 1e-12);
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(MuRule::None.label(), "mu=0");
+        assert!(MuRule::Adaptive { lambda: 2.0 }.label().contains("2"));
+        assert!(MuRule::Constant { mu: 0.5 }.label().contains("0.5"));
+    }
+}

@@ -1,0 +1,97 @@
+//! Algorithm 2: regularized COALA via the augmented matrix (Prop. 3).
+
+use super::factorize::{coala_factorize, FullFactors};
+use crate::error::Result;
+use crate::linalg::qr_r_square;
+use crate::tensor::{Matrix, Scalar};
+
+/// Absorb the μ‖W−W′‖² term into the R factor: re-factor [R ; √μ·I]
+/// (2n × n QR) so that R̃ᵀR̃ = XXᵀ + μI = X̃X̃ᵀ with X̃ = [X √μI].
+pub fn regularized_r<T: Scalar>(r_factor: &Matrix<T>, mu: f64) -> Result<Matrix<T>> {
+    let n = r_factor.rows;
+    let sq = Matrix::eye(n).scale(T::from_f64(mu.sqrt()));
+    let aug = r_factor.vstack(&sq)?;
+    qr_r_square(&aug)
+}
+
+/// Algorithm 2: COALA on the μ-augmented problem.
+pub fn coala_regularized<T: Scalar>(
+    w: &Matrix<T>,
+    r_factor: &Matrix<T>,
+    mu: f64,
+    sweeps: usize,
+) -> Result<FullFactors<T>> {
+    coala_factorize(w, &regularized_r(r_factor, mu)?, sweeps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coala::factorize::coala_from_x;
+    use crate::linalg::qr_r_square;
+    use crate::tensor::ops::{fro, gram_t, matmul, spectral_norm};
+
+    #[test]
+    fn augmented_gram_identity() {
+        let x: Matrix<f64> = Matrix::randn(9, 40, 1);
+        let r0 = qr_r_square(&x.transpose()).unwrap();
+        let mu = 0.37;
+        let r = regularized_r(&r0, mu).unwrap();
+        let got = matmul(&r.transpose(), &r).unwrap();
+        let mut want = gram_t(&x.transpose());
+        for i in 0..9 {
+            want.set(i, i, want.get(i, i) + mu);
+        }
+        assert!(fro(&got.sub(&want).unwrap()) < 1e-10 * fro(&want));
+    }
+
+    #[test]
+    fn theorem1_linear_convergence() {
+        // ‖W₀ − W_μ‖_F ≤ 2‖W‖₂²‖W‖_F / (σ_r² − σ_{r+1}²) · μ
+        let (m, n, k, r) = (10usize, 8usize, 25usize, 3usize);
+        let w: Matrix<f64> = Matrix::randn(m, n, 2);
+        let x: Matrix<f64> = Matrix::randn(n, k, 3);
+        let w0 = coala_from_x(&w, &x, 60).unwrap().truncate(r).reconstruct().unwrap();
+
+        let wx = matmul(&w, &x).unwrap();
+        let wx_tall = if wx.rows >= wx.cols { wx } else { wx.transpose() };
+        let svd = crate::linalg::jacobi_svd(&wx_tall, 60).unwrap();
+        let gap2 = svd.s[r - 1] * svd.s[r - 1] - svd.s[r] * svd.s[r];
+        let c = 2.0 * spectral_norm(&w, 200).powi(2) * fro(&w) / gap2;
+
+        let r0 = qr_r_square(&x.transpose()).unwrap();
+        let mut last = f64::INFINITY;
+        for mu in [1e-1, 1e-2, 1e-3, 1e-4] {
+            let wmu = coala_regularized(&w, &r0, mu, 60)
+                .unwrap()
+                .truncate(r)
+                .reconstruct()
+                .unwrap();
+            let err = fro(&w0.sub(&wmu).unwrap());
+            assert!(err <= c * mu * (1.0 + 1e-6) + 1e-9, "mu={mu}: {err} > {}", c * mu);
+            assert!(err <= last + 1e-12);
+            last = err;
+        }
+    }
+
+    #[test]
+    fn mu_zero_is_identity() {
+        let x: Matrix<f64> = Matrix::randn(6, 20, 4);
+        let w: Matrix<f64> = Matrix::randn(5, 6, 5);
+        let r0 = qr_r_square(&x.transpose()).unwrap();
+        let a = coala_factorize(&w, &r0, 60).unwrap().truncate(2).reconstruct().unwrap();
+        let b = coala_regularized(&w, &r0, 0.0, 60).unwrap().truncate(2).reconstruct().unwrap();
+        assert!(fro(&a.sub(&b).unwrap()) < 1e-9);
+    }
+
+    #[test]
+    fn regularization_fixes_degenerate_x() {
+        // k < n: the unregularized problem has non-unique solutions; the
+        // regularized one is unique and finite for any μ > 0.
+        let w: Matrix<f64> = Matrix::randn(7, 10, 6);
+        let x: Matrix<f64> = Matrix::randn(10, 4, 7);
+        let r0 = qr_r_square(&x.transpose()).unwrap();
+        let f = coala_regularized(&w, &r0, 1e-2, 60).unwrap().truncate(3);
+        assert!(f.a.all_finite() && f.b.all_finite());
+    }
+}

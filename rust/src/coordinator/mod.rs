@@ -1,0 +1,28 @@
+//! The L3 coordinator (S7/S8) — the systems half of the reproduction.
+//!
+//! Compressing a model is a streaming pipeline:
+//!
+//! ```text
+//!   corpus ─▶ capture (fwd_acts) ─▶ accumulate (TSQR / Gram / scales)
+//!                 │ batch-sized chunks, bounded channel (backpressure)
+//!                 ▼
+//!   per-projection R or G ─▶ rank budget ─▶ factorize (PJRT artifacts)
+//!                 ▼                              │ μ-rule (Eq. 5)
+//!   CompressedModel ◀────────────────────────────┘
+//! ```
+//!
+//! X is never materialized: each forward batch contributes a (B·T × n)
+//! chunk that is folded into a square R (COALA route) or accumulated
+//! into the Gram matrix (baseline route) and dropped — the paper's §4.2
+//! out-of-memory scenario.  Multi-device tree TSQR is simulated by a
+//! worker pool where every worker owns its *own* PJRT client
+//! ([`tsqr_tree`]).
+
+pub mod budget;
+pub mod pipeline;
+pub mod scheduler;
+pub mod tsqr_tree;
+
+pub use budget::RankBudget;
+pub use pipeline::{CompressionJob, CompressionOutcome, Pipeline};
+pub use tsqr_tree::TsqrTreeRunner;

@@ -1,0 +1,306 @@
+//! The per-model compression pipeline — streaming calibration in, a
+//! `CompressedModel` out.
+
+use crate::calib::activations::ActivationCapture;
+use crate::calib::dataset::Corpus;
+use crate::coala::factorize::FullFactors;
+use crate::coala::{Method, MuRule};
+use crate::error::{Error, Result};
+use crate::model::{CompressedModel, ModelWeights};
+use crate::runtime::executor::Executor;
+use crate::runtime::manifest::ModelSpec;
+use crate::runtime::ops;
+use crate::tensor::lowp::{quantize, Precision};
+use crate::tensor::Matrix;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// What to compress and how.
+#[derive(Debug, Clone)]
+pub struct CompressionJob {
+    pub config: String,
+    pub method: Method,
+    /// kept-parameter ratio over the compressible projections
+    pub ratio: f64,
+    /// calibration forward batches (each B×T tokens)
+    pub calib_batches: usize,
+    /// which corpus split feeds calibration
+    pub calib_split: String,
+    /// emulated precision of the *accumulation* stage (Table 2's fp16)
+    pub accum_precision: Precision,
+    pub rank_policy: super::budget::RankPolicy,
+}
+
+impl CompressionJob {
+    pub fn new(config: &str, method: Method, ratio: f64) -> CompressionJob {
+        CompressionJob {
+            config: config.to_string(),
+            method,
+            ratio,
+            calib_batches: 8,
+            calib_split: "calib".to_string(),
+            accum_precision: Precision::F32,
+            rank_policy: super::budget::RankPolicy::Uniform,
+        }
+    }
+}
+
+/// Per-stage wall-clock (drives Table 1 + the §Perf profile).
+#[derive(Debug, Clone, Default)]
+pub struct StageTimings {
+    pub calibrate_s: f64,
+    pub accumulate_s: f64,
+    pub factorize_s: f64,
+    pub total_s: f64,
+}
+
+/// Result of one compression run.
+#[derive(Debug)]
+pub struct CompressionOutcome {
+    pub model: CompressedModel,
+    pub budget: super::budget::RankBudget,
+    pub timings: StageTimings,
+    /// per-projection chosen μ (adaptive rule diagnostics)
+    pub mus: BTreeMap<String, f64>,
+}
+
+/// Per-(layer, stream) streaming accumulator state.
+pub enum Accum {
+    /// COALA route: square R with RᵀR = (seen X)(seen X)ᵀ
+    R(Matrix<f32>),
+    /// Gram route: G = Σ chunkᵀ·chunk
+    Gram(Matrix<f32>),
+    /// ASVD route: running Σ|x| and count per input channel
+    Scales(Vec<f64>, usize),
+}
+
+/// The pipeline: owns nothing but borrows the executor (compile cache is
+/// shared across jobs — e.g. the whole Fig. 5 λ sweep reuses artifacts).
+pub struct Pipeline<'a> {
+    pub ex: &'a Executor,
+    pub spec: ModelSpec,
+    pub weights: &'a ModelWeights,
+}
+
+impl<'a> Pipeline<'a> {
+    pub fn new(ex: &'a Executor, spec: ModelSpec, weights: &'a ModelWeights) -> Pipeline<'a> {
+        Pipeline { ex, spec, weights }
+    }
+
+    /// Streaming calibration: fold every batch into per-stream accumulators.
+    /// X is never materialized (peak memory = one chunk + accumulators).
+    pub fn calibrate(
+        &self,
+        job: &CompressionJob,
+        corpus: &Corpus,
+        timings: &mut StageTimings,
+    ) -> Result<BTreeMap<(usize, String), Accum>> {
+        let cap = ActivationCapture::new(self.ex, &self.spec);
+        let batches =
+            corpus.batches(&job.calib_split, self.spec.batch, self.spec.seq_len, job.calib_batches)?;
+        let mut accums: BTreeMap<(usize, String), Accum> = BTreeMap::new();
+        let gram_route = job.method.needs_gram();
+        let scales_route = matches!(job.method, Method::Asvd);
+        for tokens in &batches {
+            let t0 = Instant::now();
+            let (_logits, chunks) = cap.capture(tokens, self.weights)?;
+            timings.calibrate_s += t0.elapsed().as_secs_f64();
+            let t1 = Instant::now();
+            for c in chunks {
+                let xt = if job.accum_precision == Precision::F32 {
+                    c.xt
+                } else {
+                    quantize(&c.xt, job.accum_precision)
+                };
+                let key = (c.layer, c.stream.clone());
+                let n = xt.cols;
+                let entry = accums.entry(key).or_insert_with(|| {
+                    if scales_route {
+                        Accum::Scales(vec![0.0; n], 0)
+                    } else if gram_route {
+                        Accum::Gram(Matrix::zeros(n, n))
+                    } else {
+                        Accum::R(Matrix::zeros(n, n))
+                    }
+                });
+                match entry {
+                    Accum::R(r) => *r = ops::tsqr_step(self.ex, r, &xt)?,
+                    Accum::Gram(g) => {
+                        let g2 = ops::gram_update(self.ex, g, &xt)?;
+                        *g = if job.accum_precision == Precision::F32 {
+                            g2
+                        } else {
+                            quantize(&g2, job.accum_precision)
+                        };
+                    }
+                    Accum::Scales(s, cnt) => {
+                        for i in 0..xt.rows {
+                            for (j, acc) in s.iter_mut().enumerate() {
+                                *acc += xt.get(i, j).abs() as f64;
+                            }
+                        }
+                        *cnt += xt.rows;
+                    }
+                }
+            }
+            timings.accumulate_s += t1.elapsed().as_secs_f64();
+        }
+        Ok(accums)
+    }
+
+    /// Factorize one projection given its accumulator.
+    fn factorize_one(
+        &self,
+        job: &CompressionJob,
+        w: &Matrix<f32>,
+        accum: &Accum,
+        rank: usize,
+        mus: &mut BTreeMap<String, f64>,
+        proj: &str,
+    ) -> Result<FullFactors<f32>> {
+        match (&job.method, accum) {
+            (Method::Coala(MuRule::None), Accum::R(r)) => ops::factorize(self.ex, w, r),
+            (Method::Coala(MuRule::Constant { mu }), Accum::R(r)) => {
+                mus.insert(proj.to_string(), *mu);
+                ops::factorize_reg(self.ex, w, r, *mu as f32)
+            }
+            (Method::Coala(MuRule::Adaptive { lambda }), Accum::R(r)) => {
+                let f0 = ops::factorize(self.ex, w, r)?;
+                let (num, den) = ops::mu_terms(self.ex, w, &f0, r, rank)?;
+                let mu = if den > 1e-20 { lambda * num as f64 / den as f64 } else { 0.0 };
+                mus.insert(proj.to_string(), mu);
+                if mu == 0.0 {
+                    return Ok(f0);
+                }
+                ops::factorize_reg(self.ex, w, r, mu as f32)
+            }
+            (Method::Alpha(0), Accum::R(_)) => ops::plainsvd(self.ex, w),
+            (Method::Alpha(1), Accum::R(r)) => ops::factorize(self.ex, w, r),
+            (Method::Alpha(2), Accum::R(r)) => ops::alpha2(self.ex, w, r),
+            (Method::PlainSvd, _) => ops::plainsvd(self.ex, w),
+            (Method::SvdLlm, Accum::Gram(g)) => ops::svdllm(self.ex, w, g),
+            (Method::SvdLlmV2, Accum::Gram(g)) => ops::svdllm2(self.ex, w, g),
+            (Method::Corda, Accum::Gram(g)) => ops::corda(self.ex, w, g),
+            (Method::Asvd, Accum::Scales(s, cnt)) => {
+                let scales: Vec<f32> = s
+                    .iter()
+                    .map(|v| ((v / (*cnt).max(1) as f64) as f32 + 1e-6).sqrt())
+                    .collect();
+                ops::asvd(self.ex, w, &scales)
+            }
+            (m, _) => Err(Error::Config(format!(
+                "method {} incompatible with accumulated route",
+                m.name()
+            ))),
+        }
+    }
+
+    /// Run the full job.
+    pub fn run(&self, job: &CompressionJob, corpus: &Corpus) -> Result<CompressionOutcome> {
+        let t_start = Instant::now();
+        let mut timings = StageTimings::default();
+        let accums = self.calibrate(job, corpus, &mut timings)?;
+        let mut out = self.run_with_accums(job, &accums, timings)?;
+        out.timings.total_s = t_start.elapsed().as_secs_f64();
+        Ok(out)
+    }
+
+    /// Factorize + assemble given pre-computed accumulators — lets a μ/λ
+    /// sweep (Figs. 4/5) reuse one calibration pass across many jobs.
+    pub fn run_with_accums(
+        &self,
+        job: &CompressionJob,
+        accums: &BTreeMap<(usize, String), Accum>,
+        mut timings: StageTimings,
+    ) -> Result<CompressionOutcome> {
+        let budget = super::budget::RankBudget::allocate(&self.spec, job.ratio, job.rank_policy)?;
+
+        let mut model = CompressedModel::new(&job.config);
+        let mut mus = BTreeMap::new();
+        let t2 = Instant::now();
+        for proj in self.spec.compressible.clone() {
+            let w = self.weights.matrix(&proj)?;
+            let layer: usize = proj[1..].split('.').next().unwrap().parse().unwrap();
+            let stream = self.spec.stream_of(&proj)?.to_string();
+            let accum = accums
+                .get(&(layer, stream))
+                .ok_or_else(|| Error::Config(format!("no accumulator for {proj}")))?;
+            let rank = budget.rank(&proj)?;
+            let full = self.factorize_one(job, &w, accum, rank, &mut mus, &proj)?;
+            model.insert(&proj, full.truncate(rank));
+        }
+        timings.factorize_s = t2.elapsed().as_secs_f64();
+        timings.total_s = timings.calibrate_s + timings.accumulate_s + timings.factorize_s;
+        Ok(CompressionOutcome { model, budget, timings, mus })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::perplexity;
+
+    fn setup() -> Option<(Executor, Corpus)> {
+        if !std::path::Path::new("artifacts/manifest.json").exists() {
+            return None;
+        }
+        Some((Executor::new("artifacts").unwrap(), Corpus::load("artifacts").unwrap()))
+    }
+
+    #[test]
+    fn coala_compression_end_to_end_preserves_model_better_than_random() {
+        let Some((ex, corpus)) = setup() else { return };
+        let spec = ex.manifest.config("tiny").unwrap().clone();
+        let w = ModelWeights::load("artifacts", &spec).unwrap();
+        let pipe = Pipeline::new(&ex, spec.clone(), &w);
+        let mut job = CompressionJob::new("tiny", Method::Coala(MuRule::None), 0.5);
+        job.calib_batches = 4;
+        let out = pipe.run(&job, &corpus).unwrap();
+        assert!(out.model.all_finite());
+        assert_eq!(out.model.factors.len(), spec.compressible.len());
+        let achieved = out.model.achieved_ratio(&w, &spec);
+        assert!((achieved - 0.5).abs() < 0.1, "achieved {achieved}");
+
+        let val = corpus.split("val").unwrap();
+        let base = perplexity(&ex, &spec, &w, val, 2).unwrap();
+        let rec = out.model.reconstruct_into(&w).unwrap();
+        let comp = perplexity(&ex, &spec, &rec, val, 2).unwrap();
+        assert!(comp.is_finite());
+        // 50 % compression shouldn't destroy the model (<4× ppl)
+        assert!(comp < base * 4.0, "base {base} compressed {comp}");
+        assert!(out.timings.total_s > 0.0);
+    }
+
+    #[test]
+    fn adaptive_mu_records_per_layer_values() {
+        let Some((ex, corpus)) = setup() else { return };
+        let spec = ex.manifest.config("tiny").unwrap().clone();
+        let w = ModelWeights::load("artifacts", &spec).unwrap();
+        let pipe = Pipeline::new(&ex, spec.clone(), &w);
+        let mut job =
+            CompressionJob::new("tiny", Method::Coala(MuRule::Adaptive { lambda: 2.0 }), 0.3);
+        job.calib_batches = 2;
+        let out = pipe.run(&job, &corpus).unwrap();
+        assert_eq!(out.mus.len(), spec.compressible.len());
+        // layer norms differ → adaptive μ varies across layers
+        let vals: Vec<f64> = out.mus.values().copied().collect();
+        let min = vals.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = vals.iter().cloned().fold(0.0, f64::max);
+        assert!(max > min * 1.5, "μ did not vary: {min}..{max}");
+        assert!(out.model.all_finite());
+    }
+
+    #[test]
+    fn gram_route_methods_run() {
+        let Some((ex, corpus)) = setup() else { return };
+        let spec = ex.manifest.config("tiny").unwrap().clone();
+        let w = ModelWeights::load("artifacts", &spec).unwrap();
+        let pipe = Pipeline::new(&ex, spec.clone(), &w);
+        for method in [Method::SvdLlm, Method::Asvd, Method::PlainSvd] {
+            let mut job = CompressionJob::new("tiny", method, 0.4);
+            job.calib_batches = 2;
+            let out = pipe.run(&job, &corpus).unwrap();
+            assert_eq!(out.model.factors.len(), spec.compressible.len(), "{}", method.name());
+        }
+    }
+}

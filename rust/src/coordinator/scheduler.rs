@@ -1,0 +1,113 @@
+//! Two-stage streaming scheduler: capture ∥ accumulate with backpressure.
+//!
+//! The sequential pipeline alternates "run fwd_acts" and "fold chunks
+//! into R"; both are device-bound, so on a multi-device box they can
+//! overlap.  This scheduler runs capture on one simulated device and
+//! accumulation on another, connected by a **bounded** channel — if the
+//! accumulator falls behind, the capture stage blocks (backpressure)
+//! instead of buffering unbounded activation chunks (which is the whole
+//! point of the streaming design: X must never materialize).
+
+use crate::calib::activations::ActivationCapture;
+use crate::error::{Error, Result};
+use crate::model::ModelWeights;
+use crate::runtime::executor::{Executor, Value};
+use crate::runtime::ops;
+use crate::tensor::Matrix;
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+
+/// Outcome of the overlapped calibration: per-(layer, stream) R factors.
+pub type RFactors = BTreeMap<(usize, String), Matrix<f32>>;
+
+/// Overlapped calibrate-and-fold.  `queue_cap` bounds the number of
+/// in-flight batches' chunks (backpressure knob).
+pub fn calibrate_overlapped(
+    artifacts_dir: &str,
+    config: &str,
+    batches: Vec<Value>,
+    queue_cap: usize,
+) -> Result<RFactors> {
+    let (tx, rx) = mpsc::sync_channel::<Vec<(usize, String, Matrix<f32>)>>(queue_cap.max(1));
+    let dir_a = artifacts_dir.to_string();
+    let dir_b = artifacts_dir.to_string();
+    let cfg_name = config.to_string();
+
+    let producer = std::thread::spawn(move || -> Result<()> {
+        let ex = Executor::new(&dir_a)?; // capture device
+        let spec = ex.manifest.config(&cfg_name)?.clone();
+        let weights = ModelWeights::load(&dir_a, &spec)?;
+        let cap = ActivationCapture::new(&ex, &spec);
+        for tokens in &batches {
+            let (_logits, chunks) = cap.capture(tokens, &weights)?;
+            let payload: Vec<(usize, String, Matrix<f32>)> =
+                chunks.into_iter().map(|c| (c.layer, c.stream, c.xt)).collect();
+            if tx.send(payload).is_err() {
+                break; // consumer died; its error surfaces below
+            }
+        }
+        Ok(())
+    });
+
+    let consumer = std::thread::spawn(move || -> Result<RFactors> {
+        let ex = Executor::new(&dir_b)?; // accumulate device
+        let mut rs: RFactors = BTreeMap::new();
+        for payload in rx {
+            for (layer, stream, xt) in payload {
+                let n = xt.cols;
+                let r = rs.entry((layer, stream)).or_insert_with(|| Matrix::zeros(n, n));
+                *r = ops::tsqr_step(&ex, r, &xt)?;
+            }
+        }
+        Ok(rs)
+    });
+
+    producer
+        .join()
+        .map_err(|_| Error::msg("capture stage panicked"))??;
+    consumer.join().map_err(|_| Error::msg("accumulate stage panicked"))?
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calib::dataset::Corpus;
+    use crate::tensor::ops::fro;
+
+    #[test]
+    fn overlapped_matches_sequential() {
+        if !std::path::Path::new("artifacts/manifest.json").exists() {
+            return;
+        }
+        let ex = Executor::new("artifacts").unwrap();
+        let spec = ex.manifest.config("tiny").unwrap().clone();
+        let weights = ModelWeights::load("artifacts", &spec).unwrap();
+        let corpus = Corpus::load("artifacts").unwrap();
+        let batches = corpus.batches("calib", spec.batch, spec.seq_len, 3).unwrap();
+
+        // sequential reference
+        let cap = ActivationCapture::new(&ex, &spec);
+        let mut seq: RFactors = BTreeMap::new();
+        for t in &batches {
+            let (_l, chunks) = cap.capture(t, &weights).unwrap();
+            for c in chunks {
+                let n = c.xt.cols;
+                let r = seq.entry((c.layer, c.stream)).or_insert_with(|| Matrix::zeros(n, n));
+                *r = ops::tsqr_step(&ex, r, &c.xt).unwrap();
+            }
+        }
+
+        let par = calibrate_overlapped("artifacts", "tiny", batches, 2).unwrap();
+        assert_eq!(par.len(), seq.len());
+        for (k, r_seq) in &seq {
+            let r_par = &par[k];
+            // R is unique up to row signs; compare RᵀR
+            let g_seq =
+                crate::tensor::ops::matmul(&r_seq.transpose(), r_seq).unwrap();
+            let g_par =
+                crate::tensor::ops::matmul(&r_par.transpose(), r_par).unwrap();
+            let err = fro(&g_seq.sub(&g_par).unwrap()) / fro(&g_seq).max(1e-9);
+            assert!(err < 1e-4, "{k:?}: {err}");
+        }
+    }
+}

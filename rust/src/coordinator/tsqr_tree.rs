@@ -1,0 +1,129 @@
+//! Multi-device tree TSQR (the paper's §4.2 binary-tree diagram).
+//!
+//! Each worker thread owns its **own PJRT client + executable cache** —
+//! the faithful simulation of "one GPU per tree leaf": no shared device
+//! state, R factors (tiny n × n matrices) are the only thing crossing
+//! the tree edges, exactly like the multi-GPU all-reduce-of-R pattern.
+
+use crate::error::{Error, Result};
+use crate::runtime::executor::Executor;
+use crate::runtime::ops;
+use crate::tensor::Matrix;
+use std::sync::mpsc;
+
+/// Runs tree-TSQR over chunk streams with `workers` simulated devices.
+pub struct TsqrTreeRunner {
+    pub artifacts_dir: String,
+    pub workers: usize,
+}
+
+impl TsqrTreeRunner {
+    pub fn new(artifacts_dir: &str, workers: usize) -> TsqrTreeRunner {
+        TsqrTreeRunner { artifacts_dir: artifacts_dir.to_string(), workers: workers.max(1) }
+    }
+
+    /// Leaf phase: worker w sequentially folds chunks w, w+P, w+2P, …
+    /// into a local R; reduction phase: pairwise merges up the tree.
+    ///
+    /// `chunks` are (c × n) row-blocks of Xᵀ; all must share n and c
+    /// (the AOT artifact is shape-specialized).
+    pub fn run(&self, chunks: Vec<Matrix<f32>>) -> Result<Matrix<f32>> {
+        if chunks.is_empty() {
+            return Err(Error::Config("tsqr over zero chunks".into()));
+        }
+        let n = chunks[0].cols;
+        let workers = self.workers.min(chunks.len());
+        if workers <= 1 {
+            // single device: plain streaming fold
+            let ex = Executor::new(&self.artifacts_dir)?;
+            let mut r = Matrix::zeros(n, n);
+            for c in &chunks {
+                r = ops::tsqr_step(&ex, &r, c)?;
+            }
+            return Ok(r);
+        }
+
+        // ---- leaf phase: one thread per simulated device ----------------
+        let (tx, rx) = mpsc::channel::<Result<(usize, Matrix<f32>)>>();
+        std::thread::scope(|s| {
+            // distribute chunks round-robin; each worker folds its share
+            let mut shares: Vec<Vec<&Matrix<f32>>> = vec![Vec::new(); workers];
+            for (i, c) in chunks.iter().enumerate() {
+                shares[i % workers].push(c);
+            }
+            for (w, share) in shares.into_iter().enumerate() {
+                let tx = tx.clone();
+                let dir = self.artifacts_dir.clone();
+                s.spawn(move || {
+                    let res = (|| -> Result<Matrix<f32>> {
+                        let ex = Executor::new(&dir)?; // own PJRT client
+                        let mut r = Matrix::zeros(n, n);
+                        for c in share {
+                            r = ops::tsqr_step(&ex, &r, c)?;
+                        }
+                        Ok(r)
+                    })();
+                    let _ = tx.send(res.map(|r| (w, r)));
+                });
+            }
+        });
+        drop(tx);
+        let mut leaves: Vec<(usize, Matrix<f32>)> = Vec::with_capacity(workers);
+        for got in rx {
+            leaves.push(got?);
+        }
+        leaves.sort_by_key(|(w, _)| *w); // deterministic reduction order
+        let mut level: Vec<Matrix<f32>> = leaves.into_iter().map(|(_, r)| r).collect();
+
+        // ---- reduction phase: binary tree of R merges --------------------
+        let ex = Executor::new(&self.artifacts_dir)?;
+        while level.len() > 1 {
+            let mut next = Vec::with_capacity(level.len().div_ceil(2));
+            let mut it = level.into_iter();
+            while let Some(a) = it.next() {
+                match it.next() {
+                    Some(b) => next.push(ops::tsqr_merge(&ex, &a, &b)?),
+                    None => next.push(a),
+                }
+            }
+            level = next;
+        }
+        Ok(level.pop().unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::{fro, gram_t, matmul};
+
+    #[test]
+    fn tree_matches_sequential_gram_identity() {
+        if !std::path::Path::new("artifacts/manifest.json").exists() {
+            return;
+        }
+        let ex = Executor::new("artifacts").unwrap();
+        let cfg = ex.manifest.config("tiny").unwrap();
+        let n = cfg.d_model;
+        let c = cfg.chunk_cols();
+        let chunks: Vec<Matrix<f32>> = (0..5).map(|i| Matrix::randn(c, n, 10 + i)).collect();
+        let mut full = chunks[0].clone();
+        for ch in &chunks[1..] {
+            full = full.vstack(ch).unwrap();
+        }
+        let want = gram_t(&full);
+        for workers in [1usize, 2, 4] {
+            let runner = TsqrTreeRunner::new("artifacts", workers);
+            let r = runner.run(chunks.clone()).unwrap();
+            let got = matmul(&r.transpose(), &r).unwrap();
+            let err = fro(&got.sub(&want).unwrap()) / fro(&want);
+            assert!(err < 1e-4, "workers={workers}: {err}");
+        }
+    }
+
+    #[test]
+    fn empty_rejected() {
+        let runner = TsqrTreeRunner::new("artifacts", 2);
+        assert!(runner.run(vec![]).is_err());
+    }
+}

@@ -1,0 +1,50 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+#[derive(Error, Debug)]
+pub enum Error {
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("xla error: {0}")]
+    Xla(#[from] xla::Error),
+
+    #[error("format error in {path}: {msg}")]
+    Format { path: String, msg: String },
+
+    #[error("json error: {0}")]
+    Json(String),
+
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+
+    #[error("artifact `{0}` not found in manifest")]
+    UnknownArtifact(String),
+
+    #[error("numerical failure: {0}")]
+    Numerical(String),
+
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error("{0}")]
+    Msg(String),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    pub fn msg(m: impl Into<String>) -> Self {
+        Error::Msg(m.into())
+    }
+    pub fn shape(m: impl Into<String>) -> Self {
+        Error::Shape(m.into())
+    }
+}
+
+impl From<String> for Error {
+    fn from(s: String) -> Self {
+        Error::Msg(s)
+    }
+}

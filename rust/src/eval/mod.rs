@@ -1,0 +1,8 @@
+//! Evaluation harness (S12): perplexity + probe-task accuracy, with the
+//! stderr formatting the paper's tables use.
+
+pub mod perplexity;
+pub mod tasks;
+
+pub use perplexity::perplexity;
+pub use tasks::{eval_tasks, TaskScores};

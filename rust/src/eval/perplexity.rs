@@ -1,0 +1,71 @@
+//! Held-out perplexity through the `loss_<cfg>` artifact.
+
+use crate::error::Result;
+use crate::model::weights::ModelWeights;
+use crate::runtime::executor::{Executor, Value};
+use crate::runtime::manifest::ModelSpec;
+
+/// exp(mean NLL) over `n_batches` deterministic windows of a split.
+pub fn perplexity(
+    ex: &Executor,
+    spec: &ModelSpec,
+    weights: &ModelWeights,
+    split_tokens: &[i32],
+    n_batches: usize,
+) -> Result<f64> {
+    let artifact = format!("loss_{}", spec.name);
+    let win = spec.seq_len + 1;
+    let need = spec.batch * win;
+    let wvals = weights.to_values(spec)?;
+    let mut total = 0.0f64;
+    for b in 0..n_batches {
+        let start = (b * need) % (split_tokens.len().saturating_sub(need) + 1);
+        let toks = Value::I32(vec![spec.batch, win], split_tokens[start..start + need].to_vec());
+        let mut inputs = vec![toks];
+        inputs.extend(wvals.iter().cloned());
+        let out = ex.run(&artifact, &inputs)?;
+        total += out[0].f32s()?[0] as f64;
+    }
+    Ok((total / n_batches as f64).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calib::dataset::Corpus;
+
+    #[test]
+    fn trained_model_beats_uniform_and_matches_buildtime() {
+        if !std::path::Path::new("artifacts/manifest.json").exists() {
+            return;
+        }
+        let ex = Executor::new("artifacts").unwrap();
+        let spec = ex.manifest.config("tiny").unwrap().clone();
+        let w = ModelWeights::load("artifacts", &spec).unwrap();
+        let corpus = Corpus::load("artifacts").unwrap();
+        let ppl = perplexity(&ex, &spec, &w, corpus.split("val").unwrap(), 4).unwrap();
+        assert!(ppl < spec.vocab as f64 / 4.0, "ppl {ppl}");
+        assert!(ppl > 1.0);
+        // within 40% of the jax-side build-time measurement (different
+        // batches, same distribution)
+        let build = w.build_val_ppl as f64;
+        assert!((ppl / build).ln().abs() < 0.4, "ppl {ppl} vs build {build}");
+    }
+
+    #[test]
+    fn corrupting_weights_hurts_ppl() {
+        if !std::path::Path::new("artifacts/manifest.json").exists() {
+            return;
+        }
+        let ex = Executor::new("artifacts").unwrap();
+        let spec = ex.manifest.config("tiny").unwrap().clone();
+        let w = ModelWeights::load("artifacts", &spec).unwrap();
+        let corpus = Corpus::load("artifacts").unwrap();
+        let base = perplexity(&ex, &spec, &w, corpus.split("val").unwrap(), 2).unwrap();
+        let mut bad = w.clone();
+        let q = bad.matrix("l0.wq").unwrap();
+        bad.set_matrix("l0.wq", &crate::tensor::Matrix::randn(q.rows, q.cols, 99)).unwrap();
+        let worse = perplexity(&ex, &spec, &bad, corpus.split("val").unwrap(), 2).unwrap();
+        assert!(worse > base, "{worse} vs {base}");
+    }
+}

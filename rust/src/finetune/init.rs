@@ -1,0 +1,214 @@
+//! Adapter initialization strategies (the Table 4 rows).
+
+use crate::calib::activations::ActivationCapture;
+use crate::calib::dataset::Corpus;
+use crate::error::Result;
+use crate::model::ModelWeights;
+use crate::runtime::executor::Executor;
+use crate::runtime::manifest::ModelSpec;
+use crate::runtime::ops;
+use crate::tensor::Matrix;
+use crate::util::prng::Rng;
+use std::collections::BTreeMap;
+
+/// Initialization strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdapterInit {
+    /// ΔW = 0: B ~ N(0, 0.02), A = 0 (the LoRA convention, transposed to
+    /// our A·B layout).
+    LoRA,
+    /// top-r plain SVD of W (α = 0).
+    PiSSA,
+    /// original CorDA: SVD(W·XXᵀ) with explicit Gram inversion.
+    CorDA,
+    /// COALA α = 1 (Alg. 1, inversion-free).
+    CoalaA1,
+    /// COALA α = 2 (robustified CorDA).
+    CoalaA2,
+}
+
+impl AdapterInit {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AdapterInit::LoRA => "LoRA",
+            AdapterInit::PiSSA => "PiSSA",
+            AdapterInit::CorDA => "CorDA",
+            AdapterInit::CoalaA1 => "COALA(a=1)",
+            AdapterInit::CoalaA2 => "COALA(a=2)",
+        }
+    }
+
+    pub fn needs_calibration(&self) -> bool {
+        matches!(self, AdapterInit::CorDA | AdapterInit::CoalaA1 | AdapterInit::CoalaA2)
+    }
+}
+
+/// Initialized adapters + the residual base weights.
+#[derive(Debug, Clone)]
+pub struct AdapterSet {
+    pub rank: usize,
+    /// per projection: (A, B)
+    pub adapters: BTreeMap<String, (Matrix<f32>, Matrix<f32>)>,
+    /// base weights with W_res = W − A·B substituted into each projection
+    pub frozen: ModelWeights,
+}
+
+/// Split full factors into a balanced (A√σ, √σ⁻¹B) pair at rank r —
+/// the PiSSA-style scaling that keeps both factors at comparable norm
+/// so Adam's per-parameter steps are well-conditioned.
+fn balanced_split(
+    full: &crate::coala::factorize::FullFactors<f32>,
+    r: usize,
+) -> (Matrix<f32>, Matrix<f32>) {
+    let f = full.truncate(r);
+    let mut a = f.a.clone();
+    let mut b = f.b.clone();
+    for k in 0..r.min(full.sigma.len()) {
+        let s = full.sigma[k].max(1e-12).sqrt();
+        // column k of A scaled by √σ/σ … we want A·B unchanged:
+        // A col *= s, B row /= s  — but A's columns are unit (U), B's rows
+        // carry σ.  Scale A by √σ_k and B by 1/√σ_k.
+        for i in 0..a.rows {
+            a.set(i, k, a.get(i, k) * s);
+        }
+        for j in 0..b.cols {
+            b.set(k, j, b.get(k, j) / s);
+        }
+    }
+    (a, b)
+}
+
+/// Build adapters for every compressible projection.
+///
+/// Calibration (for the context-aware inits) uses `calib_batches` from
+/// `split` — Table 4 uses 24 examples = 3 batches of 8: the low-data
+/// regime where CorDA's Gram inversion degrades.
+pub fn init_adapters(
+    ex: &Executor,
+    spec: &ModelSpec,
+    weights: &ModelWeights,
+    corpus: &Corpus,
+    strategy: AdapterInit,
+    rank: usize,
+    split: &str,
+    calib_batches: usize,
+) -> Result<AdapterSet> {
+    // 1. accumulate R (QR route) and G (Gram route) if needed
+    let mut r_acc: BTreeMap<(usize, String), Matrix<f32>> = BTreeMap::new();
+    let mut g_acc: BTreeMap<(usize, String), Matrix<f32>> = BTreeMap::new();
+    if strategy.needs_calibration() {
+        let cap = ActivationCapture::new(ex, spec);
+        for tokens in corpus.batches(split, spec.batch, spec.seq_len, calib_batches)? {
+            let (_l, chunks) = cap.capture(&tokens, weights)?;
+            for c in chunks {
+                let n = c.xt.cols;
+                match strategy {
+                    AdapterInit::CorDA => {
+                        let g = g_acc
+                            .entry((c.layer, c.stream.clone()))
+                            .or_insert_with(|| Matrix::zeros(n, n));
+                        *g = ops::gram_update(ex, g, &c.xt)?;
+                    }
+                    _ => {
+                        let r = r_acc
+                            .entry((c.layer, c.stream.clone()))
+                            .or_insert_with(|| Matrix::zeros(n, n));
+                        *r = ops::tsqr_step(ex, r, &c.xt)?;
+                    }
+                }
+            }
+        }
+    }
+
+    // 2. per-projection init
+    let mut adapters = BTreeMap::new();
+    let mut frozen = weights.clone();
+    let mut rng = Rng::new(0xC0A1A);
+    for proj in &spec.compressible {
+        let w = weights.matrix(proj)?;
+        let layer: usize = proj[1..].split('.').next().unwrap().parse().unwrap();
+        let stream = spec.stream_of(proj)?.to_string();
+        let (a, b) = match strategy {
+            AdapterInit::LoRA => {
+                let mut bmat = Matrix::zeros(rank, w.cols);
+                for v in bmat.data.iter_mut() {
+                    *v = (rng.normal() * 0.02) as f32;
+                }
+                (Matrix::zeros(w.rows, rank), bmat)
+            }
+            AdapterInit::PiSSA => balanced_split(&ops::plainsvd(ex, &w)?, rank),
+            AdapterInit::CorDA => {
+                let g = &g_acc[&(layer, stream)];
+                balanced_split(&ops::corda(ex, &w, g)?, rank)
+            }
+            AdapterInit::CoalaA1 => {
+                let r = &r_acc[&(layer, stream)];
+                balanced_split(&ops::factorize(ex, &w, r)?, rank)
+            }
+            AdapterInit::CoalaA2 => {
+                let r = &r_acc[&(layer, stream)];
+                balanced_split(&ops::alpha2(ex, &w, r)?, rank)
+            }
+        };
+        // residualize so the adapted model starts EXACTLY at the base
+        // model: W_res = W − A·B
+        let delta = crate::tensor::ops::matmul(&a, &b)?;
+        frozen.set_matrix(proj, &w.sub(&delta)?)?;
+        adapters.insert(proj.clone(), (a, b));
+    }
+    Ok(AdapterSet { rank, adapters, frozen })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::fro;
+
+    fn setup() -> Option<(Executor, Corpus)> {
+        if !std::path::Path::new("artifacts/manifest.json").exists() {
+            return None;
+        }
+        Some((Executor::new("artifacts").unwrap(), Corpus::load("artifacts").unwrap()))
+    }
+
+    #[test]
+    fn all_inits_start_at_base_model() {
+        let Some((ex, corpus)) = setup() else { return };
+        let spec = ex.manifest.config("tiny").unwrap().clone();
+        let w = ModelWeights::load("artifacts", &spec).unwrap();
+        for strat in [AdapterInit::LoRA, AdapterInit::PiSSA, AdapterInit::CoalaA1] {
+            let set =
+                init_adapters(&ex, &spec, &w, &corpus, strat, 8, "ft_calib", 2).unwrap();
+            assert_eq!(set.adapters.len(), spec.compressible.len());
+            for proj in &spec.compressible {
+                let (a, b) = &set.adapters[proj];
+                let delta = crate::tensor::ops::matmul(a, b).unwrap();
+                let orig = w.matrix(proj).unwrap();
+                let res = set.frozen.matrix(proj).unwrap();
+                let rec = res.add(&delta).unwrap();
+                let err = fro(&rec.sub(&orig).unwrap()) / fro(&orig);
+                assert!(err < 1e-4, "{}/{proj}: {err}", strat.name());
+            }
+        }
+    }
+
+    #[test]
+    fn lora_delta_is_zero_and_pissa_captures_top_spectrum() {
+        let Some((ex, corpus)) = setup() else { return };
+        let spec = ex.manifest.config("tiny").unwrap().clone();
+        let w = ModelWeights::load("artifacts", &spec).unwrap();
+        let lora = init_adapters(&ex, &spec, &w, &corpus, AdapterInit::LoRA, 8, "ft_calib", 1).unwrap();
+        let (a, _b) = &lora.adapters["l0.wq"];
+        assert!(fro(a) == 0.0);
+        let pissa =
+            init_adapters(&ex, &spec, &w, &corpus, AdapterInit::PiSSA, 8, "ft_calib", 1).unwrap();
+        let (a, b) = &pissa.adapters["l0.wq"];
+        let delta = crate::tensor::ops::matmul(a, b).unwrap();
+        // ΔW should carry a noticeable share of W's energy (top-8 SVD)
+        let orig = w.matrix("l0.wq").unwrap();
+        assert!(fro(&delta) > 0.1 * fro(&orig));
+        // balanced: ‖A‖ ≈ ‖B‖ within an order of magnitude
+        let (na, nb) = (fro(a), fro(b));
+        assert!(na / nb < 10.0 && nb / na < 10.0, "{na} vs {nb}");
+    }
+}

@@ -1,0 +1,14 @@
+//! PEFT adapter initialization + fine-tuning (S15, Table 4).
+//!
+//! Each projection gets a rank-r adapter pair (A: out×r, B: r×in) with
+//! W_eff = W_res + A·B.  The *initialization* is the experimental
+//! variable: LoRA (zero ΔW), PiSSA (top-r SVD of W), CorDA (original,
+//! Gram-inverting), and COALA α ∈ {1, 2} (robust, context-aware).
+//! Training itself is the `ft_step_<cfg>_r<r>` artifact — one Adam step
+//! over the adapters with the base frozen — driven from this module.
+
+pub mod init;
+pub mod trainer;
+
+pub use init::{init_adapters, AdapterInit, AdapterSet};
+pub use trainer::{FineTuner, FtReport};

@@ -1,0 +1,51 @@
+//! # COALA — COntext-Aware Low-rank Approximation
+//!
+//! A reproduction of *“COALA: Numerically Stable and Efficient Framework
+//! for Context-Aware Low-Rank Approximation”* (Parkina & Rakhuba, 2025)
+//! as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the coordinator: streaming calibration over a
+//!   real (build-time-trained) transformer, TSQR tree scheduling, the
+//!   per-layer compression pipeline, μ-selection (Eq. 5), rank budgeting,
+//!   evaluation, and the experiment harness regenerating every table and
+//!   figure of the paper.
+//! * **L2 (python/compile, build time only)** — the factorization graphs
+//!   (Alg. 1/2, Prop. 4 α-family, Gram-based baselines) hand-rolled in
+//!   jnp (Householder QR, Brent–Luk one-sided Jacobi SVD, Cholesky, …)
+//!   and lowered once to HLO text.
+//! * **L1 (python/compile/kernels)** — Pallas kernels for the BLAS-3 hot
+//!   spots (MXU-tiled matmul, Gram-chunk accumulation, blocked-QR
+//!   trailing update).
+//!
+//! The `runtime` module loads the AOT artifacts through the PJRT C API
+//! (`xla` crate) — python never runs on the request path.  The `linalg`
+//! module is an independent pure-Rust implementation of the same
+//! numerics (including f64) used as ground truth for the stability
+//! studies, for the host-side baseline paths, and by the property tests.
+
+pub mod calib;
+pub mod coala;
+pub mod coordinator;
+pub mod error;
+pub mod eval;
+pub mod finetune;
+pub mod linalg;
+pub mod model;
+pub mod repro;
+pub mod runtime;
+pub mod tensor;
+pub mod theory;
+pub mod util;
+
+pub use error::{Error, Result};
+
+/// Default artifacts directory (overridable with `--artifacts` / env).
+pub const DEFAULT_ARTIFACTS: &str = "artifacts";
+
+/// Resolve the artifacts directory: CLI flag > env > default.
+pub fn artifacts_dir(flag: Option<&str>) -> String {
+    if let Some(f) = flag {
+        return f.to_string();
+    }
+    std::env::var("COALA_ARTIFACTS").unwrap_or_else(|_| DEFAULT_ARTIFACTS.to_string())
+}

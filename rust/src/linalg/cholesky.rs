@@ -1,0 +1,94 @@
+//! Right-looking Cholesky — deliberately the unguarded textbook version
+//! SVD-LLM relies on, so its breakdown on singular Gram matrices (the
+//! paper's Fig. 1 phenomenon) is reproduced rather than papered over.
+
+use crate::error::{Error, Result};
+use crate::tensor::{Matrix, Scalar};
+
+/// Lower Cholesky factor L with L·Lᵀ = S.
+///
+/// Returns `Err(Numerical)` on a non-positive pivot (what torch raises);
+/// callers studying the failure mode can use [`cholesky_unchecked`] which
+/// lets NaNs propagate instead (what fp16 GPU kernels do).
+pub fn cholesky<T: Scalar>(s: &Matrix<T>) -> Result<Matrix<T>> {
+    let l = cholesky_unchecked(s)?;
+    if !l.all_finite() {
+        return Err(Error::Numerical(
+            "cholesky: non-positive pivot (singular Gram matrix)".into(),
+        ));
+    }
+    Ok(l)
+}
+
+/// Cholesky that propagates NaN/Inf from non-PSD pivots.
+pub fn cholesky_unchecked<T: Scalar>(s: &Matrix<T>) -> Result<Matrix<T>> {
+    let n = s.rows;
+    if s.cols != n {
+        return Err(Error::shape(format!("cholesky needs square, got {}x{}", s.rows, s.cols)));
+    }
+    let mut a = s.clone();
+    for j in 0..n {
+        let d = a.get(j, j).sqrt();
+        for i in j..n {
+            let v = a.get(i, j) / d;
+            a.set(i, j, v);
+        }
+        for c in (j + 1)..n {
+            let ljc = a.get(c, j);
+            if ljc.to_f64() == 0.0 && ljc.is_finite() {
+                continue;
+            }
+            for i in c..n {
+                let cur = a.get(i, c);
+                a.set(i, c, cur - a.get(i, j) * ljc);
+            }
+        }
+    }
+    // zero strict upper triangle
+    for i in 0..n {
+        for j in (i + 1)..n {
+            a.set(i, j, T::ZERO);
+        }
+    }
+    Ok(a)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::{fro, gram_t, matmul};
+
+    #[test]
+    fn factors_spd() {
+        let x: Matrix<f64> = Matrix::randn(20, 7, 1);
+        let mut g = gram_t(&x);
+        for i in 0..7 {
+            g.set(i, i, g.get(i, i) + 0.1);
+        }
+        let l = cholesky(&g).unwrap();
+        let rec = matmul(&l, &l.transpose()).unwrap();
+        assert!(fro(&rec.sub(&g).unwrap()) < 1e-10 * fro(&g));
+        for i in 0..7 {
+            for j in (i + 1)..7 {
+                assert_eq!(l.get(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn singular_gram_fails_checked() {
+        // rank-1 Gram: the SVD-LLM breakdown case
+        let x: Matrix<f64> = Matrix::from_fn(4, 3, |_, j| (j + 1) as f64);
+        let g = gram_t(&x);
+        assert!(cholesky(&g).is_err());
+        // unchecked lets non-finite through
+        let l = cholesky_unchecked(&g).unwrap();
+        assert!(!l.all_finite());
+    }
+
+    #[test]
+    fn non_square_rejected() {
+        let a: Matrix<f64> = Matrix::zeros(2, 3);
+        assert!(cholesky(&a).is_err());
+    }
+}

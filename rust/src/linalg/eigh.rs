@@ -1,0 +1,139 @@
+//! Symmetric eigendecomposition via the classical (two-sided) Jacobi
+//! eigenvalue algorithm — the SVD-LLM v2 substrate.
+
+use crate::error::{Error, Result};
+use crate::tensor::{Matrix, Scalar};
+
+/// Eigendecomposition of a symmetric matrix: S = Q·diag(λ)·Qᵀ.
+/// Returns (λ descending, Q with eigenvectors as columns).
+pub fn eigh<T: Scalar>(s: &Matrix<T>, max_sweeps: usize) -> Result<(Vec<T>, Matrix<T>)> {
+    let n = s.rows;
+    if s.cols != n {
+        return Err(Error::shape(format!("eigh needs square, got {}x{}", s.rows, s.cols)));
+    }
+    let mut a = s.clone();
+    let mut q: Matrix<T> = Matrix::eye(n);
+    let tol = T::EPSILON.to_f64() * 4.0;
+
+    for _ in 0..max_sweeps {
+        // off-diagonal Frobenius mass
+        let mut off = 0.0f64;
+        let mut diag = 0.0f64;
+        for i in 0..n {
+            for j in 0..n {
+                let v = a.get(i, j).to_f64();
+                if i == j {
+                    diag += v * v;
+                } else {
+                    off += v * v;
+                }
+            }
+        }
+        if off <= tol * tol * (diag + off) {
+            break;
+        }
+        for p in 0..n {
+            for qi in (p + 1)..n {
+                let apq = a.get(p, qi).to_f64();
+                if apq == 0.0 {
+                    continue;
+                }
+                let app = a.get(p, p).to_f64();
+                let aqq = a.get(qi, qi).to_f64();
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = if tau >= 0.0 {
+                    1.0 / (tau + (1.0 + tau * tau).sqrt())
+                } else {
+                    -1.0 / (-tau + (1.0 + tau * tau).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let sn = c * t;
+                let (cs_t, sn_t) = (T::from_f64(c), T::from_f64(sn));
+                // A ← JᵀAJ  (rows and columns p, q)
+                for k in 0..n {
+                    let akp = a.get(k, p);
+                    let akq = a.get(k, qi);
+                    a.set(k, p, cs_t * akp - sn_t * akq);
+                    a.set(k, qi, sn_t * akp + cs_t * akq);
+                }
+                for k in 0..n {
+                    let apk = a.get(p, k);
+                    let aqk = a.get(qi, k);
+                    a.set(p, k, cs_t * apk - sn_t * aqk);
+                    a.set(qi, k, sn_t * apk + cs_t * aqk);
+                }
+                for k in 0..n {
+                    let qkp = q.get(k, p);
+                    let qkq = q.get(k, qi);
+                    q.set(k, p, cs_t * qkp - sn_t * qkq);
+                    q.set(k, qi, sn_t * qkp + cs_t * qkq);
+                }
+            }
+        }
+    }
+
+    let mut order: Vec<usize> = (0..n).collect();
+    let diag: Vec<f64> = (0..n).map(|i| a.get(i, i).to_f64()).collect();
+    order.sort_by(|&i, &j| diag[j].total_cmp(&diag[i])); // NaN-safe
+    let lam: Vec<T> = order.iter().map(|&i| a.get(i, i)).collect();
+    let mut qs = Matrix::zeros(n, n);
+    for (k, &j) in order.iter().enumerate() {
+        for i in 0..n {
+            qs.set(i, k, q.get(i, j));
+        }
+    }
+    Ok((lam, qs))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::{fro, gram_t, matmul};
+
+    #[test]
+    fn reconstructs_psd() {
+        let x: Matrix<f64> = Matrix::randn(30, 10, 1);
+        let g = gram_t(&x);
+        let (lam, q) = eigh(&g, 40).unwrap();
+        // Q diag(λ) Qᵀ = G
+        let mut ql = q.clone();
+        for i in 0..10 {
+            for j in 0..10 {
+                ql.set(i, j, ql.get(i, j) * lam[j]);
+            }
+        }
+        let rec = matmul(&ql, &q.transpose()).unwrap();
+        assert!(fro(&rec.sub(&g).unwrap()) < 1e-9 * fro(&g));
+    }
+
+    #[test]
+    fn eigenvalues_match_svd_squares() {
+        let x: Matrix<f64> = Matrix::randn(25, 8, 2);
+        let g = gram_t(&x);
+        let (lam, _) = eigh(&g, 40).unwrap();
+        let svd = crate::linalg::svd::jacobi_svd(&x, 30).unwrap();
+        for (l, s) in lam.iter().zip(&svd.s) {
+            assert!((l - s * s).abs() < 1e-8 * (1.0 + s * s), "{l} vs {}", s * s);
+        }
+    }
+
+    #[test]
+    fn orthogonal_q() {
+        let x: Matrix<f64> = Matrix::randn(20, 6, 3);
+        let g = gram_t(&x);
+        let (_, q) = eigh(&g, 40).unwrap();
+        let qtq = matmul(&q.transpose(), &q).unwrap();
+        for i in 0..6 {
+            for j in 0..6 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((qtq.get(i, j) - want).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn non_square_rejected() {
+        let a: Matrix<f64> = Matrix::zeros(3, 4);
+        assert!(eigh(&a, 5).is_err());
+    }
+}

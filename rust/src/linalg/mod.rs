@@ -1,0 +1,30 @@
+//! Pure-Rust numerical linear algebra (substrate S2).
+//!
+//! An independent implementation of every factorization the L2 jax graphs
+//! use, in both f32 and f64.  Three jobs:
+//!
+//! 1. **fp64 ground truth** for the stability experiments (Fig. 1 needs a
+//!    high-precision COALA reference; Example G.1 needs exact spectra);
+//! 2. **host-side baselines** so the Gram-based methods can be studied at
+//!    any precision (including the emulated fp16 of Table 2);
+//! 3. **verification** — property tests cross-check the PJRT-executed
+//!    artifacts against these routines on random instances.
+//!
+//! Algorithms mirror the L2 implementations (Householder QR, streaming /
+//! tree TSQR, Brent–Luk one-sided Jacobi SVD, Jacobi eigensolver,
+//! right-looking Cholesky, substitution solves) so discrepancies localize
+//! bugs rather than algorithmic drift.
+
+pub mod cholesky;
+pub mod eigh;
+pub mod qr;
+pub mod svd;
+pub mod triangular;
+pub mod tsqr;
+
+pub use cholesky::cholesky;
+pub use eigh::eigh;
+pub use qr::{householder_qr_r, qr_r_square};
+pub use svd::{jacobi_svd, Svd};
+pub use triangular::{solve_lower, solve_upper};
+pub use tsqr::{tsqr_sequential, tsqr_tree};

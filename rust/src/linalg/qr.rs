@@ -1,0 +1,144 @@
+//! Householder QR (R-factor only — all COALA ever needs).
+
+use crate::error::Result;
+use crate::tensor::{Matrix, Scalar};
+
+/// R factor of A (m × n): returns min(m,n) × n upper triangular.
+///
+/// Column-by-column Householder reflections applied in place; O(mn²).
+/// No pivoting (mirrors the L2 graph).  Rank-deficient inputs are fine:
+/// a zero column yields a zero reflector (β = 0).
+pub fn householder_qr_r<T: Scalar>(a: &Matrix<T>) -> Matrix<T> {
+    let (m, n) = (a.rows, a.cols);
+    let steps = m.min(n);
+    let mut acc = a.clone();
+    let mut v = vec![T::ZERO; m];
+    for j in 0..steps {
+        // build the Householder vector from column j, rows j..m
+        let mut norm2 = T::ZERO;
+        for i in j..m {
+            let x = acc.get(i, j);
+            norm2 += x * x;
+        }
+        let normx = norm2.sqrt();
+        if normx.to_f64() == 0.0 {
+            continue;
+        }
+        let xj = acc.get(j, j);
+        let alpha = if xj.to_f64() >= 0.0 { -normx } else { normx };
+        for i in 0..m {
+            v[i] = if i < j { T::ZERO } else { acc.get(i, j) };
+        }
+        v[j] -= alpha;
+        let vnorm2 = {
+            let mut s = T::ZERO;
+            for &x in v.iter().skip(j) {
+                s += x * x;
+            }
+            s
+        };
+        if vnorm2.to_f64() <= 0.0 {
+            continue;
+        }
+        let beta = (T::ONE + T::ONE) / vnorm2;
+        // acc -= beta * v (vᵀ acc)   — only rows j.. and cols j.. matter
+        for c in j..n {
+            let mut dot = T::ZERO;
+            for i in j..m {
+                dot += v[i] * acc.get(i, c);
+            }
+            let s = beta * dot;
+            for i in j..m {
+                let cur = acc.get(i, c);
+                acc.set(i, c, cur - v[i] * s);
+            }
+        }
+    }
+    // extract the upper-triangular top block
+    let k = m.min(n);
+    let mut r = Matrix::zeros(k, n);
+    for i in 0..k {
+        for j in i..n {
+            r.set(i, j, acc.get(i, j));
+        }
+    }
+    r
+}
+
+/// Square (n × n) R for the COALA preprocessing convention: zero-pads
+/// when m < n so RᵀR = AᵀA always holds with a square R.
+pub fn qr_r_square<T: Scalar>(a: &Matrix<T>) -> Result<Matrix<T>> {
+    let n = a.cols;
+    let r = householder_qr_r(a);
+    if r.rows == n {
+        return Ok(r);
+    }
+    let pad = Matrix::zeros(n - r.rows, n);
+    r.vstack(&pad)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::{gram_t, matmul};
+
+    fn gram_close<T: Scalar>(r: &Matrix<T>, a: &Matrix<T>, tol: f64) {
+        let rt_r = matmul(&r.transpose(), r).unwrap();
+        let at_a = gram_t(a);
+        for (x, y) in rt_r.data.iter().zip(&at_a.data) {
+            assert!(
+                (x.to_f64() - y.to_f64()).abs() < tol * (1.0 + y.to_f64().abs()),
+                "{x} vs {y}"
+            );
+        }
+    }
+
+    #[test]
+    fn qr_gram_identity_f64() {
+        for (m, n, seed) in [(20usize, 8usize, 1u64), (8, 8, 2), (5, 9, 3), (100, 30, 4)] {
+            let a: Matrix<f64> = Matrix::randn(m, n, seed);
+            let r = householder_qr_r(&a);
+            assert_eq!(r.rows, m.min(n));
+            gram_close(&r, &a, 1e-10);
+        }
+    }
+
+    #[test]
+    fn qr_gram_identity_f32() {
+        let a: Matrix<f32> = Matrix::randn(50, 20, 5);
+        let r = householder_qr_r(&a);
+        gram_close(&r, &a, 1e-3);
+    }
+
+    #[test]
+    fn upper_triangular() {
+        let a: Matrix<f64> = Matrix::randn(12, 7, 6);
+        let r = householder_qr_r(&a);
+        for i in 0..r.rows {
+            for j in 0..i.min(r.cols) {
+                assert_eq!(r.get(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn rank_deficient_is_finite() {
+        let mut a: Matrix<f64> = Matrix::zeros(10, 4);
+        for i in 0..10 {
+            for j in 0..4 {
+                a.set(i, j, (i + 1) as f64); // rank 1
+            }
+        }
+        let r = householder_qr_r(&a);
+        assert!(r.all_finite());
+        gram_close(&r, &a, 1e-9);
+    }
+
+    #[test]
+    fn square_pads_wide() {
+        let a: Matrix<f64> = Matrix::randn(3, 8, 7);
+        let r = qr_r_square(&a).unwrap();
+        assert_eq!((r.rows, r.cols), (8, 8));
+        gram_close(&r, &a, 1e-10);
+    }
+}

@@ -1,0 +1,209 @@
+//! One-sided Jacobi SVD (Brent–Luk parallel ordering), host edition.
+//!
+//! Same algorithm the L2 graph runs on the PJRT runtime, so the two
+//! implementations cross-validate.  Host edition adds a convergence test
+//! (off-orthogonality threshold) since we are not bound to static HLO.
+
+use crate::error::{Error, Result};
+use crate::tensor::{Matrix, Scalar};
+
+/// Thin SVD result: a = u · diag(s) · vᵀ, u is m × n, v is n × n.
+#[derive(Debug, Clone)]
+pub struct Svd<T: Scalar> {
+    pub u: Matrix<T>,
+    pub s: Vec<T>,
+    pub v: Matrix<T>,
+}
+
+/// One-sided Jacobi SVD for m ≥ n (transpose externally for wide inputs).
+///
+/// Cyclic sweeps over all column pairs; each rotation zeroes one inner
+/// product.  Converges when no pair exceeds `tol·‖aᵢ‖‖aⱼ‖` or after
+/// `max_sweeps`.  Singular values are returned in descending order.
+pub fn jacobi_svd<T: Scalar>(a: &Matrix<T>, max_sweeps: usize) -> Result<Svd<T>> {
+    let (m, n) = (a.rows, a.cols);
+    if m < n {
+        return Err(Error::shape(format!("jacobi_svd needs m ≥ n, got {m}x{n}")));
+    }
+    // column-major copies for cache-friendly column rotations
+    let mut acol: Vec<Vec<T>> = (0..n).map(|j| a.col(j)).collect();
+    let mut vcol: Vec<Vec<T>> = (0..n)
+        .map(|j| {
+            let mut e = vec![T::ZERO; n];
+            e[j] = T::ONE;
+            e
+        })
+        .collect();
+
+    let tol = T::EPSILON.to_f64() * 8.0;
+    for _sweep in 0..max_sweeps {
+        let mut rotated = false;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let (mut app, mut aqq, mut apq) = (0.0f64, 0.0f64, 0.0f64);
+                for i in 0..m {
+                    let xp = acol[p][i].to_f64();
+                    let xq = acol[q][i].to_f64();
+                    app += xp * xp;
+                    aqq += xq * xq;
+                    apq += xp * xq;
+                }
+                if apq.abs() <= tol * (app.sqrt() * aqq.sqrt()) {
+                    continue;
+                }
+                rotated = true;
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = if tau >= 0.0 {
+                    1.0 / (tau + (1.0 + tau * tau).sqrt())
+                } else {
+                    -1.0 / (-tau + (1.0 + tau * tau).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                let (cs, sn) = (T::from_f64(c), T::from_f64(s));
+                for i in 0..m {
+                    let xp = acol[p][i];
+                    let xq = acol[q][i];
+                    acol[p][i] = cs * xp - sn * xq;
+                    acol[q][i] = sn * xp + cs * xq;
+                }
+                for i in 0..n {
+                    let xp = vcol[p][i];
+                    let xq = vcol[q][i];
+                    vcol[p][i] = cs * xp - sn * xq;
+                    vcol[q][i] = sn * xp + cs * xq;
+                }
+            }
+        }
+        if !rotated {
+            break;
+        }
+    }
+
+    // singular values = column norms; sort descending with columns
+    let mut order: Vec<usize> = (0..n).collect();
+    let norms: Vec<f64> = acol
+        .iter()
+        .map(|c| c.iter().map(|x| x.to_f64() * x.to_f64()).sum::<f64>().sqrt())
+        .collect();
+    order.sort_by(|&i, &j| norms[j].total_cmp(&norms[i])); // total_cmp: NaN-safe (failure studies feed NaNs through)
+
+    let mut u = Matrix::zeros(m, n);
+    let mut v = Matrix::zeros(n, n);
+    let mut s = Vec::with_capacity(n);
+    for (k, &j) in order.iter().enumerate() {
+        let nj = norms[j];
+        s.push(T::from_f64(nj));
+        let inv = if nj > 0.0 { 1.0 / nj } else { 0.0 };
+        for i in 0..m {
+            u.set(i, k, T::from_f64(acol[j][i].to_f64() * inv));
+        }
+        for i in 0..n {
+            v.set(i, k, vcol[j][i]);
+        }
+    }
+    Ok(Svd { u, s, v })
+}
+
+impl<T: Scalar> Svd<T> {
+    /// Reconstruct u[:, :r] · diag(s[:r]) · v[:, :r]ᵀ.
+    pub fn truncate(&self, r: usize) -> Matrix<T> {
+        let (m, n) = (self.u.rows, self.v.rows);
+        let r = r.min(self.s.len());
+        let mut out = Matrix::zeros(m, n);
+        for k in 0..r {
+            let sk = self.s[k];
+            for i in 0..m {
+                let uik = self.u.get(i, k) * sk;
+                for j in 0..n {
+                    let cur = out.get(i, j);
+                    out.set(i, j, cur + uik * self.v.get(j, k));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::{fro, matmul};
+
+    fn reconstruct<T: Scalar>(svd: &Svd<T>) -> Matrix<T> {
+        svd.truncate(svd.s.len())
+    }
+
+    #[test]
+    fn reconstructs_f64() {
+        for (m, n, seed) in [(10usize, 6usize, 1u64), (8, 8, 2), (40, 15, 3)] {
+            let a: Matrix<f64> = Matrix::randn(m, n, seed);
+            let svd = jacobi_svd(&a, 30).unwrap();
+            let diff = reconstruct(&svd).sub(&a).unwrap();
+            assert!(fro(&diff) < 1e-9 * fro(&a), "m={m} n={n}: {}", fro(&diff));
+        }
+    }
+
+    #[test]
+    fn orthogonal_factors() {
+        let a: Matrix<f64> = Matrix::randn(20, 9, 4);
+        let svd = jacobi_svd(&a, 30).unwrap();
+        let utu = matmul(&svd.u.transpose(), &svd.u).unwrap();
+        let vtv = matmul(&svd.v.transpose(), &svd.v).unwrap();
+        for i in 0..9 {
+            for j in 0..9 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((utu.get(i, j) - want).abs() < 1e-10);
+                assert!((vtv.get(i, j) - want).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn descending_and_nonnegative() {
+        let a: Matrix<f64> = Matrix::randn(15, 10, 5);
+        let svd = jacobi_svd(&a, 30).unwrap();
+        for w in svd.s.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+        assert!(svd.s.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn rank_deficient() {
+        let u: Matrix<f64> = Matrix::randn(12, 2, 6);
+        let v: Matrix<f64> = Matrix::randn(2, 7, 7);
+        let a = matmul(&u, &v).unwrap();
+        let svd = jacobi_svd(&a, 30).unwrap();
+        assert!(svd.s[1] > 1e-8);
+        for k in 2..7 {
+            assert!(svd.s[k] < 1e-9, "s[{k}]={}", svd.s[k]);
+        }
+    }
+
+    #[test]
+    fn matches_known_2x2() {
+        // A = [[3, 0], [4, 5]] has σ = √45, √5
+        let a: Matrix<f64> = Matrix::from_vec(2, 2, vec![3.0, 0.0, 4.0, 5.0]).unwrap();
+        let svd = jacobi_svd(&a, 30).unwrap();
+        assert!((svd.s[0] - 45f64.sqrt()).abs() < 1e-12);
+        assert!((svd.s[1] - 5f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wide_rejected() {
+        let a: Matrix<f64> = Matrix::zeros(2, 5);
+        assert!(jacobi_svd(&a, 5).is_err());
+    }
+
+    #[test]
+    fn truncate_rank() {
+        let a: Matrix<f64> = Matrix::randn(10, 6, 8);
+        let svd = jacobi_svd(&a, 30).unwrap();
+        let t2 = svd.truncate(2);
+        // best rank-2 error equals sqrt(sum of trailing σ²)
+        let err = fro(&t2.sub(&a).unwrap());
+        let want: f64 = svd.s[2..].iter().map(|x| x * x).sum::<f64>().sqrt();
+        assert!((err - want).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,114 @@
+//! Triangular solves by substitution (baseline substrate: the Gram-based
+//! methods need S⁻¹ applied; COALA never does).
+
+use crate::error::{Error, Result};
+use crate::tensor::{Matrix, Scalar};
+
+fn check<T: Scalar>(t: &Matrix<T>, b: &Matrix<T>) -> Result<usize> {
+    let n = t.rows;
+    if t.cols != n {
+        return Err(Error::shape(format!("triangular solve: T is {}x{}", t.rows, t.cols)));
+    }
+    if b.rows != n {
+        return Err(Error::shape(format!("triangular solve: B is {}x{} for n={n}", b.rows, b.cols)));
+    }
+    Ok(n)
+}
+
+/// Solve L·X = B for lower-triangular L (forward substitution).
+pub fn solve_lower<T: Scalar>(l: &Matrix<T>, b: &Matrix<T>) -> Result<Matrix<T>> {
+    let n = check(l, b)?;
+    let k = b.cols;
+    let mut x = b.clone();
+    for i in 0..n {
+        for r in 0..i {
+            let lir = l.get(i, r);
+            for c in 0..k {
+                let cur = x.get(i, c);
+                x.set(i, c, cur - lir * x.get(r, c));
+            }
+        }
+        let d = l.get(i, i);
+        for c in 0..k {
+            let cur = x.get(i, c);
+            x.set(i, c, cur / d);
+        }
+    }
+    Ok(x)
+}
+
+/// Solve U·X = B for upper-triangular U (back substitution).
+pub fn solve_upper<T: Scalar>(u: &Matrix<T>, b: &Matrix<T>) -> Result<Matrix<T>> {
+    let n = check(u, b)?;
+    let k = b.cols;
+    let mut x = b.clone();
+    for ii in 0..n {
+        let i = n - 1 - ii;
+        for r in (i + 1)..n {
+            let uir = u.get(i, r);
+            for c in 0..k {
+                let cur = x.get(i, c);
+                x.set(i, c, cur - uir * x.get(r, c));
+            }
+        }
+        let d = u.get(i, i);
+        for c in 0..k {
+            let cur = x.get(i, c);
+            x.set(i, c, cur / d);
+        }
+    }
+    Ok(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::{fro, matmul};
+    use crate::tensor::Matrix;
+
+    fn lower(n: usize, seed: u64) -> Matrix<f64> {
+        let mut m: Matrix<f64> = Matrix::randn(n, n, seed);
+        for i in 0..n {
+            for j in (i + 1)..n {
+                m.set(i, j, 0.0);
+            }
+            m.set(i, i, m.get(i, i) + 4.0);
+        }
+        m
+    }
+
+    #[test]
+    fn forward_solve() {
+        let l = lower(9, 1);
+        let b: Matrix<f64> = Matrix::randn(9, 4, 2);
+        let x = solve_lower(&l, &b).unwrap();
+        assert!(fro(&matmul(&l, &x).unwrap().sub(&b).unwrap()) < 1e-10);
+    }
+
+    #[test]
+    fn backward_solve() {
+        let u = lower(7, 3).transpose();
+        let b: Matrix<f64> = Matrix::randn(7, 3, 4);
+        let x = solve_upper(&u, &b).unwrap();
+        assert!(fro(&matmul(&u, &x).unwrap().sub(&b).unwrap()) < 1e-10);
+    }
+
+    #[test]
+    fn transpose_pair_solves_gram_system() {
+        // (L Lᵀ) X = B solved as two substitutions
+        let l = lower(6, 5);
+        let g = matmul(&l, &l.transpose()).unwrap();
+        let b: Matrix<f64> = Matrix::randn(6, 2, 6);
+        let y = solve_lower(&l, &b).unwrap();
+        let x = solve_upper(&l.transpose(), &y).unwrap();
+        assert!(fro(&matmul(&g, &x).unwrap().sub(&b).unwrap()) < 1e-9);
+    }
+
+    #[test]
+    fn shape_errors() {
+        let l = lower(4, 7);
+        let b: Matrix<f64> = Matrix::zeros(5, 1);
+        assert!(solve_lower(&l, &b).is_err());
+        assert!(solve_upper(&Matrix::<f64>::zeros(3, 4), &Matrix::zeros(3, 1)).is_err());
+    }
+}

@@ -1,0 +1,118 @@
+//! TSQR (Tall-Skinny QR) — the paper's §4.2 out-of-core preprocessing.
+//!
+//! Host reference edition of the streaming and binary-tree variants; the
+//! production path runs the same algorithm through the `tsqr_step` /
+//! `tsqr_merge` PJRT artifacts orchestrated by `coordinator::tsqr_tree`.
+
+use crate::error::Result;
+use crate::linalg::qr::qr_r_square;
+use crate::tensor::{Matrix, Scalar};
+use crate::util::threads;
+
+/// Streaming (sequential) TSQR: fold chunks of Xᵀ into a running R.
+///
+/// `chunks` are (cᵢ × n) row-blocks of Xᵀ.  Returns square R with
+/// RᵀR = Σ chunkᵢᵀ chunkᵢ = XXᵀ.  Peak memory is one chunk + R — this is
+/// how a calibration matrix larger than device memory is processed.
+pub fn tsqr_sequential<T: Scalar>(chunks: &[Matrix<T>]) -> Result<Matrix<T>> {
+    assert!(!chunks.is_empty());
+    let n = chunks[0].cols;
+    let mut r = Matrix::zeros(n, n);
+    for c in chunks {
+        let stacked = r.vstack(c)?;
+        r = qr_r_square(&stacked)?;
+    }
+    Ok(r)
+}
+
+/// Binary-tree TSQR: leaf QRs in parallel, then pairwise R merges.
+///
+/// The reduction shape matches the paper's multi-GPU diagram; here leaves
+/// run on `workers` threads (simulated devices).
+pub fn tsqr_tree<T: Scalar>(chunks: &[Matrix<T>], workers: usize) -> Result<Matrix<T>> {
+    assert!(!chunks.is_empty());
+    // leaf level
+    let mut level: Vec<Matrix<T>> = threads::parallel_map(chunks.len(), workers, |i| {
+        qr_r_square(&chunks[i]).expect("leaf qr")
+    });
+    // reduction levels
+    while level.len() > 1 {
+        let pairs = level.len() / 2;
+        let odd = level.len() % 2 == 1;
+        let merged: Vec<Matrix<T>> = {
+            let level_ref = &level;
+            threads::parallel_map(pairs, workers, |i| {
+                let stacked = level_ref[2 * i].vstack(&level_ref[2 * i + 1]).expect("stack");
+                qr_r_square(&stacked).expect("merge qr")
+            })
+        };
+        let mut next = merged;
+        if odd {
+            next.push(level.pop().unwrap());
+        }
+        level = next;
+    }
+    Ok(level.pop().unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::{gram_t, matmul};
+
+    fn gram_of_r<T: Scalar>(r: &Matrix<T>) -> Matrix<T> {
+        matmul(&r.transpose(), r).unwrap()
+    }
+
+    fn assert_gram_eq<T: Scalar>(a: &Matrix<T>, b: &Matrix<T>, tol: f64) {
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert!(
+                (x.to_f64() - y.to_f64()).abs() <= tol * (1.0 + y.to_f64().abs()),
+                "{x} vs {y}"
+            );
+        }
+    }
+
+    #[test]
+    fn sequential_matches_full() {
+        let n = 10;
+        let chunks: Vec<Matrix<f64>> = (0..5).map(|i| Matrix::randn(33, n, i as u64)).collect();
+        let mut full = chunks[0].clone();
+        for c in &chunks[1..] {
+            full = full.vstack(c).unwrap();
+        }
+        let r = tsqr_sequential(&chunks).unwrap();
+        assert_gram_eq(&gram_of_r(&r), &gram_t(&full), 1e-9);
+    }
+
+    #[test]
+    fn tree_matches_sequential_gram() {
+        let n = 8;
+        let chunks: Vec<Matrix<f64>> = (0..7).map(|i| Matrix::randn(20, n, 100 + i as u64)).collect();
+        let r_seq = tsqr_sequential(&chunks).unwrap();
+        for workers in [1, 2, 4] {
+            let r_tree = tsqr_tree(&chunks, workers).unwrap();
+            assert_gram_eq(&gram_of_r(&r_tree), &gram_of_r(&r_seq), 1e-9);
+        }
+    }
+
+    #[test]
+    fn single_chunk() {
+        let c: Matrix<f64> = Matrix::randn(12, 5, 1);
+        let r = tsqr_tree(&[c.clone()], 4).unwrap();
+        assert_gram_eq(&gram_of_r(&r), &gram_t(&c), 1e-10);
+    }
+
+    #[test]
+    fn skinny_chunks_rank_deficient() {
+        // each chunk has fewer rows than columns: forces the degenerate path
+        let chunks: Vec<Matrix<f64>> = (0..3).map(|i| Matrix::randn(3, 9, i as u64)).collect();
+        let r = tsqr_sequential(&chunks).unwrap();
+        assert!(r.all_finite());
+        let mut full = chunks[0].clone();
+        for c in &chunks[1..] {
+            full = full.vstack(c).unwrap();
+        }
+        assert_gram_eq(&gram_of_r(&r), &gram_t(&full), 1e-9);
+    }
+}

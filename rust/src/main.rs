@@ -1,0 +1,149 @@
+//! `coala` — the L3 coordinator CLI.
+//!
+//! Subcommands:
+//!   selfcheck                 run the jax⇄PJRT conformance suite
+//!   info                      print manifest / model / artifact summary
+//!   compress  --model tiny --method coala --ratio 0.7 [--lambda 3]
+//!   eval      --model tiny    perplexity + probe tasks of the base model
+//!   repro <id>                regenerate a paper table/figure (or `all`)
+//!   tsqr-demo --workers 4     out-of-core tree-TSQR demonstration
+
+use coala::calib::dataset::{Corpus, TaskBank};
+use coala::coala::{Method, MuRule};
+use coala::coordinator::{CompressionJob, Pipeline, TsqrTreeRunner};
+use coala::error::{Error, Result};
+use coala::eval::{eval_tasks, perplexity};
+use coala::model::ModelWeights;
+use coala::runtime::{conformance, Executor};
+use coala::tensor::Matrix;
+use coala::util::cli::Args;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv);
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    if let Err(e) = dispatch(cmd, &args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn method_from(args: &Args) -> Result<Method> {
+    Ok(match args.get_or("method", "coala") {
+        "coala" => match args.get("lambda") {
+            Some(l) => Method::Coala(MuRule::Adaptive {
+                lambda: l.parse().map_err(|_| Error::Config("bad --lambda".into()))?,
+            }),
+            None => match args.get("mu") {
+                Some(m) => Method::Coala(MuRule::Constant {
+                    mu: m.parse().map_err(|_| Error::Config("bad --mu".into()))?,
+                }),
+                None => Method::Coala(MuRule::None),
+            },
+        },
+        "svdllm" => Method::SvdLlm,
+        "svdllm2" => Method::SvdLlmV2,
+        "asvd" => Method::Asvd,
+        "svd" => Method::PlainSvd,
+        "corda" => Method::Corda,
+        "alpha2" => Method::Alpha(2),
+        other => return Err(Error::Config(format!("unknown --method {other}"))),
+    })
+}
+
+fn dispatch(cmd: &str, args: &Args) -> Result<()> {
+    let dir = coala::artifacts_dir(args.get("artifacts"));
+    match cmd {
+        "selfcheck" => conformance::selfcheck(&dir),
+        "info" => {
+            let ex = Executor::new(&dir)?;
+            println!("artifacts dir : {dir}");
+            println!("abi version   : {}", ex.manifest.abi_version);
+            println!("artifacts     : {}", ex.manifest.artifacts.len());
+            println!("probe tasks   : {}", ex.manifest.task_names.join(", "));
+            for (name, cfg) in &ex.manifest.configs {
+                let w = ModelWeights::load(&dir, cfg)?;
+                println!(
+                    "model {name:<6}: d={} ff={} L={} vocab={} params={} (build ppl {:.2})",
+                    cfg.d_model, cfg.d_ff, cfg.n_layers, cfg.vocab,
+                    w.param_count(), w.build_val_ppl
+                );
+            }
+            Ok(())
+        }
+        "compress" => {
+            let ex = Executor::new(&dir)?;
+            let corpus = Corpus::load(&dir)?;
+            let cfg = args.get_or("model", "tiny");
+            let spec = ex.manifest.config(cfg)?.clone();
+            let w = ModelWeights::load(&dir, &spec)?;
+            let mut job = CompressionJob::new(cfg, method_from(args)?, args.get_f64("ratio", 0.7)?);
+            job.calib_batches = args.get_usize("calib-batches", 8)?;
+            println!("compressing {cfg} with {} at {:.0}% kept …", job.method.name(), job.ratio * 100.0);
+            let pipe = Pipeline::new(&ex, spec.clone(), &w);
+            let out = pipe.run(&job, &corpus)?;
+            println!(
+                "done in {:.2}s (calibrate {:.2}s / accumulate {:.2}s / factorize {:.2}s)",
+                out.timings.total_s, out.timings.calibrate_s,
+                out.timings.accumulate_s, out.timings.factorize_s
+            );
+            println!("achieved ratio: {:.4}", out.model.achieved_ratio(&w, &spec));
+            let rec = out.model.reconstruct_into(&w)?;
+            let base = perplexity(&ex, &spec, &w, corpus.split("val")?, 4)?;
+            let comp = perplexity(&ex, &spec, &rec, corpus.split("val")?, 4)?;
+            println!("val ppl: {base:.2} -> {comp:.2}");
+            let bank = TaskBank::load(&dir, "base", &ex.manifest.task_names)?;
+            let s0 = eval_tasks(&ex, &spec, &w, &bank, Some(256))?;
+            let s1 = eval_tasks(&ex, &spec, &rec, &bank, Some(256))?;
+            println!("probe avg acc: {:.1}% -> {:.1}%", s0.average(), s1.average());
+            Ok(())
+        }
+        "eval" => {
+            let ex = Executor::new(&dir)?;
+            let corpus = Corpus::load(&dir)?;
+            let cfg = args.get_or("model", "tiny");
+            let spec = ex.manifest.config(cfg)?.clone();
+            let w = ModelWeights::load(&dir, &spec)?;
+            let ppl = perplexity(&ex, &spec, &w, corpus.split("val")?, 8)?;
+            println!("{cfg}: val ppl {ppl:.2} (build-time: {:.2})", w.build_val_ppl);
+            let bank = TaskBank::load(&dir, "base", &ex.manifest.task_names)?;
+            let s = eval_tasks(&ex, &spec, &w, &bank, None)?;
+            for ((n, a), e) in s.names.iter().zip(&s.accuracy).zip(&s.stderr) {
+                println!("  {n:<10} {a:5.1} ± {e:.1}");
+            }
+            println!("  avg        {:5.1}", s.average());
+            Ok(())
+        }
+        "repro" => {
+            let id = args
+                .positional
+                .get(1)
+                .ok_or_else(|| Error::Config("repro needs an experiment id".into()))?;
+            coala::repro::run(id, args)
+        }
+        "tsqr-demo" => {
+            let workers = args.get_usize("workers", 4)?;
+            let n = args.get_usize("n", 192)?;
+            let chunks_n = args.get_usize("chunks", 8)?;
+            let ex = Executor::new(&dir)?;
+            let cfg = ex.manifest.config(args.get_or("model", "tiny"))?;
+            let c = cfg.chunk_cols();
+            println!("tree-TSQR: {chunks_n} chunks of {c}×{n} across {workers} simulated devices");
+            let chunks: Vec<Matrix<f32>> =
+                (0..chunks_n).map(|i| Matrix::randn(c, n, i as u64)).collect();
+            let t0 = std::time::Instant::now();
+            let runner = TsqrTreeRunner::new(&dir, workers);
+            let r = runner.run(chunks)?;
+            println!("R ({}×{}) in {:.2}s, finite={}", r.rows, r.cols, t0.elapsed().as_secs_f64(), r.all_finite());
+            Ok(())
+        }
+        _ => {
+            println!(
+                "coala — context-aware low-rank approximation (COALA) coordinator\n\n\
+                 usage: coala <selfcheck|info|compress|eval|repro|tsqr-demo> [--flags]\n\
+                 see README.md for the full tour"
+            );
+            Ok(())
+        }
+    }
+}

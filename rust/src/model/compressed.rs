@@ -1,0 +1,93 @@
+//! A compressed model: base weights + per-projection low-rank factors.
+
+use crate::coala::factorize::Factors;
+use crate::error::Result;
+use crate::model::weights::ModelWeights;
+use crate::runtime::manifest::ModelSpec;
+use std::collections::BTreeMap;
+
+/// The result of compressing a model: factors per projection, plus the
+/// reconstructed weight set for evaluation through the fwd artifacts.
+#[derive(Debug, Clone)]
+pub struct CompressedModel {
+    pub base_config: String,
+    pub factors: BTreeMap<String, Factors<f32>>,
+}
+
+impl CompressedModel {
+    pub fn new(config: &str) -> CompressedModel {
+        CompressedModel { base_config: config.to_string(), factors: BTreeMap::new() }
+    }
+
+    pub fn insert(&mut self, proj: &str, f: Factors<f32>) {
+        self.factors.insert(proj.to_string(), f);
+    }
+
+    /// Parameters stored by the factored projections.
+    pub fn factored_params(&self) -> usize {
+        self.factors.values().map(|f| f.param_count()).sum()
+    }
+
+    /// Achieved ratio = factored / original parameters (projections only).
+    pub fn achieved_ratio(&self, weights: &ModelWeights, spec: &ModelSpec) -> f64 {
+        self.factored_params() as f64 / weights.compressible_params(spec) as f64
+    }
+
+    /// Produce the weight set with every factored projection replaced by
+    /// its reconstruction A·B (same shapes ⇒ reusable fwd artifacts).
+    pub fn reconstruct_into(&self, weights: &ModelWeights) -> Result<ModelWeights> {
+        let mut out = weights.clone();
+        for (proj, f) in &self.factors {
+            out.set_matrix(proj, &f.reconstruct()?)?;
+        }
+        Ok(out)
+    }
+
+    /// Are all factors numerically sane?
+    pub fn all_finite(&self) -> bool {
+        self.factors.values().all(|f| f.a.all_finite() && f.b.all_finite())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Matrix;
+
+    fn dummy_factors(m: usize, n: usize, r: usize, seed: u64) -> Factors<f32> {
+        Factors {
+            a: Matrix::randn(m, r, seed),
+            b: Matrix::randn(r, n, seed + 1),
+            spectrum: vec![1.0; r],
+        }
+    }
+
+    #[test]
+    fn param_accounting() {
+        let mut c = CompressedModel::new("tiny");
+        c.insert("l0.wq", dummy_factors(8, 8, 2, 1));
+        c.insert("l0.wk", dummy_factors(8, 8, 2, 2));
+        assert_eq!(c.factored_params(), 2 * (8 * 2 + 2 * 8));
+        assert!(c.all_finite());
+    }
+
+    #[test]
+    fn reconstruction_swaps_only_factored() {
+        if !std::path::Path::new("artifacts/manifest.json").exists() {
+            return;
+        }
+        let m = crate::runtime::Manifest::load("artifacts").unwrap();
+        let spec = m.config("tiny").unwrap();
+        let w = ModelWeights::load("artifacts", spec).unwrap();
+        let mut c = CompressedModel::new("tiny");
+        let d = spec.d_model;
+        c.insert("l0.wq", dummy_factors(d, d, 4, 3));
+        let w2 = c.reconstruct_into(&w).unwrap();
+        // swapped
+        assert_ne!(w2.matrix("l0.wq").unwrap().data, w.matrix("l0.wq").unwrap().data);
+        // untouched
+        assert_eq!(w2.matrix("l1.wq").unwrap().data, w.matrix("l1.wq").unwrap().data);
+        let ratio = c.achieved_ratio(&w, spec);
+        assert!(ratio > 0.0 && ratio < 1.0);
+    }
+}

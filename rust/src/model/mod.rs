@@ -1,0 +1,15 @@
+//! The compression-target model, runtime side (S9).
+//!
+//! The transformer itself was *defined and trained* at build time (L2,
+//! `python/compile/model.py` + `pretrain.py`); here it exists as (a) a
+//! bag of named weight matrices loaded from `weights_<cfg>.cbt` and (b)
+//! the `fwd_logits` / `fwd_acts` / `loss` artifacts that consume those
+//! weights **as inputs** — which is what lets the coordinator evaluate a
+//! compressed model by simply swapping reconstructed matrices into the
+//! input list, without ever re-lowering.
+
+pub mod compressed;
+pub mod weights;
+
+pub use compressed::CompressedModel;
+pub use weights::ModelWeights;

@@ -1,0 +1,175 @@
+//! Trained-weights container + marshalling into artifact input lists.
+
+use crate::error::{Error, Result};
+use crate::runtime::cbt::{Cbt, Tensor};
+use crate::runtime::executor::Value;
+use crate::runtime::manifest::ModelSpec;
+use std::collections::BTreeMap;
+
+/// All parameters of one model config, in the manifest's ABI order.
+#[derive(Debug, Clone)]
+pub struct ModelWeights {
+    pub config: String,
+    /// name → (dims, row-major data); includes 1-D norm gains.
+    pub tensors: BTreeMap<String, (Vec<usize>, Vec<f32>)>,
+    /// pretrain loss curve (diagnostics / EXPERIMENTS.md)
+    pub pretrain_loss: Vec<f32>,
+    /// held-out perplexity recorded at build time
+    pub build_val_ppl: f32,
+}
+
+impl ModelWeights {
+    /// Load from `<artifacts>/<weights_file>` and validate against the spec.
+    pub fn load(dir: &str, spec: &ModelSpec) -> Result<ModelWeights> {
+        let cbt = Cbt::load(&format!("{dir}/{}", spec.weights_file))?;
+        let mut tensors = BTreeMap::new();
+        for name in &spec.param_names {
+            let t = cbt.get(name)?;
+            let want = spec
+                .param_shapes
+                .get(name)
+                .ok_or_else(|| Error::Config(format!("no shape for `{name}`")))?;
+            if t.dims() != want.as_slice() {
+                return Err(Error::shape(format!(
+                    "{name}: weights file has {:?}, manifest says {want:?}",
+                    t.dims()
+                )));
+            }
+            tensors.insert(name.clone(), (t.dims().to_vec(), t.f32s()?.to_vec()));
+        }
+        let pretrain_loss = cbt
+            .get("pretrain_loss")
+            .ok()
+            .and_then(|t| t.f32s().ok().map(<[f32]>::to_vec))
+            .unwrap_or_default();
+        let build_val_ppl = cbt
+            .get("val_ppl")
+            .ok()
+            .and_then(|t| t.f32s().ok().map(|v| v[0]))
+            .unwrap_or(f32::NAN);
+        Ok(ModelWeights { config: spec.name.clone(), tensors, pretrain_loss, build_val_ppl })
+    }
+
+    /// A 2-D parameter as a host matrix.
+    pub fn matrix(&self, name: &str) -> Result<crate::tensor::Matrix<f32>> {
+        let (dims, data) = self
+            .tensors
+            .get(name)
+            .ok_or_else(|| Error::Config(format!("no parameter `{name}`")))?;
+        if dims.len() != 2 {
+            return Err(Error::shape(format!("{name} is {dims:?}, not 2-D")));
+        }
+        crate::tensor::Matrix::from_vec(dims[0], dims[1], data.clone())
+    }
+
+    /// Replace a 2-D parameter (the compression swap).
+    pub fn set_matrix(&mut self, name: &str, m: &crate::tensor::Matrix<f32>) -> Result<()> {
+        let (dims, data) = self
+            .tensors
+            .get_mut(name)
+            .ok_or_else(|| Error::Config(format!("no parameter `{name}`")))?;
+        if dims.as_slice() != [m.rows, m.cols] {
+            return Err(Error::shape(format!(
+                "set {name}: {dims:?} vs {}x{}",
+                m.rows, m.cols
+            )));
+        }
+        *data = m.data.clone();
+        Ok(())
+    }
+
+    /// Flatten to artifact `Value`s in ABI order (appended after tokens).
+    pub fn to_values(&self, spec: &ModelSpec) -> Result<Vec<Value>> {
+        spec.param_names
+            .iter()
+            .map(|n| {
+                let (dims, data) = self
+                    .tensors
+                    .get(n)
+                    .ok_or_else(|| Error::Config(format!("missing `{n}`")))?;
+                Ok(Value::F32(dims.clone(), data.clone()))
+            })
+            .collect()
+    }
+
+    /// Total parameter count (all tensors).
+    pub fn param_count(&self) -> usize {
+        self.tensors.values().map(|(d, _)| d.iter().product::<usize>()).sum()
+    }
+
+    /// Parameter count of the compressible projections only (the paper's
+    /// compression-ratio denominator).
+    pub fn compressible_params(&self, spec: &ModelSpec) -> usize {
+        spec.compressible
+            .iter()
+            .map(|n| self.tensors[n].0.iter().product::<usize>())
+            .sum()
+    }
+}
+
+/// Convenience: tokens tensor → Value.
+pub fn token_value(t: &Tensor) -> Result<Value> {
+    Ok(Value::I32(t.dims().to_vec(), t.i32s()?.to_vec()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+
+    fn setup() -> Option<(Manifest, ModelWeights)> {
+        let m = Manifest::load("artifacts").ok()?;
+        let spec = m.config("tiny").ok()?.clone();
+        let w = ModelWeights::load("artifacts", &spec).ok()?;
+        Some((m, w))
+    }
+
+    #[test]
+    fn loads_trained_weights() {
+        let Some((m, w)) = setup() else { return };
+        let spec = m.config("tiny").unwrap();
+        assert_eq!(w.tensors.len(), spec.param_names.len());
+        // trained, not noise: loss curve decreased
+        assert!(w.pretrain_loss.len() > 100);
+        let head = w.pretrain_loss[..20].iter().sum::<f32>() / 20.0;
+        let tail = w.pretrain_loss[w.pretrain_loss.len() - 20..].iter().sum::<f32>() / 20.0;
+        assert!(tail < head * 0.7, "loss {head} -> {tail}");
+        assert!(w.build_val_ppl < 100.0 && w.build_val_ppl > 1.0);
+    }
+
+    #[test]
+    fn matrix_roundtrip_and_swap() {
+        let Some((_m, mut w)) = setup() else { return };
+        let q = w.matrix("l0.wq").unwrap();
+        let doubled = q.scale(2.0);
+        w.set_matrix("l0.wq", &doubled).unwrap();
+        assert_eq!(w.matrix("l0.wq").unwrap().get(0, 0), q.get(0, 0) * 2.0);
+        // shape guard
+        let bad = crate::tensor::Matrix::<f32>::zeros(2, 2);
+        assert!(w.set_matrix("l0.wq", &bad).is_err());
+        assert!(w.matrix("l0.ln1").is_err()); // 1-D
+    }
+
+    #[test]
+    fn value_marshalling_matches_abi() {
+        let Some((m, w)) = setup() else { return };
+        let spec = m.config("tiny").unwrap();
+        let vals = w.to_values(spec).unwrap();
+        assert_eq!(vals.len(), spec.param_names.len());
+        let art = m.artifact(&format!("fwd_logits_{}", spec.name)).unwrap();
+        for (v, s) in vals.iter().zip(&art.inputs[1..]) {
+            assert_eq!(v.dims(), s.shape.as_slice(), "{}", s.name);
+        }
+    }
+
+    #[test]
+    fn param_counts() {
+        let Some((m, w)) = setup() else { return };
+        let spec = m.config("tiny").unwrap();
+        let d = spec.d_model;
+        let f = spec.d_ff;
+        let per_layer = 4 * d * d + 2 * d * f;
+        assert_eq!(w.compressible_params(spec), spec.n_layers * per_layer);
+        assert!(w.param_count() > w.compressible_params(spec));
+    }
+}

@@ -1,0 +1,247 @@
+//! Accuracy-shaped experiments: Fig. 4 (adaptive vs constant μ),
+//! Fig. 5 (λ sensitivity), Table 2 (90 %-kept, low precision),
+//! Table 3 (80 %/70 % method comparison).
+
+use super::common::{dump, Env};
+use crate::calib::dataset::TaskBank;
+use crate::coala::{Method, MuRule};
+use crate::coordinator::{CompressionJob, Pipeline};
+use crate::error::Result;
+use crate::eval::{eval_tasks, perplexity};
+use crate::model::ModelWeights;
+use crate::runtime::manifest::ModelSpec;
+use crate::tensor::lowp::Precision;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+struct EvalCtx<'a> {
+    env: &'a Env,
+    spec: ModelSpec,
+    weights: ModelWeights,
+    bank: TaskBank,
+}
+
+impl<'a> EvalCtx<'a> {
+    fn new(env: &'a Env, config: &str) -> Result<EvalCtx<'a>> {
+        let (spec, weights) = env.weights(config)?;
+        let bank = TaskBank::load(&env.ex.manifest.dir, "base", &env.ex.manifest.task_names)?;
+        Ok(EvalCtx { env, spec, weights, bank })
+    }
+
+    /// Compress with `job`, reconstruct, return (avg task acc, ppl, per-task accs).
+    fn score(&self, job: &CompressionJob, limit: Option<usize>) -> Result<(f64, f64, Vec<f64>, Vec<f64>)> {
+        let pipe = Pipeline::new(&self.env.ex, self.spec.clone(), &self.weights);
+        let out = pipe.run(job, &self.env.corpus)?;
+        let rec = out.model.reconstruct_into(&self.weights)?;
+        let scores = eval_tasks(&self.env.ex, &self.spec, &rec, &self.bank, limit)?;
+        let ppl = perplexity(
+            &self.env.ex,
+            &self.spec,
+            &rec,
+            self.env.corpus.split("val")?,
+            if super::common::fast() { 2 } else { 4 },
+        )?;
+        Ok((scores.average(), ppl, scores.accuracy, scores.stderr))
+    }
+
+    fn base_scores(&self, limit: Option<usize>) -> Result<(f64, f64, Vec<f64>, Vec<f64>)> {
+        let scores = eval_tasks(&self.env.ex, &self.spec, &self.weights, &self.bank, limit)?;
+        let ppl = perplexity(
+            &self.env.ex,
+            &self.spec,
+            &self.weights,
+            self.env.corpus.split("val")?,
+            if super::common::fast() { 2 } else { 4 },
+        )?;
+        Ok((scores.average(), ppl, scores.accuracy, scores.stderr))
+    }
+}
+
+fn limit() -> Option<usize> {
+    // the task bank is cheap to evaluate in full (64 fwd batches); the
+    // expensive knob is the number of compressions, not scoring rows
+    None
+}
+
+fn calib_batches() -> usize {
+    if super::common::fast() {
+        2
+    } else {
+        8
+    }
+}
+
+/// Fig. 4: adaptive (Eq. 5, λ sweep) vs constant-μ sweep at 70 % kept.
+pub fn fig4(args: &Args) -> Result<()> {
+    let env = Env::load(args)?;
+    let ctx = EvalCtx::new(&env, "tiny")?;
+    let ratio = args.get_f64("ratio", 0.08)?;
+    // Operating point: the paper's "70 % compression" produces a clear
+    // degradation regime on 1B-7B models; our tiny target is intrinsically
+    // lower-rank, so the matching regime is keep ~8 % (DESIGN.md
+    // substitutions - same degradation, different absolute ratio).
+    let mut t = Table::new(
+        &format!("Fig.4 — adaptive (Eq.5) vs constant μ at keep={ratio} (avg acc %)"),
+        &["rule", "param", "avg acc", "ppl"],
+    );
+    let mut rows = Vec::new();
+    for lambda in [0.3, 1.0, 3.0, 10.0] {
+        let mut job =
+            CompressionJob::new("tiny", Method::Coala(MuRule::Adaptive { lambda }), ratio);
+        job.calib_batches = calib_batches();
+        let (acc, ppl, _, _) = ctx.score(&job, limit())?;
+        t.row(vec!["adaptive λ".into(), format!("{lambda}"), format!("{acc:.1}"), format!("{ppl:.2}")]);
+        rows.push(Json::from_f64s(&[1.0, lambda, acc, ppl]));
+    }
+    for mu in [1e-2, 1e-1, 1.0, 10.0] {
+        let mut job = CompressionJob::new("tiny", Method::Coala(MuRule::Constant { mu }), ratio);
+        job.calib_batches = calib_batches();
+        let (acc, ppl, _, _) = ctx.score(&job, limit())?;
+        t.row(vec!["constant μ".into(), format!("{mu}"), format!("{acc:.1}"), format!("{ppl:.2}")]);
+        rows.push(Json::from_f64s(&[0.0, mu, acc, ppl]));
+    }
+    t.print();
+    println!("expected shape (paper): layer-adaptive μ dominates any single constant μ.");
+    dump("fig4", Json::Arr(rows))
+}
+
+/// Fig. 5: accuracy vs λ across models and ratios (stability of the
+/// optimum in λ ∈ [1, 10]).
+pub fn fig5(args: &Args) -> Result<()> {
+    let env = Env::load(args)?;
+    let configs = args.get_list("configs", &["tiny", "small"]);
+    let lambdas = [0.1, 0.3, 1.0, 3.0, 10.0, 30.0];
+    let mut t = Table::new(
+        "Fig.5 — avg accuracy vs λ",
+        &["model", "ratio", "λ", "avg acc", "ppl"],
+    );
+    let mut rows = Vec::new();
+    for cfg in &configs {
+        let ctx = EvalCtx::new(&env, cfg)?;
+        for ratio in [0.08, 0.12] {
+            for &lambda in &lambdas {
+                let mut job =
+                    CompressionJob::new(cfg, Method::Coala(MuRule::Adaptive { lambda }), ratio);
+                job.calib_batches = calib_batches();
+                let (acc, ppl, _, _) = ctx.score(&job, limit())?;
+                t.row(vec![
+                    cfg.clone(),
+                    format!("{ratio}"),
+                    format!("{lambda}"),
+                    format!("{acc:.1}"),
+                    format!("{ppl:.2}"),
+                ]);
+                rows.push(Json::obj(vec![
+                    ("model", Json::Str(cfg.clone())),
+                    ("ratio", Json::Num(ratio)),
+                    ("lambda", Json::Num(lambda)),
+                    ("acc", Json::Num(acc)),
+                    ("ppl", Json::Num(ppl)),
+                ]));
+            }
+        }
+    }
+    t.print();
+    println!("expected shape (paper): optimum λ is flat across ~[1, 10] for all settings.");
+    dump("fig5", Json::Arr(rows))
+}
+
+fn method_rows(
+    ctx: &EvalCtx,
+    config: &str,
+    ratio: f64,
+    precision: Precision,
+    methods: &[(&str, Method)],
+    t: &mut Table,
+    recs: &mut Vec<Json>,
+) -> Result<()> {
+    let task_names = ctx.bank.task_names.clone();
+    let (bacc, bppl, baccs, bstds) = ctx.base_scores(limit())?;
+    let mut cells = vec!["Original".to_string(), format!("{bppl:.2}"), format!("{bacc:.1}")];
+    cells.extend(baccs.iter().zip(&bstds).map(|(a, s)| format!("{a:.1}±{s:.1}")));
+    t.row(cells);
+    recs.push(Json::obj(vec![
+        ("method", Json::Str("Original".into())),
+        ("ratio", Json::Num(1.0)),
+        ("avg", Json::Num(bacc)),
+        ("ppl", Json::Num(bppl)),
+        ("accs", Json::from_f64s(&baccs)),
+    ]));
+    for (name, m) in methods {
+        let mut job = CompressionJob::new(config, *m, ratio);
+        job.calib_batches = calib_batches();
+        job.accum_precision = precision;
+        let (acc, ppl, accs, stds) = ctx.score(&job, limit())?;
+        let mut cells = vec![name.to_string(), format!("{ppl:.2}"), format!("{acc:.1}")];
+        cells.extend(accs.iter().zip(&stds).map(|(a, s)| format!("{a:.1}±{s:.1}")));
+        t.row(cells);
+        recs.push(Json::obj(vec![
+            ("method", Json::Str(name.to_string())),
+            ("ratio", Json::Num(ratio)),
+            ("avg", Json::Num(acc)),
+            ("ppl", Json::Num(ppl)),
+            ("accs", Json::from_f64s(&accs)),
+        ]));
+        let _ = task_names.len();
+    }
+    Ok(())
+}
+
+/// Table 2: 90 % kept, Gram accumulation emulated in fp16.
+pub fn table2(args: &Args) -> Result<()> {
+    let env = Env::load(args)?;
+    let ctx = EvalCtx::new(&env, "tiny")?;
+    let ratio = args.get_f64("ratio", 0.06)?;
+    let mut header = vec!["method", "ppl", "avg"];
+    let names: Vec<String> = ctx.bank.task_names.clone();
+    for n in &names {
+        header.push(n);
+    }
+    let mut t = Table::new(
+        &format!("Table 2 — tiny @ {:.1}% kept (matching the paper 90%-compression regime), fp16 accumulation", ratio * 100.0),
+        &header,
+    );
+    let methods: Vec<(&str, Method)> = vec![
+        ("ASVD", Method::Asvd),
+        ("SVD-LLM", Method::SvdLlm),
+        ("COALA(mu=0)", Method::Coala(MuRule::None)),
+        ("COALA(adap λ=3)", Method::Coala(MuRule::Adaptive { lambda: 3.0 })),
+    ];
+    let mut recs = Vec::new();
+    method_rows(&ctx, "tiny", ratio, Precision::F16, &methods, &mut t, &mut recs)?;
+    t.print();
+    println!("expected shape (paper Table 2): ASVD worst; COALA_μ ≥ COALA_{{μ=0}} ≈ SVD-LLM.");
+    dump("table2", Json::Arr(recs))
+}
+
+/// Table 3: small model, 80 % and 70 % kept, all methods.
+pub fn table3(args: &Args) -> Result<()> {
+    let env = Env::load(args)?;
+    let cfg = args.get_or("config", "small");
+    let ctx = EvalCtx::new(&env, cfg)?;
+    let mut recs = Vec::new();
+    for ratio in [0.12, 0.08] {
+        let mut header = vec!["method", "ppl", "avg"];
+        let names: Vec<String> = ctx.bank.task_names.clone();
+        for n in &names {
+            header.push(n);
+        }
+        let mut t = Table::new(&format!("Table 3 — {cfg} @ {:.0}% kept", ratio * 100.0), &header);
+        let methods: Vec<(&str, Method)> = vec![
+            ("SVD (FLAP-row)", Method::PlainSvd),
+            ("ASVD (SliceGPT-row)", Method::Asvd),
+            ("SVD-LLM", Method::SvdLlm),
+            ("SVD-LLM-v2 (SoLA-row)", Method::SvdLlmV2),
+            ("COALA(adap λ=3)", Method::Coala(MuRule::Adaptive { lambda: 3.0 })),
+        ];
+        method_rows(&ctx, cfg, ratio, Precision::F32, &methods, &mut t, &mut recs)?;
+        t.print();
+    }
+    println!(
+        "expected shape (paper Table 3): COALA best or second on most columns.\n\
+         (FLAP/SliceGPT/SoLA are proxied by the closest implementable method —\n\
+         see DESIGN.md §substitutions.)"
+    );
+    dump("table3", Json::Arr(recs))
+}

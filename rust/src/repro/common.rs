@@ -1,0 +1,41 @@
+//! Shared experiment plumbing.
+
+use crate::calib::dataset::Corpus;
+use crate::error::Result;
+use crate::model::ModelWeights;
+use crate::runtime::executor::Executor;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+/// Loaded environment for experiments that need the runtime.
+pub struct Env {
+    pub ex: Executor,
+    pub corpus: Corpus,
+}
+
+impl Env {
+    pub fn load(args: &Args) -> Result<Env> {
+        let dir = crate::artifacts_dir(args.get("artifacts"));
+        Ok(Env { ex: Executor::new(&dir)?, corpus: Corpus::load(&dir)? })
+    }
+
+    pub fn weights(&self, config: &str) -> Result<(crate::runtime::manifest::ModelSpec, ModelWeights)> {
+        let spec = self.ex.manifest.config(config)?.clone();
+        let dir = &self.ex.manifest.dir.clone();
+        let w = ModelWeights::load(dir, &spec)?;
+        Ok((spec, w))
+    }
+}
+
+/// Dump an experiment result record to results/<id>.json.
+pub fn dump(id: &str, value: Json) -> Result<()> {
+    std::fs::create_dir_all("results")?;
+    std::fs::write(format!("results/{id}.json"), value.dump())?;
+    println!("[results/{id}.json written]");
+    Ok(())
+}
+
+/// Fast-mode row/batch scaling: COALA_REPRO_FAST=1 shrinks sweeps.
+pub fn fast() -> bool {
+    std::env::var("COALA_REPRO_FAST").as_deref() == Ok("1")
+}

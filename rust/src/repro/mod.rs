@@ -1,0 +1,44 @@
+//! Experiment drivers: one entry per table/figure of the paper
+//! (`coala repro <id>`).  Results print as tables and are also dumped to
+//! `results/<id>.json` for EXPERIMENTS.md.
+
+pub mod accuracy;
+pub mod common;
+pub mod finetune_exp;
+pub mod stability;
+pub mod theory_exp;
+pub mod timing;
+
+use crate::error::{Error, Result};
+use crate::util::cli::Args;
+
+/// Dispatch an experiment id.
+pub fn run(id: &str, args: &Args) -> Result<()> {
+    match id {
+        "fig1" => stability::fig1(args),
+        "fig2" => stability::fig2(args),
+        "g1" => stability::g1(args),
+        "table1" => timing::table1(args),
+        "fig3" => timing::fig3(args),
+        "fig4" => accuracy::fig4(args),
+        "fig5" => accuracy::fig5(args),
+        "table2" => accuracy::table2(args),
+        "table3" => accuracy::table3(args),
+        "table4" => finetune_exp::table4(args),
+        "fig6" => theory_exp::fig6(args),
+        "thm1" => theory_exp::thm1(args),
+        "all" => {
+            for id in [
+                "g1", "thm1", "fig6", "fig2", "fig1", "table1", "fig3", "fig4", "fig5",
+                "table2", "table3", "table4",
+            ] {
+                println!("\n################ repro {id} ################");
+                run(id, args)?;
+            }
+            Ok(())
+        }
+        other => Err(Error::Config(format!(
+            "unknown experiment `{other}` (try fig1 fig2 fig3 fig4 fig5 fig6 table1 table2 table3 table4 g1 thm1 all)"
+        ))),
+    }
+}

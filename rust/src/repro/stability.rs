@@ -1,0 +1,163 @@
+//! Fig. 1 (method stability vs rank), Fig. 2 (activation spectra),
+//! Example G.1 (Gram precision loss).
+
+use super::common::{dump, Env};
+use crate::calib::activations::ActivationCapture;
+use crate::coala::baselines::{svdllm_factorize, svdllm_v2_factorize};
+use crate::coala::coala_factorize;
+use crate::error::Result;
+use crate::linalg::qr_r_square;
+use crate::tensor::lowp::{gram_lowp, quantize, Precision};
+use crate::tensor::ops::{matmul, spectral_norm};
+use crate::tensor::Matrix;
+use crate::theory::example_g1;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+/// Capture the calibration matrix Xᵀ (rows) for one projection.
+fn capture_xt(env: &Env, config: &str, proj: &str, batches: usize) -> Result<(Matrix<f32>, Matrix<f32>)> {
+    let (spec, w) = env.weights(config)?;
+    let cap = ActivationCapture::new(&env.ex, &spec);
+    let toks = env.corpus.batches("calib", spec.batch, spec.seq_len, batches)?;
+    let mut xt: Option<Matrix<f32>> = None;
+    for t in &toks {
+        let (_l, chunks) = cap.capture(t, &w)?;
+        let c = cap.chunk_for(&chunks, proj)?;
+        xt = Some(match xt {
+            None => c.xt.clone(),
+            Some(prev) => prev.vstack(&c.xt)?,
+        });
+    }
+    Ok((w.matrix(proj)?, xt.unwrap()))
+}
+
+/// Fig. 1: relative error (spectral norm) of each method's W′_r against
+/// the fp64 inversion-free COALA reference, across ranks.
+///
+/// The Gram-based baselines run with the accumulation emulated in fp16
+/// (the paper's working precision); COALA runs in f32.  The reference is
+/// the same algorithm in f64.
+pub fn fig1(args: &Args) -> Result<()> {
+    let env = Env::load(args)?;
+    let proj = args.get_or("proj", "l1.wq");
+    let (w, xt) = capture_xt(&env, "tiny", proj, if super::common::fast() { 2 } else { 8 })?;
+    let x = xt.transpose();
+
+    // fp64 ground truth factors
+    let w64: Matrix<f64> = w.cast();
+    let x64: Matrix<f64> = x.cast();
+    let r64 = qr_r_square(&x64.transpose())?;
+    let ref_full = coala_factorize(&w64, &r64, 40)?;
+
+    // f32 QR route (COALA) vs reduced-precision Gram routes (baselines).
+    // fp16 overflows outright on unnormalized activation Grams (range
+    // 6.5e4); bf16 has f32 range but an 8-bit mantissa — it survives the
+    // accumulation and shows the paper's *plateau* failure shape.
+    let xt16 = quantize(&xt, Precision::Bf16);
+    let gram16 = gram_lowp(&xt16, Precision::Bf16);
+    let r32 = qr_r_square(&x.transpose())?;
+    let coala32 = coala_factorize(&w, &r32, 40)?;
+    let svdllm16 = svdllm_factorize(&w, &gram16, 40)?;
+    let svdllm2_16 = svdllm_v2_factorize(&w, &gram16, 40)?;
+    // f32 Gram route: the subtler √ε-class loss
+    let gram32 = crate::tensor::ops::gram_t(&xt);
+    let svdllm32 = svdllm_factorize(&w, &gram32, 40)?;
+
+    let max_rank = w.rows.min(w.cols);
+    let ranks: Vec<usize> = [1usize, 2, 4, 8, 16, 32, 64, 96, 128, 160, 184]
+        .into_iter()
+        .filter(|&r| r <= max_rank)
+        .collect();
+
+    let mut t = Table::new(
+        &format!("Fig.1 — relative ‖W'_m − W'_ref64‖₂/‖W'_ref64‖₂ on {proj}"),
+        &["rank", "COALA(QR,f32)", "SVD-LLM(chol,f32)", "SVD-LLM(chol,bf16)", "SVD-LLM-v2(eig,bf16)"],
+    );
+    let mut rows = Vec::new();
+    for &r in &ranks {
+        let wref: Matrix<f64> = ref_full.truncate(r).reconstruct()?;
+        let rel = |full: &crate::coala::factorize::FullFactors<f32>| -> f64 {
+            let wp: Matrix<f64> = full.truncate(r).reconstruct().unwrap().cast();
+            match wp.sub(&wref) {
+                Ok(d) if wp.all_finite() => {
+                    spectral_norm(&d, 60) / spectral_norm(&wref, 60).max(1e-300)
+                }
+                _ => f64::INFINITY,
+            }
+        };
+        let (e_c, e_s32, e_s, e_s2) =
+            (rel(&coala32), rel(&svdllm32), rel(&svdllm16), rel(&svdllm2_16));
+        t.row(vec![
+            r.to_string(),
+            format!("{e_c:.2e}"),
+            format!("{e_s32:.2e}"),
+            format!("{e_s:.2e}"),
+            format!("{e_s2:.2e}"),
+        ]);
+        rows.push(Json::from_f64s(&[r as f64, e_c, e_s32, e_s, e_s2]));
+    }
+    t.print();
+    println!(
+        "expected shape (paper): the Gram-based methods plateau at a large,\n\
+         rank-independent error; the QR-based method tracks the fp64 reference."
+    );
+    dump("fig1", Json::obj(vec![("proj", Json::Str(proj.into())), ("rows", Json::Arr(rows))]))
+}
+
+/// Fig. 2: singular-value distribution of the activation matrix X per
+/// layer (σ spectra via QR → SVD of R, all f64).
+pub fn fig2(args: &Args) -> Result<()> {
+    let env = Env::load(args)?;
+    let (spec, _w) = env.weights("tiny")?;
+    let mut t = Table::new(
+        "Fig.2 — σ spectrum of X (q_proj input) per layer",
+        &["layer", "σ_max", "σ_med", "σ_min", "cond", "drop σ_min/σ_med"],
+    );
+    let mut rows = Vec::new();
+    for layer in 0..spec.n_layers {
+        let proj = format!("l{layer}.wq");
+        let (_wm, xt) = capture_xt(&env, "tiny", &proj, if super::common::fast() { 2 } else { 8 })?;
+        let xt64: Matrix<f64> = xt.cast();
+        let r = qr_r_square(&xt64)?; // σ(R) = σ(X)
+        let svd = crate::linalg::jacobi_svd(&r, 40)?;
+        let (mx, md, mn) = (svd.s[0], svd.s[svd.s.len() / 2], *svd.s.last().unwrap());
+        t.row(vec![
+            layer.to_string(),
+            format!("{mx:.3e}"),
+            format!("{md:.3e}"),
+            format!("{mn:.3e}"),
+            format!("{:.2e}", mx / mn.max(1e-300)),
+            format!("{:.2e}", mn / md.max(1e-300)),
+        ]);
+        rows.push(Json::from_f64s(&svd.s));
+    }
+    t.print();
+    println!("expected shape (paper): a sharp drop in the smallest singular values.");
+    dump("fig2", Json::obj(vec![("spectra", Json::Arr(rows))]))
+}
+
+/// Example G.1: σ_min of X vs σ_min recovered from the precision-p Gram.
+pub fn g1(_args: &Args) -> Result<()> {
+    let mut t = Table::new(
+        "Example G.1 — smallest singular value: exact vs via Gram matrix",
+        &["precision", "σ_min exact", "σ_min via XᵀX", "lost factor"],
+    );
+    let mut rows = Vec::new();
+    for (name, p) in [("fp16", Precision::F16), ("bf16", Precision::Bf16), ("fp32", Precision::F32)] {
+        let (exact, via) = example_g1(p)?;
+        t.row(vec![
+            name.into(),
+            format!("{exact:.3e}"),
+            format!("{via:.3e}"),
+            format!("{:.1e}", exact / via.max(1e-300)),
+        ]);
+        rows.push(Json::from_f64s(&[exact, via]));
+    }
+    t.print();
+    println!("expected (paper): the Gram path loses ≈ √ε_machine of accuracy.");
+    dump("g1", Json::obj(vec![("rows", Json::Arr(rows))]))
+}
+
+#[allow(unused_imports)]
+use matmul as _keep;

@@ -1,0 +1,221 @@
+//! CBT — the COALA Binary Tensor container (reader side).
+//!
+//! Mirrors `python/compile/serialize.py`:
+//!   magic "CBT1" · u32 count · per tensor:
+//!   u16 name_len · name · u8 dtype (0=f32, 1=i32, 2=f64) · u8 ndim ·
+//!   ndim × u32 dims · row-major little-endian payload.
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// One tensor from a CBT file.
+#[derive(Debug, Clone)]
+pub enum Tensor {
+    F32 { dims: Vec<usize>, data: Vec<f32> },
+    I32 { dims: Vec<usize>, data: Vec<i32> },
+    F64 { dims: Vec<usize>, data: Vec<f64> },
+}
+
+impl Tensor {
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { dims, .. } | Tensor::I32 { dims, .. } | Tensor::F64 { dims, .. } => dims,
+        }
+    }
+
+    pub fn f32s(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => Err(Error::msg("tensor is not f32")),
+        }
+    }
+
+    pub fn i32s(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            _ => Err(Error::msg("tensor is not i32")),
+        }
+    }
+
+    /// View as a host matrix (f32, 2-D).
+    pub fn matrix(&self) -> Result<crate::tensor::Matrix<f32>> {
+        let d = self.dims();
+        if d.len() != 2 {
+            return Err(Error::shape(format!("matrix() on {d:?}")));
+        }
+        crate::tensor::Matrix::from_vec(d[0], d[1], self.f32s()?.to_vec())
+    }
+}
+
+/// A parsed CBT file.
+#[derive(Debug, Default)]
+pub struct Cbt {
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+fn rd_u16(b: &[u8], pos: &mut usize) -> Result<u16> {
+    let v = u16::from_le_bytes(
+        b.get(*pos..*pos + 2)
+            .ok_or_else(|| Error::msg("cbt: truncated"))?
+            .try_into()
+            .unwrap(),
+    );
+    *pos += 2;
+    Ok(v)
+}
+
+fn rd_u32(b: &[u8], pos: &mut usize) -> Result<u32> {
+    let v = u32::from_le_bytes(
+        b.get(*pos..*pos + 4)
+            .ok_or_else(|| Error::msg("cbt: truncated"))?
+            .try_into()
+            .unwrap(),
+    );
+    *pos += 4;
+    Ok(v)
+}
+
+impl Cbt {
+    pub fn load(path: &str) -> Result<Cbt> {
+        let buf = std::fs::read(path).map_err(|e| Error::Format {
+            path: path.into(),
+            msg: e.to_string(),
+        })?;
+        Self::parse(&buf).map_err(|e| Error::Format { path: path.into(), msg: e.to_string() })
+    }
+
+    pub fn parse(buf: &[u8]) -> Result<Cbt> {
+        if buf.len() < 8 || &buf[0..4] != b"CBT1" {
+            return Err(Error::msg("bad CBT magic"));
+        }
+        let mut pos = 4usize;
+        let count = rd_u32(buf, &mut pos)? as usize;
+        let mut tensors = BTreeMap::new();
+        for _ in 0..count {
+            let nlen = rd_u16(buf, &mut pos)? as usize;
+            let name = String::from_utf8(
+                buf.get(pos..pos + nlen).ok_or_else(|| Error::msg("cbt: truncated name"))?.to_vec(),
+            )
+            .map_err(|e| Error::msg(e.to_string()))?;
+            pos += nlen;
+            let dt = *buf.get(pos).ok_or_else(|| Error::msg("cbt: truncated dtype"))?;
+            let ndim = *buf.get(pos + 1).ok_or_else(|| Error::msg("cbt: truncated ndim"))? as usize;
+            pos += 2;
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(rd_u32(buf, &mut pos)? as usize);
+            }
+            let n: usize = if ndim == 0 { 1 } else { dims.iter().product() };
+            let t = match dt {
+                0 => {
+                    let bytes = buf
+                        .get(pos..pos + 4 * n)
+                        .ok_or_else(|| Error::msg("cbt: truncated f32 payload"))?;
+                    pos += 4 * n;
+                    Tensor::F32 {
+                        dims,
+                        data: bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect(),
+                    }
+                }
+                1 => {
+                    let bytes = buf
+                        .get(pos..pos + 4 * n)
+                        .ok_or_else(|| Error::msg("cbt: truncated i32 payload"))?;
+                    pos += 4 * n;
+                    Tensor::I32 {
+                        dims,
+                        data: bytes.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect(),
+                    }
+                }
+                2 => {
+                    let bytes = buf
+                        .get(pos..pos + 8 * n)
+                        .ok_or_else(|| Error::msg("cbt: truncated f64 payload"))?;
+                    pos += 8 * n;
+                    Tensor::F64 {
+                        dims,
+                        data: bytes.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect(),
+                    }
+                }
+                other => return Err(Error::msg(format!("cbt: unknown dtype {other}"))),
+            };
+            tensors.insert(name, t);
+        }
+        Ok(Cbt { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| Error::msg(format!("cbt: tensor `{name}` missing")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_cbt(tensors: &[(&str, u8, Vec<u32>, Vec<u8>)]) -> Vec<u8> {
+        let mut b = b"CBT1".to_vec();
+        b.extend((tensors.len() as u32).to_le_bytes());
+        for (name, dt, dims, payload) in tensors {
+            b.extend((name.len() as u16).to_le_bytes());
+            b.extend(name.as_bytes());
+            b.push(*dt);
+            b.push(dims.len() as u8);
+            for d in dims {
+                b.extend(d.to_le_bytes());
+            }
+            b.extend(payload);
+        }
+        b
+    }
+
+    #[test]
+    fn parses_f32_and_i32() {
+        let f: Vec<u8> = [1.0f32, 2.0, 3.0, 4.0].iter().flat_map(|x| x.to_le_bytes()).collect();
+        let i: Vec<u8> = [7i32, -3].iter().flat_map(|x| x.to_le_bytes()).collect();
+        let buf = write_cbt(&[("m", 0, vec![2, 2], f), ("v", 1, vec![2], i)]);
+        let cbt = Cbt::parse(&buf).unwrap();
+        let m = cbt.get("m").unwrap().matrix().unwrap();
+        assert_eq!(m.get(1, 0), 3.0);
+        assert_eq!(cbt.get("v").unwrap().i32s().unwrap(), &[7, -3]);
+    }
+
+    #[test]
+    fn scalar_zero_dim() {
+        let f: Vec<u8> = 9.5f64.to_le_bytes().to_vec();
+        let buf = write_cbt(&[("s", 2, vec![], f)]);
+        let cbt = Cbt::parse(&buf).unwrap();
+        match cbt.get("s").unwrap() {
+            Tensor::F64 { data, .. } => assert_eq!(data, &vec![9.5]),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Cbt::parse(b"NOPE").is_err());
+        let buf = write_cbt(&[("t", 0, vec![4], vec![0u8; 8])]); // claims 4 f32, has 2
+        assert!(Cbt::parse(&buf).is_err());
+        let buf = write_cbt(&[("t", 9, vec![1], vec![0u8; 4])]);
+        assert!(Cbt::parse(&buf).is_err());
+    }
+
+    #[test]
+    fn missing_tensor_error() {
+        let buf = write_cbt(&[]);
+        let cbt = Cbt::parse(&buf).unwrap();
+        assert!(cbt.get("nope").is_err());
+    }
+
+    #[test]
+    fn roundtrips_real_artifact_if_present() {
+        // integration-ish: read the built weights file when available
+        if let Ok(cbt) = Cbt::load("artifacts/weights_tiny.cbt") {
+            let emb = cbt.get("tok_emb").unwrap();
+            assert_eq!(emb.dims().len(), 2);
+            assert!(emb.f32s().unwrap().iter().all(|x| x.is_finite()));
+        }
+    }
+}

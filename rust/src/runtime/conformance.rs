@@ -1,0 +1,119 @@
+//! jax ⇄ PJRT numerical-parity self-check (`coala selfcheck`).
+//!
+//! The pinned xla_extension 0.5.1 runtime *miscompiles* some valid HLO —
+//! observed classes: gathers/scatters with runtime-computed index
+//! operands inside while-loop bodies, and constant-index gathers at some
+//! non-power-of-two widths.  The L2 graphs are written to avoid every
+//! such construct (Brent–Luk ring shifts as slices, lax.sort instead of
+//! argsort-gather, one-hot instead of take_along_axis) and THIS module
+//! proves it: every case in artifacts/conformance/ is executed through
+//! PJRT and compared against the jax-computed expected outputs.
+
+use crate::error::{Error, Result};
+use crate::runtime::cbt::{Cbt, Tensor};
+
+/// Result of one conformance case.
+#[derive(Debug)]
+pub struct CaseResult {
+    pub name: String,
+    pub worst_rel: f64,
+    pub tol: f64,
+    pub pass: bool,
+}
+
+/// Run every case under `<dir>/conformance`; returns per-case results.
+pub fn run_all(dir: &str) -> Result<Vec<CaseResult>> {
+    let conf_dir = format!("{dir}/conformance");
+    let list = std::fs::read_to_string(format!("{conf_dir}/cases.txt")).map_err(|e| {
+        Error::Format { path: conf_dir.clone(), msg: format!("cases.txt: {e}") }
+    })?;
+    let client = xla::PjRtClient::cpu()?;
+    let mut out = Vec::new();
+    for case in list.split_whitespace() {
+        out.push(run_case(&client, &conf_dir, case)?);
+    }
+    Ok(out)
+}
+
+fn to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.dims().iter().map(|&d| d as i64).collect();
+    Ok(match t {
+        Tensor::F32 { data, .. } => xla::Literal::vec1(data).reshape(&dims)?,
+        Tensor::I32 { data, .. } => xla::Literal::vec1(data).reshape(&dims)?,
+        Tensor::F64 { data, .. } => xla::Literal::vec1(data).reshape(&dims)?,
+    })
+}
+
+fn run_case(client: &xla::PjRtClient, dir: &str, case: &str) -> Result<CaseResult> {
+    let cbt = Cbt::load(&format!("{dir}/{case}.cbt"))?;
+    let tol = cbt
+        .get("__tol")
+        .ok()
+        .and_then(|t| t.f32s().ok().map(|v| v[0] as f64))
+        .unwrap_or(1e-3);
+    let mut inputs = Vec::new();
+    let mut i = 0;
+    while let Ok(t) = cbt.get(&format!("in{i}")) {
+        inputs.push(to_literal(t)?);
+        i += 1;
+    }
+    let proto = xla::HloModuleProto::from_text_file(&format!("{dir}/{case}.hlo.txt"))?;
+    let exe = client.compile(&xla::XlaComputation::from_proto(&proto))?;
+    let result = exe.execute::<xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
+    let parts = result.to_tuple()?;
+
+    let mut worst = 0.0f64;
+    for (j, p) in parts.iter().enumerate() {
+        let want = cbt.get(&format!("out{j}"))?;
+        let got = p.to_vec::<f32>()?;
+        let want_f = want.f32s()?;
+        if got.len() != want_f.len() {
+            return Err(Error::shape(format!("{case}: out{j} length mismatch")));
+        }
+        for (a, b) in got.iter().zip(want_f) {
+            let d = (a - b).abs() as f64 / (1.0 + b.abs() as f64);
+            worst = worst.max(d);
+        }
+    }
+    Ok(CaseResult { name: case.to_string(), worst_rel: worst, tol, pass: worst <= tol })
+}
+
+/// Run and pretty-print; Err if any case fails.
+pub fn selfcheck(dir: &str) -> Result<()> {
+    let results = run_all(dir)?;
+    let mut failed = 0;
+    for r in &results {
+        println!(
+            "{} {:<28} worst rel diff {:.2e} (tol {:.0e})",
+            if r.pass { "PASS" } else { "FAIL" },
+            r.name,
+            r.worst_rel,
+            r.tol
+        );
+        if !r.pass {
+            failed += 1;
+        }
+    }
+    if failed > 0 {
+        return Err(Error::Numerical(format!("{failed} conformance case(s) FAILED")));
+    }
+    println!("all {} conformance cases pass", results.len());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_suite_passes_when_built() {
+        if !std::path::Path::new("artifacts/conformance/cases.txt").exists() {
+            return;
+        }
+        let results = run_all("artifacts").unwrap();
+        assert!(results.len() >= 20, "suite shrank: {}", results.len());
+        for r in &results {
+            assert!(r.pass, "{} failed: {:.2e} > {:.0e}", r.name, r.worst_rel, r.tol);
+        }
+    }
+}

@@ -1,0 +1,250 @@
+//! Compile-once executable cache + literal marshalling.
+//!
+//! One `Executor` owns the PJRT CPU client and a lazily-populated cache
+//! of compiled executables keyed by artifact name (one compiled
+//! executable per model/shape variant).  Compilation happens on first
+//! use; the request path afterwards only marshals literals and calls
+//! `execute`.
+
+use crate::error::{Error, Result};
+use crate::runtime::manifest::{ArtifactSpec, Manifest};
+use crate::tensor::Matrix;
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Host-side value crossing the PJRT boundary.
+#[derive(Debug, Clone)]
+pub enum Value {
+    F32(Vec<usize>, Vec<f32>),
+    I32(Vec<usize>, Vec<i32>),
+}
+
+impl Value {
+    pub fn scalar_f32(v: f32) -> Value {
+        Value::F32(vec![], vec![v])
+    }
+
+    pub fn from_matrix(m: &Matrix<f32>) -> Value {
+        Value::F32(vec![m.rows, m.cols], m.data.clone())
+    }
+
+    pub fn matrix(&self) -> Result<Matrix<f32>> {
+        match self {
+            Value::F32(dims, data) if dims.len() == 2 => {
+                Matrix::from_vec(dims[0], dims[1], data.clone())
+            }
+            _ => Err(Error::shape(format!("not a 2-D f32 value: {:?}", self.dims()))),
+        }
+    }
+
+    pub fn f32s(&self) -> Result<&[f32]> {
+        match self {
+            Value::F32(_, d) => Ok(d),
+            _ => Err(Error::msg("value is not f32")),
+        }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            Value::F32(d, _) | Value::I32(d, _) => d,
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.dims().iter().map(|&d| d as i64).collect();
+        Ok(match self {
+            Value::F32(_, data) => xla::Literal::vec1(data).reshape(&dims)?,
+            Value::I32(_, data) => xla::Literal::vec1(data).reshape(&dims)?,
+        })
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<Value> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(Value::F32(dims, lit.to_vec::<f32>()?)),
+            xla::ElementType::S32 => Ok(Value::I32(dims, lit.to_vec::<i32>()?)),
+            other => Err(Error::msg(format!("unsupported output dtype {other:?}"))),
+        }
+    }
+}
+
+/// Execution statistics (perf pass instrumentation).
+#[derive(Debug, Default, Clone)]
+pub struct ExecStats {
+    pub compiles: usize,
+    pub compile_secs: f64,
+    pub executions: usize,
+    pub execute_secs: f64,
+}
+
+/// PJRT client + compiled-executable cache.
+pub struct Executor {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    stats: Mutex<ExecStats>,
+}
+
+impl Executor {
+    pub fn new(artifacts_dir: &str) -> Result<Executor> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Executor {
+            manifest,
+            client,
+            cache: Mutex::new(HashMap::new()),
+            stats: Mutex::new(ExecStats::default()),
+        })
+    }
+
+    pub fn stats(&self) -> ExecStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    /// Compile (or fetch the cached) executable for an artifact.
+    pub fn prepare(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let path = self.manifest.artifact_path(name)?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let exe = self.client.compile(&xla::XlaComputation::from_proto(&proto))?;
+        let exe = std::sync::Arc::new(exe);
+        {
+            let mut st = self.stats.lock().unwrap();
+            st.compiles += 1;
+            st.compile_secs += t0.elapsed().as_secs_f64();
+        }
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    fn validate(&self, spec: &ArtifactSpec, inputs: &[Value]) -> Result<()> {
+        if inputs.len() != spec.inputs.len() {
+            return Err(Error::shape(format!(
+                "{}: {} inputs given, {} expected",
+                spec.name,
+                inputs.len(),
+                spec.inputs.len()
+            )));
+        }
+        for (v, s) in inputs.iter().zip(&spec.inputs) {
+            if v.dims() != s.shape.as_slice() {
+                return Err(Error::shape(format!(
+                    "{}: input `{}` is {:?}, expected {:?}",
+                    spec.name,
+                    s.name,
+                    v.dims(),
+                    s.shape
+                )));
+            }
+            let want_i32 = s.dtype.contains("int");
+            let is_i32 = matches!(v, Value::I32(..));
+            if want_i32 != is_i32 {
+                return Err(Error::shape(format!(
+                    "{}: input `{}` dtype mismatch (artifact wants {})",
+                    spec.name, s.name, s.dtype
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute an artifact with shape/dtype validation against the ABI.
+    pub fn run(&self, name: &str, inputs: &[Value]) -> Result<Vec<Value>> {
+        let spec = self.manifest.artifact(name)?.clone();
+        self.validate(&spec, inputs)?;
+        let exe = self.prepare(name)?;
+        let lits: Vec<xla::Literal> =
+            inputs.iter().map(|v| v.to_literal()).collect::<Result<_>>()?;
+        let t0 = Instant::now();
+        let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        {
+            let mut st = self.stats.lock().unwrap();
+            st.executions += 1;
+            st.execute_secs += t0.elapsed().as_secs_f64();
+        }
+        // all artifacts are lowered with return_tuple=True
+        let parts = result.to_tuple()?;
+        let out: Vec<Value> = parts.iter().map(Value::from_literal).collect::<Result<_>>()?;
+        if out.len() != spec.outputs.len() {
+            return Err(Error::shape(format!(
+                "{}: produced {} outputs, manifest says {}",
+                name,
+                out.len(),
+                spec.outputs.len()
+            )));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn executor() -> Option<Executor> {
+        if std::path::Path::new("artifacts/manifest.json").exists() {
+            Some(Executor::new("artifacts").unwrap())
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn runs_tsqr_step_and_caches() {
+        let Some(ex) = executor() else { return };
+        let cfg = ex.manifest.config("tiny").unwrap();
+        let n = cfg.d_model;
+        let c = cfg.chunk_cols();
+        let r = Matrix::<f32>::zeros(n, n);
+        let chunk = Matrix::<f32>::randn(c, n, 1);
+        let out = ex
+            .run(
+                &format!("tsqr_step_{n}x{c}"),
+                &[Value::from_matrix(&r), Value::from_matrix(&chunk)],
+            )
+            .unwrap();
+        let r1 = out[0].matrix().unwrap();
+        assert_eq!((r1.rows, r1.cols), (n, n));
+        // RᵀR = chunkᵀchunk
+        let got = crate::tensor::ops::matmul(&r1.transpose(), &r1).unwrap();
+        let want = crate::tensor::ops::gram_t(&chunk);
+        for (a, b) in got.data.iter().zip(&want.data) {
+            assert!((a - b).abs() < 1e-1 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+        assert_eq!(ex.stats().compiles, 1);
+        // second call hits the cache
+        let _ = ex
+            .run(
+                &format!("tsqr_step_{n}x{c}"),
+                &[Value::from_matrix(&r1), Value::from_matrix(&chunk)],
+            )
+            .unwrap();
+        assert_eq!(ex.stats().compiles, 1);
+        assert_eq!(ex.stats().executions, 2);
+    }
+
+    #[test]
+    fn validates_shapes_and_dtypes() {
+        let Some(ex) = executor() else { return };
+        let cfg = ex.manifest.config("tiny").unwrap();
+        let n = cfg.d_model;
+        let c = cfg.chunk_cols();
+        let name = format!("tsqr_step_{n}x{c}");
+        // wrong arity
+        assert!(ex.run(&name, &[]).is_err());
+        // wrong shape
+        let bad = Value::from_matrix(&Matrix::<f32>::zeros(3, 3));
+        let chunk = Value::from_matrix(&Matrix::<f32>::zeros(c, n));
+        assert!(ex.run(&name, &[bad, chunk.clone()]).is_err());
+        // wrong dtype
+        let ibad = Value::I32(vec![n, n], vec![0; n * n]);
+        assert!(ex.run(&name, &[ibad, chunk]).is_err());
+        // unknown artifact
+        assert!(ex.run("nope", &[]).is_err());
+    }
+}

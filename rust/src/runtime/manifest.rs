@@ -1,0 +1,245 @@
+//! Typed view of `artifacts/manifest.json` — the python↔rust ABI.
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Input/output tensor spec of an artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One AOT artifact entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// One model configuration (tiny / small).
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub param_names: Vec<String>,
+    pub param_shapes: BTreeMap<String, Vec<usize>>,
+    pub compressible: Vec<String>,
+    pub proj_input_stream: BTreeMap<String, String>,
+    pub act_streams: Vec<String>,
+    pub weights_file: String,
+}
+
+impl ModelSpec {
+    /// Chunk width of one calibration forward: batch × seq_len columns.
+    pub fn chunk_cols(&self) -> usize {
+        self.batch * self.seq_len
+    }
+
+    /// (out, in) shape of a projection parameter.
+    pub fn proj_shape(&self, proj: &str) -> Result<(usize, usize)> {
+        let s = self
+            .param_shapes
+            .get(proj)
+            .ok_or_else(|| Error::Config(format!("unknown projection `{proj}`")))?;
+        if s.len() != 2 {
+            return Err(Error::Config(format!("projection `{proj}` is not 2-D: {s:?}")));
+        }
+        Ok((s[0], s[1]))
+    }
+
+    /// The activation stream feeding a projection (short name, e.g. "wq").
+    pub fn stream_of(&self, proj: &str) -> Result<&str> {
+        let short = proj.rsplit('.').next().unwrap_or(proj);
+        self.proj_input_stream
+            .get(short)
+            .map(|s| s.as_str())
+            .ok_or_else(|| Error::Config(format!("no input stream for `{proj}`")))
+    }
+}
+
+/// The whole manifest.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: String,
+    pub abi_version: usize,
+    pub task_names: Vec<String>,
+    pub ft_rank: usize,
+    pub configs: BTreeMap<String, ModelSpec>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn specs(v: &Json, default_prefix: &str) -> Result<Vec<TensorSpec>> {
+    v.as_arr()
+        .ok_or_else(|| Error::Json("specs: expected array".into()))?
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            Ok(TensorSpec {
+                name: s
+                    .get("name")
+                    .and_then(|n| n.as_str())
+                    .map(str::to_string)
+                    .unwrap_or_else(|| format!("{default_prefix}{i}")),
+                dtype: s
+                    .req("dtype")?
+                    .as_str()
+                    .ok_or_else(|| Error::Json("dtype".into()))?
+                    .to_string(),
+                shape: s.req("shape")?.usize_arr()?,
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &str) -> Result<Manifest> {
+        let path = format!("{dir}/manifest.json");
+        let j = Json::parse_file(&path)?;
+        let abi_version = j.req("abi_version")?.as_usize().unwrap_or(0);
+        let task_names = j.req("task_names")?.str_arr()?;
+        let ft_rank = j.req("ft_rank")?.as_usize().unwrap_or(8);
+
+        let mut configs = BTreeMap::new();
+        for (name, c) in j.req("configs")?.as_obj().ok_or_else(|| Error::Json("configs".into()))? {
+            let mut param_shapes = BTreeMap::new();
+            for (k, v) in c.req("param_shapes")?.as_obj().unwrap() {
+                param_shapes.insert(k.clone(), v.usize_arr()?);
+            }
+            let mut proj_input_stream = BTreeMap::new();
+            for (k, v) in c.req("proj_input_stream")?.as_obj().unwrap() {
+                proj_input_stream.insert(k.clone(), v.as_str().unwrap_or("").to_string());
+            }
+            configs.insert(
+                name.clone(),
+                ModelSpec {
+                    name: name.clone(),
+                    vocab: c.req("vocab")?.as_usize().unwrap(),
+                    d_model: c.req("d_model")?.as_usize().unwrap(),
+                    n_layers: c.req("n_layers")?.as_usize().unwrap(),
+                    n_heads: c.req("n_heads")?.as_usize().unwrap(),
+                    d_ff: c.req("d_ff")?.as_usize().unwrap(),
+                    seq_len: c.req("seq_len")?.as_usize().unwrap(),
+                    batch: c.req("batch")?.as_usize().unwrap(),
+                    param_names: c.req("param_names")?.str_arr()?,
+                    param_shapes,
+                    compressible: c.req("compressible")?.str_arr()?,
+                    proj_input_stream,
+                    act_streams: c.req("act_streams")?.str_arr()?,
+                    weights_file: c.req("weights_file")?.as_str().unwrap_or("").to_string(),
+                },
+            );
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in j.req("artifacts")?.as_obj().ok_or_else(|| Error::Json("artifacts".into()))? {
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file: a.req("file")?.as_str().unwrap_or("").to_string(),
+                    inputs: specs(a.req("inputs")?, "in")?,
+                    outputs: specs(a.req("outputs")?, "out")?,
+                },
+            );
+        }
+
+        Ok(Manifest { dir: dir.to_string(), abi_version, task_names, ft_rank, configs, artifacts })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| Error::UnknownArtifact(name.to_string()))
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ModelSpec> {
+        self.configs
+            .get(name)
+            .ok_or_else(|| Error::Config(format!("unknown model config `{name}`")))
+    }
+
+    pub fn artifact_path(&self, name: &str) -> Result<String> {
+        Ok(format!("{}/{}", self.dir, self.artifact(name)?.file))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// These run against the real artifacts dir when it exists (CI always
+    /// builds it first via `make artifacts`).
+    fn manifest() -> Option<Manifest> {
+        Manifest::load("artifacts").ok()
+    }
+
+    #[test]
+    fn loads_and_has_expected_families() {
+        let Some(m) = manifest() else { return };
+        assert_eq!(m.abi_version, 1);
+        assert_eq!(m.task_names.len(), 8);
+        for cfg in m.configs.values() {
+            let d = cfg.d_model;
+            let f = cfg.d_ff;
+            let c = cfg.chunk_cols();
+            for name in [
+                format!("fwd_logits_{}", cfg.name),
+                format!("fwd_acts_{}", cfg.name),
+                format!("loss_{}", cfg.name),
+                format!("tsqr_step_{d}x{c}"),
+                format!("tsqr_step_{f}x{c}"),
+                format!("factorize_{d}x{d}"),
+                format!("factorize_{f}x{d}"),
+                format!("factorize_{d}x{f}"),
+                format!("svdllm_{d}x{d}"),
+                format!("gram_update_{d}x{c}"),
+            ] {
+                assert!(m.artifacts.contains_key(&name), "missing {name}");
+            }
+        }
+    }
+
+    #[test]
+    fn model_spec_helpers() {
+        let Some(m) = manifest() else { return };
+        let cfg = m.config("tiny").unwrap();
+        let (o, i) = cfg.proj_shape("l0.wq").unwrap();
+        assert_eq!((o, i), (cfg.d_model, cfg.d_model));
+        let (o, i) = cfg.proj_shape("l0.w_down").unwrap();
+        assert_eq!((o, i), (cfg.d_model, cfg.d_ff));
+        assert_eq!(cfg.stream_of("l2.wq").unwrap(), "attn");
+        assert_eq!(cfg.stream_of("l1.w_down").unwrap(), "down");
+        assert_eq!(cfg.compressible.len(), 6 * cfg.n_layers);
+        assert!(cfg.proj_shape("nope").is_err());
+    }
+
+    #[test]
+    fn io_specs_consistent() {
+        let Some(m) = manifest() else { return };
+        let cfg = m.config("tiny").unwrap();
+        let a = m.artifact(&format!("fwd_logits_{}", cfg.name)).unwrap();
+        assert_eq!(a.inputs.len(), 1 + cfg.param_names.len());
+        assert_eq!(a.inputs[0].dtype, "int32");
+        assert_eq!(a.inputs[0].shape, vec![cfg.batch, cfg.seq_len]);
+        assert_eq!(a.outputs.len(), 1);
+        assert_eq!(a.outputs[0].shape, vec![cfg.batch, cfg.seq_len, cfg.vocab]);
+        assert!(m.artifact("definitely_not_there").is_err());
+    }
+}

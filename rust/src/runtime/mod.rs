@@ -1,0 +1,24 @@
+//! PJRT runtime (S6): loads the AOT artifacts and runs them on-device.
+//!
+//! Python never executes here — `make artifacts` lowered every graph to
+//! HLO **text** (the interchange the pinned xla_extension 0.5.1 parses;
+//! serialized protos from jax ≥ 0.5 are rejected for 64-bit ids), and
+//! this module compiles + caches + executes them through the `xla`
+//! crate's PJRT C-API bindings.
+//!
+//! * [`cbt`]      — reader for the CBT tensor container (weights, corpus,
+//!                  task banks, conformance fixtures)
+//! * [`manifest`] — typed view of artifacts/manifest.json (the ABI)
+//! * [`executor`] — compile-once executable cache + literal marshalling
+//! * [`ops`]      — typed wrappers: tsqr_step, factorize, gram_update, …
+//! * [`conformance`] — the jax-vs-PJRT parity self-check (`coala selfcheck`)
+
+pub mod cbt;
+pub mod conformance;
+pub mod executor;
+pub mod manifest;
+pub mod ops;
+
+pub use cbt::{Cbt, Tensor};
+pub use executor::Executor;
+pub use manifest::Manifest;

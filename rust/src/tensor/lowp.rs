@@ -1,0 +1,185 @@
+//! Reduced-precision (IEEE half / bfloat16) emulation — substrate S5.
+//!
+//! Table 2 runs "all computations except the weighted low-rank solve" in
+//! fp16; Example G.1 shows the Gram matrix losing σ ≈ √ε_machine.  The
+//! vendor runtime has no native f16 path, so we *emulate* the rounding:
+//! every value is round-tripped through the target format after each
+//! logical operation (round-to-nearest-even), which reproduces exactly
+//! the precision-loss mechanism the paper studies.
+
+use super::matrix::Matrix;
+
+/// Round an f32 to the nearest representable IEEE-754 binary16 value
+/// (round-to-nearest-even), returned as f32.  Overflow saturates to ±inf
+/// like hardware fp16 does.
+pub fn round_f16(x: f32) -> f32 {
+    let bits = x.to_bits();
+    let sign = bits & 0x8000_0000;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let frac = bits & 0x007f_ffff;
+
+    if exp == 0xff {
+        // inf / nan pass through
+        return x;
+    }
+    let unbiased = exp - 127;
+    if unbiased > 15 {
+        return f32::from_bits(sign | 0x7f80_0000); // ±inf (overflow)
+    }
+    if unbiased >= -14 {
+        // normal half: keep 10 mantissa bits, RNE on the rest
+        let shift = 13u32;
+        let lsb = 1u32 << shift;
+        let round_bit = lsb >> 1;
+        let mut mant = frac;
+        let rem = mant & (lsb - 1);
+        mant &= !(lsb - 1);
+        if rem > round_bit || (rem == round_bit && (mant & lsb) != 0) {
+            mant += lsb;
+        }
+        let mut e = exp as u32;
+        if mant > 0x007f_ffff {
+            mant = 0;
+            e += 1;
+            if e as i32 - 127 > 15 {
+                return f32::from_bits(sign | 0x7f80_0000);
+            }
+        }
+        return f32::from_bits(sign | (e << 23) | mant);
+    }
+    // subnormal half: quantize to multiples of 2^-24
+    let scale = (2.0f64).powi(-24);
+    let q = (x as f64 / scale).round_ties_even();
+    if q == 0.0 {
+        return f32::from_bits(sign); // signed zero
+    }
+    (q * scale) as f32
+}
+
+/// Round to bfloat16 (8-bit mantissa) — the other common TPU format.
+pub fn round_bf16(x: f32) -> f32 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return x;
+    }
+    let lsb = (bits >> 16) & 1;
+    let rounded = bits.wrapping_add(0x7fff + lsb) & 0xffff_0000;
+    f32::from_bits(rounded)
+}
+
+/// Precision mode for the emulated pipelines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    F32,
+    F16,
+    Bf16,
+}
+
+impl Precision {
+    pub fn round(self, x: f32) -> f32 {
+        match self {
+            Precision::F32 => x,
+            Precision::F16 => round_f16(x),
+            Precision::Bf16 => round_bf16(x),
+        }
+    }
+
+    /// Unit roundoff of the format.
+    pub fn eps(self) -> f64 {
+        match self {
+            Precision::F32 => f32::EPSILON as f64,
+            Precision::F16 => 9.765625e-4, // 2^-10
+            Precision::Bf16 => 7.8125e-3,  // 2^-7
+        }
+    }
+}
+
+/// Quantize every entry of a matrix to the given precision.
+pub fn quantize(m: &Matrix<f32>, p: Precision) -> Matrix<f32> {
+    Matrix {
+        rows: m.rows,
+        cols: m.cols,
+        data: m.data.iter().map(|&x| p.round(x)).collect(),
+    }
+}
+
+/// Gram matrix computed *entirely in low precision*: every partial sum is
+/// rounded, as it would be on fp16 hardware without fp32 accumulation.
+/// This is the operation Example G.1 shows losing σ_min ≈ √ε.
+pub fn gram_lowp(xt: &Matrix<f32>, p: Precision) -> Matrix<f32> {
+    let n = xt.cols;
+    let mut g = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for r in 0..xt.rows {
+                let prod = p.round(p.round(xt.get(r, i)) * p.round(xt.get(r, j)));
+                acc = p.round(acc + prod);
+            }
+            g.set(i, j, acc);
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f16_exact_values_pass_through() {
+        for v in [0.0f32, 1.0, -2.0, 0.5, 1.5, 65504.0] {
+            assert_eq!(round_f16(v), v, "{v}");
+        }
+    }
+
+    #[test]
+    fn f16_rounds_to_10_bits() {
+        // 1 + 2^-11 rounds to 1.0 (RNE, tie to even)
+        assert_eq!(round_f16(1.0 + 2f32.powi(-11)), 1.0);
+        // 1 + 3·2^-11 is exactly halfway between 1+2^-10 and 1+2^-9;
+        // RNE ties to the even mantissa → 1 + 2^-9
+        assert_eq!(round_f16(1.0 + 3.0 * 2f32.powi(-11)), 1.0 + 2f32.powi(-9));
+        // just above the tie rounds down to the nearer 1 + 2^-10
+        assert_eq!(round_f16(1.0 + 2.6 * 2f32.powi(-11)), 1.0 + 2f32.powi(-10));
+    }
+
+    #[test]
+    fn f16_overflow_saturates_to_inf() {
+        assert!(round_f16(1e6).is_infinite());
+        assert!(round_f16(-1e6).is_infinite());
+    }
+
+    #[test]
+    fn f16_subnormals() {
+        let tiny = 2f32.powi(-24);
+        assert_eq!(round_f16(tiny), tiny);
+        assert_eq!(round_f16(tiny * 0.4), 0.0);
+    }
+
+    #[test]
+    fn bf16_rounds_to_8_bits() {
+        assert_eq!(round_bf16(1.0), 1.0);
+        assert_eq!(round_bf16(1.0 + 2f32.powi(-9)), 1.0);
+        let r = round_bf16(3.14159265f32);
+        assert!((r - 3.14159265).abs() < 2f32.powi(-7));
+    }
+
+    #[test]
+    fn gram_lowp_loses_small_singular_values() {
+        // Example G.1: X = [[1, 1], [0, √ε]], ε = ε_half/2.  The Gram
+        // XᵀX = [[1, 1], [1, 1+ε]] collapses to the singular [[1,1],[1,1]]
+        // because 1 + ε rounds to 1 in fp16.
+        let e = (Precision::F16.eps() / 2.0) as f32;
+        let xt = Matrix::from_vec(2, 2, vec![1.0, 1.0, 0.0, e.sqrt()]).unwrap();
+        let g = gram_lowp(&xt, Precision::F16);
+        let det = g.get(0, 0) as f64 * g.get(1, 1) as f64
+            - g.get(0, 1) as f64 * g.get(1, 0) as f64;
+        assert!(det.abs() < 1e-6, "det {det}");
+        // exact Gram is nonsingular
+        let gf = crate::tensor::ops::gram_t(&xt);
+        let detf = gf.get(0, 0) as f64 * gf.get(1, 1) as f64
+            - gf.get(0, 1) as f64 * gf.get(1, 0) as f64;
+        assert!(detf > 0.0);
+    }
+}

@@ -1,0 +1,328 @@
+//! Row-major dense matrix generic over `f32` / `f64`.
+
+use crate::error::{Error, Result};
+use crate::util::prng::Rng;
+
+/// Scalar abstraction over the two float widths we support.
+pub trait Scalar:
+    Copy
+    + PartialOrd
+    + std::fmt::Debug
+    + std::fmt::Display
+    + std::ops::Add<Output = Self>
+    + std::ops::Sub<Output = Self>
+    + std::ops::Mul<Output = Self>
+    + std::ops::Div<Output = Self>
+    + std::ops::Neg<Output = Self>
+    + std::ops::AddAssign
+    + std::ops::SubAssign
+    + Send
+    + Sync
+    + 'static
+{
+    const ZERO: Self;
+    const ONE: Self;
+    const EPSILON: Self;
+    fn from_f64(v: f64) -> Self;
+    fn to_f64(self) -> f64;
+    fn sqrt(self) -> Self;
+    fn abs(self) -> Self;
+    fn is_finite(self) -> bool;
+}
+
+impl Scalar for f32 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    const EPSILON: Self = f32::EPSILON;
+    fn from_f64(v: f64) -> Self {
+        v as f32
+    }
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    fn sqrt(self) -> Self {
+        self.sqrt()
+    }
+    fn abs(self) -> Self {
+        self.abs()
+    }
+    fn is_finite(self) -> bool {
+        self.is_finite()
+    }
+}
+
+impl Scalar for f64 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    const EPSILON: Self = f64::EPSILON;
+    fn from_f64(v: f64) -> Self {
+        v
+    }
+    fn to_f64(self) -> f64 {
+        self
+    }
+    fn sqrt(self) -> Self {
+        self.sqrt()
+    }
+    fn abs(self) -> Self {
+        self.abs()
+    }
+    fn is_finite(self) -> bool {
+        self.is_finite()
+    }
+}
+
+/// Dense row-major matrix.
+#[derive(Clone, PartialEq)]
+pub struct Matrix<T: Scalar = f32> {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<T>,
+}
+
+impl<T: Scalar> std::fmt::Debug for Matrix<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "Matrix {}x{} [", self.rows, self.cols)?;
+        for i in 0..self.rows.min(6) {
+            write!(f, "  ")?;
+            for j in 0..self.cols.min(8) {
+                write!(f, "{:>10.4} ", self.get(i, j).to_f64())?;
+            }
+            writeln!(f, "{}", if self.cols > 8 { "…" } else { "" })?;
+        }
+        if self.rows > 6 {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+impl<T: Scalar> Matrix<T> {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![T::ZERO; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m.set(i, i, T::ONE);
+        }
+        m
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<T>) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(Error::shape(format!(
+                "from_vec: {} elements for {rows}x{cols}",
+                data.len()
+            )));
+        }
+        Ok(Matrix { rows, cols, data })
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> T) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    /// Standard-normal entries (deterministic in the seed).
+    pub fn randn(rows: usize, cols: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        Matrix {
+            rows,
+            cols,
+            data: (0..rows * cols).map(|_| T::from_f64(rng.normal())).collect(),
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> T {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: T) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[T] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [T] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<T> {
+        (0..self.rows).map(|i| self.get(i, j)).collect()
+    }
+
+    pub fn transpose(&self) -> Matrix<T> {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        // blocked transpose for cache friendliness
+        const B: usize = 32;
+        for ib in (0..self.rows).step_by(B) {
+            for jb in (0..self.cols).step_by(B) {
+                for i in ib..(ib + B).min(self.rows) {
+                    for j in jb..(jb + B).min(self.cols) {
+                        out.set(j, i, self.get(i, j));
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Copy a sub-block [r0..r1) × [c0..c1).
+    pub fn slice(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> Matrix<T> {
+        assert!(r1 <= self.rows && c1 <= self.cols && r0 <= r1 && c0 <= c1);
+        Matrix::from_fn(r1 - r0, c1 - c0, |i, j| self.get(r0 + i, c0 + j))
+    }
+
+    /// First `k` columns (the U_r slicing rule of the factor ABI).
+    pub fn first_cols(&self, k: usize) -> Matrix<T> {
+        self.slice(0, self.rows, 0, k.min(self.cols))
+    }
+
+    /// First `k` rows.
+    pub fn first_rows(&self, k: usize) -> Matrix<T> {
+        self.slice(0, k.min(self.rows), 0, self.cols)
+    }
+
+    /// Vertical stack: [self; other].
+    pub fn vstack(&self, other: &Matrix<T>) -> Result<Matrix<T>> {
+        if self.cols != other.cols {
+            return Err(Error::shape(format!(
+                "vstack: {}x{} on {}x{}",
+                self.rows, self.cols, other.rows, other.cols
+            )));
+        }
+        let mut data = self.data.clone();
+        data.extend_from_slice(&other.data);
+        Matrix::from_vec(self.rows + other.rows, self.cols, data)
+    }
+
+    /// Horizontal stack: [self, other].
+    pub fn hstack(&self, other: &Matrix<T>) -> Result<Matrix<T>> {
+        if self.rows != other.rows {
+            return Err(Error::shape("hstack row mismatch".to_string()));
+        }
+        let mut out = Matrix::zeros(self.rows, self.cols + other.cols);
+        for i in 0..self.rows {
+            out.row_mut(i)[..self.cols].copy_from_slice(self.row(i));
+            out.row_mut(i)[self.cols..].copy_from_slice(other.row(i));
+        }
+        Ok(out)
+    }
+
+    pub fn scale(&self, s: T) -> Matrix<T> {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| x * s).collect(),
+        }
+    }
+
+    pub fn add(&self, other: &Matrix<T>) -> Result<Matrix<T>> {
+        self.zip(other, |a, b| a + b)
+    }
+
+    pub fn sub(&self, other: &Matrix<T>) -> Result<Matrix<T>> {
+        self.zip(other, |a, b| a - b)
+    }
+
+    fn zip(&self, other: &Matrix<T>, f: impl Fn(T, T) -> T) -> Result<Matrix<T>> {
+        if self.rows != other.rows || self.cols != other.cols {
+            return Err(Error::shape(format!(
+                "elementwise: {}x{} vs {}x{}",
+                self.rows, self.cols, other.rows, other.cols
+            )));
+        }
+        Ok(Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(&a, &b)| f(a, b)).collect(),
+        })
+    }
+
+    pub fn all_finite(&self) -> bool {
+        self.data.iter().all(|x| x.is_finite())
+    }
+
+    /// Convert precision.
+    pub fn cast<U: Scalar>(&self) -> Matrix<U> {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|x| U::from_f64(x.to_f64())).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_construction() {
+        let m: Matrix<f64> = Matrix::from_fn(2, 3, |i, j| (i * 3 + j) as f64);
+        assert_eq!(m.get(1, 2), 5.0);
+        assert_eq!(m.row(1), &[3.0, 4.0, 5.0]);
+        assert_eq!(m.col(2), vec![2.0, 5.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m: Matrix<f32> = Matrix::randn(37, 53, 1);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn stacking() {
+        let a: Matrix<f64> = Matrix::eye(2);
+        let b = Matrix::zeros(1, 2);
+        let v = a.vstack(&b).unwrap();
+        assert_eq!(v.rows, 3);
+        let h = a.hstack(&a).unwrap();
+        assert_eq!(h.cols, 4);
+        assert_eq!(h.get(1, 3), 1.0);
+    }
+
+    #[test]
+    fn shape_errors() {
+        let a: Matrix<f64> = Matrix::eye(2);
+        let b: Matrix<f64> = Matrix::eye(3);
+        assert!(a.add(&b).is_err());
+        assert!(a.vstack(&b).is_err());
+        assert!(Matrix::<f32>::from_vec(2, 2, vec![0.0]).is_err());
+    }
+
+    #[test]
+    fn slicing() {
+        let m: Matrix<f64> = Matrix::from_fn(4, 4, |i, j| (i * 4 + j) as f64);
+        let s = m.slice(1, 3, 2, 4);
+        assert_eq!(s.rows, 2);
+        assert_eq!(s.get(0, 0), 6.0);
+        assert_eq!(m.first_cols(2).cols, 2);
+        assert_eq!(m.first_rows(9).rows, 4);
+    }
+
+    #[test]
+    fn cast_precision() {
+        let m: Matrix<f64> = Matrix::randn(3, 3, 2);
+        let f: Matrix<f32> = m.cast();
+        let back: Matrix<f64> = f.cast();
+        for (a, b) in m.data.iter().zip(&back.data) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+}

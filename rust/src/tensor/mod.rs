@@ -1,0 +1,11 @@
+//! Host tensor substrate: row-major dense matrices over f32/f64.
+//!
+//! This is the foundation of the pure-Rust numerics stack (S1/S2 in
+//! DESIGN.md) used for fp64 ground truth, host-side baselines, and
+//! verification of everything the PJRT runtime computes.
+
+pub mod lowp;
+pub mod matrix;
+pub mod ops;
+
+pub use matrix::{Matrix, Scalar};

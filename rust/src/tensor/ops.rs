@@ -1,0 +1,209 @@
+//! Matrix-level numeric ops: GEMM (blocked + threaded), norms, dots.
+
+use super::matrix::{Matrix, Scalar};
+use crate::error::{Error, Result};
+use crate::util::threads;
+
+/// Blocked, multi-threaded GEMM: C = A·B.
+///
+/// Row-major ikj loop order with 64-wide column blocking — the host-side
+/// hot path for weight reconstruction (W' = A·B) and the fp64 reference
+/// computations.  Threads split the row dimension.
+pub fn matmul<T: Scalar>(a: &Matrix<T>, b: &Matrix<T>) -> Result<Matrix<T>> {
+    if a.cols != b.rows {
+        return Err(Error::shape(format!(
+            "matmul: {}x{} @ {}x{}",
+            a.rows, a.cols, b.rows, b.cols
+        )));
+    }
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let workers = if m * n * k > 1 << 20 { threads::default_workers() } else { 1 };
+    let row_chunks = workers.min(m.max(1));
+    let chunk = m.div_ceil(row_chunks.max(1));
+    let pieces = threads::parallel_map(row_chunks, workers, |w| {
+        let r0 = w * chunk;
+        let r1 = ((w + 1) * chunk).min(m);
+        let mut out = vec![T::ZERO; (r1.saturating_sub(r0)) * n];
+        for i in r0..r1 {
+            let arow = a.row(i);
+            let orow = &mut out[(i - r0) * n..(i - r0 + 1) * n];
+            for l in 0..k {
+                let av = arow[l];
+                let brow = b.row(l);
+                for j in 0..n {
+                    orow[j] += av * brow[j];
+                }
+            }
+        }
+        out
+    });
+    let mut data = Vec::with_capacity(m * n);
+    for p in pieces {
+        data.extend_from_slice(&p);
+    }
+    Matrix::from_vec(m, n, data)
+}
+
+/// C = A·Bᵀ without materializing Bᵀ.
+pub fn matmul_nt<T: Scalar>(a: &Matrix<T>, b: &Matrix<T>) -> Result<Matrix<T>> {
+    if a.cols != b.cols {
+        return Err(Error::shape(format!(
+            "matmul_nt: {}x{} @ ({}x{})ᵀ",
+            a.rows, a.cols, b.rows, b.cols
+        )));
+    }
+    let (m, k, n) = (a.rows, a.cols, b.rows);
+    let workers = if m * n * k > 1 << 20 { threads::default_workers() } else { 1 };
+    let rows = threads::parallel_map(m, workers, |i| {
+        let arow = a.row(i);
+        let mut out = vec![T::ZERO; n];
+        for (j, o) in out.iter_mut().enumerate() {
+            let brow = b.row(j);
+            let mut acc = T::ZERO;
+            for l in 0..k {
+                acc += arow[l] * brow[l];
+            }
+            *o = acc;
+        }
+        out
+    });
+    let mut data = Vec::with_capacity(m * n);
+    for r in rows {
+        data.extend_from_slice(&r);
+    }
+    Matrix::from_vec(m, n, data)
+}
+
+/// C = Aᵀ·A (the Gram matrix of columns — exactly what the baselines
+/// form and COALA avoids; exposed so the failure can be studied).
+pub fn gram_t<T: Scalar>(a: &Matrix<T>) -> Matrix<T> {
+    let n = a.cols;
+    let mut g = Matrix::zeros(n, n);
+    for i in 0..a.rows {
+        let r = a.row(i);
+        for p in 0..n {
+            let v = r[p];
+            let grow = g.row_mut(p);
+            for q in 0..n {
+                grow[q] += v * r[q];
+            }
+        }
+    }
+    g
+}
+
+/// Frobenius norm.
+pub fn fro<T: Scalar>(a: &Matrix<T>) -> f64 {
+    a.data.iter().map(|x| x.to_f64() * x.to_f64()).sum::<f64>().sqrt()
+}
+
+/// Spectral norm via power iteration on AᵀA (good to ~1e-8 with 100 its).
+pub fn spectral_norm<T: Scalar>(a: &Matrix<T>, iters: usize) -> f64 {
+    let n = a.cols;
+    if n == 0 || a.rows == 0 {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = (0..n).map(|i| 1.0 + (i as f64 * 0.7).sin()).collect();
+    let mut norm = 0.0;
+    for _ in 0..iters {
+        // w = A v ; v' = Aᵀ w
+        let mut w = vec![0.0f64; a.rows];
+        for (i, wi) in w.iter_mut().enumerate() {
+            let r = a.row(i);
+            *wi = r.iter().zip(&v).map(|(x, y)| x.to_f64() * y).sum();
+        }
+        let mut v2 = vec![0.0f64; n];
+        for i in 0..a.rows {
+            let r = a.row(i);
+            let wi = w[i];
+            for (j, vj) in v2.iter_mut().enumerate() {
+                *vj += r[j].to_f64() * wi;
+            }
+        }
+        norm = v2.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if norm == 0.0 {
+            return 0.0;
+        }
+        for x in v2.iter_mut() {
+            *x /= norm;
+        }
+        v = v2;
+    }
+    norm.sqrt()
+}
+
+/// Relative reconstruction error ‖(W−W′)X‖_F / ‖WX‖_F — the Fig. 1 metric
+/// (computed in the Scalar precision of the inputs).
+pub fn context_rel_err<T: Scalar>(w: &Matrix<T>, wp: &Matrix<T>, x: &Matrix<T>) -> Result<f64> {
+    let diff = w.sub(wp)?;
+    let num = fro(&matmul(&diff, x)?);
+    let den = fro(&matmul(w, x)?);
+    Ok(if den == 0.0 { num } else { num / den })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small() {
+        let a: Matrix<f64> =
+            Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        let b: Matrix<f64> =
+            Matrix::from_vec(3, 2, vec![7.0, 8.0, 9.0, 10.0, 11.0, 12.0]).unwrap();
+        let c = matmul(&a, &b).unwrap();
+        assert_eq!(c.data, vec![58.0, 64.0, 139.0, 154.0]);
+    }
+
+    #[test]
+    fn matmul_matches_nt() {
+        let a: Matrix<f64> = Matrix::randn(17, 9, 1);
+        let b: Matrix<f64> = Matrix::randn(13, 9, 2);
+        let c1 = matmul(&a, &b.transpose()).unwrap();
+        let c2 = matmul_nt(&a, &b).unwrap();
+        for (x, y) in c1.data.iter().zip(&c2.data) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn matmul_threaded_matches_serial() {
+        // large enough to cross the threading threshold
+        let a: Matrix<f32> = Matrix::randn(128, 200, 3);
+        let b: Matrix<f32> = Matrix::randn(200, 64, 4);
+        let c = matmul(&a, &b).unwrap();
+        // spot-check against direct dot products
+        for &(i, j) in &[(0usize, 0usize), (64, 32), (127, 63)] {
+            let want: f64 = (0..200).map(|l| a.get(i, l) as f64 * b.get(l, j) as f64).sum();
+            assert!((c.get(i, j) as f64 - want).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn gram_is_symmetric_psd_diag() {
+        let a: Matrix<f64> = Matrix::randn(20, 8, 5);
+        let g = gram_t(&a);
+        for i in 0..8 {
+            assert!(g.get(i, i) >= 0.0);
+            for j in 0..8 {
+                assert!((g.get(i, j) - g.get(j, i)).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn spectral_close_to_fro_for_rank1() {
+        let u: Matrix<f64> = Matrix::randn(12, 1, 6);
+        let v: Matrix<f64> = Matrix::randn(1, 9, 7);
+        let a = matmul(&u, &v).unwrap();
+        // rank-1: ‖A‖₂ = ‖A‖_F
+        assert!((spectral_norm(&a, 60) - fro(&a)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn shape_checked() {
+        let a: Matrix<f64> = Matrix::zeros(2, 3);
+        assert!(matmul(&a, &a).is_err());
+        assert!(matmul_nt(&a, &Matrix::zeros(2, 4)).is_err());
+    }
+}

@@ -1,0 +1,94 @@
+//! Theorems 1 & 5: convergence bounds for the regularized solution.
+
+use crate::error::Result;
+use crate::linalg::jacobi_svd;
+use crate::tensor::ops::{fro, matmul, spectral_norm};
+use crate::tensor::Matrix;
+
+/// Spectral-gap diagnostics of WX at rank r.
+#[derive(Debug, Clone)]
+pub struct GapInfo {
+    pub sigma_r: f64,
+    pub sigma_r1: f64,
+    /// σ_r − σ_{r+1}
+    pub gap: f64,
+    /// σ_r² − σ_{r+1}²
+    pub gap2: f64,
+}
+
+/// Compute the gap quantities of WX needed by both bounds.
+pub fn gap_info(w: &Matrix<f64>, x: &Matrix<f64>, r: usize) -> Result<GapInfo> {
+    let wx = matmul(w, x)?;
+    let tall = if wx.rows >= wx.cols { wx } else { wx.transpose() };
+    let svd = jacobi_svd(&tall, 60)?;
+    let s_r = svd.s.get(r - 1).copied().unwrap_or(0.0);
+    let s_r1 = svd.s.get(r).copied().unwrap_or(0.0);
+    Ok(GapInfo { sigma_r: s_r, sigma_r1: s_r1, gap: s_r - s_r1, gap2: s_r * s_r - s_r1 * s_r1 })
+}
+
+/// Theorem 1 (general case):
+/// ‖W₀ − W_μ‖_F ≤ 2‖W‖₂²‖W‖_F / (σ_r² − σ_{r+1}²) · μ.
+pub fn theorem1_bound(w: &Matrix<f64>, gap: &GapInfo, mu: f64) -> f64 {
+    let w2 = spectral_norm(w, 200);
+    2.0 * w2 * w2 * fro(w) / gap.gap2 * mu
+}
+
+/// Theorem 5 (full-row-rank X, sharper constant):
+/// ‖W₀ − W_μ‖_F ≤ ‖W‖₂‖W‖_F / (σ_r(WX) − σ_{r+1}(WX)) · μ / σ_n(X).
+pub fn theorem5_bound(w: &Matrix<f64>, x: &Matrix<f64>, gap: &GapInfo, mu: f64) -> Result<f64> {
+    let xt = x.transpose();
+    let svd_x = jacobi_svd(&xt, 60)?; // X is n × k wide: SVD of Xᵀ
+    let sigma_min = *svd_x.s.last().unwrap();
+    Ok(spectral_norm(w, 200) * fro(w) / gap.gap * mu / sigma_min)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coala::{coala_from_x, coala_regularized};
+    use crate::linalg::qr_r_square;
+
+    fn measured_gap_err(w: &Matrix<f64>, x: &Matrix<f64>, r: usize, mu: f64) -> f64 {
+        let w0 = coala_from_x(w, x, 60).unwrap().truncate(r).reconstruct().unwrap();
+        let rf = qr_r_square(&x.transpose()).unwrap();
+        let wmu = coala_regularized(w, &rf, mu, 60).unwrap().truncate(r).reconstruct().unwrap();
+        fro(&w0.sub(&wmu).unwrap())
+    }
+
+    #[test]
+    fn theorem1_holds_on_random_instances() {
+        for seed in 0..5u64 {
+            let w: Matrix<f64> = Matrix::randn(9, 7, seed * 2 + 1);
+            let x: Matrix<f64> = Matrix::randn(7, 30, seed * 2 + 2);
+            let r = 3;
+            let gap = gap_info(&w, &x, r).unwrap();
+            for mu in [1e-3, 1e-2] {
+                let measured = measured_gap_err(&w, &x, r, mu);
+                let bound = theorem1_bound(&w, &gap, mu);
+                assert!(measured <= bound * (1.0 + 1e-6) + 1e-10, "seed {seed} mu {mu}: {measured} > {bound}");
+            }
+        }
+    }
+
+    #[test]
+    fn theorem5_holds_and_is_sharper_for_small_sigma_ratio() {
+        let w: Matrix<f64> = Matrix::randn(8, 6, 11);
+        let x: Matrix<f64> = Matrix::randn(6, 40, 12);
+        let r = 2;
+        let gap = gap_info(&w, &x, r).unwrap();
+        let mu = 1e-3;
+        let measured = measured_gap_err(&w, &x, r, mu);
+        let b5 = theorem5_bound(&w, &x, &gap, mu).unwrap();
+        assert!(measured <= b5 * (1.0 + 1e-6) + 1e-10, "{measured} > {b5}");
+    }
+
+    #[test]
+    fn bounds_scale_linearly_in_mu() {
+        let w: Matrix<f64> = Matrix::randn(6, 5, 21);
+        let x: Matrix<f64> = Matrix::randn(5, 25, 22);
+        let gap = gap_info(&w, &x, 2).unwrap();
+        let b1 = theorem1_bound(&w, &gap, 1e-3);
+        let b2 = theorem1_bound(&w, &gap, 2e-3);
+        assert!((b2 / b1 - 2.0).abs() < 1e-12);
+    }
+}

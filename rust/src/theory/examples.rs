@@ -1,0 +1,157 @@
+//! Constructed examples G.1 and G.2 from the paper's appendix.
+
+use crate::error::Result;
+use crate::tensor::lowp::{gram_lowp, Precision};
+use crate::tensor::ops::matmul;
+use crate::tensor::Matrix;
+use crate::util::prng::Rng;
+
+/// Example G.1: the 2×2 matrix whose Gram formation loses σ ≈ √ε.
+///
+/// X = [[1, 1], [0, √ε]] with ε = ε_p/2 (ε_p = the target format's unit
+/// roundoff).  XᵀX = [[1, 1], [1, 1+ε]]; forming it in precision p
+/// rounds 1+ε back to 1, making the Gram exactly singular.  Returns
+/// (σ_exact_min, σ_via_gram_min): the true smallest singular value of X
+/// and the one recovered from the precision-p Gram matrix — the latter
+/// collapses, demonstrating the O(√ε) loss.
+pub fn example_g1(p: Precision) -> Result<(f64, f64)> {
+    let eps = p.eps() / 2.0;
+    let x = Matrix::<f32>::from_vec(2, 2, vec![1.0, 1.0, 0.0, (eps as f32).sqrt()])?;
+    // exact singular values in f64
+    let xf: Matrix<f64> = x.cast();
+    let svd = crate::linalg::jacobi_svd(&xf, 60)?;
+    let exact_min = *svd.s.last().unwrap();
+
+    // Gram formed in precision p (rows of X are the "samples" so the
+    // accumulation is XᵀX, the paper's matrix), spectrum in f64
+    let g = gram_lowp(&x, p);
+    let gf: Matrix<f64> = g.cast();
+    let (lam, _) = crate::linalg::eigh(&gf, 60)?;
+    let gram_min = lam.last().unwrap().max(0.0).sqrt();
+    Ok((exact_min, gram_min))
+}
+
+/// One instance of Example G.2: a synthetic WX with every spectral
+/// quantity pinned except the σ_r/σ_{r+1} gap.
+#[derive(Debug, Clone)]
+pub struct G2Instance {
+    pub w: Matrix<f64>,
+    pub x: Matrix<f64>,
+    pub rank: usize,
+    pub gap: f64,
+}
+
+/// Build the G.2 family: fixed singular vectors and spectrum except that
+/// σ_{r+1} = σ_r − gap.  As gap → 0 the regularized solution's
+/// sensitivity grows like 1/gap (Fig. 6).
+///
+/// Construction: X = I (so WX = W) and W = U·diag(σ)·Vᵀ with frozen
+/// random orthogonal U, V (from QR of a seeded Gaussian).
+pub fn example_g2(n: usize, rank: usize, gap: f64, seed: u64) -> Result<G2Instance> {
+    assert!(rank + 1 <= n);
+    let mut rng = Rng::new(seed);
+    let gauss_u: Matrix<f64> =
+        Matrix::from_fn(n, n, |_, _| rng.normal());
+    let gauss_v: Matrix<f64> =
+        Matrix::from_fn(n, n, |_, _| rng.normal());
+    let u = orthogonalize(&gauss_u)?;
+    let v = orthogonalize(&gauss_v)?;
+
+    // spectrum: 10, 9, …; σ_rank pinned, σ_{rank+1} = σ_rank − gap,
+    // the tail decays below it.
+    let mut sigma = vec![0.0f64; n];
+    for (i, s) in sigma.iter_mut().enumerate().take(rank) {
+        *s = 10.0 - i as f64 * (4.0 / rank as f64);
+    }
+    let s_r = sigma[rank - 1];
+    sigma[rank] = s_r - gap;
+    for i in rank + 1..n {
+        sigma[i] = (s_r - gap) * 0.5_f64.powi((i - rank) as i32);
+    }
+
+    let mut us = u.clone();
+    for i in 0..n {
+        for j in 0..n {
+            us.set(i, j, u.get(i, j) * sigma[j]);
+        }
+    }
+    let w = matmul(&us, &v.transpose())?;
+    Ok(G2Instance { w, x: Matrix::eye(n), rank, gap })
+}
+
+/// Gram–Schmidt orthogonalization (QR's Q via MGS; only used to build
+/// test fixtures, so numerical elegance is not critical).
+fn orthogonalize(a: &Matrix<f64>) -> Result<Matrix<f64>> {
+    let (m, n) = (a.rows, a.cols);
+    let mut q = a.clone();
+    for j in 0..n {
+        for k in 0..j {
+            let mut dot = 0.0;
+            for i in 0..m {
+                dot += q.get(i, k) * q.get(i, j);
+            }
+            for i in 0..m {
+                let v = q.get(i, j) - dot * q.get(i, k);
+                q.set(i, j, v);
+            }
+        }
+        let norm: f64 = (0..m).map(|i| q.get(i, j).powi(2)).sum::<f64>().sqrt();
+        for i in 0..m {
+            q.set(i, j, q.get(i, j) / norm);
+        }
+    }
+    Ok(q)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coala::{coala_from_x, coala_regularized};
+    use crate::linalg::qr_r_square;
+    use crate::tensor::ops::fro;
+
+    #[test]
+    fn g1_gram_loses_sqrt_eps() {
+        let (exact, via_gram) = example_g1(Precision::F16).unwrap();
+        // exact σ_min ≈ √(ε/2)/√2 > 0; fp16 Gram collapses it to ~0
+        assert!(exact > 1e-3, "exact {exact}");
+        assert!(via_gram < exact * 0.2, "gram path kept σ: {via_gram} vs {exact}");
+    }
+
+    #[test]
+    fn g1_f32_also_loses() {
+        let (exact, via_gram) = example_g1(Precision::F32).unwrap();
+        assert!(exact > 1e-5);
+        assert!(via_gram < exact * 0.2);
+    }
+
+    #[test]
+    fn g2_spectrum_has_requested_gap() {
+        let inst = example_g2(12, 4, 0.25, 7).unwrap();
+        let svd = crate::linalg::jacobi_svd(&inst.w, 80).unwrap();
+        assert!((svd.s[3] - svd.s[4] - 0.25).abs() < 1e-8);
+    }
+
+    #[test]
+    fn g2_sensitivity_grows_as_gap_shrinks() {
+        // ‖W₀ − W_μ‖ at fixed μ must grow when the gap shrinks
+        let mu = 1e-3;
+        let mut errs = Vec::new();
+        for gap in [1.0, 0.1, 0.01] {
+            let inst = example_g2(10, 3, gap, 3).unwrap();
+            let w0 = coala_from_x(&inst.w, &inst.x, 80)
+                .unwrap()
+                .truncate(3)
+                .reconstruct()
+                .unwrap();
+            let r = qr_r_square(&inst.x.transpose()).unwrap();
+            let wmu = coala_regularized(&inst.w, &r, mu, 80)
+                .unwrap()
+                .truncate(3)
+                .reconstruct()
+                .unwrap();
+            errs.push(fro(&w0.sub(&wmu).unwrap()));
+        }
+        assert!(errs[0] < errs[1] && errs[1] < errs[2], "{errs:?}");
+    }
+}

@@ -1,0 +1,7 @@
+//! Theory toolkit (S13): the paper's bounds and constructed examples.
+
+pub mod bounds;
+pub mod examples;
+
+pub use bounds::{theorem1_bound, theorem5_bound, GapInfo};
+pub use examples::{example_g1, example_g2, G2Instance};

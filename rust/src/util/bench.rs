@@ -1,0 +1,153 @@
+//! Criterion-style micro/macro benchmark harness (criterion itself is
+//! not in the offline vendor set).  `cargo bench` targets use
+//! `harness = false` and drive this directly.
+//!
+//! Methodology: warmup runs, then timed iterations until both a minimum
+//! iteration count and a minimum wall budget are met; reports mean ±
+//! sample std with min/max, matching how Table 1 reports `± std`.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl Stats {
+    pub fn from_samples(name: &str, samples: &[f64]) -> Stats {
+        let n = samples.len().max(1) as f64;
+        let mean = samples.iter().sum::<f64>() / n;
+        let var = if samples.len() > 1 {
+            samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / (n - 1.0)
+        } else {
+            0.0
+        };
+        Stats {
+            name: name.to_string(),
+            iters: samples.len(),
+            mean_s: mean,
+            std_s: var.sqrt(),
+            min_s: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+            max_s: samples.iter().cloned().fold(0.0, f64::max),
+        }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<36} {:>10} ± {:<9} (n={}, min {}, max {})",
+            self.name,
+            fmt_dur(self.mean_s),
+            fmt_dur(self.std_s),
+            self.iters,
+            fmt_dur(self.min_s),
+            fmt_dur(self.max_s),
+        )
+    }
+}
+
+pub fn fmt_dur(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3}µs", s * 1e6)
+    } else {
+        format!("{:.1}ns", s * 1e9)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchOpts {
+    pub warmup: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub min_wall: Duration,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts {
+            warmup: 2,
+            min_iters: 5,
+            max_iters: 50,
+            min_wall: Duration::from_millis(500),
+        }
+    }
+}
+
+impl BenchOpts {
+    /// Faster profile for expensive end-to-end benches (Table 1 scale).
+    pub fn heavy() -> Self {
+        BenchOpts { warmup: 1, min_iters: 3, max_iters: 5, min_wall: Duration::ZERO }
+    }
+
+    /// Honour `COALA_BENCH_FAST=1` for CI-ish smoke runs.
+    pub fn from_env(self) -> Self {
+        if std::env::var("COALA_BENCH_FAST").as_deref() == Ok("1") {
+            BenchOpts { warmup: 0, min_iters: 1, max_iters: 2, min_wall: Duration::ZERO }
+        } else {
+            self
+        }
+    }
+}
+
+/// Time `f`, which must consume its own inputs (use `std::hint::black_box`
+/// inside to defeat DCE).  Returns per-iteration stats.
+pub fn bench<F: FnMut()>(name: &str, opts: &BenchOpts, mut f: F) -> Stats {
+    for _ in 0..opts.warmup {
+        f();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while samples.len() < opts.min_iters
+        || (start.elapsed() < opts.min_wall && samples.len() < opts.max_iters)
+    {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+        if samples.len() >= opts.max_iters {
+            break;
+        }
+    }
+    let s = Stats::from_samples(name, &samples);
+    println!("{}", s.report());
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_math() {
+        let s = Stats::from_samples("x", &[1.0, 2.0, 3.0]);
+        assert!((s.mean_s - 2.0).abs() < 1e-12);
+        assert!((s.std_s - 1.0).abs() < 1e-12);
+        assert_eq!(s.min_s, 1.0);
+        assert_eq!(s.max_s, 3.0);
+    }
+
+    #[test]
+    fn bench_runs() {
+        let opts = BenchOpts { warmup: 1, min_iters: 3, max_iters: 4, min_wall: Duration::ZERO };
+        let mut n = 0u64;
+        let s = bench("noop", &opts, || {
+            n = std::hint::black_box(n + 1);
+        });
+        assert!(s.iters >= 3);
+    }
+
+    #[test]
+    fn fmt_scales() {
+        assert!(fmt_dur(2.0).ends_with('s'));
+        assert!(fmt_dur(2e-3).ends_with("ms"));
+        assert!(fmt_dur(2e-6).ends_with("µs"));
+        assert!(fmt_dur(2e-9).ends_with("ns"));
+    }
+}

@@ -1,0 +1,25 @@
+//! Utility substrates.
+//!
+//! The build is fully offline and the vendor set only covers the `xla`
+//! crate's dependency closure, so the usual ecosystem crates (serde,
+//! clap, criterion, proptest, rand, rayon, tokio) are unavailable.  Each
+//! gets a small, focused replacement here — documented as an explicit
+//! substitution in DESIGN.md §S14:
+//!
+//! * [`json`]   — JSON parser/writer (manifest.json, experiment dumps)
+//! * [`prng`]   — SplitMix64 + xoshiro256** (deterministic workloads)
+//! * [`cli`]    — declarative flag parser for the `coala` binary
+//! * [`bench`]  — criterion-style measurement harness (warmup, outlier
+//!                trimming, mean ± std) used by `cargo bench` targets
+//! * [`prop`]   — miniature property-testing driver (random cases with
+//!                shrinking-by-halving) for coordinator invariants
+//! * [`table`]  — fixed-width table rendering for the repro reports
+//! * [`threads`]— scoped worker-pool helpers (std::thread based)
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod prop;
+pub mod table;
+pub mod threads;

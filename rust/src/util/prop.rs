@@ -1,0 +1,137 @@
+//! Miniature property-testing driver (proptest is not in the vendor set).
+//!
+//! `check(seed-cases, gen, prop)` runs `prop` over generated cases; on
+//! failure it re-runs a deterministic shrink schedule (halving every
+//! integer knob the generator exposes) and reports the smallest failure.
+//! Coordinator invariants (routing, batching, budget allocation) and the
+//! host linalg are covered with this.
+
+use crate::util::prng::Rng;
+
+/// Outcome of a property check.
+#[derive(Debug)]
+pub enum PropResult<C> {
+    Ok { cases: usize },
+    Failed { minimal: C, message: String, shrinks: usize },
+}
+
+/// A shrinkable case: produce strictly "smaller" variants of itself.
+pub trait Shrink: Sized + Clone + std::fmt::Debug {
+    fn shrink(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        let mut v = Vec::new();
+        if *self > 0 {
+            v.push(self / 2);
+            v.push(self - 1);
+        }
+        v
+    }
+}
+
+impl<A: Shrink, B: Shrink> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut v: Vec<Self> = self.0.shrink().into_iter().map(|a| (a, self.1.clone())).collect();
+        v.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        v
+    }
+}
+
+impl<A: Shrink, B: Shrink, C: Shrink> Shrink for (A, B, C) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut v: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone(), self.2.clone()))
+            .collect();
+        v.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b, self.2.clone())));
+        v.extend(self.2.shrink().into_iter().map(|c| (self.0.clone(), self.1.clone(), c)));
+        v
+    }
+}
+
+/// Run `prop` on `cases` generated inputs; shrink on first failure.
+pub fn check<C, G, P>(seed: u64, cases: usize, mut gen: G, mut prop: P) -> PropResult<C>
+where
+    C: Shrink,
+    G: FnMut(&mut Rng) -> C,
+    P: FnMut(&C) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    for i in 0..cases {
+        let case = gen(&mut rng);
+        if let Err(msg) = prop(&case) {
+            // greedy shrink
+            let mut best = case;
+            let mut best_msg = msg;
+            let mut shrinks = 0;
+            'outer: loop {
+                for cand in best.shrink() {
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        shrinks += 1;
+                        if shrinks > 200 {
+                            break 'outer;
+                        }
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            let _ = i;
+            return PropResult::Failed { minimal: best, message: best_msg, shrinks };
+        }
+    }
+    PropResult::Ok { cases }
+}
+
+/// Panic (with the minimal counterexample) unless the property held.
+pub fn assert_prop<C, G, P>(name: &str, seed: u64, cases: usize, gen: G, prop: P)
+where
+    C: Shrink,
+    G: FnMut(&mut Rng) -> C,
+    P: FnMut(&C) -> Result<(), String>,
+{
+    match check(seed, cases, gen, prop) {
+        PropResult::Ok { .. } => {}
+        PropResult::Failed { minimal, message, shrinks } => {
+            panic!("property `{name}` failed after {shrinks} shrinks on {minimal:?}: {message}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_valid_property() {
+        assert_prop("add-commutes", 1, 200, |r| (r.below(100), r.below(100)), |(a, b)| {
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    fn shrinks_to_small_counterexample() {
+        let res = check(
+            2,
+            500,
+            |r| r.below(1000),
+            |&n| if n < 10 { Ok(()) } else { Err(format!("{n} too big")) },
+        );
+        match res {
+            PropResult::Failed { minimal, .. } => assert!(minimal >= 10 && minimal <= 20),
+            _ => panic!("should fail"),
+        }
+    }
+}

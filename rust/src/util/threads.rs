@@ -1,0 +1,70 @@
+//! Scoped worker-pool helpers (std::thread based; rayon/tokio are not in
+//! the offline vendor set).  Used by the TSQR tree scheduler and the
+//! host-linalg parallel matmul.
+
+/// Run `f(i)` for i in 0..n across up to `workers` scoped threads and
+/// collect results in order.  `f` must be Sync; per-item work should be
+/// coarse enough to amortize thread spawn (we chunk internally).
+pub fn parallel_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = workers.max(1).min(n.max(1));
+    if workers <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let slots: Vec<std::sync::Mutex<&mut Option<T>>> =
+        out.iter_mut().map(std::sync::Mutex::new).collect();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let v = f(i);
+                **slots[i].lock().unwrap() = Some(v);
+            });
+        }
+    });
+    out.into_iter().map(|o| o.expect("worker failed to fill slot")).collect()
+}
+
+/// Number of workers to default to (respects COALA_THREADS).
+pub fn default_workers() -> usize {
+    if let Ok(v) = std::env::var("COALA_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_order() {
+        let v = parallel_map(100, 8, |i| i * i);
+        assert_eq!(v.len(), 100);
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i * i);
+        }
+    }
+
+    #[test]
+    fn single_worker_fallback() {
+        let v = parallel_map(5, 1, |i| i + 1);
+        assert_eq!(v, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn zero_items() {
+        let v: Vec<usize> = parallel_map(0, 4, |i| i);
+        assert!(v.is_empty());
+    }
+}

@@ -1,0 +1,126 @@
+//! Integration tests across the full stack (artifacts required; these
+//! are the `cargo test` gates `make test` runs after `make artifacts`).
+
+use coala::calib::dataset::{Corpus, TaskBank};
+use coala::coala::{Method, MuRule};
+use coala::coordinator::{CompressionJob, Pipeline};
+use coala::eval::{eval_tasks, perplexity};
+use coala::model::ModelWeights;
+use coala::runtime::{conformance, Executor};
+use coala::tensor::ops::context_rel_err;
+use coala::tensor::Matrix;
+use coala::util::prop::assert_prop;
+
+fn have_artifacts() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+#[test]
+fn conformance_suite_is_green() {
+    if !have_artifacts() {
+        return;
+    }
+    let results = conformance::run_all("artifacts").unwrap();
+    for r in &results {
+        assert!(r.pass, "{}: {:.2e} > {:.0e}", r.name, r.worst_rel, r.tol);
+    }
+}
+
+#[test]
+fn device_and_host_coala_agree_on_model_weights() {
+    if !have_artifacts() {
+        return;
+    }
+    // property test over real trained projections: the PJRT factorize
+    // artifact and the host f64 implementation must attain the same
+    // context error at random ranks.
+    let ex = Executor::new("artifacts").unwrap();
+    let spec = ex.manifest.config("tiny").unwrap().clone();
+    let w = ModelWeights::load("artifacts", &spec).unwrap();
+    let n = spec.d_model;
+    let c = spec.chunk_cols();
+    let projections: Vec<String> =
+        spec.compressible.iter().filter(|p| p.contains("wq") || p.contains("wv")).cloned().collect();
+    assert_prop(
+        "device-host-parity",
+        3,
+        6,
+        |rng| (rng.below(projections.len()), 1 + rng.below(n / 2)),
+        |&(pi, rank)| {
+            let wm = w.matrix(&projections[pi]).map_err(|e| e.to_string())?;
+            let chunk = Matrix::<f32>::randn(c, n, (pi * 1000 + rank) as u64);
+            let r = coala::runtime::ops::tsqr_step(&ex, &Matrix::zeros(n, n), &chunk)
+                .map_err(|e| e.to_string())?;
+            let dev = coala::runtime::ops::factorize(&ex, &wm, &r).map_err(|e| e.to_string())?;
+            let x = chunk.transpose();
+            let wd = dev.truncate(rank).reconstruct().map_err(|e| e.to_string())?;
+            let e_dev = context_rel_err(&wm, &wd, &x).map_err(|e| e.to_string())?;
+            let host = coala::coala::coala_from_x(&wm.cast::<f64>(), &x.cast::<f64>(), 40)
+                .map_err(|e| e.to_string())?;
+            let wh = host.truncate(rank).reconstruct().map_err(|e| e.to_string())?;
+            let e_host =
+                context_rel_err(&wm.cast::<f64>(), &wh, &x.cast::<f64>()).map_err(|e| e.to_string())?;
+            if (e_dev - e_host).abs() > 2e-3 + 0.01 * e_host {
+                return Err(format!("rank {rank}: device {e_dev} vs host {e_host}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn compression_quality_ordering_holds() {
+    if !have_artifacts() {
+        return;
+    }
+    // The paper's core empirical claim, end to end: at a fixed budget the
+    // context-aware optimal methods (COALA) must beat context-free SVD
+    // on perplexity of the compressed model.
+    let ex = Executor::new("artifacts").unwrap();
+    let corpus = Corpus::load("artifacts").unwrap();
+    let spec = ex.manifest.config("tiny").unwrap().clone();
+    let w = ModelWeights::load("artifacts", &spec).unwrap();
+    let pipe = Pipeline::new(&ex, spec.clone(), &w);
+    let val = corpus.split("val").unwrap();
+
+    let mut ppls = std::collections::BTreeMap::new();
+    for (label, m) in [
+        ("coala", Method::Coala(MuRule::None)),
+        ("coala_reg", Method::Coala(MuRule::Adaptive { lambda: 3.0 })),
+        ("plain_svd", Method::PlainSvd),
+    ] {
+        let mut job = CompressionJob::new("tiny", m, 0.4);
+        job.calib_batches = 4;
+        let out = pipe.run(&job, &corpus).unwrap();
+        let rec = out.model.reconstruct_into(&w).unwrap();
+        ppls.insert(label, perplexity(&ex, &spec, &rec, val, 3).unwrap());
+    }
+    assert!(
+        ppls["coala"] < ppls["plain_svd"],
+        "context-aware must beat context-free: {ppls:?}"
+    );
+    assert!(ppls["coala_reg"] < ppls["plain_svd"] * 1.05, "{ppls:?}");
+}
+
+#[test]
+fn compressed_model_keeps_probe_signal_at_high_ratio() {
+    if !have_artifacts() {
+        return;
+    }
+    let ex = Executor::new("artifacts").unwrap();
+    let corpus = Corpus::load("artifacts").unwrap();
+    let spec = ex.manifest.config("tiny").unwrap().clone();
+    let w = ModelWeights::load("artifacts", &spec).unwrap();
+    let bank = TaskBank::load("artifacts", "base", &ex.manifest.task_names).unwrap();
+    let base = eval_tasks(&ex, &spec, &w, &bank, Some(256)).unwrap().average();
+
+    let pipe = Pipeline::new(&ex, spec.clone(), &w);
+    let mut job = CompressionJob::new("tiny", Method::Coala(MuRule::Adaptive { lambda: 3.0 }), 0.8);
+    job.calib_batches = 4;
+    let out = pipe.run(&job, &corpus).unwrap();
+    let rec = out.model.reconstruct_into(&w).unwrap();
+    let comp = eval_tasks(&ex, &spec, &rec, &bank, Some(256)).unwrap().average();
+    // keeping 80 % of the projection params must retain most signal
+    assert!(comp > base - 15.0, "base {base} compressed {comp}");
+    assert!(comp > 30.0, "compressed model lost the task signal: {comp}");
+}
