@@ -1,20 +1,64 @@
 //! Bench: the PJRT-executed factorization artifacts (the request-path
 //! hot ops) + host-linalg equivalents for the speedup ratio.
+//!
+//! The host section needs no artifacts — in particular it measures the
+//! streaming-TSQR fold with the reusable scratch buffer
+//! (`linalg::tsqr::TsqrFolder`) against the naive re-stacking fold it
+//! replaced (`[R ; chunk]` vstack + fresh QR per fold).
 
-use coala::linalg::qr_r_square;
+use coala::linalg::{qr_r_square, TsqrFolder};
 use coala::runtime::{ops, Executor};
 use coala::tensor::Matrix;
 use coala::util::bench::{bench, BenchOpts};
 
+/// The pre-refactor fold: allocate the stacked matrix and a QR working
+/// copy on every chunk.
+fn tsqr_naive(chunks: &[Matrix<f32>]) -> Matrix<f32> {
+    let n = chunks[0].cols;
+    let mut r = Matrix::zeros(n, n);
+    for c in chunks {
+        r = qr_r_square(&r.vstack(c).unwrap()).unwrap();
+    }
+    r
+}
+
+fn host_benches(opts: &BenchOpts) {
+    println!("== host linalg benches (no artifacts needed) ==");
+    let (n, c, folds) = (192usize, 512usize, 8usize);
+    let chunks: Vec<Matrix<f32>> = (0..folds).map(|i| Matrix::randn(c, n, i as u64)).collect();
+
+    bench(&format!("host/tsqr_fold naive {n}x{c}x{folds}"), opts, || {
+        std::hint::black_box(tsqr_naive(&chunks));
+    });
+    bench(&format!("host/tsqr_fold scratch {n}x{c}x{folds}"), opts, || {
+        let mut folder = TsqrFolder::with_chunk_capacity(n, c);
+        for ch in &chunks {
+            folder.fold(ch).unwrap();
+        }
+        std::hint::black_box(folder.finish());
+    });
+    bench(&format!("host/qr {c}x{n}"), opts, || {
+        std::hint::black_box(qr_r_square(&chunks[0]).unwrap());
+    });
+
+    let w = Matrix::<f32>::randn(n, n, 3);
+    let r = tsqr_naive(&chunks[..1]);
+    bench(&format!("host/coala_factorize {n}x{n}"), opts, || {
+        std::hint::black_box(coala::coala::coala_factorize(&w, &r, 12).unwrap());
+    });
+}
+
 fn main() {
-    if !std::path::Path::new("artifacts/manifest.json").exists() {
-        println!("kernels bench: artifacts/ missing — run `make artifacts` first");
+    let opts = BenchOpts::default().from_env();
+    host_benches(&opts);
+
+    if !coala::runtime::device_available("artifacts") {
+        println!("kernels bench: no artifacts or no pjrt feature — skipping PJRT op benches");
         return;
     }
     let ex = Executor::new("artifacts").unwrap();
     let cfg = ex.manifest.config("tiny").unwrap().clone();
     let (n, f, c) = (cfg.d_model, cfg.d_ff, cfg.chunk_cols());
-    let opts = BenchOpts::default().from_env();
     println!("== artifact op benches (tiny shapes) ==");
 
     let chunk_n = Matrix::<f32>::randn(c, n, 1);
@@ -26,9 +70,6 @@ fn main() {
     });
     bench(&format!("pjrt/tsqr_step {f}x{c}"), &opts, || {
         std::hint::black_box(ops::tsqr_step(&ex, &r0f, &chunk_f).unwrap());
-    });
-    bench(&format!("host/qr {c}x{n}"), &opts, || {
-        std::hint::black_box(qr_r_square(&chunk_n).unwrap());
     });
 
     let w = Matrix::<f32>::randn(n, n, 3);
@@ -45,8 +86,5 @@ fn main() {
     });
     bench(&format!("pjrt/svdllm2 {n}x{n}"), &opts, || {
         std::hint::black_box(ops::svdllm2(&ex, &w, &g).unwrap());
-    });
-    bench(&format!("host/coala_factorize {n}x{n}"), &opts, || {
-        std::hint::black_box(coala::coala::coala_factorize(&w, &r, 12).unwrap());
     });
 }

@@ -1,8 +1,9 @@
 //! Bench: end-to-end pipeline stages + the overlapped scheduler vs the
 //! sequential calibration (the §Perf L3 target).
 
+use coala::calib::accumulate::AccumKind;
 use coala::calib::dataset::Corpus;
-use coala::coala::{Method, MuRule};
+use coala::coala::compressor::{resolve, Compressor};
 use coala::coordinator::scheduler::calibrate_overlapped;
 use coala::coordinator::{CompressionJob, Pipeline, TsqrTreeRunner};
 use coala::model::ModelWeights;
@@ -11,8 +12,8 @@ use coala::tensor::Matrix;
 use coala::util::bench::{bench, BenchOpts};
 
 fn main() {
-    if !std::path::Path::new("artifacts/manifest.json").exists() {
-        println!("pipeline bench: artifacts/ missing — run `make artifacts` first");
+    if !coala::runtime::device_available("artifacts") {
+        println!("pipeline bench: needs artifacts/ and the pjrt feature");
         return;
     }
     let ex = Executor::new("artifacts").unwrap();
@@ -22,7 +23,7 @@ fn main() {
     let opts = BenchOpts::heavy().from_env();
 
     let pipe = Pipeline::new(&ex, spec.clone(), &w);
-    let mut job = CompressionJob::new("tiny", Method::Coala(MuRule::None), 0.5);
+    let mut job = CompressionJob::new("tiny", resolve("coala").unwrap().method(), 0.5);
     job.calib_batches = 4;
     bench("pipeline/coala e2e (4 batches)", &opts, || {
         std::hint::black_box(pipe.run(&job, &corpus).unwrap());
@@ -31,7 +32,8 @@ fn main() {
     let batches = corpus.batches("calib", spec.batch, spec.seq_len, 4).unwrap();
     bench("scheduler/overlapped calibrate", &opts, || {
         std::hint::black_box(
-            calibrate_overlapped("artifacts", "tiny", batches.clone(), 2).unwrap(),
+            calibrate_overlapped("artifacts", "tiny", batches.clone(), 2, AccumKind::RFactor)
+                .unwrap(),
         );
     });
 

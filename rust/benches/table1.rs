@@ -10,8 +10,8 @@ use coala::runtime::Executor;
 use coala::util::bench::{bench, BenchOpts};
 
 fn main() {
-    if !std::path::Path::new("artifacts/manifest.json").exists() {
-        println!("table1 bench: artifacts/ missing — run `make artifacts` first");
+    if !coala::runtime::device_available("artifacts") {
+        println!("table1 bench: needs artifacts/ and the pjrt feature");
         return;
     }
     let ex = Executor::new("artifacts").unwrap();

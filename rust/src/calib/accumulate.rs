@@ -1,0 +1,553 @@
+//! Streaming calibration accumulators (the "accumulate" stage of the
+//! pipeline), factored out of the coordinator so every driver — the
+//! sequential pipeline, the overlapped scheduler, and the tree-TSQR
+//! runner — folds chunks through one `fold_chunk`/`finish` interface.
+//!
+//! Three accumulation strategies exist, one per family of compression
+//! methods (each [`crate::coala::compressor::Compressor`] declares which
+//! one it needs):
+//!
+//! * **R factor** (COALA / α-family): out-of-core TSQR — fold each
+//!   (B·T × n) chunk of Xᵀ into a square R with RᵀR = XXᵀ;
+//! * **Gram** (SVD-LLM / CorDA): G ← G + chunkᵀ·chunk;
+//! * **Scales** (ASVD): running Σ|x| and row count per input channel.
+//!
+//! Every accumulator runs on either backend: `Device` folds through the
+//! PJRT artifacts (`runtime::ops`), `Host` through the pure-Rust linalg
+//! (`linalg::tsqr::TsqrFolder`, `tensor::ops::gram_t`).  X itself is
+//! never materialized on either route.
+
+use crate::error::{Error, Result};
+use crate::linalg::tsqr::TsqrFolder;
+use crate::runtime::executor::Executor;
+use crate::runtime::ops;
+use crate::tensor::lowp::{quantize, Precision};
+use crate::tensor::ops::gram_t;
+use crate::tensor::Matrix;
+
+/// Which accumulation strategy a compression method consumes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccumKind {
+    /// Square R with RᵀR = (seen X)(seen X)ᵀ (QR route).
+    RFactor,
+    /// G = Σ chunkᵀ·chunk (Gram route).
+    Gram,
+    /// Running Σ|x| and count per input channel (ASVD route).
+    Scales,
+    /// Context-free methods (plain SVD): nothing to accumulate.
+    None,
+}
+
+/// Finished accumulator state — what the factorization stage consumes.
+#[derive(Debug, Clone)]
+pub enum CalibState {
+    R(Matrix<f32>),
+    Gram(Matrix<f32>),
+    Scales { sum_abs: Vec<f64>, rows: usize },
+    None,
+}
+
+impl CalibState {
+    pub fn kind(&self) -> AccumKind {
+        match self {
+            CalibState::R(_) => AccumKind::RFactor,
+            CalibState::Gram(_) => AccumKind::Gram,
+            CalibState::Scales { .. } => AccumKind::Scales,
+            CalibState::None => AccumKind::None,
+        }
+    }
+
+    pub fn r(&self) -> Result<&Matrix<f32>> {
+        match self {
+            CalibState::R(r) => Ok(r),
+            other => Err(Error::Config(format!(
+                "method needs the R-factor route, accumulator holds {:?}",
+                other.kind()
+            ))),
+        }
+    }
+
+    pub fn gram(&self) -> Result<&Matrix<f32>> {
+        match self {
+            CalibState::Gram(g) => Ok(g),
+            other => Err(Error::Config(format!(
+                "method needs the Gram route, accumulator holds {:?}",
+                other.kind()
+            ))),
+        }
+    }
+
+    /// ASVD's per-channel scale rule: (mean |x| + ε)^{1/2}.
+    pub fn asvd_scales(&self) -> Result<Vec<f32>> {
+        match self {
+            CalibState::Scales { sum_abs, rows } => Ok(sum_abs
+                .iter()
+                .map(|v| ((v / (*rows).max(1) as f64) as f32 + 1e-6).sqrt())
+                .collect()),
+            other => Err(Error::Config(format!(
+                "method needs the scales route, accumulator holds {:?}",
+                other.kind()
+            ))),
+        }
+    }
+}
+
+/// Where folds execute.
+#[derive(Clone, Copy)]
+pub enum AccumBackend<'a> {
+    /// Through the shape-specialized PJRT artifacts.
+    Device(&'a Executor),
+    /// Pure-Rust host linalg.
+    Host,
+}
+
+/// One streaming accumulator: fold chunks, merge sibling states (tree
+/// reduction), finish into a [`CalibState`].
+pub trait CalibAccumulator {
+    fn kind(&self) -> AccumKind;
+    /// Fold one (rows × width) chunk of Xᵀ.
+    fn fold_chunk(&mut self, xt: &Matrix<f32>) -> Result<()>;
+    /// Absorb the state of a sibling accumulator (tree reduction edge).
+    fn merge_state(&mut self, other: CalibState) -> Result<()>;
+    fn finish(self: Box<Self>) -> CalibState;
+}
+
+/// Build the accumulator a method requires, for `width`-channel chunks.
+/// `precision` emulates the accumulation arithmetic (Table 2's fp16).
+pub fn make_accumulator<'a>(
+    kind: AccumKind,
+    width: usize,
+    backend: AccumBackend<'a>,
+    precision: Precision,
+) -> Box<dyn CalibAccumulator + 'a> {
+    match kind {
+        AccumKind::RFactor => Box::new(RAccumulator::new(width, backend, precision)),
+        AccumKind::Gram => Box::new(GramAccumulator::new(width, backend, precision)),
+        AccumKind::Scales => Box::new(ScalesAccumulator::new(width, precision)),
+        AccumKind::None => Box::new(NullAccumulator),
+    }
+}
+
+/// Re-open a finished state as an accumulator (resuming a stream, or
+/// seeding a tree-reduction node).
+pub fn make_accumulator_from<'a>(
+    state: CalibState,
+    backend: AccumBackend<'a>,
+    precision: Precision,
+) -> Box<dyn CalibAccumulator + 'a> {
+    match state {
+        CalibState::R(r) => Box::new(RAccumulator::from_r(r, backend, precision)),
+        CalibState::Gram(g) => Box::new(GramAccumulator { backend, precision, g }),
+        CalibState::Scales { sum_abs, rows } => {
+            Box::new(ScalesAccumulator { precision, sum_abs, rows })
+        }
+        CalibState::None => Box::new(NullAccumulator),
+    }
+}
+
+/// Merge two finished states (the tree-reduction edge as a free
+/// function).  Seeds the accumulator from `a`, so each edge costs one
+/// merge — one `tsqr_merge` launch / one QR — not two.
+pub fn merge_states(
+    a: CalibState,
+    b: CalibState,
+    backend: AccumBackend<'_>,
+    precision: Precision,
+) -> Result<CalibState> {
+    let mut acc = make_accumulator_from(a, backend, precision);
+    acc.merge_state(b)?;
+    Ok(acc.finish())
+}
+
+// ---------------------------------------------------------------- R route
+
+struct RAccumulator<'a> {
+    backend: AccumBackend<'a>,
+    precision: Precision,
+    /// Device route: the running square R.
+    r: Option<Matrix<f32>>,
+    /// Host route: scratch-reusing streaming folder.
+    folder: Option<TsqrFolder<f32>>,
+}
+
+impl<'a> RAccumulator<'a> {
+    fn new(width: usize, backend: AccumBackend<'a>, precision: Precision) -> RAccumulator<'a> {
+        match backend {
+            AccumBackend::Device(_) => RAccumulator {
+                backend,
+                precision,
+                r: Some(Matrix::zeros(width, width)),
+                folder: None,
+            },
+            AccumBackend::Host => RAccumulator {
+                backend,
+                precision,
+                r: None,
+                folder: Some(TsqrFolder::new(width)),
+            },
+        }
+    }
+
+    /// Resume from an existing square R (no fold spent on the seed).
+    fn from_r(r: Matrix<f32>, backend: AccumBackend<'a>, precision: Precision) -> RAccumulator<'a> {
+        match backend {
+            AccumBackend::Device(_) => RAccumulator { backend, precision, r: Some(r), folder: None },
+            AccumBackend::Host => RAccumulator {
+                backend,
+                precision,
+                r: None,
+                folder: Some(TsqrFolder::from_r(&r)),
+            },
+        }
+    }
+}
+
+impl CalibAccumulator for RAccumulator<'_> {
+    fn kind(&self) -> AccumKind {
+        AccumKind::RFactor
+    }
+
+    fn fold_chunk(&mut self, xt: &Matrix<f32>) -> Result<()> {
+        let xt_q;
+        let xt = if self.precision == Precision::F32 {
+            xt
+        } else {
+            xt_q = quantize(xt, self.precision);
+            &xt_q
+        };
+        match self.backend {
+            AccumBackend::Device(ex) => {
+                let r = self.r.as_mut().expect("device R state");
+                *r = ops::tsqr_step(ex, r, xt)?;
+            }
+            AccumBackend::Host => {
+                self.folder.as_mut().expect("host folder").fold(xt)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn merge_state(&mut self, other: CalibState) -> Result<()> {
+        let other = other.r()?.clone();
+        match self.backend {
+            AccumBackend::Device(ex) => {
+                let r = self.r.as_mut().expect("device R state");
+                *r = ops::tsqr_merge(ex, r, &other)?;
+            }
+            AccumBackend::Host => {
+                self.folder.as_mut().expect("host folder").merge_r(&other)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn finish(self: Box<Self>) -> CalibState {
+        match self.backend {
+            AccumBackend::Device(_) => CalibState::R(self.r.expect("device R state")),
+            AccumBackend::Host => CalibState::R(self.folder.expect("host folder").finish()),
+        }
+    }
+}
+
+// ------------------------------------------------------------- Gram route
+
+struct GramAccumulator<'a> {
+    backend: AccumBackend<'a>,
+    precision: Precision,
+    g: Matrix<f32>,
+}
+
+impl<'a> GramAccumulator<'a> {
+    fn new(width: usize, backend: AccumBackend<'a>, precision: Precision) -> GramAccumulator<'a> {
+        GramAccumulator { backend, precision, g: Matrix::zeros(width, width) }
+    }
+
+    fn post_round(&mut self) {
+        if self.precision != Precision::F32 {
+            self.g = quantize(&self.g, self.precision);
+        }
+    }
+}
+
+impl CalibAccumulator for GramAccumulator<'_> {
+    fn kind(&self) -> AccumKind {
+        AccumKind::Gram
+    }
+
+    fn fold_chunk(&mut self, xt: &Matrix<f32>) -> Result<()> {
+        let xt_q;
+        let xt = if self.precision == Precision::F32 {
+            xt
+        } else {
+            xt_q = quantize(xt, self.precision);
+            &xt_q
+        };
+        match self.backend {
+            AccumBackend::Device(ex) => self.g = ops::gram_update(ex, &self.g, xt)?,
+            AccumBackend::Host => self.g = self.g.add(&gram_t(xt))?,
+        }
+        self.post_round();
+        Ok(())
+    }
+
+    fn merge_state(&mut self, other: CalibState) -> Result<()> {
+        self.g = self.g.add(other.gram()?)?;
+        self.post_round();
+        Ok(())
+    }
+
+    fn finish(self: Box<Self>) -> CalibState {
+        CalibState::Gram(self.g)
+    }
+}
+
+// ----------------------------------------------------------- Scales route
+
+struct ScalesAccumulator {
+    precision: Precision,
+    sum_abs: Vec<f64>,
+    rows: usize,
+}
+
+impl ScalesAccumulator {
+    fn new(width: usize, precision: Precision) -> ScalesAccumulator {
+        ScalesAccumulator { precision, sum_abs: vec![0.0; width], rows: 0 }
+    }
+}
+
+impl CalibAccumulator for ScalesAccumulator {
+    fn kind(&self) -> AccumKind {
+        AccumKind::Scales
+    }
+
+    fn fold_chunk(&mut self, xt: &Matrix<f32>) -> Result<()> {
+        if xt.cols != self.sum_abs.len() {
+            return Err(Error::shape(format!(
+                "scales fold: chunk has {} cols, accumulator is {}-wide",
+                xt.cols,
+                self.sum_abs.len()
+            )));
+        }
+        let xt_q;
+        let xt = if self.precision == Precision::F32 {
+            xt
+        } else {
+            xt_q = quantize(xt, self.precision);
+            &xt_q
+        };
+        for i in 0..xt.rows {
+            for (j, acc) in self.sum_abs.iter_mut().enumerate() {
+                *acc += xt.get(i, j).abs() as f64;
+            }
+        }
+        self.rows += xt.rows;
+        Ok(())
+    }
+
+    fn merge_state(&mut self, other: CalibState) -> Result<()> {
+        match other {
+            CalibState::Scales { sum_abs, rows } => {
+                if sum_abs.len() != self.sum_abs.len() {
+                    return Err(Error::shape("scales merge: width mismatch".into()));
+                }
+                for (a, b) in self.sum_abs.iter_mut().zip(&sum_abs) {
+                    *a += b;
+                }
+                self.rows += rows;
+                Ok(())
+            }
+            other => Err(Error::Config(format!(
+                "scales merge: sibling holds {:?}",
+                other.kind()
+            ))),
+        }
+    }
+
+    fn finish(self: Box<Self>) -> CalibState {
+        CalibState::Scales { sum_abs: self.sum_abs, rows: self.rows }
+    }
+}
+
+// ------------------------------------------------------------- Null route
+
+struct NullAccumulator;
+
+impl CalibAccumulator for NullAccumulator {
+    fn kind(&self) -> AccumKind {
+        AccumKind::None
+    }
+
+    fn fold_chunk(&mut self, _xt: &Matrix<f32>) -> Result<()> {
+        Ok(())
+    }
+
+    fn merge_state(&mut self, other: CalibState) -> Result<()> {
+        // refuse to silently discard a sibling's real statistics
+        match other {
+            CalibState::None => Ok(()),
+            other => Err(Error::Config(format!(
+                "null accumulator cannot absorb a {:?} sibling",
+                other.kind()
+            ))),
+        }
+    }
+
+    fn finish(self: Box<Self>) -> CalibState {
+        CalibState::None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::{fro, matmul};
+
+    fn chunks(n: usize, rows: usize, count: usize, seed: u64) -> Vec<Matrix<f32>> {
+        (0..count).map(|i| Matrix::randn(rows, n, seed + i as u64)).collect()
+    }
+
+    fn full_stack(chunks: &[Matrix<f32>]) -> Matrix<f32> {
+        let mut full = chunks[0].clone();
+        for c in &chunks[1..] {
+            full = full.vstack(c).unwrap();
+        }
+        full
+    }
+
+    #[test]
+    fn host_r_accumulator_satisfies_gram_identity() {
+        let cs = chunks(7, 15, 4, 1);
+        let mut acc = make_accumulator(AccumKind::RFactor, 7, AccumBackend::Host, Precision::F32);
+        for c in &cs {
+            acc.fold_chunk(c).unwrap();
+        }
+        let CalibState::R(r) = acc.finish() else { panic!("not R") };
+        let got = matmul(&r.transpose(), &r).unwrap();
+        let want = gram_t(&full_stack(&cs));
+        assert!(fro(&got.sub(&want).unwrap()) < 1e-3 * fro(&want));
+    }
+
+    #[test]
+    fn host_gram_accumulator_matches_direct() {
+        let cs = chunks(6, 11, 3, 10);
+        let mut acc = make_accumulator(AccumKind::Gram, 6, AccumBackend::Host, Precision::F32);
+        for c in &cs {
+            acc.fold_chunk(c).unwrap();
+        }
+        let CalibState::Gram(g) = acc.finish() else { panic!("not Gram") };
+        let want = gram_t(&full_stack(&cs));
+        assert!(fro(&g.sub(&want).unwrap()) < 1e-4 * fro(&want));
+    }
+
+    #[test]
+    fn scales_accumulator_means_abs() {
+        let cs = chunks(5, 8, 2, 20);
+        let mut acc = make_accumulator(AccumKind::Scales, 5, AccumBackend::Host, Precision::F32);
+        for c in &cs {
+            acc.fold_chunk(c).unwrap();
+        }
+        let state = acc.finish();
+        let CalibState::Scales { sum_abs, rows } = &state else { panic!("not Scales") };
+        assert_eq!(*rows, 16);
+        let full = full_stack(&cs);
+        for (j, s) in sum_abs.iter().enumerate() {
+            let want: f64 = (0..full.rows).map(|i| full.get(i, j).abs() as f64).sum();
+            assert!((s - want).abs() < 1e-4 * (1.0 + want));
+        }
+        let scales = state.asvd_scales().unwrap();
+        assert_eq!(scales.len(), 5);
+        assert!(scales.iter().all(|s| s.is_finite() && *s > 0.0));
+    }
+
+    #[test]
+    fn merge_matches_single_stream() {
+        // folding [c0, c1] sequentially == fold c0 | fold c1 then merge
+        let cs = chunks(6, 9, 2, 30);
+        for kind in [AccumKind::RFactor, AccumKind::Gram, AccumKind::Scales] {
+            let mut seq = make_accumulator(kind, 6, AccumBackend::Host, Precision::F32);
+            seq.fold_chunk(&cs[0]).unwrap();
+            seq.fold_chunk(&cs[1]).unwrap();
+            let want = seq.finish();
+
+            let mut a = make_accumulator(kind, 6, AccumBackend::Host, Precision::F32);
+            a.fold_chunk(&cs[0]).unwrap();
+            let mut b = make_accumulator(kind, 6, AccumBackend::Host, Precision::F32);
+            b.fold_chunk(&cs[1]).unwrap();
+            let got = merge_states(a.finish(), b.finish(), AccumBackend::Host, Precision::F32)
+                .unwrap();
+
+            match (&want, &got) {
+                (CalibState::R(rw), CalibState::R(rg)) => {
+                    let gw = matmul(&rw.transpose(), rw).unwrap();
+                    let gg = matmul(&rg.transpose(), rg).unwrap();
+                    assert!(fro(&gw.sub(&gg).unwrap()) < 1e-3 * (1.0 + fro(&gw)));
+                }
+                (CalibState::Gram(gw), CalibState::Gram(gg)) => {
+                    assert!(fro(&gw.sub(gg).unwrap()) < 1e-5 * (1.0 + fro(gw)));
+                }
+                (
+                    CalibState::Scales { sum_abs: sw, rows: nw },
+                    CalibState::Scales { sum_abs: sg, rows: ng },
+                ) => {
+                    assert_eq!(nw, ng);
+                    for (a, b) in sw.iter().zip(sg) {
+                        assert!((a - b).abs() < 1e-6 * (1.0 + a.abs()));
+                    }
+                }
+                _ => panic!("kind mismatch after merge"),
+            }
+        }
+    }
+
+    #[test]
+    fn state_route_mismatch_reports() {
+        let state = CalibState::Gram(Matrix::zeros(3, 3));
+        assert!(state.r().is_err());
+        assert!(state.asvd_scales().is_err());
+        assert!(CalibState::None.gram().is_err());
+    }
+
+    #[test]
+    fn null_merge_rejects_real_states() {
+        let mut acc = make_accumulator(AccumKind::None, 0, AccumBackend::Host, Precision::F32);
+        assert!(acc.merge_state(CalibState::None).is_ok());
+        assert!(acc.merge_state(CalibState::Gram(Matrix::zeros(2, 2))).is_err());
+    }
+
+    #[test]
+    fn seeded_accumulator_resumes_stream() {
+        // make_accumulator_from(state) ≡ continuing the original stream
+        let cs = chunks(6, 9, 3, 60);
+        let mut full = make_accumulator(AccumKind::RFactor, 6, AccumBackend::Host, Precision::F32);
+        for c in &cs {
+            full.fold_chunk(c).unwrap();
+        }
+        let want = full.finish();
+
+        let mut first = make_accumulator(AccumKind::RFactor, 6, AccumBackend::Host, Precision::F32);
+        first.fold_chunk(&cs[0]).unwrap();
+        let mut resumed =
+            make_accumulator_from(first.finish(), AccumBackend::Host, Precision::F32);
+        resumed.fold_chunk(&cs[1]).unwrap();
+        resumed.fold_chunk(&cs[2]).unwrap();
+        let got = resumed.finish();
+
+        let gw = matmul(&want.r().unwrap().transpose(), want.r().unwrap()).unwrap();
+        let gg = matmul(&got.r().unwrap().transpose(), got.r().unwrap()).unwrap();
+        assert!(fro(&gw.sub(&gg).unwrap()) < 1e-3 * (1.0 + fro(&gw)));
+    }
+
+    #[test]
+    fn fp16_emulation_rounds_the_gram() {
+        let cs = chunks(4, 30, 2, 40);
+        let mut acc = make_accumulator(AccumKind::Gram, 4, AccumBackend::Host, Precision::F16);
+        for c in &cs {
+            acc.fold_chunk(c).unwrap();
+        }
+        let CalibState::Gram(g) = acc.finish() else { panic!("not Gram") };
+        // every entry is representable in fp16
+        for v in &g.data {
+            assert_eq!(*v, Precision::F16.round(*v));
+        }
+    }
+}

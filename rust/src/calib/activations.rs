@@ -87,7 +87,7 @@ mod tests {
     use crate::calib::dataset::Corpus;
 
     fn setup() -> Option<(Executor, Corpus)> {
-        if !std::path::Path::new("artifacts/manifest.json").exists() {
+        if !crate::runtime::device_available("artifacts") {
             return None;
         }
         Some((Executor::new("artifacts").unwrap(), Corpus::load("artifacts").unwrap()))

@@ -1,8 +1,14 @@
-//! Calibration data plumbing (S11): corpus, batching, and activation
-//! capture through the `fwd_acts` artifact.
+//! Calibration data plumbing (S11): corpus, batching, activation
+//! capture through the `fwd_acts` artifact, and the streaming
+//! accumulators every compression method folds its chunks through.
 
+pub mod accumulate;
 pub mod activations;
 pub mod dataset;
 
+pub use accumulate::{
+    make_accumulator, make_accumulator_from, merge_states, AccumBackend, AccumKind,
+    CalibAccumulator, CalibState,
+};
 pub use activations::{ActivationCapture, CalibChunk};
 pub use dataset::{Corpus, TaskBank};

@@ -1,0 +1,604 @@
+//! The `Compressor` trait and method registry — the one seam through
+//! which every compression method is reached.
+//!
+//! The paper's observation is architectural as much as numerical: COALA
+//! and the Gram-based baselines differ only in *which statistic of the
+//! calibration stream they accumulate* and *how they factorize it*.
+//! This module encodes exactly that:
+//!
+//! * [`Compressor::accum_kind`] names the streaming accumulator the
+//!   method consumes ([`crate::calib::accumulate`]);
+//! * [`Compressor::factorize_device`] is the PJRT artifact route
+//!   (wrapping `runtime::ops`);
+//! * [`Compressor::factorize_host`] is the pure-Rust route (wrapping
+//!   `coala::factorize` / `coala::baselines`), so accumulation and
+//!   factorization run end-to-end where no artifacts or PJRT runtime
+//!   exist (activation capture still needs the `fwd_acts` artifacts).
+//!
+//! The coordinator, repro harness, CLI, and benches resolve methods by
+//! name through [`resolve`] / [`registry`] and never match on
+//! [`Method`] variants themselves — adding a method means adding one
+//! impl here and one registry row.
+
+use super::baselines;
+use super::factorize::FullFactors;
+use super::method::Method;
+use super::mu::MuRule;
+use super::{alpha, coala_factorize, coala_regularized, mu_from_lambda};
+use crate::calib::accumulate::{AccumKind, CalibState};
+use crate::error::{Error, Result};
+use crate::runtime::executor::Executor;
+use crate::runtime::ops;
+use crate::tensor::Matrix;
+
+/// Result of one projection's factorization: the full-spectrum factors
+/// plus the μ the method chose (diagnostics for the adaptive rule).
+#[derive(Debug)]
+pub struct Factorization {
+    pub factors: FullFactors<f32>,
+    pub mu: Option<f64>,
+}
+
+impl Factorization {
+    fn plain(factors: FullFactors<f32>) -> Factorization {
+        Factorization { factors, mu: None }
+    }
+}
+
+/// Which execution backend factorizes (and accumulates).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Route {
+    /// Shape-specialized PJRT artifacts (`runtime::ops`).
+    Device,
+    /// Pure-Rust host linalg — works with no artifacts at all.
+    Host,
+}
+
+/// Default Jacobi sweeps for the host route's SVDs.
+pub const HOST_SWEEPS: usize = 30;
+
+/// One compression method behind the uniform interface.
+pub trait Compressor {
+    /// The value-level descriptor (naming, serialization, sweeps).
+    fn method(&self) -> Method;
+
+    /// Human-readable display label (tables, logs).
+    fn name(&self) -> String {
+        self.method().name()
+    }
+
+    /// Registry spec — the string [`resolve`] parses back to this
+    /// compressor (what the CLI accepts for `--method`).
+    fn spec(&self) -> String {
+        self.method().spec()
+    }
+
+    /// Which calibration statistic this method consumes.
+    fn accum_kind(&self) -> AccumKind;
+
+    /// Factorize through the PJRT artifacts.
+    fn factorize_device(
+        &self,
+        ex: &Executor,
+        w: &Matrix<f32>,
+        calib: &CalibState,
+        rank: usize,
+    ) -> Result<Factorization>;
+
+    /// Factorize on the host (pure Rust, `sweeps` Jacobi sweeps).
+    fn factorize_host(
+        &self,
+        w: &Matrix<f32>,
+        calib: &CalibState,
+        rank: usize,
+        sweeps: usize,
+    ) -> Result<Factorization>;
+
+    /// Route dispatch — the only branch between device and host.
+    fn factorize(
+        &self,
+        route: Route,
+        ex: &Executor,
+        w: &Matrix<f32>,
+        calib: &CalibState,
+        rank: usize,
+        sweeps: usize,
+    ) -> Result<Factorization> {
+        match route {
+            Route::Device => self.factorize_device(ex, w, calib, rank),
+            Route::Host => self.factorize_host(w, calib, rank, sweeps),
+        }
+    }
+}
+
+/// Gram-consuming baselines inherit their instability from the Gram
+/// matrix itself; the host route *reports* a near-singular collapse as a
+/// numerical error instead of letting ±inf/NaN factors flow downstream.
+fn check_finite(name: &str, f: Factorization) -> Result<Factorization> {
+    if f.factors.u.all_finite() && f.factors.p.all_finite() {
+        Ok(f)
+    } else {
+        Err(Error::Numerical(format!(
+            "{name}: non-finite factors (near-singular Gram matrix)"
+        )))
+    }
+}
+
+// ------------------------------------------------------------------ COALA
+
+/// COALA (Alg. 1 / Alg. 2) with a μ rule; consumes the R factor.
+pub struct CoalaCompressor {
+    pub rule: MuRule,
+}
+
+impl Compressor for CoalaCompressor {
+    fn method(&self) -> Method {
+        Method::Coala(self.rule)
+    }
+
+    fn accum_kind(&self) -> AccumKind {
+        AccumKind::RFactor
+    }
+
+    fn factorize_device(
+        &self,
+        ex: &Executor,
+        w: &Matrix<f32>,
+        calib: &CalibState,
+        rank: usize,
+    ) -> Result<Factorization> {
+        let r = calib.r()?;
+        match self.rule {
+            MuRule::None => Ok(Factorization::plain(ops::factorize(ex, w, r)?)),
+            MuRule::Constant { mu } => Ok(Factorization {
+                factors: ops::factorize_reg(ex, w, r, mu as f32)?,
+                mu: Some(mu),
+            }),
+            MuRule::Adaptive { lambda } => {
+                let f0 = ops::factorize(ex, w, r)?;
+                let (num, den) = ops::mu_terms(ex, w, &f0, r, rank)?;
+                let mu = if den > 1e-20 { lambda * num as f64 / den as f64 } else { 0.0 };
+                let factors =
+                    if mu == 0.0 { f0 } else { ops::factorize_reg(ex, w, r, mu as f32)? };
+                Ok(Factorization { factors, mu: Some(mu) })
+            }
+        }
+    }
+
+    fn factorize_host(
+        &self,
+        w: &Matrix<f32>,
+        calib: &CalibState,
+        rank: usize,
+        sweeps: usize,
+    ) -> Result<Factorization> {
+        let r = calib.r()?;
+        match self.rule {
+            MuRule::None => Ok(Factorization::plain(coala_factorize(w, r, sweeps)?)),
+            MuRule::Constant { mu } => Ok(Factorization {
+                factors: coala_regularized(w, r, mu, sweeps)?,
+                mu: Some(mu),
+            }),
+            MuRule::Adaptive { lambda } => {
+                let f0 = coala_factorize(w, r, sweeps)?;
+                let mu = mu_from_lambda(w, &f0, r, rank, lambda)?;
+                let factors =
+                    if mu == 0.0 { f0 } else { coala_regularized(w, r, mu, sweeps)? };
+                Ok(Factorization { factors, mu: Some(mu) })
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- α-family
+
+/// Prop. 4 α-family (inversion-free; α ∈ {0, 1, 2}); consumes R.
+pub struct AlphaCompressor {
+    pub alpha: u32,
+}
+
+impl Compressor for AlphaCompressor {
+    fn method(&self) -> Method {
+        Method::Alpha(self.alpha)
+    }
+
+    fn accum_kind(&self) -> AccumKind {
+        AccumKind::RFactor
+    }
+
+    fn factorize_device(
+        &self,
+        ex: &Executor,
+        w: &Matrix<f32>,
+        calib: &CalibState,
+        _rank: usize,
+    ) -> Result<Factorization> {
+        let factors = match self.alpha {
+            0 => ops::plainsvd(ex, w)?,
+            1 => ops::factorize(ex, w, calib.r()?)?,
+            2 => ops::alpha2(ex, w, calib.r()?)?,
+            a => return Err(Error::Config(format!("alpha ∈ {{0,1,2}}, got {a}"))),
+        };
+        Ok(Factorization::plain(factors))
+    }
+
+    fn factorize_host(
+        &self,
+        w: &Matrix<f32>,
+        calib: &CalibState,
+        _rank: usize,
+        sweeps: usize,
+    ) -> Result<Factorization> {
+        Ok(Factorization::plain(alpha::alpha_factorize(
+            w,
+            calib.r()?,
+            self.alpha,
+            sweeps,
+        )?))
+    }
+}
+
+// -------------------------------------------------------------- plain SVD
+
+/// Context-free truncated SVD (PiSSA's projection); needs no calibration.
+pub struct PlainSvdCompressor;
+
+impl Compressor for PlainSvdCompressor {
+    fn method(&self) -> Method {
+        Method::PlainSvd
+    }
+
+    fn accum_kind(&self) -> AccumKind {
+        AccumKind::None
+    }
+
+    fn factorize_device(
+        &self,
+        ex: &Executor,
+        w: &Matrix<f32>,
+        _calib: &CalibState,
+        _rank: usize,
+    ) -> Result<Factorization> {
+        Ok(Factorization::plain(ops::plainsvd(ex, w)?))
+    }
+
+    fn factorize_host(
+        &self,
+        w: &Matrix<f32>,
+        _calib: &CalibState,
+        _rank: usize,
+        sweeps: usize,
+    ) -> Result<Factorization> {
+        Ok(Factorization::plain(baselines::plain_svd_factorize(w, sweeps)?))
+    }
+}
+
+// ---------------------------------------------------------- Gram baselines
+
+/// SVD-LLM: Cholesky-of-Gram whitening.
+pub struct SvdLlmCompressor;
+
+impl Compressor for SvdLlmCompressor {
+    fn method(&self) -> Method {
+        Method::SvdLlm
+    }
+
+    fn accum_kind(&self) -> AccumKind {
+        AccumKind::Gram
+    }
+
+    fn factorize_device(
+        &self,
+        ex: &Executor,
+        w: &Matrix<f32>,
+        calib: &CalibState,
+        _rank: usize,
+    ) -> Result<Factorization> {
+        Ok(Factorization::plain(ops::svdllm(ex, w, calib.gram()?)?))
+    }
+
+    fn factorize_host(
+        &self,
+        w: &Matrix<f32>,
+        calib: &CalibState,
+        _rank: usize,
+        sweeps: usize,
+    ) -> Result<Factorization> {
+        let f = Factorization::plain(baselines::svdllm_factorize(w, calib.gram()?, sweeps)?);
+        check_finite("SVD-LLM", f)
+    }
+}
+
+/// SVD-LLM v2: eig-of-Gram whitening.
+pub struct SvdLlmV2Compressor;
+
+impl Compressor for SvdLlmV2Compressor {
+    fn method(&self) -> Method {
+        Method::SvdLlmV2
+    }
+
+    fn accum_kind(&self) -> AccumKind {
+        AccumKind::Gram
+    }
+
+    fn factorize_device(
+        &self,
+        ex: &Executor,
+        w: &Matrix<f32>,
+        calib: &CalibState,
+        _rank: usize,
+    ) -> Result<Factorization> {
+        Ok(Factorization::plain(ops::svdllm2(ex, w, calib.gram()?)?))
+    }
+
+    fn factorize_host(
+        &self,
+        w: &Matrix<f32>,
+        calib: &CalibState,
+        _rank: usize,
+        sweeps: usize,
+    ) -> Result<Factorization> {
+        let f = Factorization::plain(baselines::svdllm_v2_factorize(w, calib.gram()?, sweeps)?);
+        check_finite("SVD-LLM-v2", f)
+    }
+}
+
+/// Original CorDA (explicit Gram inversion).
+pub struct CordaCompressor;
+
+impl Compressor for CordaCompressor {
+    fn method(&self) -> Method {
+        Method::Corda
+    }
+
+    fn accum_kind(&self) -> AccumKind {
+        AccumKind::Gram
+    }
+
+    fn factorize_device(
+        &self,
+        ex: &Executor,
+        w: &Matrix<f32>,
+        calib: &CalibState,
+        _rank: usize,
+    ) -> Result<Factorization> {
+        Ok(Factorization::plain(ops::corda(ex, w, calib.gram()?)?))
+    }
+
+    fn factorize_host(
+        &self,
+        w: &Matrix<f32>,
+        calib: &CalibState,
+        _rank: usize,
+        sweeps: usize,
+    ) -> Result<Factorization> {
+        let f = Factorization::plain(baselines::corda_factorize(w, calib.gram()?, sweeps)?);
+        check_finite("CorDA", f)
+    }
+}
+
+// -------------------------------------------------------------------- ASVD
+
+/// ASVD activation scaling; consumes the per-channel scale statistics.
+pub struct AsvdCompressor;
+
+impl Compressor for AsvdCompressor {
+    fn method(&self) -> Method {
+        Method::Asvd
+    }
+
+    fn accum_kind(&self) -> AccumKind {
+        AccumKind::Scales
+    }
+
+    fn factorize_device(
+        &self,
+        ex: &Executor,
+        w: &Matrix<f32>,
+        calib: &CalibState,
+        _rank: usize,
+    ) -> Result<Factorization> {
+        Ok(Factorization::plain(ops::asvd(ex, w, &calib.asvd_scales()?)?))
+    }
+
+    fn factorize_host(
+        &self,
+        w: &Matrix<f32>,
+        calib: &CalibState,
+        _rank: usize,
+        sweeps: usize,
+    ) -> Result<Factorization> {
+        Ok(Factorization::plain(baselines::asvd_factorize(
+            w,
+            &calib.asvd_scales()?,
+            sweeps,
+        )?))
+    }
+}
+
+// ---------------------------------------------------------------- registry
+
+/// Build the compressor implementing a [`Method`] descriptor.
+pub fn compressor_for(method: &Method) -> Box<dyn Compressor> {
+    match *method {
+        Method::Coala(rule) => Box::new(CoalaCompressor { rule }),
+        Method::Alpha(alpha) => Box::new(AlphaCompressor { alpha }),
+        Method::PlainSvd => Box::new(PlainSvdCompressor),
+        Method::SvdLlm => Box::new(SvdLlmCompressor),
+        Method::SvdLlmV2 => Box::new(SvdLlmV2Compressor),
+        Method::Corda => Box::new(CordaCompressor),
+        Method::Asvd => Box::new(AsvdCompressor),
+    }
+}
+
+/// The registry names (what [`resolve`] accepts before `:param=value`).
+pub const METHOD_NAMES: &[&str] = &[
+    "coala", "svdllm", "svdllm2", "corda", "asvd", "svd", "alpha0", "alpha1", "alpha2",
+];
+
+/// Resolve a method spec to a compressor.
+///
+/// Specs are `name` or `name:key=value`:
+/// `coala`, `coala:lambda=3`, `coala:mu=0.1`, `svdllm`, `svdllm2`,
+/// `corda`, `asvd`, `svd`, `alpha0|1|2`.
+pub fn resolve(spec: &str) -> Result<Box<dyn Compressor>> {
+    let (name, param) = match spec.split_once(':') {
+        Some((n, p)) => (n, Some(p)),
+        None => (spec, None),
+    };
+    let parse_param = |p: &str| -> Result<(String, f64)> {
+        let (k, v) = p
+            .split_once('=')
+            .ok_or_else(|| Error::Config(format!("bad method parameter `{p}` (want key=value)")))?;
+        let v: f64 = v
+            .parse()
+            .map_err(|_| Error::Config(format!("bad method parameter value in `{p}`")))?;
+        Ok((k.to_string(), v))
+    };
+    let method = match name {
+        "coala" => match param {
+            None => Method::Coala(MuRule::None),
+            Some(p) => {
+                let (k, v) = parse_param(p)?;
+                match k.as_str() {
+                    "lambda" => Method::Coala(MuRule::Adaptive { lambda: v }),
+                    "mu" => Method::Coala(MuRule::Constant { mu: v }),
+                    other => {
+                        return Err(Error::Config(format!(
+                            "coala takes lambda= or mu=, not `{other}`"
+                        )))
+                    }
+                }
+            }
+        },
+        "svdllm" => Method::SvdLlm,
+        "svdllm2" => Method::SvdLlmV2,
+        "corda" => Method::Corda,
+        "asvd" => Method::Asvd,
+        "svd" => Method::PlainSvd,
+        "alpha0" => Method::Alpha(0),
+        "alpha1" => Method::Alpha(1),
+        "alpha2" => Method::Alpha(2),
+        other => {
+            return Err(Error::Config(format!(
+                "unknown method `{other}` (known: {})",
+                METHOD_NAMES.join(", ")
+            )))
+        }
+    };
+    if param.is_some() && name != "coala" {
+        return Err(Error::Config(format!("method `{name}` takes no parameters")));
+    }
+    Ok(compressor_for(&method))
+}
+
+/// Every registered method, canonically parameterized — what the
+/// conformance suite iterates and what sweeps default to.
+pub fn registry() -> Vec<Box<dyn Compressor>> {
+    vec![
+        Box::new(CoalaCompressor { rule: MuRule::None }),
+        Box::new(CoalaCompressor { rule: MuRule::Adaptive { lambda: 3.0 } }),
+        Box::new(CoalaCompressor { rule: MuRule::Constant { mu: 1e-2 } }),
+        Box::new(SvdLlmCompressor),
+        Box::new(SvdLlmV2Compressor),
+        Box::new(CordaCompressor),
+        Box::new(AsvdCompressor),
+        Box::new(PlainSvdCompressor),
+        Box::new(AlphaCompressor { alpha: 0 }),
+        Box::new(AlphaCompressor { alpha: 1 }),
+        Box::new(AlphaCompressor { alpha: 2 }),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calib::accumulate::{make_accumulator, AccumBackend, CalibAccumulator};
+    use crate::tensor::lowp::Precision;
+    use crate::tensor::ops::context_rel_err;
+
+    /// Accumulate a chunked X stream on the host for a given kind.
+    fn accumulate(kind: AccumKind, x: &Matrix<f32>) -> CalibState {
+        let xt = x.transpose();
+        let mut acc = make_accumulator(kind, xt.cols, AccumBackend::Host, Precision::F32);
+        // stream in two chunks to exercise real folding
+        let half = xt.rows / 2;
+        acc.fold_chunk(&xt.slice(0, half, 0, xt.cols)).unwrap();
+        acc.fold_chunk(&xt.slice(half, xt.rows, 0, xt.cols)).unwrap();
+        acc.finish()
+    }
+
+    #[test]
+    fn registry_names_unique_and_resolvable() {
+        let regs = registry();
+        let mut names: Vec<String> = regs.iter().map(|c| c.name()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), regs.len());
+        for n in METHOD_NAMES {
+            assert!(resolve(n).is_ok(), "{n} must resolve");
+        }
+    }
+
+    #[test]
+    fn registry_covers_every_method_name() {
+        // a method reachable through resolve() must also be in registry(),
+        // or the cross-method conformance suite silently skips it
+        let regs = registry();
+        for n in METHOD_NAMES {
+            let m = resolve(n).unwrap().method();
+            assert!(
+                regs.iter().any(|c| c.method() == m),
+                "`{n}` resolves to a method registry() omits"
+            );
+        }
+    }
+
+    #[test]
+    fn resolve_parses_parameters() {
+        let c = resolve("coala:lambda=2.5").unwrap();
+        assert_eq!(c.method(), Method::Coala(MuRule::Adaptive { lambda: 2.5 }));
+        let c = resolve("coala:mu=0.125").unwrap();
+        assert_eq!(c.method(), Method::Coala(MuRule::Constant { mu: 0.125 }));
+        assert!(resolve("coala:sigma=1").is_err());
+        assert!(resolve("svdllm:lambda=1").is_err());
+        assert!(resolve("nope").is_err());
+        assert!(resolve("coala:lambda").is_err());
+    }
+
+    #[test]
+    fn host_route_runs_every_method_end_to_end() {
+        let w: Matrix<f32> = Matrix::randn(8, 6, 1);
+        let x: Matrix<f32> = Matrix::randn(6, 48, 2);
+        for comp in registry() {
+            let calib = accumulate(comp.accum_kind(), &x);
+            let f = comp.factorize_host(&w, &calib, 3, 40).unwrap();
+            let rec = f.factors.truncate(3).reconstruct().unwrap();
+            let err = context_rel_err(&w, &rec, &x).unwrap();
+            assert!(err.is_finite() && err < 1.0, "{}: {err}", comp.name());
+        }
+    }
+
+    #[test]
+    fn adaptive_rule_reports_mu() {
+        let w: Matrix<f32> = Matrix::randn(8, 6, 3);
+        let x: Matrix<f32> = Matrix::randn(6, 40, 4);
+        let comp = CoalaCompressor { rule: MuRule::Adaptive { lambda: 2.0 } };
+        let calib = accumulate(AccumKind::RFactor, &x);
+        let f = comp.factorize_host(&w, &calib, 2, 40).unwrap();
+        assert!(f.mu.is_some());
+        assert!(f.mu.unwrap() > 0.0);
+        let comp0 = CoalaCompressor { rule: MuRule::None };
+        assert!(comp0.factorize_host(&w, &calib, 2, 40).unwrap().mu.is_none());
+    }
+
+    #[test]
+    fn wrong_accumulator_kind_reports_config_error() {
+        let w: Matrix<f32> = Matrix::randn(6, 5, 5);
+        let gram_state = CalibState::Gram(Matrix::zeros(5, 5));
+        let err = CoalaCompressor { rule: MuRule::None }
+            .factorize_host(&w, &gram_state, 2, 20)
+            .unwrap_err();
+        assert!(matches!(err, Error::Config(_)));
+    }
+}

@@ -47,6 +47,22 @@ impl Method {
         matches!(self, Method::SvdLlm | Method::SvdLlmV2 | Method::Corda)
     }
 
+    /// The registry spec that resolves back to this method through
+    /// `coala::compressor::resolve` (round-trip guaranteed).
+    pub fn spec(&self) -> String {
+        match self {
+            Method::Coala(MuRule::None) => "coala".into(),
+            Method::Coala(MuRule::Adaptive { lambda }) => format!("coala:lambda={lambda}"),
+            Method::Coala(MuRule::Constant { mu }) => format!("coala:mu={mu}"),
+            Method::SvdLlm => "svdllm".into(),
+            Method::SvdLlmV2 => "svdllm2".into(),
+            Method::Asvd => "asvd".into(),
+            Method::PlainSvd => "svd".into(),
+            Method::Corda => "corda".into(),
+            Method::Alpha(a) => format!("alpha{a}"),
+        }
+    }
+
     /// Host-edition end-to-end factorization from raw calibration X.
     ///
     /// `rank` only matters for the adaptive-μ rule (which needs the

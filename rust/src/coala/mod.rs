@@ -8,11 +8,13 @@
 
 pub mod alpha;
 pub mod baselines;
+pub mod compressor;
 pub mod factorize;
 pub mod method;
 pub mod mu;
 pub mod regularized;
 
+pub use compressor::{compressor_for, registry, resolve, Compressor, Factorization, Route};
 pub use factorize::{coala_factorize, coala_from_x, Factors};
 pub use method::Method;
 pub use mu::{mu_from_lambda, MuRule};

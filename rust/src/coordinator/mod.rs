@@ -3,19 +3,23 @@
 //! Compressing a model is a streaming pipeline:
 //!
 //! ```text
-//!   corpus ─▶ capture (fwd_acts) ─▶ accumulate (TSQR / Gram / scales)
+//!   corpus ─▶ capture (fwd_acts) ─▶ accumulate (CalibAccumulator:
+//!                 │                  TSQR R / Gram / scales)
 //!                 │ batch-sized chunks, bounded channel (backpressure)
 //!                 ▼
-//!   per-projection R or G ─▶ rank budget ─▶ factorize (PJRT artifacts)
-//!                 ▼                              │ μ-rule (Eq. 5)
+//!   per-projection CalibState ─▶ rank budget ─▶ factorize (Compressor:
+//!                 ▼                              │ device or host route)
 //!   CompressedModel ◀────────────────────────────┘
 //! ```
 //!
 //! X is never materialized: each forward batch contributes a (B·T × n)
-//! chunk that is folded into a square R (COALA route) or accumulated
-//! into the Gram matrix (baseline route) and dropped — the paper's §4.2
-//! out-of-memory scenario.  Multi-device tree TSQR is simulated by a
-//! worker pool where every worker owns its *own* PJRT client
+//! chunk that is folded into the accumulator a method declares
+//! (`calib::accumulate`) and dropped — the paper's §4.2 out-of-memory
+//! scenario.  Method dispatch is indirect through the `Compressor`
+//! registry (`coala::compressor`); the coordinator never matches on
+//! method variants, so new methods and new accumulation strategies plug
+//! in without touching this layer.  Multi-device tree TSQR is simulated
+//! by a worker pool where every worker owns its *own* PJRT client
 //! ([`tsqr_tree`]).
 
 pub mod budget;
@@ -24,5 +28,5 @@ pub mod scheduler;
 pub mod tsqr_tree;
 
 pub use budget::RankBudget;
-pub use pipeline::{CompressionJob, CompressionOutcome, Pipeline};
+pub use pipeline::{CalibStates, CompressionJob, CompressionOutcome, Pipeline};
 pub use tsqr_tree::TsqrTreeRunner;

@@ -1,17 +1,22 @@
 //! The per-model compression pipeline — streaming calibration in, a
 //! `CompressedModel` out.
+//!
+//! Method dispatch is fully indirect: the job's [`Method`] descriptor
+//! resolves to a [`Compressor`] through `coala::compressor`, which names
+//! the accumulator it consumes (`calib::accumulate`) and factorizes on
+//! either the PJRT device route or the pure-Rust host route.  The
+//! pipeline itself never matches on method variants.
 
+use crate::calib::accumulate::{make_accumulator, AccumBackend, CalibAccumulator, CalibState};
 use crate::calib::activations::ActivationCapture;
 use crate::calib::dataset::Corpus;
-use crate::coala::factorize::FullFactors;
-use crate::coala::{Method, MuRule};
+use crate::coala::compressor::{compressor_for, Compressor, Route, HOST_SWEEPS};
+use crate::coala::Method;
 use crate::error::{Error, Result};
 use crate::model::{CompressedModel, ModelWeights};
 use crate::runtime::executor::Executor;
 use crate::runtime::manifest::ModelSpec;
-use crate::runtime::ops;
-use crate::tensor::lowp::{quantize, Precision};
-use crate::tensor::Matrix;
+use crate::tensor::lowp::Precision;
 use std::collections::BTreeMap;
 use std::time::Instant;
 
@@ -64,15 +69,8 @@ pub struct CompressionOutcome {
     pub mus: BTreeMap<String, f64>,
 }
 
-/// Per-(layer, stream) streaming accumulator state.
-pub enum Accum {
-    /// COALA route: square R with RᵀR = (seen X)(seen X)ᵀ
-    R(Matrix<f32>),
-    /// Gram route: G = Σ chunkᵀ·chunk
-    Gram(Matrix<f32>),
-    /// ASVD route: running Σ|x| and count per input channel
-    Scales(Vec<f64>, usize),
-}
+/// Per-(layer, stream) finished accumulator states.
+pub type CalibStates = BTreeMap<(usize, String), CalibState>;
 
 /// The pipeline: owns nothing but borrows the executor (compile cache is
 /// shared across jobs — e.g. the whole Fig. 5 λ sweep reuses artifacts).
@@ -80,11 +78,28 @@ pub struct Pipeline<'a> {
     pub ex: &'a Executor,
     pub spec: ModelSpec,
     pub weights: &'a ModelWeights,
+    /// Accumulate + factorize on PJRT artifacts or pure-Rust host linalg.
+    pub route: Route,
+    /// Jacobi sweeps for the host route's SVDs.
+    pub host_sweeps: usize,
 }
 
 impl<'a> Pipeline<'a> {
     pub fn new(ex: &'a Executor, spec: ModelSpec, weights: &'a ModelWeights) -> Pipeline<'a> {
-        Pipeline { ex, spec, weights }
+        Pipeline { ex, spec, weights, route: Route::Device, host_sweeps: HOST_SWEEPS }
+    }
+
+    /// Same pipeline, factorizing (and accumulating) on the host route.
+    pub fn with_route(mut self, route: Route) -> Pipeline<'a> {
+        self.route = route;
+        self
+    }
+
+    fn accum_backend(&self) -> AccumBackend<'a> {
+        match self.route {
+            Route::Device => AccumBackend::Device(self.ex),
+            Route::Host => AccumBackend::Host,
+        }
     }
 
     /// Streaming calibration: fold every batch into per-stream accumulators.
@@ -94,105 +109,30 @@ impl<'a> Pipeline<'a> {
         job: &CompressionJob,
         corpus: &Corpus,
         timings: &mut StageTimings,
-    ) -> Result<BTreeMap<(usize, String), Accum>> {
+    ) -> Result<CalibStates> {
+        let comp = compressor_for(&job.method);
+        let kind = comp.accum_kind();
+        let backend = self.accum_backend();
         let cap = ActivationCapture::new(self.ex, &self.spec);
         let batches =
             corpus.batches(&job.calib_split, self.spec.batch, self.spec.seq_len, job.calib_batches)?;
-        let mut accums: BTreeMap<(usize, String), Accum> = BTreeMap::new();
-        let gram_route = job.method.needs_gram();
-        let scales_route = matches!(job.method, Method::Asvd);
+        let mut accums: BTreeMap<(usize, String), Box<dyn CalibAccumulator + 'a>> =
+            BTreeMap::new();
         for tokens in &batches {
             let t0 = Instant::now();
             let (_logits, chunks) = cap.capture(tokens, self.weights)?;
             timings.calibrate_s += t0.elapsed().as_secs_f64();
             let t1 = Instant::now();
             for c in chunks {
-                let xt = if job.accum_precision == Precision::F32 {
-                    c.xt
-                } else {
-                    quantize(&c.xt, job.accum_precision)
-                };
                 let key = (c.layer, c.stream.clone());
-                let n = xt.cols;
                 let entry = accums.entry(key).or_insert_with(|| {
-                    if scales_route {
-                        Accum::Scales(vec![0.0; n], 0)
-                    } else if gram_route {
-                        Accum::Gram(Matrix::zeros(n, n))
-                    } else {
-                        Accum::R(Matrix::zeros(n, n))
-                    }
+                    make_accumulator(kind, c.xt.cols, backend, job.accum_precision)
                 });
-                match entry {
-                    Accum::R(r) => *r = ops::tsqr_step(self.ex, r, &xt)?,
-                    Accum::Gram(g) => {
-                        let g2 = ops::gram_update(self.ex, g, &xt)?;
-                        *g = if job.accum_precision == Precision::F32 {
-                            g2
-                        } else {
-                            quantize(&g2, job.accum_precision)
-                        };
-                    }
-                    Accum::Scales(s, cnt) => {
-                        for i in 0..xt.rows {
-                            for (j, acc) in s.iter_mut().enumerate() {
-                                *acc += xt.get(i, j).abs() as f64;
-                            }
-                        }
-                        *cnt += xt.rows;
-                    }
-                }
+                entry.fold_chunk(&c.xt)?;
             }
             timings.accumulate_s += t1.elapsed().as_secs_f64();
         }
-        Ok(accums)
-    }
-
-    /// Factorize one projection given its accumulator.
-    fn factorize_one(
-        &self,
-        job: &CompressionJob,
-        w: &Matrix<f32>,
-        accum: &Accum,
-        rank: usize,
-        mus: &mut BTreeMap<String, f64>,
-        proj: &str,
-    ) -> Result<FullFactors<f32>> {
-        match (&job.method, accum) {
-            (Method::Coala(MuRule::None), Accum::R(r)) => ops::factorize(self.ex, w, r),
-            (Method::Coala(MuRule::Constant { mu }), Accum::R(r)) => {
-                mus.insert(proj.to_string(), *mu);
-                ops::factorize_reg(self.ex, w, r, *mu as f32)
-            }
-            (Method::Coala(MuRule::Adaptive { lambda }), Accum::R(r)) => {
-                let f0 = ops::factorize(self.ex, w, r)?;
-                let (num, den) = ops::mu_terms(self.ex, w, &f0, r, rank)?;
-                let mu = if den > 1e-20 { lambda * num as f64 / den as f64 } else { 0.0 };
-                mus.insert(proj.to_string(), mu);
-                if mu == 0.0 {
-                    return Ok(f0);
-                }
-                ops::factorize_reg(self.ex, w, r, mu as f32)
-            }
-            (Method::Alpha(0), Accum::R(_)) => ops::plainsvd(self.ex, w),
-            (Method::Alpha(1), Accum::R(r)) => ops::factorize(self.ex, w, r),
-            (Method::Alpha(2), Accum::R(r)) => ops::alpha2(self.ex, w, r),
-            (Method::PlainSvd, _) => ops::plainsvd(self.ex, w),
-            (Method::SvdLlm, Accum::Gram(g)) => ops::svdllm(self.ex, w, g),
-            (Method::SvdLlmV2, Accum::Gram(g)) => ops::svdllm2(self.ex, w, g),
-            (Method::Corda, Accum::Gram(g)) => ops::corda(self.ex, w, g),
-            (Method::Asvd, Accum::Scales(s, cnt)) => {
-                let scales: Vec<f32> = s
-                    .iter()
-                    .map(|v| ((v / (*cnt).max(1) as f64) as f32 + 1e-6).sqrt())
-                    .collect();
-                ops::asvd(self.ex, w, &scales)
-            }
-            (m, _) => Err(Error::Config(format!(
-                "method {} incompatible with accumulated route",
-                m.name()
-            ))),
-        }
+        Ok(accums.into_iter().map(|(k, a)| (k, a.finish())).collect())
     }
 
     /// Run the full job.
@@ -210,10 +150,11 @@ impl<'a> Pipeline<'a> {
     pub fn run_with_accums(
         &self,
         job: &CompressionJob,
-        accums: &BTreeMap<(usize, String), Accum>,
+        accums: &CalibStates,
         mut timings: StageTimings,
     ) -> Result<CompressionOutcome> {
         let budget = super::budget::RankBudget::allocate(&self.spec, job.ratio, job.rank_policy)?;
+        let comp = compressor_for(&job.method);
 
         let mut model = CompressedModel::new(&job.config);
         let mut mus = BTreeMap::new();
@@ -222,12 +163,15 @@ impl<'a> Pipeline<'a> {
             let w = self.weights.matrix(&proj)?;
             let layer: usize = proj[1..].split('.').next().unwrap().parse().unwrap();
             let stream = self.spec.stream_of(&proj)?.to_string();
-            let accum = accums
+            let calib = accums
                 .get(&(layer, stream))
                 .ok_or_else(|| Error::Config(format!("no accumulator for {proj}")))?;
             let rank = budget.rank(&proj)?;
-            let full = self.factorize_one(job, &w, accum, rank, &mut mus, &proj)?;
-            model.insert(&proj, full.truncate(rank));
+            let fz = comp.factorize(self.route, self.ex, &w, calib, rank, self.host_sweeps)?;
+            if let Some(mu) = fz.mu {
+                mus.insert(proj.clone(), mu);
+            }
+            model.insert(&proj, fz.factors.truncate(rank));
         }
         timings.factorize_s = t2.elapsed().as_secs_f64();
         timings.total_s = timings.calibrate_s + timings.accumulate_s + timings.factorize_s;
@@ -238,10 +182,11 @@ impl<'a> Pipeline<'a> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coala::MuRule;
     use crate::eval::perplexity;
 
     fn setup() -> Option<(Executor, Corpus)> {
-        if !std::path::Path::new("artifacts/manifest.json").exists() {
+        if !crate::runtime::device_available("artifacts") {
             return None;
         }
         Some((Executor::new("artifacts").unwrap(), Corpus::load("artifacts").unwrap()))
@@ -302,5 +247,28 @@ mod tests {
             let out = pipe.run(&job, &corpus).unwrap();
             assert_eq!(out.model.factors.len(), spec.compressible.len(), "{}", method.name());
         }
+    }
+
+    #[test]
+    fn host_route_matches_device_route() {
+        let Some((ex, corpus)) = setup() else { return };
+        let spec = ex.manifest.config("tiny").unwrap().clone();
+        let w = ModelWeights::load("artifacts", &spec).unwrap();
+        let device = Pipeline::new(&ex, spec.clone(), &w);
+        let host = Pipeline::new(&ex, spec.clone(), &w).with_route(Route::Host);
+        let mut job = CompressionJob::new("tiny", Method::Coala(MuRule::None), 0.4);
+        job.calib_batches = 2;
+        let out_d = device.run(&job, &corpus).unwrap();
+        let out_h = host.run(&job, &corpus).unwrap();
+        assert!(out_h.model.all_finite());
+        let val = corpus.split("val").unwrap();
+        let rec_d = out_d.model.reconstruct_into(&w).unwrap();
+        let rec_h = out_h.model.reconstruct_into(&w).unwrap();
+        let ppl_d = perplexity(&ex, &spec, &rec_d, val, 2).unwrap();
+        let ppl_h = perplexity(&ex, &spec, &rec_h, val, 2).unwrap();
+        assert!(
+            (ppl_d - ppl_h).abs() < 0.05 * ppl_d + 0.5,
+            "device {ppl_d} vs host {ppl_h}"
+        );
     }
 }

@@ -1,24 +1,29 @@
 //! Two-stage streaming scheduler: capture ∥ accumulate with backpressure.
 //!
 //! The sequential pipeline alternates "run fwd_acts" and "fold chunks
-//! into R"; both are device-bound, so on a multi-device box they can
-//! overlap.  This scheduler runs capture on one simulated device and
-//! accumulation on another, connected by a **bounded** channel — if the
-//! accumulator falls behind, the capture stage blocks (backpressure)
+//! into the accumulator"; both are device-bound, so on a multi-device box
+//! they can overlap.  This scheduler runs capture on one simulated device
+//! and accumulation on another, connected by a **bounded** channel — if
+//! the accumulator falls behind, the capture stage blocks (backpressure)
 //! instead of buffering unbounded activation chunks (which is the whole
 //! point of the streaming design: X must never materialize).
+//!
+//! Accumulation goes through the [`CalibAccumulator`] interface, so the
+//! overlapped path serves any accumulator kind (R / Gram / scales), not
+//! just the COALA R route.
 
+use crate::calib::accumulate::{make_accumulator, AccumBackend, AccumKind, CalibAccumulator};
 use crate::calib::activations::ActivationCapture;
 use crate::error::{Error, Result};
 use crate::model::ModelWeights;
 use crate::runtime::executor::{Executor, Value};
-use crate::runtime::ops;
+use crate::tensor::lowp::Precision;
 use crate::tensor::Matrix;
 use std::collections::BTreeMap;
 use std::sync::mpsc;
 
-/// Outcome of the overlapped calibration: per-(layer, stream) R factors.
-pub type RFactors = BTreeMap<(usize, String), Matrix<f32>>;
+/// Outcome of the overlapped calibration: per-(layer, stream) states.
+pub use super::pipeline::CalibStates;
 
 /// Overlapped calibrate-and-fold.  `queue_cap` bounds the number of
 /// in-flight batches' chunks (backpressure knob).
@@ -27,7 +32,8 @@ pub fn calibrate_overlapped(
     config: &str,
     batches: Vec<Value>,
     queue_cap: usize,
-) -> Result<RFactors> {
+    kind: AccumKind,
+) -> Result<CalibStates> {
     let (tx, rx) = mpsc::sync_channel::<Vec<(usize, String, Matrix<f32>)>>(queue_cap.max(1));
     let dir_a = artifacts_dir.to_string();
     let dir_b = artifacts_dir.to_string();
@@ -49,17 +55,19 @@ pub fn calibrate_overlapped(
         Ok(())
     });
 
-    let consumer = std::thread::spawn(move || -> Result<RFactors> {
+    let consumer = std::thread::spawn(move || -> Result<CalibStates> {
         let ex = Executor::new(&dir_b)?; // accumulate device
-        let mut rs: RFactors = BTreeMap::new();
+        let mut accums: BTreeMap<(usize, String), Box<dyn CalibAccumulator + '_>> =
+            BTreeMap::new();
         for payload in rx {
             for (layer, stream, xt) in payload {
-                let n = xt.cols;
-                let r = rs.entry((layer, stream)).or_insert_with(|| Matrix::zeros(n, n));
-                *r = ops::tsqr_step(&ex, r, &xt)?;
+                let acc = accums.entry((layer, stream)).or_insert_with(|| {
+                    make_accumulator(kind, xt.cols, AccumBackend::Device(&ex), Precision::F32)
+                });
+                acc.fold_chunk(&xt)?;
             }
         }
-        Ok(rs)
+        Ok(accums.into_iter().map(|(k, a)| (k, a.finish())).collect())
     });
 
     producer
@@ -76,7 +84,7 @@ mod tests {
 
     #[test]
     fn overlapped_matches_sequential() {
-        if !std::path::Path::new("artifacts/manifest.json").exists() {
+        if !crate::runtime::device_available("artifacts") {
             return;
         }
         let ex = Executor::new("artifacts").unwrap();
@@ -85,27 +93,34 @@ mod tests {
         let corpus = Corpus::load("artifacts").unwrap();
         let batches = corpus.batches("calib", spec.batch, spec.seq_len, 3).unwrap();
 
-        // sequential reference
+        // sequential reference through the same accumulator interface
         let cap = ActivationCapture::new(&ex, &spec);
-        let mut seq: RFactors = BTreeMap::new();
+        let mut seq: BTreeMap<(usize, String), Box<dyn CalibAccumulator + '_>> = BTreeMap::new();
         for t in &batches {
             let (_l, chunks) = cap.capture(t, &weights).unwrap();
             for c in chunks {
-                let n = c.xt.cols;
-                let r = seq.entry((c.layer, c.stream)).or_insert_with(|| Matrix::zeros(n, n));
-                *r = ops::tsqr_step(&ex, r, &c.xt).unwrap();
+                let acc = seq.entry((c.layer, c.stream.clone())).or_insert_with(|| {
+                    make_accumulator(
+                        AccumKind::RFactor,
+                        c.xt.cols,
+                        AccumBackend::Device(&ex),
+                        Precision::F32,
+                    )
+                });
+                acc.fold_chunk(&c.xt).unwrap();
             }
         }
+        let seq: CalibStates = seq.into_iter().map(|(k, a)| (k, a.finish())).collect();
 
-        let par = calibrate_overlapped("artifacts", "tiny", batches, 2).unwrap();
+        let par =
+            calibrate_overlapped("artifacts", "tiny", batches, 2, AccumKind::RFactor).unwrap();
         assert_eq!(par.len(), seq.len());
-        for (k, r_seq) in &seq {
-            let r_par = &par[k];
+        for (k, s_seq) in &seq {
+            let r_seq = s_seq.r().unwrap();
+            let r_par = par[k].r().unwrap();
             // R is unique up to row signs; compare RᵀR
-            let g_seq =
-                crate::tensor::ops::matmul(&r_seq.transpose(), r_seq).unwrap();
-            let g_par =
-                crate::tensor::ops::matmul(&r_par.transpose(), r_par).unwrap();
+            let g_seq = crate::tensor::ops::matmul(&r_seq.transpose(), r_seq).unwrap();
+            let g_par = crate::tensor::ops::matmul(&r_par.transpose(), r_par).unwrap();
             let err = fro(&g_seq.sub(&g_par).unwrap()) / fro(&g_seq).max(1e-9);
             assert!(err < 1e-4, "{k:?}: {err}");
         }

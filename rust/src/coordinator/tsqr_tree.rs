@@ -4,10 +4,18 @@
 //! the faithful simulation of "one GPU per tree leaf": no shared device
 //! state, R factors (tiny n × n matrices) are the only thing crossing
 //! the tree edges, exactly like the multi-GPU all-reduce-of-R pattern.
+//!
+//! Both the leaf folds and the reduction edges drive the
+//! [`CalibAccumulator`] interface from `calib::accumulate`, so the same
+//! runner reduces any mergeable accumulator state and can fall back to
+//! the host route when no artifacts exist.
 
+use crate::calib::accumulate::{
+    make_accumulator, merge_states, AccumBackend, AccumKind, CalibAccumulator, CalibState,
+};
 use crate::error::{Error, Result};
 use crate::runtime::executor::Executor;
-use crate::runtime::ops;
+use crate::tensor::lowp::Precision;
 use crate::tensor::Matrix;
 use std::sync::mpsc;
 
@@ -15,11 +23,37 @@ use std::sync::mpsc;
 pub struct TsqrTreeRunner {
     pub artifacts_dir: String,
     pub workers: usize,
+    /// Fold through PJRT artifacts (default) or host linalg.
+    pub host: bool,
 }
 
 impl TsqrTreeRunner {
     pub fn new(artifacts_dir: &str, workers: usize) -> TsqrTreeRunner {
-        TsqrTreeRunner { artifacts_dir: artifacts_dir.to_string(), workers: workers.max(1) }
+        TsqrTreeRunner {
+            artifacts_dir: artifacts_dir.to_string(),
+            workers: workers.max(1),
+            host: false,
+        }
+    }
+
+    /// Same tree, pure-Rust host folds (no artifacts needed).
+    pub fn host(workers: usize) -> TsqrTreeRunner {
+        TsqrTreeRunner { artifacts_dir: String::new(), workers: workers.max(1), host: true }
+    }
+
+    fn fold_share(&self, share: &[&Matrix<f32>], n: usize) -> Result<CalibState> {
+        let ex;
+        let backend = if self.host {
+            AccumBackend::Host
+        } else {
+            ex = Executor::new(&self.artifacts_dir)?; // own PJRT client
+            AccumBackend::Device(&ex)
+        };
+        let mut acc = make_accumulator(AccumKind::RFactor, n, backend, Precision::F32);
+        for &c in share {
+            acc.fold_chunk(c)?;
+        }
+        Ok(acc.finish())
     }
 
     /// Leaf phase: worker w sequentially folds chunks w, w+P, w+2P, …
@@ -35,16 +69,12 @@ impl TsqrTreeRunner {
         let workers = self.workers.min(chunks.len());
         if workers <= 1 {
             // single device: plain streaming fold
-            let ex = Executor::new(&self.artifacts_dir)?;
-            let mut r = Matrix::zeros(n, n);
-            for c in &chunks {
-                r = ops::tsqr_step(&ex, &r, c)?;
-            }
-            return Ok(r);
+            let share: Vec<&Matrix<f32>> = chunks.iter().collect();
+            return self.fold_share(&share, n)?.r().cloned();
         }
 
         // ---- leaf phase: one thread per simulated device ----------------
-        let (tx, rx) = mpsc::channel::<Result<(usize, Matrix<f32>)>>();
+        let (tx, rx) = mpsc::channel::<Result<(usize, CalibState)>>();
         std::thread::scope(|s| {
             // distribute chunks round-robin; each worker folds its share
             let mut shares: Vec<Vec<&Matrix<f32>>> = vec![Vec::new(); workers];
@@ -53,42 +83,40 @@ impl TsqrTreeRunner {
             }
             for (w, share) in shares.into_iter().enumerate() {
                 let tx = tx.clone();
-                let dir = self.artifacts_dir.clone();
                 s.spawn(move || {
-                    let res = (|| -> Result<Matrix<f32>> {
-                        let ex = Executor::new(&dir)?; // own PJRT client
-                        let mut r = Matrix::zeros(n, n);
-                        for c in share {
-                            r = ops::tsqr_step(&ex, &r, c)?;
-                        }
-                        Ok(r)
-                    })();
+                    let res = self.fold_share(&share, n);
                     let _ = tx.send(res.map(|r| (w, r)));
                 });
             }
         });
         drop(tx);
-        let mut leaves: Vec<(usize, Matrix<f32>)> = Vec::with_capacity(workers);
+        let mut leaves: Vec<(usize, CalibState)> = Vec::with_capacity(workers);
         for got in rx {
             leaves.push(got?);
         }
         leaves.sort_by_key(|(w, _)| *w); // deterministic reduction order
-        let mut level: Vec<Matrix<f32>> = leaves.into_iter().map(|(_, r)| r).collect();
+        let mut level: Vec<CalibState> = leaves.into_iter().map(|(_, r)| r).collect();
 
         // ---- reduction phase: binary tree of R merges --------------------
-        let ex = Executor::new(&self.artifacts_dir)?;
+        let ex;
+        let backend = if self.host {
+            AccumBackend::Host
+        } else {
+            ex = Executor::new(&self.artifacts_dir)?;
+            AccumBackend::Device(&ex)
+        };
         while level.len() > 1 {
             let mut next = Vec::with_capacity(level.len().div_ceil(2));
             let mut it = level.into_iter();
             while let Some(a) = it.next() {
                 match it.next() {
-                    Some(b) => next.push(ops::tsqr_merge(&ex, &a, &b)?),
+                    Some(b) => next.push(merge_states(a, b, backend, Precision::F32)?),
                     None => next.push(a),
                 }
             }
             level = next;
         }
-        Ok(level.pop().unwrap())
+        level.pop().unwrap().r().cloned()
     }
 }
 
@@ -99,7 +127,7 @@ mod tests {
 
     #[test]
     fn tree_matches_sequential_gram_identity() {
-        if !std::path::Path::new("artifacts/manifest.json").exists() {
+        if !crate::runtime::device_available("artifacts") {
             return;
         }
         let ex = Executor::new("artifacts").unwrap();
@@ -118,6 +146,25 @@ mod tests {
             let got = matmul(&r.transpose(), &r).unwrap();
             let err = fro(&got.sub(&want).unwrap()) / fro(&want);
             assert!(err < 1e-4, "workers={workers}: {err}");
+        }
+    }
+
+    #[test]
+    fn host_tree_matches_direct_gram() {
+        // no artifacts needed: the same tree reduction on the host route
+        let n = 12;
+        let chunks: Vec<Matrix<f32>> = (0..6).map(|i| Matrix::randn(17, n, 40 + i)).collect();
+        let mut full = chunks[0].clone();
+        for ch in &chunks[1..] {
+            full = full.vstack(ch).unwrap();
+        }
+        let want = gram_t(&full);
+        for workers in [1usize, 2, 4] {
+            let runner = TsqrTreeRunner::host(workers);
+            let r = runner.run(chunks.clone()).unwrap();
+            let got = matmul(&r.transpose(), &r).unwrap();
+            let err = fro(&got.sub(&want).unwrap()) / fro(&want);
+            assert!(err < 1e-3, "workers={workers}: {err}");
         }
     }
 

@@ -1,35 +1,72 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls: the offline build has no
+//! `thiserror`, and the variant set is small enough that the derive
+//! buys nothing.
 
-use thiserror::Error;
+use std::fmt;
 
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
-    #[error("xla error: {0}")]
-    Xla(#[from] xla::Error),
+    #[cfg(feature = "pjrt")]
+    Xla(xla::Error),
 
-    #[error("format error in {path}: {msg}")]
     Format { path: String, msg: String },
 
-    #[error("json error: {0}")]
     Json(String),
 
-    #[error("shape mismatch: {0}")]
     Shape(String),
 
-    #[error("artifact `{0}` not found in manifest")]
     UnknownArtifact(String),
 
-    #[error("numerical failure: {0}")]
     Numerical(String),
 
-    #[error("config error: {0}")]
     Config(String),
 
-    #[error("{0}")]
     Msg(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Io(e) => write!(f, "io error: {e}"),
+            #[cfg(feature = "pjrt")]
+            Error::Xla(e) => write!(f, "xla error: {e}"),
+            Error::Format { path, msg } => write!(f, "format error in {path}: {msg}"),
+            Error::Json(m) => write!(f, "json error: {m}"),
+            Error::Shape(m) => write!(f, "shape mismatch: {m}"),
+            Error::UnknownArtifact(a) => write!(f, "artifact `{a}` not found in manifest"),
+            Error::Numerical(m) => write!(f, "numerical failure: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Msg(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            #[cfg(feature = "pjrt")]
+            Error::Xla(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e)
+    }
 }
 
 pub type Result<T> = std::result::Result<T, Error>;

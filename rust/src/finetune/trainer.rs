@@ -196,7 +196,7 @@ mod tests {
 
     #[test]
     fn training_reduces_loss_and_moves_adapters() {
-        if !std::path::Path::new("artifacts/manifest.json").exists() {
+        if !crate::runtime::device_available("artifacts") {
             return;
         }
         let ex = Executor::new("artifacts").unwrap();
@@ -225,7 +225,7 @@ mod tests {
 
     #[test]
     fn task_eval_runs_on_adapted_model() {
-        if !std::path::Path::new("artifacts/manifest.json").exists() {
+        if !crate::runtime::device_available("artifacts") {
             return;
         }
         let ex = Executor::new("artifacts").unwrap();

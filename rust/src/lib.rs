@@ -2,7 +2,38 @@
 //!
 //! A reproduction of *“COALA: Numerically Stable and Efficient Framework
 //! for Context-Aware Low-Rank Approximation”* (Parkina & Rakhuba, 2025)
-//! as a three-layer Rust + JAX + Pallas system:
+//! as a three-layer Rust + JAX + Pallas system.
+//!
+//! ## Architecture
+//!
+//! The paper's central observation is that COALA and the Gram-based
+//! baselines (SVD-LLM, CorDA, ASVD) differ only in *which statistic of
+//! the calibration stream they accumulate* and *how they factorize it*.
+//! The crate encodes exactly that split as two small traits:
+//!
+//! * [`calib::accumulate::CalibAccumulator`] — the streaming
+//!   "accumulate" stage.  Three strategies (square R via out-of-core
+//!   TSQR, streamed Gram, per-channel activation scales) share one
+//!   `fold_chunk`/`merge_state`/`finish` interface, each running on
+//!   either backend: the PJRT artifacts (`Device`) or pure-Rust linalg
+//!   (`Host`).  Every driver — the sequential pipeline, the overlapped
+//!   scheduler, the multi-device tree-TSQR runner — folds through this
+//!   interface; the raw calibration matrix X is never materialized.
+//! * [`coala::compressor::Compressor`] — one impl per compression
+//!   method.  Each declares the accumulator kind it consumes and
+//!   provides **two** factorization routes: `factorize_device` (the AOT
+//!   PJRT artifacts via `runtime::ops`) and `factorize_host` (the pure
+//!   fp32/fp64 implementations in `coala::factorize` /
+//!   `coala::baselines`).  Methods resolve by name through the registry
+//!   (`coala::compressor::resolve`), so the coordinator, repro harness,
+//!   CLI, and benches never match on method variants.  The accumulate
+//!   and factorize stages run end-to-end with no artifacts or PJRT
+//!   runtime (the cross-method conformance suite exercises exactly
+//!   that); activation *capture* is the one stage that still needs the
+//!   `fwd_acts` artifacts, since the transformer forward pass has no
+//!   host implementation.
+//!
+//! Layers:
 //!
 //! * **L3 (this crate)** — the coordinator: streaming calibration over a
 //!   real (build-time-trained) transformer, TSQR tree scheduling, the
@@ -18,10 +49,22 @@
 //!   trailing update).
 //!
 //! The `runtime` module loads the AOT artifacts through the PJRT C API
-//! (`xla` crate) — python never runs on the request path.  The `linalg`
-//! module is an independent pure-Rust implementation of the same
-//! numerics (including f64) used as ground truth for the stability
-//! studies, for the host-side baseline paths, and by the property tests.
+//! (`xla` crate, behind the `pjrt` cargo feature) — python never runs on
+//! the request path.  The `linalg` module is an independent pure-Rust
+//! implementation of the same numerics (including f64) used as ground
+//! truth for the stability studies, as the host route of every
+//! compressor, and by the property tests.
+//!
+//! ### Adding a method
+//!
+//! 1. implement the factorization in `coala::` (host) and, if an AOT
+//!    graph exists, a typed wrapper in `runtime::ops` (device);
+//! 2. add a `Compressor` impl in `coala::compressor` declaring its
+//!    [`calib::accumulate::AccumKind`];
+//! 3. register it in `compressor::resolve` / `compressor::registry`.
+//!
+//! Nothing else changes: the pipeline, schedulers, repro tables, CLI,
+//! and the cross-method conformance suite pick it up from the registry.
 
 pub mod calib;
 pub mod coala;

@@ -27,4 +27,4 @@ pub use eigh::eigh;
 pub use qr::{householder_qr_r, qr_r_square};
 pub use svd::{jacobi_svd, Svd};
 pub use triangular::{solve_lower, solve_upper};
-pub use tsqr::{tsqr_sequential, tsqr_tree};
+pub use tsqr::{tsqr_sequential, tsqr_tree, TsqrFolder};

@@ -10,9 +10,31 @@ use crate::tensor::{Matrix, Scalar};
 /// a zero column yields a zero reflector (β = 0).
 pub fn householder_qr_r<T: Scalar>(a: &Matrix<T>) -> Matrix<T> {
     let (m, n) = (a.rows, a.cols);
-    let steps = m.min(n);
     let mut acc = a.clone();
     let mut v = vec![T::ZERO; m];
+    householder_triangularize(&mut acc, m, &mut v);
+    // extract the upper-triangular top block
+    let k = m.min(n);
+    let mut r = Matrix::zeros(k, n);
+    for i in 0..k {
+        for j in i..n {
+            r.set(i, j, acc.get(i, j));
+        }
+    }
+    r
+}
+
+/// Triangularize the top `m` rows of `acc` **in place** (R-only
+/// Householder sweep); rows ≥ `m` of `acc` are never touched.
+///
+/// This is the allocation-free core shared by [`householder_qr_r`] and
+/// the streaming [`super::tsqr::TsqrFolder`], which reuses one scratch
+/// matrix across folds instead of re-stacking `[R ; chunk]`.  `v` is the
+/// caller-owned reflector workspace (`v.len() >= m`).
+pub(crate) fn householder_triangularize<T: Scalar>(acc: &mut Matrix<T>, m: usize, v: &mut [T]) {
+    let n = acc.cols;
+    debug_assert!(m <= acc.rows && v.len() >= m);
+    let steps = m.min(n);
     for j in 0..steps {
         // build the Householder vector from column j, rows j..m
         let mut norm2 = T::ZERO;
@@ -26,13 +48,13 @@ pub fn householder_qr_r<T: Scalar>(a: &Matrix<T>) -> Matrix<T> {
         }
         let xj = acc.get(j, j);
         let alpha = if xj.to_f64() >= 0.0 { -normx } else { normx };
-        for i in 0..m {
-            v[i] = if i < j { T::ZERO } else { acc.get(i, j) };
+        for i in j..m {
+            v[i] = acc.get(i, j);
         }
         v[j] -= alpha;
         let vnorm2 = {
             let mut s = T::ZERO;
-            for &x in v.iter().skip(j) {
+            for &x in v.iter().take(m).skip(j) {
                 s += x * x;
             }
             s
@@ -54,15 +76,6 @@ pub fn householder_qr_r<T: Scalar>(a: &Matrix<T>) -> Matrix<T> {
             }
         }
     }
-    // extract the upper-triangular top block
-    let k = m.min(n);
-    let mut r = Matrix::zeros(k, n);
-    for i in 0..k {
-        for j in i..n {
-            r.set(i, j, acc.get(i, j));
-        }
-    }
-    r
 }
 
 /// Square (n × n) R for the COALA preprocessing convention: zero-pads

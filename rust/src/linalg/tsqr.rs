@@ -2,27 +2,133 @@
 //!
 //! Host reference edition of the streaming and binary-tree variants; the
 //! production path runs the same algorithm through the `tsqr_step` /
-//! `tsqr_merge` PJRT artifacts orchestrated by `coordinator::tsqr_tree`.
+//! `tsqr_merge` PJRT artifacts orchestrated by `coordinator::tsqr_tree`,
+//! and the host fallback route drives [`TsqrFolder`] through
+//! `calib::accumulate`.
 
-use crate::error::Result;
-use crate::linalg::qr::qr_r_square;
+use crate::error::{Error, Result};
+use crate::linalg::qr::{householder_triangularize, qr_r_square};
 use crate::tensor::{Matrix, Scalar};
 use crate::util::threads;
+
+/// Streaming TSQR state with a reusable scratch buffer.
+///
+/// Folding a (c × n) chunk into the running R factorizes the stacked
+/// (n + c) × n matrix `[R ; chunk]`.  The naive formulation re-allocates
+/// that stack (and the QR working copy) on every fold; `TsqrFolder`
+/// instead keeps one (n + c_max) × n scratch matrix and one reflector
+/// workspace alive across folds, so steady-state folding is
+/// allocation-free (`benches/kernels.rs` measures the delta).
+pub struct TsqrFolder<T: Scalar> {
+    n: usize,
+    /// rows 0..n hold the current R (upper triangular); rows n.. are the
+    /// chunk landing zone.
+    scratch: Matrix<T>,
+    /// Householder reflector workspace (len = scratch.rows).
+    v: Vec<T>,
+}
+
+impl<T: Scalar> TsqrFolder<T> {
+    /// Folder for n-column chunks; scratch sized for `chunk_capacity`
+    /// rows per fold (grows automatically if a bigger chunk arrives).
+    pub fn with_chunk_capacity(n: usize, chunk_capacity: usize) -> TsqrFolder<T> {
+        let rows = n + chunk_capacity.max(1);
+        TsqrFolder { n, scratch: Matrix::zeros(rows, n), v: vec![T::ZERO; rows] }
+    }
+
+    pub fn new(n: usize) -> TsqrFolder<T> {
+        TsqrFolder::with_chunk_capacity(n, n)
+    }
+
+    /// Resume from an existing square R factor (RᵀR = partial XXᵀ): the
+    /// seed is copied into the scratch head, costing no QR.
+    pub fn from_r(r: &Matrix<T>) -> TsqrFolder<T> {
+        let n = r.cols;
+        debug_assert_eq!(r.rows, n, "TsqrFolder seeds from a square R");
+        let mut folder = TsqrFolder::new(n);
+        for i in 0..n.min(r.rows) {
+            for j in 0..n {
+                folder.scratch.set(i, j, r.get(i, j));
+            }
+        }
+        folder
+    }
+
+    /// Fold one (c × n) row-block of Xᵀ into the running R.
+    pub fn fold(&mut self, chunk: &Matrix<T>) -> Result<()> {
+        let n = self.n;
+        if chunk.cols != n {
+            return Err(Error::shape(format!(
+                "tsqr fold: chunk has {} cols, folder is {n}-wide",
+                chunk.cols
+            )));
+        }
+        let m = n + chunk.rows;
+        if self.scratch.rows < m {
+            // preserve R, grow the landing zone
+            let mut bigger = Matrix::zeros(m, n);
+            for i in 0..n {
+                for j in i..n {
+                    bigger.set(i, j, self.scratch.get(i, j));
+                }
+            }
+            self.scratch = bigger;
+            self.v.resize(m, T::ZERO);
+        }
+        // previous triangularization leaves reflector residue below the
+        // diagonal — the stacked matrix is [R ; chunk], so clear it
+        for i in 1..n {
+            for j in 0..i.min(n) {
+                self.scratch.set(i, j, T::ZERO);
+            }
+        }
+        for i in 0..chunk.rows {
+            for j in 0..n {
+                self.scratch.set(n + i, j, chunk.get(i, j));
+            }
+        }
+        householder_triangularize(&mut self.scratch, m, &mut self.v);
+        Ok(())
+    }
+
+    /// Merge another square R (same convention: RᵀR = partial XXᵀ).
+    pub fn merge_r(&mut self, other: &Matrix<T>) -> Result<()> {
+        self.fold(other)
+    }
+
+    /// Copy out the current square n × n R factor.
+    pub fn r(&self) -> Matrix<T> {
+        let n = self.n;
+        let mut r = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                r.set(i, j, self.scratch.get(i, j));
+            }
+        }
+        r
+    }
+
+    /// Final R, consuming the folder.
+    pub fn finish(self) -> Matrix<T> {
+        self.r()
+    }
+}
 
 /// Streaming (sequential) TSQR: fold chunks of Xᵀ into a running R.
 ///
 /// `chunks` are (cᵢ × n) row-blocks of Xᵀ.  Returns square R with
-/// RᵀR = Σ chunkᵢᵀ chunkᵢ = XXᵀ.  Peak memory is one chunk + R — this is
-/// how a calibration matrix larger than device memory is processed.
+/// RᵀR = Σ chunkᵢᵀ chunkᵢ = XXᵀ.  Peak memory is one chunk + the folder
+/// scratch — this is how a calibration matrix larger than device memory
+/// is processed.
 pub fn tsqr_sequential<T: Scalar>(chunks: &[Matrix<T>]) -> Result<Matrix<T>> {
     assert!(!chunks.is_empty());
     let n = chunks[0].cols;
-    let mut r = Matrix::zeros(n, n);
+    let c_max = chunks.iter().map(|c| c.rows).max().unwrap_or(1);
+    let mut folder = TsqrFolder::with_chunk_capacity(n, c_max);
     for c in chunks {
-        let stacked = r.vstack(c)?;
-        r = qr_r_square(&stacked)?;
+        folder.fold(c)?;
     }
-    Ok(r)
+    Ok(folder.finish())
 }
 
 /// Binary-tree TSQR: leaf QRs in parallel, then pairwise R merges.
@@ -83,6 +189,40 @@ mod tests {
         }
         let r = tsqr_sequential(&chunks).unwrap();
         assert_gram_eq(&gram_of_r(&r), &gram_t(&full), 1e-9);
+    }
+
+    #[test]
+    fn folder_matches_naive_stacking() {
+        let n = 9;
+        let chunks: Vec<Matrix<f64>> = (0..4).map(|i| Matrix::randn(21, n, 50 + i as u64)).collect();
+        // naive reference: re-stack and re-QR every fold
+        let mut r_naive: Matrix<f64> = Matrix::zeros(n, n);
+        for c in &chunks {
+            r_naive = qr_r_square(&r_naive.vstack(c).unwrap()).unwrap();
+        }
+        let mut folder = TsqrFolder::with_chunk_capacity(n, 21);
+        for c in &chunks {
+            folder.fold(c).unwrap();
+        }
+        assert_gram_eq(&gram_of_r(&folder.finish()), &gram_of_r(&r_naive), 1e-9);
+    }
+
+    #[test]
+    fn folder_grows_for_oversized_chunks() {
+        let n = 6;
+        let small: Matrix<f64> = Matrix::randn(4, n, 1);
+        let big: Matrix<f64> = Matrix::randn(40, n, 2);
+        let mut folder = TsqrFolder::with_chunk_capacity(n, 4);
+        folder.fold(&small).unwrap();
+        folder.fold(&big).unwrap();
+        let full = small.vstack(&big).unwrap();
+        assert_gram_eq(&gram_of_r(&folder.finish()), &gram_t(&full), 1e-9);
+    }
+
+    #[test]
+    fn folder_rejects_width_mismatch() {
+        let mut folder = TsqrFolder::<f64>::new(5);
+        assert!(folder.fold(&Matrix::randn(3, 4, 1)).is_err());
     }
 
     #[test]

@@ -3,13 +3,18 @@
 //! Subcommands:
 //!   selfcheck                 run the jax⇄PJRT conformance suite
 //!   info                      print manifest / model / artifact summary
+//!   methods                   list the registered compression methods
 //!   compress  --model tiny --method coala --ratio 0.7 [--lambda 3]
+//!             [--route device|host]
 //!   eval      --model tiny    perplexity + probe tasks of the base model
 //!   repro <id>                regenerate a paper table/figure (or `all`)
 //!   tsqr-demo --workers 4     out-of-core tree-TSQR demonstration
+//!
+//! Methods resolve by name through the `coala::compressor` registry —
+//! `methods` prints every spec the registry accepts.
 
 use coala::calib::dataset::{Corpus, TaskBank};
-use coala::coala::{Method, MuRule};
+use coala::coala::compressor::{registry, resolve, Compressor, Route};
 use coala::coordinator::{CompressionJob, Pipeline, TsqrTreeRunner};
 use coala::error::{Error, Result};
 use coala::eval::{eval_tasks, perplexity};
@@ -28,27 +33,12 @@ fn main() {
     }
 }
 
-fn method_from(args: &Args) -> Result<Method> {
-    Ok(match args.get_or("method", "coala") {
-        "coala" => match args.get("lambda") {
-            Some(l) => Method::Coala(MuRule::Adaptive {
-                lambda: l.parse().map_err(|_| Error::Config("bad --lambda".into()))?,
-            }),
-            None => match args.get("mu") {
-                Some(m) => Method::Coala(MuRule::Constant {
-                    mu: m.parse().map_err(|_| Error::Config("bad --mu".into()))?,
-                }),
-                None => Method::Coala(MuRule::None),
-            },
-        },
-        "svdllm" => Method::SvdLlm,
-        "svdllm2" => Method::SvdLlmV2,
-        "asvd" => Method::Asvd,
-        "svd" => Method::PlainSvd,
-        "corda" => Method::Corda,
-        "alpha2" => Method::Alpha(2),
-        other => return Err(Error::Config(format!("unknown --method {other}"))),
-    })
+fn route_from(args: &Args) -> Result<Route> {
+    match args.get_or("route", "device") {
+        "device" => Ok(Route::Device),
+        "host" => Ok(Route::Host),
+        other => Err(Error::Config(format!("--route is device or host, got `{other}`"))),
+    }
 }
 
 fn dispatch(cmd: &str, args: &Args) -> Result<()> {
@@ -71,16 +61,43 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
             }
             Ok(())
         }
+        "methods" => {
+            println!("registered compression methods (--method accepts the spec column):");
+            println!("  {:<16} {:<24} accumulator", "spec", "method");
+            for comp in registry() {
+                println!(
+                    "  {:<16} {:<24} {:?}",
+                    comp.spec(),
+                    comp.name(),
+                    comp.accum_kind()
+                );
+            }
+            println!(
+                "\nparameterized specs: coala:lambda=L (adaptive μ, Eq. 5) | coala:mu=M\n\
+                 accumulate + factorize run on either route: --route device (PJRT\n\
+                 artifacts) or --route host (pure Rust); activation capture itself\n\
+                 always needs the fwd_acts artifacts"
+            );
+            Ok(())
+        }
         "compress" => {
             let ex = Executor::new(&dir)?;
             let corpus = Corpus::load(&dir)?;
             let cfg = args.get_or("model", "tiny");
             let spec = ex.manifest.config(cfg)?.clone();
             let w = ModelWeights::load(&dir, &spec)?;
-            let mut job = CompressionJob::new(cfg, method_from(args)?, args.get_f64("ratio", 0.7)?);
+            let comp = resolve(&args.method_spec("coala"))?;
+            let mut job =
+                CompressionJob::new(cfg, comp.method(), args.get_f64("ratio", 0.7)?);
             job.calib_batches = args.get_usize("calib-batches", 8)?;
-            println!("compressing {cfg} with {} at {:.0}% kept …", job.method.name(), job.ratio * 100.0);
-            let pipe = Pipeline::new(&ex, spec.clone(), &w);
+            let route = route_from(args)?;
+            println!(
+                "compressing {cfg} with {} at {:.0}% kept ({:?} route) …",
+                comp.name(),
+                job.ratio * 100.0,
+                route
+            );
+            let pipe = Pipeline::new(&ex, spec.clone(), &w).with_route(route);
             let out = pipe.run(&job, &corpus)?;
             println!(
                 "done in {:.2}s (calibrate {:.2}s / accumulate {:.2}s / factorize {:.2}s)",
@@ -90,8 +107,8 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
             println!("achieved ratio: {:.4}", out.model.achieved_ratio(&w, &spec));
             let rec = out.model.reconstruct_into(&w)?;
             let base = perplexity(&ex, &spec, &w, corpus.split("val")?, 4)?;
-            let comp = perplexity(&ex, &spec, &rec, corpus.split("val")?, 4)?;
-            println!("val ppl: {base:.2} -> {comp:.2}");
+            let comp_ppl = perplexity(&ex, &spec, &rec, corpus.split("val")?, 4)?;
+            println!("val ppl: {base:.2} -> {comp_ppl:.2}");
             let bank = TaskBank::load(&dir, "base", &ex.manifest.task_names)?;
             let s0 = eval_tasks(&ex, &spec, &w, &bank, Some(256))?;
             let s1 = eval_tasks(&ex, &spec, &rec, &bank, Some(256))?;
@@ -125,14 +142,18 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
             let workers = args.get_usize("workers", 4)?;
             let n = args.get_usize("n", 192)?;
             let chunks_n = args.get_usize("chunks", 8)?;
-            let ex = Executor::new(&dir)?;
-            let cfg = ex.manifest.config(args.get_or("model", "tiny"))?;
-            let c = cfg.chunk_cols();
+            let host = route_from(args)? == Route::Host;
+            let (c, runner) = if host {
+                (args.get_usize("chunk-rows", 256)?, TsqrTreeRunner::host(workers))
+            } else {
+                let ex = Executor::new(&dir)?;
+                let cfg = ex.manifest.config(args.get_or("model", "tiny"))?;
+                (cfg.chunk_cols(), TsqrTreeRunner::new(&dir, workers))
+            };
             println!("tree-TSQR: {chunks_n} chunks of {c}×{n} across {workers} simulated devices");
             let chunks: Vec<Matrix<f32>> =
                 (0..chunks_n).map(|i| Matrix::randn(c, n, i as u64)).collect();
             let t0 = std::time::Instant::now();
-            let runner = TsqrTreeRunner::new(&dir, workers);
             let r = runner.run(chunks)?;
             println!("R ({}×{}) in {:.2}s, finite={}", r.rows, r.cols, t0.elapsed().as_secs_f64(), r.all_finite());
             Ok(())
@@ -140,7 +161,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         _ => {
             println!(
                 "coala — context-aware low-rank approximation (COALA) coordinator\n\n\
-                 usage: coala <selfcheck|info|compress|eval|repro|tsqr-demo> [--flags]\n\
+                 usage: coala <selfcheck|info|methods|compress|eval|repro|tsqr-demo> [--flags]\n\
                  see README.md for the full tour"
             );
             Ok(())

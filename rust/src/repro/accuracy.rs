@@ -4,7 +4,7 @@
 
 use super::common::{dump, Env};
 use crate::calib::dataset::TaskBank;
-use crate::coala::{Method, MuRule};
+use crate::coala::compressor::{resolve, Compressor};
 use crate::coordinator::{CompressionJob, Pipeline};
 use crate::error::Result;
 use crate::eval::{eval_tasks, perplexity};
@@ -87,15 +87,16 @@ pub fn fig4(args: &Args) -> Result<()> {
     );
     let mut rows = Vec::new();
     for lambda in [0.3, 1.0, 3.0, 10.0] {
-        let mut job =
-            CompressionJob::new("tiny", Method::Coala(MuRule::Adaptive { lambda }), ratio);
+        let method = resolve(&format!("coala:lambda={lambda}"))?.method();
+        let mut job = CompressionJob::new("tiny", method, ratio);
         job.calib_batches = calib_batches();
         let (acc, ppl, _, _) = ctx.score(&job, limit())?;
         t.row(vec!["adaptive λ".into(), format!("{lambda}"), format!("{acc:.1}"), format!("{ppl:.2}")]);
         rows.push(Json::from_f64s(&[1.0, lambda, acc, ppl]));
     }
     for mu in [1e-2, 1e-1, 1.0, 10.0] {
-        let mut job = CompressionJob::new("tiny", Method::Coala(MuRule::Constant { mu }), ratio);
+        let method = resolve(&format!("coala:mu={mu}"))?.method();
+        let mut job = CompressionJob::new("tiny", method, ratio);
         job.calib_batches = calib_batches();
         let (acc, ppl, _, _) = ctx.score(&job, limit())?;
         t.row(vec!["constant μ".into(), format!("{mu}"), format!("{acc:.1}"), format!("{ppl:.2}")]);
@@ -121,8 +122,8 @@ pub fn fig5(args: &Args) -> Result<()> {
         let ctx = EvalCtx::new(&env, cfg)?;
         for ratio in [0.08, 0.12] {
             for &lambda in &lambdas {
-                let mut job =
-                    CompressionJob::new(cfg, Method::Coala(MuRule::Adaptive { lambda }), ratio);
+                let method = resolve(&format!("coala:lambda={lambda}"))?.method();
+                let mut job = CompressionJob::new(cfg, method, ratio);
                 job.calib_batches = calib_batches();
                 let (acc, ppl, _, _) = ctx.score(&job, limit())?;
                 t.row(vec![
@@ -147,12 +148,14 @@ pub fn fig5(args: &Args) -> Result<()> {
     dump("fig5", Json::Arr(rows))
 }
 
+/// `methods` rows are (display label, registry spec) — every method goes
+/// through the `coala::compressor` registry, never a variant match.
 fn method_rows(
     ctx: &EvalCtx,
     config: &str,
     ratio: f64,
     precision: Precision,
-    methods: &[(&str, Method)],
+    methods: &[(&str, &str)],
     t: &mut Table,
     recs: &mut Vec<Json>,
 ) -> Result<()> {
@@ -168,8 +171,8 @@ fn method_rows(
         ("ppl", Json::Num(bppl)),
         ("accs", Json::from_f64s(&baccs)),
     ]));
-    for (name, m) in methods {
-        let mut job = CompressionJob::new(config, *m, ratio);
+    for (name, spec) in methods {
+        let mut job = CompressionJob::new(config, resolve(spec)?.method(), ratio);
         job.calib_batches = calib_batches();
         job.accum_precision = precision;
         let (acc, ppl, accs, stds) = ctx.score(&job, limit())?;
@@ -202,11 +205,11 @@ pub fn table2(args: &Args) -> Result<()> {
         &format!("Table 2 — tiny @ {:.1}% kept (matching the paper 90%-compression regime), fp16 accumulation", ratio * 100.0),
         &header,
     );
-    let methods: Vec<(&str, Method)> = vec![
-        ("ASVD", Method::Asvd),
-        ("SVD-LLM", Method::SvdLlm),
-        ("COALA(mu=0)", Method::Coala(MuRule::None)),
-        ("COALA(adap λ=3)", Method::Coala(MuRule::Adaptive { lambda: 3.0 })),
+    let methods: Vec<(&str, &str)> = vec![
+        ("ASVD", "asvd"),
+        ("SVD-LLM", "svdllm"),
+        ("COALA(mu=0)", "coala"),
+        ("COALA(adap λ=3)", "coala:lambda=3"),
     ];
     let mut recs = Vec::new();
     method_rows(&ctx, "tiny", ratio, Precision::F16, &methods, &mut t, &mut recs)?;
@@ -228,12 +231,12 @@ pub fn table3(args: &Args) -> Result<()> {
             header.push(n);
         }
         let mut t = Table::new(&format!("Table 3 — {cfg} @ {:.0}% kept", ratio * 100.0), &header);
-        let methods: Vec<(&str, Method)> = vec![
-            ("SVD (FLAP-row)", Method::PlainSvd),
-            ("ASVD (SliceGPT-row)", Method::Asvd),
-            ("SVD-LLM", Method::SvdLlm),
-            ("SVD-LLM-v2 (SoLA-row)", Method::SvdLlmV2),
-            ("COALA(adap λ=3)", Method::Coala(MuRule::Adaptive { lambda: 3.0 })),
+        let methods: Vec<(&str, &str)> = vec![
+            ("SVD (FLAP-row)", "svd"),
+            ("ASVD (SliceGPT-row)", "asvd"),
+            ("SVD-LLM", "svdllm"),
+            ("SVD-LLM-v2 (SoLA-row)", "svdllm2"),
+            ("COALA(adap λ=3)", "coala:lambda=3"),
         ];
         method_rows(&ctx, cfg, ratio, Precision::F32, &methods, &mut t, &mut recs)?;
         t.print();

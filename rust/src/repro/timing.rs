@@ -3,7 +3,7 @@
 //! routines; this driver prints the paper-shaped tables.
 
 use super::common::{dump, Env};
-use crate::coala::{Method, MuRule};
+use crate::coala::compressor::{resolve, Compressor};
 use crate::coordinator::{CompressionJob, Pipeline};
 use crate::error::Result;
 use crate::linalg::{eigh, qr_r_square, tsqr_sequential, tsqr_tree};
@@ -19,10 +19,11 @@ pub fn table1(args: &Args) -> Result<()> {
     let env = Env::load(args)?;
     let runs = if super::common::fast() { 1 } else { args.get_usize("runs", 3)? };
     let configs = args.get_list("configs", &["tiny", "small"]);
+    // (display label, registry spec) — resolved through coala::compressor
     let methods = [
-        ("SVD-LLM", Method::SvdLlm),
-        ("SVD-LLM-v2", Method::SvdLlmV2),
-        ("COALA", Method::Coala(MuRule::None)),
+        ("SVD-LLM", "svdllm"),
+        ("SVD-LLM-v2", "svdllm2"),
+        ("COALA", "coala"),
     ];
     let mut t = Table::new(
         "Table 1 — compression wall-clock (s)",
@@ -32,7 +33,8 @@ pub fn table1(args: &Args) -> Result<()> {
     for cfg in &configs {
         let (spec, w) = env.weights(cfg)?;
         let pipe = Pipeline::new(&env.ex, spec.clone(), &w);
-        for (name, method) in methods {
+        for (name, spec) in methods {
+            let method = resolve(spec)?.method();
             let mut totals = Vec::new();
             let mut parts = (0.0, 0.0, 0.0);
             for _ in 0..runs {

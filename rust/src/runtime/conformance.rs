@@ -8,8 +8,15 @@
 //! argsort-gather, one-hot instead of take_along_axis) and THIS module
 //! proves it: every case in artifacts/conformance/ is executed through
 //! PJRT and compared against the jax-computed expected outputs.
+//!
+//! Requires the `pjrt` feature; without it `run_all`/`selfcheck` report
+//! that the device backend is unavailable.
 
-use crate::error::{Error, Result};
+use crate::error::Result;
+
+#[cfg(feature = "pjrt")]
+use crate::error::Error;
+#[cfg(feature = "pjrt")]
 use crate::runtime::cbt::{Cbt, Tensor};
 
 /// Result of one conformance case.
@@ -22,6 +29,7 @@ pub struct CaseResult {
 }
 
 /// Run every case under `<dir>/conformance`; returns per-case results.
+#[cfg(feature = "pjrt")]
 pub fn run_all(dir: &str) -> Result<Vec<CaseResult>> {
     let conf_dir = format!("{dir}/conformance");
     let list = std::fs::read_to_string(format!("{conf_dir}/cases.txt")).map_err(|e| {
@@ -35,6 +43,16 @@ pub fn run_all(dir: &str) -> Result<Vec<CaseResult>> {
     Ok(out)
 }
 
+#[cfg(not(feature = "pjrt"))]
+pub fn run_all(_dir: &str) -> Result<Vec<CaseResult>> {
+    Err(crate::error::Error::Config(
+        "conformance suite needs the PJRT backend: the `pjrt` feature plus a \
+         vendored `xla` crate wired into Cargo.toml (see the comment there)"
+            .into(),
+    ))
+}
+
+#[cfg(feature = "pjrt")]
 fn to_literal(t: &Tensor) -> Result<xla::Literal> {
     let dims: Vec<i64> = t.dims().iter().map(|&d| d as i64).collect();
     Ok(match t {
@@ -44,6 +62,7 @@ fn to_literal(t: &Tensor) -> Result<xla::Literal> {
     })
 }
 
+#[cfg(feature = "pjrt")]
 fn run_case(client: &xla::PjRtClient, dir: &str, case: &str) -> Result<CaseResult> {
     let cbt = Cbt::load(&format!("{dir}/{case}.cbt"))?;
     let tol = cbt
@@ -95,7 +114,9 @@ pub fn selfcheck(dir: &str) -> Result<()> {
         }
     }
     if failed > 0 {
-        return Err(Error::Numerical(format!("{failed} conformance case(s) FAILED")));
+        return Err(crate::error::Error::Numerical(format!(
+            "{failed} conformance case(s) FAILED"
+        )));
     }
     println!("all {} conformance cases pass", results.len());
     Ok(())
@@ -107,7 +128,9 @@ mod tests {
 
     #[test]
     fn full_suite_passes_when_built() {
-        if !std::path::Path::new("artifacts/conformance/cases.txt").exists() {
+        if !std::path::Path::new("artifacts/conformance/cases.txt").exists()
+            || !cfg!(feature = "pjrt")
+        {
             return;
         }
         let results = run_all("artifacts").unwrap();

@@ -5,70 +5,24 @@
 //! executable per model/shape variant).  Compilation happens on first
 //! use; the request path afterwards only marshals literals and calls
 //! `execute`.
+//!
+//! The PJRT client is only present when the crate is built with the
+//! `pjrt` feature.  Without it the `Executor` still loads and validates
+//! the manifest (so shape/ABI checks and everything host-side keeps
+//! working) but `run` reports that the device backend is unavailable —
+//! callers fall back to the host route (`coala::compressor`).
 
 use crate::error::{Error, Result};
 use crate::runtime::manifest::{ArtifactSpec, Manifest};
-use crate::tensor::Matrix;
+
+pub use crate::runtime::value::Value;
+
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
+#[cfg(feature = "pjrt")]
 use std::sync::Mutex;
+#[cfg(feature = "pjrt")]
 use std::time::Instant;
-
-/// Host-side value crossing the PJRT boundary.
-#[derive(Debug, Clone)]
-pub enum Value {
-    F32(Vec<usize>, Vec<f32>),
-    I32(Vec<usize>, Vec<i32>),
-}
-
-impl Value {
-    pub fn scalar_f32(v: f32) -> Value {
-        Value::F32(vec![], vec![v])
-    }
-
-    pub fn from_matrix(m: &Matrix<f32>) -> Value {
-        Value::F32(vec![m.rows, m.cols], m.data.clone())
-    }
-
-    pub fn matrix(&self) -> Result<Matrix<f32>> {
-        match self {
-            Value::F32(dims, data) if dims.len() == 2 => {
-                Matrix::from_vec(dims[0], dims[1], data.clone())
-            }
-            _ => Err(Error::shape(format!("not a 2-D f32 value: {:?}", self.dims()))),
-        }
-    }
-
-    pub fn f32s(&self) -> Result<&[f32]> {
-        match self {
-            Value::F32(_, d) => Ok(d),
-            _ => Err(Error::msg("value is not f32")),
-        }
-    }
-
-    pub fn dims(&self) -> &[usize] {
-        match self {
-            Value::F32(d, _) | Value::I32(d, _) => d,
-        }
-    }
-
-    fn to_literal(&self) -> Result<xla::Literal> {
-        let dims: Vec<i64> = self.dims().iter().map(|&d| d as i64).collect();
-        Ok(match self {
-            Value::F32(_, data) => xla::Literal::vec1(data).reshape(&dims)?,
-            Value::I32(_, data) => xla::Literal::vec1(data).reshape(&dims)?,
-        })
-    }
-
-    fn from_literal(lit: &xla::Literal) -> Result<Value> {
-        let shape = lit.array_shape()?;
-        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-        match shape.ty() {
-            xla::ElementType::F32 => Ok(Value::F32(dims, lit.to_vec::<f32>()?)),
-            xla::ElementType::S32 => Ok(Value::I32(dims, lit.to_vec::<i32>()?)),
-            other => Err(Error::msg(format!("unsupported output dtype {other:?}"))),
-        }
-    }
-}
 
 /// Execution statistics (perf pass instrumentation).
 #[derive(Debug, Default, Clone)]
@@ -79,15 +33,20 @@ pub struct ExecStats {
     pub execute_secs: f64,
 }
 
-/// PJRT client + compiled-executable cache.
+/// PJRT client + compiled-executable cache (manifest-only without the
+/// `pjrt` feature).
 pub struct Executor {
     pub manifest: Manifest,
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
+    #[cfg(feature = "pjrt")]
     cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    #[cfg(feature = "pjrt")]
     stats: Mutex<ExecStats>,
 }
 
 impl Executor {
+    #[cfg(feature = "pjrt")]
     pub fn new(artifacts_dir: &str) -> Result<Executor> {
         let manifest = Manifest::load(artifacts_dir)?;
         let client = xla::PjRtClient::cpu()?;
@@ -99,27 +58,20 @@ impl Executor {
         })
     }
 
+    #[cfg(not(feature = "pjrt"))]
+    pub fn new(artifacts_dir: &str) -> Result<Executor> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        Ok(Executor { manifest })
+    }
+
+    #[cfg(feature = "pjrt")]
     pub fn stats(&self) -> ExecStats {
         self.stats.lock().unwrap().clone()
     }
 
-    /// Compile (or fetch the cached) executable for an artifact.
-    pub fn prepare(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.cache.lock().unwrap().get(name) {
-            return Ok(e.clone());
-        }
-        let path = self.manifest.artifact_path(name)?;
-        let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(&path)?;
-        let exe = self.client.compile(&xla::XlaComputation::from_proto(&proto))?;
-        let exe = std::sync::Arc::new(exe);
-        {
-            let mut st = self.stats.lock().unwrap();
-            st.compiles += 1;
-            st.compile_secs += t0.elapsed().as_secs_f64();
-        }
-        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
-        Ok(exe)
+    #[cfg(not(feature = "pjrt"))]
+    pub fn stats(&self) -> ExecStats {
+        ExecStats::default()
     }
 
     fn validate(&self, spec: &ArtifactSpec, inputs: &[Value]) -> Result<()> {
@@ -157,19 +109,7 @@ impl Executor {
     pub fn run(&self, name: &str, inputs: &[Value]) -> Result<Vec<Value>> {
         let spec = self.manifest.artifact(name)?.clone();
         self.validate(&spec, inputs)?;
-        let exe = self.prepare(name)?;
-        let lits: Vec<xla::Literal> =
-            inputs.iter().map(|v| v.to_literal()).collect::<Result<_>>()?;
-        let t0 = Instant::now();
-        let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
-        {
-            let mut st = self.stats.lock().unwrap();
-            st.executions += 1;
-            st.execute_secs += t0.elapsed().as_secs_f64();
-        }
-        // all artifacts are lowered with return_tuple=True
-        let parts = result.to_tuple()?;
-        let out: Vec<Value> = parts.iter().map(Value::from_literal).collect::<Result<_>>()?;
+        let out = self.execute(&spec, inputs)?;
         if out.len() != spec.outputs.len() {
             return Err(Error::shape(format!(
                 "{}: produced {} outputs, manifest says {}",
@@ -180,14 +120,86 @@ impl Executor {
         }
         Ok(out)
     }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn execute(&self, spec: &ArtifactSpec, _inputs: &[Value]) -> Result<Vec<Value>> {
+        Err(Error::Config(format!(
+            "artifact `{}`: PJRT backend unavailable (crate built without the \
+             `pjrt` feature); accumulate/factorize can run on the host route, \
+             but this artifact has no host implementation",
+            spec.name
+        )))
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn execute(&self, spec: &ArtifactSpec, inputs: &[Value]) -> Result<Vec<Value>> {
+        let exe = self.prepare(&spec.name)?;
+        let lits: Vec<xla::Literal> =
+            inputs.iter().map(pjrt::to_literal).collect::<Result<_>>()?;
+        let t0 = Instant::now();
+        let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        {
+            let mut st = self.stats.lock().unwrap();
+            st.executions += 1;
+            st.execute_secs += t0.elapsed().as_secs_f64();
+        }
+        // all artifacts are lowered with return_tuple=True
+        let parts = result.to_tuple()?;
+        parts.iter().map(pjrt::from_literal).collect()
+    }
+
+    /// Compile (or fetch the cached) executable for an artifact.
+    #[cfg(feature = "pjrt")]
+    pub fn prepare(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let path = self.manifest.artifact_path(name)?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let exe = self.client.compile(&xla::XlaComputation::from_proto(&proto))?;
+        let exe = std::sync::Arc::new(exe);
+        {
+            let mut st = self.stats.lock().unwrap();
+            st.compiles += 1;
+            st.compile_secs += t0.elapsed().as_secs_f64();
+        }
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+}
+
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use super::Value;
+    use crate::error::{Error, Result};
+
+    pub fn to_literal(v: &Value) -> Result<xla::Literal> {
+        let dims: Vec<i64> = v.dims().iter().map(|&d| d as i64).collect();
+        Ok(match v {
+            Value::F32(_, data) => xla::Literal::vec1(data).reshape(&dims)?,
+            Value::I32(_, data) => xla::Literal::vec1(data).reshape(&dims)?,
+        })
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<Value> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(Value::F32(dims, lit.to_vec::<f32>()?)),
+            xla::ElementType::S32 => Ok(Value::I32(dims, lit.to_vec::<i32>()?)),
+            other => Err(Error::msg(format!("unsupported output dtype {other:?}"))),
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tensor::Matrix;
 
     fn executor() -> Option<Executor> {
-        if std::path::Path::new("artifacts/manifest.json").exists() {
+        if crate::runtime::device_available("artifacts") {
             Some(Executor::new("artifacts").unwrap())
         } else {
             None

@@ -9,16 +9,33 @@
 //! * [`cbt`]      — reader for the CBT tensor container (weights, corpus,
 //!                  task banks, conformance fixtures)
 //! * [`manifest`] — typed view of artifacts/manifest.json (the ABI)
+//! * [`value`]    — backend-neutral host values crossing the boundary
 //! * [`executor`] — compile-once executable cache + literal marshalling
 //! * [`ops`]      — typed wrappers: tsqr_step, factorize, gram_update, …
 //! * [`conformance`] — the jax-vs-PJRT parity self-check (`coala selfcheck`)
+//!
+//! Everything that actually touches PJRT sits behind the `pjrt` cargo
+//! feature; the default (offline) build compiles the manifest/ABI layer
+//! and the `Value` plumbing only, and `Executor::run` reports that the
+//! device backend is unavailable so callers can fall back to the host
+//! route (`coala::compressor` + `calib::accumulate`).
 
 pub mod cbt;
 pub mod conformance;
 pub mod executor;
 pub mod manifest;
 pub mod ops;
+pub mod value;
 
 pub use cbt::{Cbt, Tensor};
 pub use executor::Executor;
 pub use manifest::Manifest;
+pub use value::Value;
+
+/// True when the device route can actually execute artifacts from
+/// `dir`: the crate was built with the `pjrt` feature AND the AOT
+/// artifacts exist.  Artifact-executing tests and benches use this to
+/// self-skip instead of panicking on the no-pjrt `Executor::run` stub.
+pub fn device_available(dir: &str) -> bool {
+    cfg!(feature = "pjrt") && std::path::Path::new(&format!("{dir}/manifest.json")).exists()
+}

@@ -1,0 +1,49 @@
+//! Host-side tensor values crossing the executor boundary.
+//!
+//! `Value` is backend-neutral: the calibration plumbing, schedulers, and
+//! accumulators all traffic in it, whether the factorization work lands
+//! on the PJRT device route or the pure-Rust host route.  The PJRT
+//! literal marshalling lives behind the `pjrt` feature in
+//! [`super::executor`].
+
+use crate::error::{Error, Result};
+use crate::tensor::Matrix;
+
+/// Host-side value crossing the executor boundary.
+#[derive(Debug, Clone)]
+pub enum Value {
+    F32(Vec<usize>, Vec<f32>),
+    I32(Vec<usize>, Vec<i32>),
+}
+
+impl Value {
+    pub fn scalar_f32(v: f32) -> Value {
+        Value::F32(vec![], vec![v])
+    }
+
+    pub fn from_matrix(m: &Matrix<f32>) -> Value {
+        Value::F32(vec![m.rows, m.cols], m.data.clone())
+    }
+
+    pub fn matrix(&self) -> Result<Matrix<f32>> {
+        match self {
+            Value::F32(dims, data) if dims.len() == 2 => {
+                Matrix::from_vec(dims[0], dims[1], data.clone())
+            }
+            _ => Err(Error::shape(format!("not a 2-D f32 value: {:?}", self.dims()))),
+        }
+    }
+
+    pub fn f32s(&self) -> Result<&[f32]> {
+        match self {
+            Value::F32(_, d) => Ok(d),
+            _ => Err(Error::msg("value is not f32")),
+        }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            Value::F32(d, _) | Value::I32(d, _) => d,
+        }
+    }
+}

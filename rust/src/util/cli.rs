@@ -74,6 +74,24 @@ impl Args {
             None => default.iter().map(|s| s.to_string()).collect(),
         }
     }
+
+    /// Assemble the method spec the `coala::compressor` registry resolves:
+    /// `--method NAME` plus an optional `--lambda`/`--mu` parameter
+    /// (spelled `NAME:lambda=V` / `NAME:mu=V`).  `--method coala:lambda=3`
+    /// works too — an explicit parameter in the name wins.
+    pub fn method_spec(&self, default: &str) -> String {
+        let base = self.get_or("method", default);
+        if base.contains(':') {
+            return base.to_string();
+        }
+        if let Some(l) = self.get("lambda") {
+            format!("{base}:lambda={l}")
+        } else if let Some(m) = self.get("mu") {
+            format!("{base}:mu={m}")
+        } else {
+            base.to_string()
+        }
+    }
 }
 
 #[cfg(test)]
@@ -105,5 +123,27 @@ mod tests {
         let a = Args::parse(&sv(&["--methods", "coala,svdllm"]));
         assert_eq!(a.get_list("methods", &["x"]), vec!["coala", "svdllm"]);
         assert_eq!(a.get_list("other", &["x"]), vec!["x"]);
+    }
+
+    #[test]
+    fn method_spec_assembly() {
+        assert_eq!(Args::parse(&sv(&[])).method_spec("coala"), "coala");
+        assert_eq!(
+            Args::parse(&sv(&["--method", "svdllm"])).method_spec("coala"),
+            "svdllm"
+        );
+        assert_eq!(
+            Args::parse(&sv(&["--lambda", "3"])).method_spec("coala"),
+            "coala:lambda=3"
+        );
+        assert_eq!(
+            Args::parse(&sv(&["--mu", "0.1"])).method_spec("coala"),
+            "coala:mu=0.1"
+        );
+        // explicit parameter in the name wins over stray flags
+        assert_eq!(
+            Args::parse(&sv(&["--method", "coala:mu=1", "--lambda", "3"])).method_spec("coala"),
+            "coala:mu=1"
+        );
     }
 }

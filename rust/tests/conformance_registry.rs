@@ -1,0 +1,127 @@
+//! Cross-method conformance: every compressor in the registry must run
+//! end-to-end on the host route — streaming accumulation through
+//! `calib::accumulate`, factorization through the `Compressor` trait —
+//! and match the fp64 reference factorization on well-conditioned data.
+//! No artifacts, no PJRT: this is the suite that keeps the host fallback
+//! path honest everywhere the device route exists.
+
+use coala::calib::accumulate::{make_accumulator, AccumBackend, CalibAccumulator, CalibState};
+use coala::coala::compressor::{registry, resolve, Compressor};
+use coala::tensor::lowp::Precision;
+use coala::tensor::ops::context_rel_err;
+use coala::tensor::Matrix;
+
+/// Stream X (n × k) through the host accumulator a compressor declares,
+/// in `chunks` pieces — the same fold path the pipeline drives.
+fn accumulate_host(
+    comp: &dyn coala::coala::Compressor,
+    x: &Matrix<f32>,
+    chunks: usize,
+) -> CalibState {
+    let xt = x.transpose();
+    let mut acc =
+        make_accumulator(comp.accum_kind(), xt.cols, AccumBackend::Host, Precision::F32);
+    let rows_per = xt.rows.div_ceil(chunks);
+    let mut r0 = 0;
+    while r0 < xt.rows {
+        let r1 = (r0 + rows_per).min(xt.rows);
+        acc.fold_chunk(&xt.slice(r0, r1, 0, xt.cols)).unwrap();
+        r0 = r1;
+    }
+    acc.finish()
+}
+
+#[test]
+fn every_registered_method_matches_fp64_reference() {
+    let (m, n, k, rank) = (10usize, 8usize, 64usize, 3usize);
+    let w32: Matrix<f32> = Matrix::randn(m, n, 11);
+    let x32: Matrix<f32> = Matrix::randn(n, k, 12);
+    let w64 = w32.cast::<f64>();
+    let x64 = x32.cast::<f64>();
+
+    for comp in registry() {
+        // fp64 ground truth straight from raw X (Method::factorize_host)
+        let ref64 = comp
+            .method()
+            .factorize_host(&w64, &x64, rank, 60)
+            .unwrap_or_else(|e| panic!("{}: fp64 reference failed: {e}", comp.name()))
+            .truncate(rank)
+            .reconstruct()
+            .unwrap();
+        let err_ref = context_rel_err(&w64, &ref64, &x64).unwrap();
+
+        // host route through the streaming accumulator + Compressor trait
+        let calib = accumulate_host(comp.as_ref(), &x32, 4);
+        let f = comp
+            .factorize_host(&w32, &calib, rank, 60)
+            .unwrap_or_else(|e| panic!("{}: host route failed: {e}", comp.name()));
+        let rec = f.factors.truncate(rank).reconstruct().unwrap();
+        let err_host = context_rel_err(&w32, &rec, &x32).unwrap();
+
+        assert!(
+            err_host.is_finite() && err_ref.is_finite(),
+            "{}: non-finite errors ({err_host} vs {err_ref})",
+            comp.name()
+        );
+        // f32 streaming accumulation vs fp64 direct: same optimum, small slack
+        assert!(
+            err_host <= err_ref + 2e-2,
+            "{}: host route err {err_host} exceeds fp64 reference {err_ref}",
+            comp.name()
+        );
+    }
+}
+
+#[test]
+fn accumulator_kinds_cover_the_registry() {
+    use coala::calib::accumulate::AccumKind;
+    let regs = registry();
+    // the three accumulation strategies (plus the null one) all appear
+    for kind in [AccumKind::RFactor, AccumKind::Gram, AccumKind::Scales, AccumKind::None] {
+        assert!(
+            regs.iter().any(|c| c.accum_kind() == kind),
+            "no registered method uses {kind:?}"
+        );
+    }
+}
+
+#[test]
+fn gram_methods_report_near_singular_inputs() {
+    // k < n: the Gram matrix is exactly singular.  Gram-consuming methods
+    // must surface that as a Result (or finite factors) — never a panic,
+    // never silent ±inf/NaN factors flowing downstream.
+    let (m, n, k, rank) = (6usize, 9usize, 4usize, 2usize);
+    let w: Matrix<f32> = Matrix::randn(m, n, 21);
+    let x: Matrix<f32> = Matrix::randn(n, k, 22);
+
+    for comp in registry() {
+        let calib = accumulate_host(comp.as_ref(), &x, 2);
+        match comp.factorize_host(&w, &calib, rank, 60) {
+            Ok(f) => {
+                let t = f.factors.truncate(rank);
+                assert!(
+                    t.a.all_finite() && t.b.all_finite(),
+                    "{}: Ok result with non-finite factors on singular input",
+                    comp.name()
+                );
+            }
+            Err(e) => {
+                // reported, not panicked — the acceptable failure mode
+                let msg = e.to_string();
+                assert!(!msg.is_empty(), "{}: empty error", comp.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn spec_round_trips_every_registry_entry() {
+    // every canonical instance's printed spec resolves back to itself —
+    // what `coala methods` lists is exactly what `--method` accepts
+    for comp in registry() {
+        let again = resolve(&comp.spec())
+            .unwrap_or_else(|e| panic!("{}: spec `{}` rejected: {e}", comp.name(), comp.spec()));
+        assert_eq!(comp.method(), again.method(), "spec `{}` round-trip", comp.spec());
+        assert_eq!(comp.accum_kind(), again.accum_kind());
+    }
+}
