@@ -2,11 +2,24 @@
 //! chunks, each a (B·T × width) row-block of Xᵀ ready for TSQR / Gram
 //! streaming.
 
+use crate::calib::dataset::Corpus;
 use crate::error::{Error, Result};
 use crate::model::weights::ModelWeights;
 use crate::runtime::executor::{Executor, Value};
 use crate::runtime::manifest::ModelSpec;
 use crate::tensor::Matrix;
+
+/// Anything that can produce the per-(layer, stream) calibration chunks
+/// of one forward batch.  Two implementations exist: the device capture
+/// (`fwd_acts` artifacts, [`DeviceActivationSource`]) and the synthetic
+/// PRNG generator ([`crate::calib::synthetic::SyntheticActivations`]),
+/// which needs no artifacts at all.  The pipeline folds chunks from a
+/// source without knowing which one it is.
+pub trait ActivationSource {
+    /// Chunks for calibration batch `b` — one per (layer, stream) of the
+    /// model spec.  Must be deterministic in `b`.
+    fn capture_batch(&self, b: usize) -> Result<Vec<CalibChunk>>;
+}
 
 /// The calibration rows for one (layer, stream) from one batch.
 #[derive(Debug)]
@@ -68,16 +81,61 @@ impl<'a> ActivationCapture<'a> {
         chunks: &'c [CalibChunk],
         proj: &str,
     ) -> Result<&'c CalibChunk> {
-        let layer: usize = proj
-            .strip_prefix('l')
-            .and_then(|s| s.split('.').next())
-            .and_then(|s| s.parse().ok())
-            .ok_or_else(|| Error::Config(format!("bad projection name `{proj}`")))?;
-        let stream = self.spec.stream_of(proj)?;
-        chunks
-            .iter()
-            .find(|c| c.layer == layer && c.stream == stream)
-            .ok_or_else(|| Error::Config(format!("no chunk for `{proj}`")))
+        chunk_for_proj(self.spec, chunks, proj)
+    }
+}
+
+/// Which (layer, stream) chunk feeds a given projection name — free
+/// function so sources without an executor (the synthetic route) share
+/// the exact routing rule.
+pub fn chunk_for_proj<'c>(
+    spec: &ModelSpec,
+    chunks: &'c [CalibChunk],
+    proj: &str,
+) -> Result<&'c CalibChunk> {
+    let layer: usize = proj
+        .strip_prefix('l')
+        .and_then(|s| s.split('.').next())
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| Error::Config(format!("bad projection name `{proj}`")))?;
+    let stream = spec.stream_of(proj)?;
+    chunks
+        .iter()
+        .find(|c| c.layer == layer && c.stream == stream)
+        .ok_or_else(|| Error::Config(format!("no chunk for `{proj}`")))
+}
+
+/// The device-backed [`ActivationSource`]: token batches from a corpus
+/// split forwarded through the `fwd_acts` artifact.
+pub struct DeviceActivationSource<'a> {
+    cap: ActivationCapture<'a>,
+    weights: &'a ModelWeights,
+    tokens: Vec<Value>,
+}
+
+impl<'a> DeviceActivationSource<'a> {
+    pub fn new(
+        ex: &'a Executor,
+        spec: &'a ModelSpec,
+        weights: &'a ModelWeights,
+        corpus: &Corpus,
+        split: &str,
+        batches: usize,
+    ) -> Result<DeviceActivationSource<'a>> {
+        let tokens = corpus.batches(split, spec.batch, spec.seq_len, batches)?;
+        Ok(DeviceActivationSource { cap: ActivationCapture::new(ex, spec), weights, tokens })
+    }
+}
+
+impl ActivationSource for DeviceActivationSource<'_> {
+    fn capture_batch(&self, b: usize) -> Result<Vec<CalibChunk>> {
+        let tokens = self.tokens.get(b).ok_or_else(|| {
+            Error::Config(format!(
+                "calibration batch {b} beyond the {} loaded token batches",
+                self.tokens.len()
+            ))
+        })?;
+        Ok(self.cap.capture(tokens, self.weights)?.1)
     }
 }
 
@@ -87,7 +145,7 @@ mod tests {
     use crate::calib::dataset::Corpus;
 
     fn setup() -> Option<(Executor, Corpus)> {
-        if !crate::runtime::device_available("artifacts") {
+        if !crate::runtime::require_artifacts("activations::setup") {
             return None;
         }
         Some((Executor::new("artifacts").unwrap(), Corpus::load("artifacts").unwrap()))

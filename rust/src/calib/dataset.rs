@@ -1,10 +1,59 @@
-//! Corpus + probe-task banks (generated deterministically at build time
-//! by `python/compile/data.py`, shipped as CBT).
+//! Corpus + probe-task banks: loaded from CBT artifacts (generated
+//! deterministically at build time by `python/compile/data.py`), or
+//! generated in-memory from a seeded Markov chain for the artifact-free
+//! synthetic environment (`repro --route host`).
 
 use crate::error::{Error, Result};
 use crate::runtime::cbt::Cbt;
 use crate::runtime::executor::Value;
 use crate::util::prng::Rng;
+
+/// The synthetic corpus' token process: a first-order Markov chain with
+/// two preferred successors per token plus a uniform-noise floor.  The
+/// `shifted` variant (the ft_* splits and the "ft" task bank) uses
+/// different successor maps, so a model whose head matches the base
+/// chain is near chance on the shifted facts — the Table 4 adaptation
+/// gap, synthesized.
+///
+/// Returns the two (successor, probability) pairs; the residual
+/// probability mass is uniform over the vocabulary.
+pub fn markov_successors(token: usize, vocab: usize, shifted: bool) -> [(usize, f64); 2] {
+    if shifted {
+        [((3 * token + 17) % vocab, 0.55), ((5 * token + 29) % vocab, 0.30)]
+    } else {
+        [((3 * token + 7) % vocab, 0.55), ((5 * token + 11) % vocab, 0.30)]
+    }
+}
+
+/// The chain's most likely successor (the probe tasks' ground truth).
+pub fn markov_top(token: usize, vocab: usize, shifted: bool) -> usize {
+    markov_successors(token, vocab, shifted)[0].0
+}
+
+/// One sampled step of the chain.
+fn markov_next(token: usize, vocab: usize, shifted: bool, rng: &mut Rng) -> usize {
+    let [(s0, p0), (s1, p1)] = markov_successors(token, vocab, shifted);
+    let u = rng.uniform();
+    if u < p0 {
+        s0
+    } else if u < p0 + p1 {
+        s1
+    } else {
+        rng.below(vocab)
+    }
+}
+
+/// One seeded random walk of the chain.
+fn markov_walk(vocab: usize, len: usize, shifted: bool, seed: u64) -> Vec<i32> {
+    let mut rng = Rng::new(seed);
+    let mut tok = rng.below(vocab);
+    let mut out = Vec::with_capacity(len);
+    for _ in 0..len {
+        out.push(tok as i32);
+        tok = markov_next(tok, vocab, shifted, &mut rng);
+    }
+    out
+}
 
 /// Token streams: train / val / calib / ft_train / ft_calib.
 #[derive(Debug)]
@@ -13,6 +62,27 @@ pub struct Corpus {
 }
 
 impl Corpus {
+    /// Deterministic in-memory corpus for the synthetic environment: the
+    /// standard five splits, no files.  train/val/calib follow the base
+    /// Markov chain; ft_train/ft_calib follow the shifted one.
+    pub fn synthetic(vocab: usize, split_len: usize, seed: u64) -> Corpus {
+        let mut splits = std::collections::BTreeMap::new();
+        for (i, (name, shifted)) in [
+            ("train", false),
+            ("val", false),
+            ("calib", false),
+            ("ft_train", true),
+            ("ft_calib", true),
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            let walk = markov_walk(vocab, split_len, shifted, seed ^ (0x5EED_0 + i as u64));
+            splits.insert(name.to_string(), walk);
+        }
+        Corpus { splits }
+    }
+
     pub fn load(dir: &str) -> Result<Corpus> {
         let cbt = Cbt::load(&format!("{dir}/corpus.cbt"))?;
         let mut splits = std::collections::BTreeMap::new();
@@ -88,6 +158,63 @@ pub struct TaskBank {
 }
 
 impl TaskBank {
+    /// Deterministic in-memory bank for the synthetic environment.
+    /// Every row is a Markov-chain context whose last token is the query
+    /// `s`; the four choices contain the chain's most likely successor
+    /// of `s` (the label) plus three distinct distractors.  `which` ∈
+    /// {"base", "ft"}: the ft bank queries the *shifted* chain, so a
+    /// base-chain model sits near chance on it.
+    pub fn synthetic(
+        vocab: usize,
+        seq_len: usize,
+        which: &str,
+        task_names: &[String],
+        n: usize,
+        seed: u64,
+    ) -> Result<TaskBank> {
+        let shifted = match which {
+            "base" => false,
+            "ft" => true,
+            other => {
+                return Err(Error::Config(format!("task bank is `base` or `ft`, got `{other}`")))
+            }
+        };
+        let mut rng = Rng::new(seed ^ if shifted { 0xF7BA_4C } else { 0xBA5E_7A } );
+        let mut contexts = Vec::with_capacity(n * seq_len);
+        let mut choices = Vec::with_capacity(n * 4);
+        let mut labels = Vec::with_capacity(n);
+        let mut task_ids = Vec::with_capacity(n);
+        let n_tasks = task_names.len().max(1);
+        for i in 0..n {
+            let ctx = markov_walk(vocab, seq_len, shifted, seed ^ (0x7A5C_0000 + i as u64));
+            let query = *ctx.last().unwrap() as usize;
+            contexts.extend_from_slice(&ctx);
+            let answer = markov_top(query, vocab, shifted);
+            // three distinct distractors, none equal to the answer
+            let mut row = vec![answer];
+            while row.len() < 4 {
+                let d = rng.below(vocab);
+                if !row.contains(&d) {
+                    row.push(d);
+                }
+            }
+            let label = rng.below(4);
+            row.swap(0, label);
+            choices.extend(row.iter().map(|&c| c as i32));
+            labels.push(label as i32);
+            task_ids.push((i % n_tasks) as i32);
+        }
+        Ok(TaskBank {
+            contexts,
+            choices,
+            labels,
+            task_ids,
+            n,
+            seq_len,
+            task_names: task_names.to_vec(),
+        })
+    }
+
     /// `which` ∈ {"base", "ft"}.
     pub fn load(dir: &str, which: &str, task_names: &[String]) -> Result<TaskBank> {
         let cbt = Cbt::load(&format!("{dir}/tasks.cbt"))?;
@@ -118,7 +245,12 @@ mod tests {
     use super::*;
 
     fn have() -> bool {
-        std::path::Path::new("artifacts/corpus.cbt").exists()
+        if std::path::Path::new("artifacts/corpus.cbt").exists() {
+            true
+        } else {
+            eprintln!("skipped: dataset artifact test (artifacts/corpus.cbt not present)");
+            false
+        }
     }
 
     #[test]
@@ -151,6 +283,68 @@ mod tests {
         }
         let t = c.train_batches("ft_train", 4, 16, 3, 42).unwrap();
         assert_eq!(t[0].dims(), &[4, 17]);
+    }
+
+    #[test]
+    fn synthetic_corpus_deterministic_and_complete() {
+        let a = Corpus::synthetic(64, 2048, 7);
+        let b = Corpus::synthetic(64, 2048, 7);
+        for s in ["train", "val", "calib", "ft_train", "ft_calib"] {
+            let sa = a.split(s).unwrap();
+            assert_eq!(sa, b.split(s).unwrap(), "{s}");
+            assert_eq!(sa.len(), 2048);
+            assert!(sa.iter().all(|&t| (0..64).contains(&t)));
+        }
+        // base and shifted chains are different processes
+        assert_ne!(a.split("calib").unwrap(), a.split("ft_calib").unwrap());
+        // batching works without artifacts
+        let batches = a.batches("calib", 4, 16, 3).unwrap();
+        assert_eq!(batches.len(), 3);
+        assert_eq!(batches[0].dims(), &[4, 16]);
+    }
+
+    #[test]
+    fn synthetic_corpus_follows_its_chain() {
+        // the top successor must be the most frequent bigram continuation
+        let c = Corpus::synthetic(64, 8192, 3);
+        let s = c.split("train").unwrap();
+        let (mut hit, mut total) = (0usize, 0usize);
+        for w in s.windows(2) {
+            total += 1;
+            if w[1] as usize == markov_top(w[0] as usize, 64, false) {
+                hit += 1;
+            }
+        }
+        let frac = hit as f64 / total as f64;
+        assert!(frac > 0.4 && frac < 0.7, "top-successor frequency {frac}");
+    }
+
+    #[test]
+    fn synthetic_task_bank_well_formed() {
+        let names: Vec<String> = (0..8).map(|i| format!("t{i}")).collect();
+        for which in ["base", "ft"] {
+            let tb = TaskBank::synthetic(64, 16, which, &names, 160, 11).unwrap();
+            assert_eq!(tb.n, 160);
+            assert_eq!(tb.seq_len, 16);
+            assert_eq!(tb.labels.len(), 160);
+            for i in 0..tb.n {
+                let lab = tb.labels[i] as usize;
+                assert!(lab < 4);
+                let row = tb.choice_row(i);
+                // choices distinct, label slot holds the chain's answer
+                let mut sorted = row.to_vec();
+                sorted.sort_unstable();
+                sorted.dedup();
+                assert_eq!(sorted.len(), 4, "duplicate choices in row {i}");
+                let query = *tb.context(i).last().unwrap() as usize;
+                assert_eq!(
+                    row[lab] as usize,
+                    markov_top(query, 64, which == "ft"),
+                    "row {i} of {which}"
+                );
+            }
+        }
+        assert!(TaskBank::synthetic(64, 16, "nope", &names, 8, 1).is_err());
     }
 
     #[test]

@@ -1,14 +1,17 @@
 //! Calibration data plumbing (S11): corpus, batching, activation
-//! capture through the `fwd_acts` artifact, and the streaming
+//! capture (through the `fwd_acts` artifact on the device route, or the
+//! PRNG generator on the synthetic host route), and the streaming
 //! accumulators every compression method folds its chunks through.
 
 pub mod accumulate;
 pub mod activations;
 pub mod dataset;
+pub mod synthetic;
 
 pub use accumulate::{
     make_accumulator, make_accumulator_from, merge_states, AccumBackend, AccumKind,
     CalibAccumulator, CalibState,
 };
-pub use activations::{ActivationCapture, CalibChunk};
+pub use activations::{ActivationCapture, ActivationSource, CalibChunk, DeviceActivationSource};
 pub use dataset::{Corpus, TaskBank};
+pub use synthetic::SyntheticActivations;

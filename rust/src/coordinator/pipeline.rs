@@ -8,7 +8,7 @@
 //! pipeline itself never matches on method variants.
 
 use crate::calib::accumulate::{make_accumulator, AccumBackend, CalibAccumulator, CalibState};
-use crate::calib::activations::ActivationCapture;
+use crate::calib::activations::{ActivationSource, DeviceActivationSource};
 use crate::calib::dataset::Corpus;
 use crate::coala::compressor::{compressor_for, Compressor, Route, HOST_SWEEPS};
 use crate::coala::Method;
@@ -102,25 +102,43 @@ impl<'a> Pipeline<'a> {
         }
     }
 
-    /// Streaming calibration: fold every batch into per-stream accumulators.
-    /// X is never materialized (peak memory = one chunk + accumulators).
+    /// Streaming calibration through the device capture (`fwd_acts`
+    /// artifacts): token batches from the corpus split.
     pub fn calibrate(
         &self,
         job: &CompressionJob,
         corpus: &Corpus,
         timings: &mut StageTimings,
     ) -> Result<CalibStates> {
+        let source = DeviceActivationSource::new(
+            self.ex,
+            &self.spec,
+            self.weights,
+            corpus,
+            &job.calib_split,
+            job.calib_batches,
+        )?;
+        self.calibrate_from(job, &source, timings)
+    }
+
+    /// Streaming calibration from *any* [`ActivationSource`] — the
+    /// device capture or the synthetic PRNG generator: fold every batch
+    /// into per-stream accumulators.  X is never materialized (peak
+    /// memory = one chunk + accumulators).
+    pub fn calibrate_from(
+        &self,
+        job: &CompressionJob,
+        source: &dyn ActivationSource,
+        timings: &mut StageTimings,
+    ) -> Result<CalibStates> {
         let comp = compressor_for(&job.method);
         let kind = comp.accum_kind();
         let backend = self.accum_backend();
-        let cap = ActivationCapture::new(self.ex, &self.spec);
-        let batches =
-            corpus.batches(&job.calib_split, self.spec.batch, self.spec.seq_len, job.calib_batches)?;
         let mut accums: BTreeMap<(usize, String), Box<dyn CalibAccumulator + 'a>> =
             BTreeMap::new();
-        for tokens in &batches {
+        for b in 0..job.calib_batches {
             let t0 = Instant::now();
-            let (_logits, chunks) = cap.capture(tokens, self.weights)?;
+            let chunks = source.capture_batch(b)?;
             timings.calibrate_s += t0.elapsed().as_secs_f64();
             let t1 = Instant::now();
             for c in chunks {
@@ -135,11 +153,26 @@ impl<'a> Pipeline<'a> {
         Ok(accums.into_iter().map(|(k, a)| (k, a.finish())).collect())
     }
 
-    /// Run the full job.
+    /// Run the full job (device capture route).
     pub fn run(&self, job: &CompressionJob, corpus: &Corpus) -> Result<CompressionOutcome> {
         let t_start = Instant::now();
         let mut timings = StageTimings::default();
         let accums = self.calibrate(job, corpus, &mut timings)?;
+        let mut out = self.run_with_accums(job, &accums, timings)?;
+        out.timings.total_s = t_start.elapsed().as_secs_f64();
+        Ok(out)
+    }
+
+    /// Run the full job with activations from an explicit source — the
+    /// synthetic host route's entry point (no artifacts anywhere).
+    pub fn run_with_source(
+        &self,
+        job: &CompressionJob,
+        source: &dyn ActivationSource,
+    ) -> Result<CompressionOutcome> {
+        let t_start = Instant::now();
+        let mut timings = StageTimings::default();
+        let accums = self.calibrate_from(job, source, &mut timings)?;
         let mut out = self.run_with_accums(job, &accums, timings)?;
         out.timings.total_s = t_start.elapsed().as_secs_f64();
         Ok(out)
@@ -186,7 +219,7 @@ mod tests {
     use crate::eval::perplexity;
 
     fn setup() -> Option<(Executor, Corpus)> {
-        if !crate::runtime::device_available("artifacts") {
+        if !crate::runtime::require_artifacts("pipeline::setup") {
             return None;
         }
         Some((Executor::new("artifacts").unwrap(), Corpus::load("artifacts").unwrap()))
@@ -247,6 +280,26 @@ mod tests {
             let out = pipe.run(&job, &corpus).unwrap();
             assert_eq!(out.model.factors.len(), spec.compressible.len(), "{}", method.name());
         }
+    }
+
+    #[test]
+    fn synthetic_source_runs_host_route_end_to_end() {
+        // the artifact-free path: synthetic manifest + weights +
+        // activations, host accumulate + factorize — always runs
+        use crate::calib::synthetic::SyntheticActivations;
+        use crate::model::synthetic::{synthetic_manifest, synthetic_weights};
+        let ex = Executor::from_manifest(synthetic_manifest()).unwrap();
+        let spec = ex.manifest.config("tiny").unwrap().clone();
+        let w = synthetic_weights(&spec, 1);
+        let pipe = Pipeline::new(&ex, spec.clone(), &w).with_route(Route::Host);
+        let src = SyntheticActivations::new(spec.clone(), 1);
+        let mut job = CompressionJob::new("tiny", Method::Coala(MuRule::None), 0.4);
+        job.calib_batches = 2;
+        let out = pipe.run_with_source(&job, &src).unwrap();
+        assert!(out.model.all_finite());
+        assert_eq!(out.model.factors.len(), spec.compressible.len());
+        let achieved = out.model.achieved_ratio(&w, &spec);
+        assert!((achieved - 0.4).abs() < 0.15, "achieved {achieved}");
     }
 
     #[test]

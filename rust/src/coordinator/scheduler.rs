@@ -84,7 +84,7 @@ mod tests {
 
     #[test]
     fn overlapped_matches_sequential() {
-        if !crate::runtime::device_available("artifacts") {
+        if !crate::runtime::require_artifacts("scheduler::overlapped_matches_sequential") {
             return;
         }
         let ex = Executor::new("artifacts").unwrap();

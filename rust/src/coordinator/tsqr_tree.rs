@@ -127,7 +127,7 @@ mod tests {
 
     #[test]
     fn tree_matches_sequential_gram_identity() {
-        if !crate::runtime::device_available("artifacts") {
+        if !crate::runtime::require_artifacts("tsqr_tree::tree_matches_sequential_gram_identity") {
             return;
         }
         let ex = Executor::new("artifacts").unwrap();

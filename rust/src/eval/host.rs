@@ -1,0 +1,205 @@
+//! Artifact-free evaluation: perplexity and probe-task scoring through
+//! the synthetic [`HostModel`] forward instead of the `loss_<cfg>` /
+//! `fwd_logits_<cfg>` artifacts.  Same windowing, same scoring rule
+//! (argmax over the candidate logits at the query position), so tables
+//! produced on either route have identical semantics.
+
+use crate::calib::dataset::TaskBank;
+use crate::error::{Error, Result};
+use crate::eval::TaskScores;
+use crate::model::synthetic::{nll, HostModel};
+use crate::model::weights::ModelWeights;
+use crate::runtime::executor::Value;
+use crate::runtime::manifest::ModelSpec;
+
+/// exp(mean NLL) over `n_batches` deterministic windows of a split —
+/// the host twin of [`crate::eval::perplexity`].
+pub fn perplexity_host(
+    spec: &ModelSpec,
+    weights: &ModelWeights,
+    split_tokens: &[i32],
+    n_batches: usize,
+) -> Result<f64> {
+    let model = HostModel::new(spec, weights)?;
+    let table = model.logits_table();
+    let win = spec.seq_len + 1;
+    let need = spec.batch * win;
+    if split_tokens.len() < need {
+        return Err(Error::Config(format!(
+            "split too small for perplexity: {} < {need}",
+            split_tokens.len()
+        )));
+    }
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    for b in 0..n_batches.max(1) {
+        let start = (b * need) % (split_tokens.len() - need + 1);
+        let toks = &split_tokens[start..start + need];
+        for row in 0..spec.batch {
+            for t in 0..spec.seq_len {
+                let cur = toks[row * win + t] as usize % spec.vocab;
+                let next = toks[row * win + t + 1] as usize % spec.vocab;
+                total += nll(&table[cur], next);
+                count += 1;
+            }
+        }
+    }
+    Ok((total / count as f64).exp())
+}
+
+/// Mean NLL over a pool of (batch × seq_len+1) token batches — the host
+/// twin of the fine-tune loss (used by the Table 4 host route to score
+/// adapter initializations).
+pub fn pool_nll_host(
+    spec: &ModelSpec,
+    weights: &ModelWeights,
+    pool: &[Value],
+) -> Result<f64> {
+    let model = HostModel::new(spec, weights)?;
+    let table = model.logits_table();
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    for v in pool {
+        let Value::I32(dims, data) = v else {
+            return Err(Error::shape("token pool must be int batches".into()));
+        };
+        if dims.len() != 2 || dims[1] < 2 {
+            return Err(Error::shape(format!("token batch dims {dims:?}")));
+        }
+        let win = dims[1];
+        for row in 0..dims[0] {
+            for t in 0..win - 1 {
+                let cur = data[row * win + t] as usize % spec.vocab;
+                let next = data[row * win + t + 1] as usize % spec.vocab;
+                total += nll(&table[cur], next);
+                count += 1;
+            }
+        }
+    }
+    Ok(total / count.max(1) as f64)
+}
+
+/// Probe-task accuracy through the host forward — the host twin of
+/// [`crate::eval::eval_tasks`].  Scoring looks only at the query (last)
+/// token of each context, which for the per-token synthetic model is
+/// exactly the information the device path's last-position logits carry.
+pub fn eval_tasks_host(
+    spec: &ModelSpec,
+    weights: &ModelWeights,
+    bank: &TaskBank,
+    limit: Option<usize>,
+) -> Result<TaskScores> {
+    let model = HostModel::new(spec, weights)?;
+    let table = model.logits_table();
+    let n = limit.unwrap_or(bank.n).min(bank.n);
+    let n_tasks = bank.task_names.len();
+    let mut correct = vec![0usize; n_tasks];
+    let mut total = vec![0usize; n_tasks];
+    for r in 0..n {
+        let query = *bank.context(r).last().unwrap() as usize % spec.vocab;
+        let logits = &table[query];
+        let choices = bank.choice_row(r);
+        let mut best = 0usize;
+        let mut best_v = f32::NEG_INFINITY;
+        for (ci, &c) in choices.iter().enumerate() {
+            let v = logits[c as usize % spec.vocab];
+            if v > best_v {
+                best_v = v;
+                best = ci;
+            }
+        }
+        let tid = bank.task_ids[r] as usize;
+        total[tid] += 1;
+        if best == bank.labels[r] as usize {
+            correct[tid] += 1;
+        }
+    }
+    let mut accuracy = Vec::with_capacity(n_tasks);
+    let mut stderr = Vec::with_capacity(n_tasks);
+    for i in 0..n_tasks {
+        let cnt = total[i].max(1);
+        let acc = correct[i] as f64 / cnt as f64;
+        accuracy.push(acc * 100.0);
+        stderr.push((acc * (1.0 - acc) / cnt as f64).sqrt() * 100.0);
+    }
+    Ok(TaskScores { names: bank.task_names.clone(), accuracy, stderr, counts: total })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calib::dataset::Corpus;
+    use crate::model::synthetic::{
+        synthetic_manifest, synthetic_weights, BANK_ROWS, DEFAULT_SEED, SPLIT_LEN, VOCAB,
+    };
+    use crate::tensor::Matrix;
+
+    fn world() -> (ModelSpec, ModelWeights, Corpus) {
+        let m = synthetic_manifest();
+        let spec = m.config("tiny").unwrap().clone();
+        let w = synthetic_weights(&spec, DEFAULT_SEED);
+        let corpus = Corpus::synthetic(VOCAB, SPLIT_LEN, DEFAULT_SEED);
+        (spec, w, corpus)
+    }
+
+    #[test]
+    fn base_model_beats_uniform_ppl_and_chance_accuracy() {
+        let (spec, w, corpus) = world();
+        let ppl = perplexity_host(&spec, &w, corpus.split("val").unwrap(), 4).unwrap();
+        assert!(ppl.is_finite() && ppl > 1.0);
+        // the bigram head must beat the uniform baseline (ppl = vocab)
+        assert!(ppl < spec.vocab as f64 * 0.8, "ppl {ppl} vs uniform {}", spec.vocab);
+        let bank = TaskBank::synthetic(
+            VOCAB,
+            spec.seq_len,
+            "base",
+            &synthetic_manifest().task_names,
+            BANK_ROWS,
+            DEFAULT_SEED,
+        )
+        .unwrap();
+        let scores = eval_tasks_host(&spec, &w, &bank, None).unwrap();
+        let avg = scores.average();
+        // 4-way multiple choice: chance = 25 %
+        assert!(avg > 35.0, "avg accuracy {avg}");
+    }
+
+    #[test]
+    fn corrupting_weights_hurts_host_ppl() {
+        let (spec, w, corpus) = world();
+        let val = corpus.split("val").unwrap();
+        let base = perplexity_host(&spec, &w, val, 2).unwrap();
+        let mut bad = w.clone();
+        // scramble the unembedding: the bigram head is the signal
+        let u = bad.matrix("unembed").unwrap();
+        bad.set_matrix("unembed", &Matrix::randn(u.rows, u.cols, 99)).unwrap();
+        let worse = perplexity_host(&spec, &bad, val, 2).unwrap();
+        assert!(worse > base, "{worse} vs {base}");
+    }
+
+    #[test]
+    fn ft_bank_shows_the_adaptation_gap() {
+        let (spec, w, _corpus) = world();
+        let names = synthetic_manifest().task_names;
+        let base = TaskBank::synthetic(VOCAB, spec.seq_len, "base", &names, BANK_ROWS, 3).unwrap();
+        let ft = TaskBank::synthetic(VOCAB, spec.seq_len, "ft", &names, BANK_ROWS, 3).unwrap();
+        let on_base = eval_tasks_host(&spec, &w, &base, None).unwrap().average();
+        let on_ft = eval_tasks_host(&spec, &w, &ft, None).unwrap().average();
+        assert!(
+            on_base > on_ft + 5.0,
+            "no adaptation gap: base {on_base} vs ft {on_ft}"
+        );
+    }
+
+    #[test]
+    fn pool_nll_matches_chain_quality() {
+        let (spec, w, corpus) = world();
+        let pool = corpus
+            .train_batches("train", spec.batch, spec.seq_len, 3, 5)
+            .unwrap();
+        let base_nll = pool_nll_host(&spec, &w, &pool).unwrap();
+        assert!(base_nll.is_finite() && base_nll > 0.0);
+        // better than uniform guessing
+        assert!(base_nll < (spec.vocab as f64).ln());
+    }
+}

@@ -1,8 +1,13 @@
 //! Evaluation harness (S12): perplexity + probe-task accuracy, with the
-//! stderr formatting the paper's tables use.
+//! stderr formatting the paper's tables use.  Two backends share the
+//! scoring semantics: the artifact route (`perplexity` / `eval_tasks`
+//! through the `loss` / `fwd_logits` executables) and the artifact-free
+//! [`host`] route (the synthetic model's pure-Rust forward).
 
+pub mod host;
 pub mod perplexity;
 pub mod tasks;
 
+pub use host::{eval_tasks_host, perplexity_host, pool_nll_host};
 pub use perplexity::perplexity;
 pub use tasks::{eval_tasks, TaskScores};

@@ -36,7 +36,7 @@ mod tests {
 
     #[test]
     fn trained_model_beats_uniform_and_matches_buildtime() {
-        if !crate::runtime::device_available("artifacts") {
+        if !crate::runtime::require_artifacts("perplexity::trained_model_matches_buildtime") {
             return;
         }
         let ex = Executor::new("artifacts").unwrap();
@@ -54,7 +54,7 @@ mod tests {
 
     #[test]
     fn corrupting_weights_hurts_ppl() {
-        if !crate::runtime::device_available("artifacts") {
+        if !crate::runtime::require_artifacts("perplexity::corrupting_weights_hurts_ppl") {
             return;
         }
         let ex = Executor::new("artifacts").unwrap();

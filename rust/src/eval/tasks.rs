@@ -110,7 +110,7 @@ mod tests {
 
     #[test]
     fn trained_model_beats_chance_on_base_tasks() {
-        if !crate::runtime::device_available("artifacts") {
+        if !crate::runtime::require_artifacts("tasks::trained_model_beats_chance_on_base_tasks") {
             return;
         }
         let ex = Executor::new("artifacts").unwrap();
@@ -128,7 +128,7 @@ mod tests {
 
     #[test]
     fn random_model_is_at_chance() {
-        if !crate::runtime::device_available("artifacts") {
+        if !crate::runtime::require_artifacts("tasks::random_model_is_at_chance") {
             return;
         }
         let ex = Executor::new("artifacts").unwrap();

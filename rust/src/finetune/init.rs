@@ -1,12 +1,11 @@
 //! Adapter initialization strategies (the Table 4 rows).
 
-use crate::calib::activations::ActivationCapture;
 use crate::calib::dataset::Corpus;
-use crate::error::Result;
+use crate::coala::compressor::Route;
+use crate::error::{Error, Result};
 use crate::model::ModelWeights;
 use crate::runtime::executor::Executor;
 use crate::runtime::manifest::ModelSpec;
-use crate::runtime::ops;
 use crate::tensor::Matrix;
 use crate::util::prng::Rng;
 use std::collections::BTreeMap;
@@ -40,6 +39,19 @@ impl AdapterInit {
 
     pub fn needs_calibration(&self) -> bool {
         matches!(self, AdapterInit::CorDA | AdapterInit::CoalaA1 | AdapterInit::CoalaA2)
+    }
+
+    /// The compressor-registry spec computing this init's factorization
+    /// (None for LoRA, which is not a factorization of W).  Table 4 is
+    /// exactly a comparison of registry methods used as adapter inits.
+    pub fn method_spec(&self) -> Option<&'static str> {
+        match self {
+            AdapterInit::LoRA => None,
+            AdapterInit::PiSSA => Some("svd"),
+            AdapterInit::CorDA => Some("corda"),
+            AdapterInit::CoalaA1 => Some("alpha1"),
+            AdapterInit::CoalaA2 => Some("alpha2"),
+        }
     }
 }
 
@@ -93,61 +105,138 @@ pub fn init_adapters(
     split: &str,
     calib_batches: usize,
 ) -> Result<AdapterSet> {
-    // 1. accumulate R (QR route) and G (Gram route) if needed
-    let mut r_acc: BTreeMap<(usize, String), Matrix<f32>> = BTreeMap::new();
-    let mut g_acc: BTreeMap<(usize, String), Matrix<f32>> = BTreeMap::new();
-    if strategy.needs_calibration() {
-        let cap = ActivationCapture::new(ex, spec);
-        for tokens in corpus.batches(split, spec.batch, spec.seq_len, calib_batches)? {
-            let (_l, chunks) = cap.capture(&tokens, weights)?;
-            for c in chunks {
-                let n = c.xt.cols;
-                match strategy {
-                    AdapterInit::CorDA => {
-                        let g = g_acc
-                            .entry((c.layer, c.stream.clone()))
-                            .or_insert_with(|| Matrix::zeros(n, n));
-                        *g = ops::gram_update(ex, g, &c.xt)?;
-                    }
-                    _ => {
-                        let r = r_acc
-                            .entry((c.layer, c.stream.clone()))
-                            .or_insert_with(|| Matrix::zeros(n, n));
-                        *r = ops::tsqr_step(ex, r, &c.xt)?;
-                    }
+    let source = crate::calib::activations::DeviceActivationSource::new(
+        ex,
+        spec,
+        weights,
+        corpus,
+        split,
+        calib_batches,
+    )?;
+    init_adapters_with(
+        spec,
+        weights,
+        &source,
+        strategy,
+        rank,
+        calib_batches,
+        crate::coala::compressor::HOST_SWEEPS,
+        Route::Device,
+        Some(ex),
+    )
+}
+
+/// Host-route adapter initialization: calibration chunks from any
+/// [`crate::calib::activations::ActivationSource`], accumulation through
+/// `calib::accumulate`, factorization through the compressor registry's
+/// `factorize_host` — no artifacts, no PJRT.  A collapsing Gram
+/// inversion (CorDA's low-data failure) surfaces as an `Err` or as
+/// non-finite adapters; the Table 4 driver reports either honestly.
+pub fn init_adapters_from_source(
+    spec: &ModelSpec,
+    weights: &ModelWeights,
+    source: &dyn crate::calib::activations::ActivationSource,
+    strategy: AdapterInit,
+    rank: usize,
+    calib_batches: usize,
+    sweeps: usize,
+) -> Result<AdapterSet> {
+    init_adapters_with(
+        spec,
+        weights,
+        source,
+        strategy,
+        rank,
+        calib_batches,
+        sweeps,
+        Route::Host,
+        None,
+    )
+}
+
+/// The one adapter-init protocol, shared by both routes: stream the
+/// calibration statistic the init's registry method consumes, factorize
+/// per projection (device artifacts or host linalg), balanced-split into
+/// (A, B), and residualize `W_res = W − A·B` so the adapted model starts
+/// exactly at the base model.
+#[allow(clippy::too_many_arguments)]
+fn init_adapters_with(
+    spec: &ModelSpec,
+    weights: &ModelWeights,
+    source: &dyn crate::calib::activations::ActivationSource,
+    strategy: AdapterInit,
+    rank: usize,
+    calib_batches: usize,
+    sweeps: usize,
+    route: Route,
+    ex: Option<&Executor>,
+) -> Result<AdapterSet> {
+    use crate::calib::accumulate::{make_accumulator, AccumBackend, CalibAccumulator, CalibState};
+    use crate::coala::compressor::{resolve, Compressor};
+    use crate::tensor::lowp::Precision;
+
+    let backend = match (route, ex) {
+        (Route::Device, Some(ex)) => AccumBackend::Device(ex),
+        (Route::Device, None) => {
+            return Err(Error::Config("device-route init needs an executor".into()))
+        }
+        (Route::Host, _) => AccumBackend::Host,
+    };
+
+    // 1. stream the calibration statistic the init's method consumes
+    let mut states: BTreeMap<(usize, String), CalibState> = BTreeMap::new();
+    if let Some(mspec) = strategy.method_spec() {
+        let comp = resolve(mspec)?;
+        let kind = comp.accum_kind();
+        if strategy.needs_calibration() {
+            let mut accums: BTreeMap<(usize, String), Box<dyn CalibAccumulator + '_>> =
+                BTreeMap::new();
+            for b in 0..calib_batches {
+                for c in source.capture_batch(b)? {
+                    let entry = accums.entry((c.layer, c.stream.clone())).or_insert_with(
+                        || make_accumulator(kind, c.xt.cols, backend, Precision::F32),
+                    );
+                    entry.fold_chunk(&c.xt)?;
                 }
             }
+            states = accums.into_iter().map(|(k, a)| (k, a.finish())).collect();
         }
     }
 
-    // 2. per-projection init
+    // 2. per-projection init through the registry
     let mut adapters = BTreeMap::new();
     let mut frozen = weights.clone();
     let mut rng = Rng::new(0xC0A1A);
+    let none_state = CalibState::None;
     for proj in &spec.compressible {
         let w = weights.matrix(proj)?;
         let layer: usize = proj[1..].split('.').next().unwrap().parse().unwrap();
         let stream = spec.stream_of(proj)?.to_string();
-        let (a, b) = match strategy {
-            AdapterInit::LoRA => {
+        let (a, b) = match strategy.method_spec() {
+            None => {
+                // LoRA: ΔW = 0 (B ~ N(0, 0.02), A = 0 in our A·B layout)
                 let mut bmat = Matrix::zeros(rank, w.cols);
                 for v in bmat.data.iter_mut() {
                     *v = (rng.normal() * 0.02) as f32;
                 }
                 (Matrix::zeros(w.rows, rank), bmat)
             }
-            AdapterInit::PiSSA => balanced_split(&ops::plainsvd(ex, &w)?, rank),
-            AdapterInit::CorDA => {
-                let g = &g_acc[&(layer, stream)];
-                balanced_split(&ops::corda(ex, &w, g)?, rank)
-            }
-            AdapterInit::CoalaA1 => {
-                let r = &r_acc[&(layer, stream)];
-                balanced_split(&ops::factorize(ex, &w, r)?, rank)
-            }
-            AdapterInit::CoalaA2 => {
-                let r = &r_acc[&(layer, stream)];
-                balanced_split(&ops::alpha2(ex, &w, r)?, rank)
+            Some(mspec) => {
+                let comp = resolve(mspec)?;
+                let calib = if strategy.needs_calibration() {
+                    states.get(&(layer, stream)).ok_or_else(|| {
+                        Error::Config(format!("no accumulator for {proj}"))
+                    })?
+                } else {
+                    &none_state
+                };
+                let f = match route {
+                    Route::Device => {
+                        comp.factorize_device(ex.expect("checked above"), &w, calib, rank)?
+                    }
+                    Route::Host => comp.factorize_host(&w, calib, rank, sweeps)?,
+                };
+                balanced_split(&f.factors, rank)
             }
         };
         // residualize so the adapted model starts EXACTLY at the base
@@ -165,7 +254,7 @@ mod tests {
     use crate::tensor::ops::fro;
 
     fn setup() -> Option<(Executor, Corpus)> {
-        if !crate::runtime::device_available("artifacts") {
+        if !crate::runtime::require_artifacts("init::setup") {
             return None;
         }
         Some((Executor::new("artifacts").unwrap(), Corpus::load("artifacts").unwrap()))
@@ -188,6 +277,36 @@ mod tests {
                 let rec = res.add(&delta).unwrap();
                 let err = fro(&rec.sub(&orig).unwrap()) / fro(&orig);
                 assert!(err < 1e-4, "{}/{proj}: {err}", strat.name());
+            }
+        }
+    }
+
+    #[test]
+    fn host_route_inits_start_at_base_model() {
+        // artifact-free twin of `all_inits_start_at_base_model`
+        use crate::calib::synthetic::SyntheticActivations;
+        use crate::model::synthetic::{synthetic_manifest, synthetic_weights};
+        let m = synthetic_manifest();
+        let spec = m.config("tiny").unwrap().clone();
+        let w = synthetic_weights(&spec, 2);
+        let src = SyntheticActivations::new(spec.clone(), 2);
+        for strat in [
+            AdapterInit::LoRA,
+            AdapterInit::PiSSA,
+            AdapterInit::CoalaA1,
+            AdapterInit::CoalaA2,
+        ] {
+            let set =
+                init_adapters_from_source(&spec, &w, &src, strat, 4, 2, 40).unwrap();
+            assert_eq!(set.adapters.len(), spec.compressible.len());
+            for proj in &spec.compressible {
+                let (a, b) = &set.adapters[proj];
+                assert!(a.all_finite() && b.all_finite(), "{}/{proj}", strat.name());
+                let delta = crate::tensor::ops::matmul(a, b).unwrap();
+                let orig = w.matrix(proj).unwrap();
+                let rec = set.frozen.matrix(proj).unwrap().add(&delta).unwrap();
+                let err = fro(&rec.sub(&orig).unwrap()) / fro(&orig);
+                assert!(err < 1e-3, "{}/{proj}: {err}", strat.name());
             }
         }
     }

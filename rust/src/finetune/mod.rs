@@ -10,5 +10,5 @@
 pub mod init;
 pub mod trainer;
 
-pub use init::{init_adapters, AdapterInit, AdapterSet};
+pub use init::{init_adapters, init_adapters_from_source, AdapterInit, AdapterSet};
 pub use trainer::{FineTuner, FtReport};

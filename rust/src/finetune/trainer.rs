@@ -196,7 +196,7 @@ mod tests {
 
     #[test]
     fn training_reduces_loss_and_moves_adapters() {
-        if !crate::runtime::device_available("artifacts") {
+        if !crate::runtime::require_artifacts("trainer::training_reduces_loss_and_moves_adapters") {
             return;
         }
         let ex = Executor::new("artifacts").unwrap();
@@ -225,7 +225,7 @@ mod tests {
 
     #[test]
     fn task_eval_runs_on_adapted_model() {
-        if !crate::runtime::device_available("artifacts") {
+        if !crate::runtime::require_artifacts("trainer::task_eval_runs_on_adapted_model") {
             return;
         }
         let ex = Executor::new("artifacts").unwrap();

@@ -29,9 +29,44 @@
 //!   CLI, and benches never match on method variants.  The accumulate
 //!   and factorize stages run end-to-end with no artifacts or PJRT
 //!   runtime (the cross-method conformance suite exercises exactly
-//!   that); activation *capture* is the one stage that still needs the
-//!   `fwd_acts` artifacts, since the transformer forward pass has no
-//!   host implementation.
+//!   that), and activation capture is an [`calib::activations::ActivationSource`]
+//!   with two implementations: the `fwd_acts` artifacts and the
+//!   synthetic PRNG generator.
+//!
+//! ## Reproducing the tables without artifacts
+//!
+//! ```text
+//! COALA_REPRO_FAST=1 cargo run --release -- repro --route host
+//! ```
+//!
+//! regenerates every table and figure of the paper with **zero
+//! artifacts, zero PJRT, zero non-default features** — the CI
+//! `repro-smoke` job runs exactly this.  `--route host` swaps the
+//! environment ([`repro::common::Env`]) from the artifact/PJRT route to
+//! the synthetic route:
+//!
+//! * **model** — [`model::synthetic`] generates a `ModelSpec` pair
+//!   (tiny/small) with the same parameter families as the build-time
+//!   transformer, PRNG weights whose unembedding implements the corpus'
+//!   bigram head, and a pure-Rust forward pass for evaluation;
+//! * **data** — [`calib::dataset::Corpus::synthetic`] (Markov-chain
+//!   token splits) and [`calib::dataset::TaskBank::synthetic`] (probe
+//!   tasks whose labels are the chain's top successors; the "ft" bank
+//!   uses a shifted chain, reproducing the Table 4 adaptation gap);
+//! * **activations** — [`calib::synthetic::SyntheticActivations`]
+//!   generates per-layer calibration chunks with *controlled
+//!   conditioning regimes* (well-conditioned / nearly singular /
+//!   spiked), so the stability results exercise the paper's scenarios
+//!   deterministically, and small batch counts give the k < n
+//!   insufficient-data regime;
+//! * **math** — accumulation through `CalibAccumulator` with
+//!   `AccumBackend::Host` and factorization through
+//!   `Compressor::factorize_host`; evaluation through
+//!   [`eval::host`].
+//!
+//! Everything is seeded (`--seed`), so tables are bit-reproducible; the
+//! golden regression suite (`tests/repro_host.rs`) pins determinism and
+//! the headline stability claims under `cargo test`.
 //!
 //! Layers:
 //!

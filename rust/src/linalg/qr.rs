@@ -1,6 +1,9 @@
-//! Householder QR (R-factor only — all COALA ever needs).
+//! Householder QR.  The R-only sweep is all COALA's algorithms ever
+//! need; the explicit-Q variant ([`householder_qr`]) exists for the
+//! property tests that pin the orthogonality invariants (QᵀQ = I,
+//! A = QR) the R-only code relies on implicitly.
 
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::tensor::{Matrix, Scalar};
 
 /// R factor of A (m × n): returns min(m,n) × n upper triangular.
@@ -78,6 +81,90 @@ pub(crate) fn householder_triangularize<T: Scalar>(acc: &mut Matrix<T>, m: usize
     }
 }
 
+/// Full thin Householder QR: A (m × n, m ≥ n) = Q·R with Q (m × n)
+/// having orthonormal columns and R (n × n) upper triangular.
+///
+/// Same reflector construction as [`householder_qr_r`], but the
+/// reflectors are kept and applied in reverse to the thin identity to
+/// materialize Q — the form the property tests verify directly.
+pub fn householder_qr<T: Scalar>(a: &Matrix<T>) -> Result<(Matrix<T>, Matrix<T>)> {
+    let (m, n) = (a.rows, a.cols);
+    if m < n {
+        return Err(Error::shape(format!("householder_qr needs m ≥ n, got {m}x{n}")));
+    }
+    let mut acc = a.clone();
+    // per-column reflector (full-length v, β); β = 0 marks a skipped column
+    let mut reflectors: Vec<(Vec<T>, T)> = Vec::with_capacity(n);
+    for j in 0..n {
+        let mut norm2 = T::ZERO;
+        for i in j..m {
+            let x = acc.get(i, j);
+            norm2 += x * x;
+        }
+        let normx = norm2.sqrt();
+        let mut v = vec![T::ZERO; m];
+        if normx.to_f64() == 0.0 {
+            reflectors.push((v, T::ZERO));
+            continue;
+        }
+        let xj = acc.get(j, j);
+        let alpha = if xj.to_f64() >= 0.0 { -normx } else { normx };
+        for i in j..m {
+            v[i] = acc.get(i, j);
+        }
+        v[j] -= alpha;
+        let mut vnorm2 = T::ZERO;
+        for &x in v.iter().take(m).skip(j) {
+            vnorm2 += x * x;
+        }
+        if vnorm2.to_f64() <= 0.0 {
+            reflectors.push((v, T::ZERO));
+            continue;
+        }
+        let beta = (T::ONE + T::ONE) / vnorm2;
+        for c in j..n {
+            let mut dot = T::ZERO;
+            for i in j..m {
+                dot += v[i] * acc.get(i, c);
+            }
+            let s = beta * dot;
+            for i in j..m {
+                let cur = acc.get(i, c);
+                acc.set(i, c, cur - v[i] * s);
+            }
+        }
+        reflectors.push((v, beta));
+    }
+    let mut r = Matrix::zeros(n, n);
+    for i in 0..n {
+        for c in i..n {
+            r.set(i, c, acc.get(i, c));
+        }
+    }
+    // Q = H_0 · … · H_{n−1} · [I_n; 0]: reflectors applied in reverse
+    let mut q = Matrix::zeros(m, n);
+    for j in 0..n {
+        q.set(j, j, T::ONE);
+    }
+    for (j, (v, beta)) in reflectors.iter().enumerate().rev() {
+        if beta.to_f64() == 0.0 {
+            continue;
+        }
+        for c in 0..n {
+            let mut dot = T::ZERO;
+            for i in j..m {
+                dot += v[i] * q.get(i, c);
+            }
+            let s = *beta * dot;
+            for i in j..m {
+                let cur = q.get(i, c);
+                q.set(i, c, cur - v[i] * s);
+            }
+        }
+    }
+    Ok((q, r))
+}
+
 /// Square (n × n) R for the COALA preprocessing convention: zero-pads
 /// when m < n so RᵀR = AᵀA always holds with a square R.
 pub fn qr_r_square<T: Scalar>(a: &Matrix<T>) -> Result<Matrix<T>> {
@@ -145,6 +232,35 @@ mod tests {
         let r = householder_qr_r(&a);
         assert!(r.all_finite());
         gram_close(&r, &a, 1e-9);
+    }
+
+    #[test]
+    fn explicit_q_reconstructs_and_is_orthonormal() {
+        for (m, n, seed) in [(12usize, 5usize, 1u64), (7, 7, 2), (30, 10, 3)] {
+            let a: Matrix<f64> = Matrix::randn(m, n, seed);
+            let (q, r) = householder_qr(&a).unwrap();
+            assert_eq!((q.rows, q.cols), (m, n));
+            assert_eq!((r.rows, r.cols), (n, n));
+            let qtq = matmul(&q.transpose(), &q).unwrap();
+            for i in 0..n {
+                for j in 0..n {
+                    let want = if i == j { 1.0 } else { 0.0 };
+                    assert!((qtq.get(i, j) - want).abs() < 1e-10, "QᵀQ[{i}][{j}]");
+                }
+            }
+            let qr = matmul(&q, &r).unwrap();
+            for (x, y) in qr.data.iter().zip(&a.data) {
+                assert!((x - y).abs() < 1e-10 * (1.0 + y.abs()), "{x} vs {y}");
+            }
+        }
+        // R agrees with the R-only sweep
+        let a: Matrix<f64> = Matrix::randn(20, 6, 4);
+        let (_q, r) = householder_qr(&a).unwrap();
+        let r_only = householder_qr_r(&a);
+        for (x, y) in r.data.iter().zip(&r_only.data) {
+            assert!((x - y).abs() < 1e-12);
+        }
+        assert!(householder_qr(&Matrix::<f64>::zeros(3, 5)).is_err());
     }
 
     #[test]

@@ -7,7 +7,10 @@
 //!   compress  --model tiny --method coala --ratio 0.7 [--lambda 3]
 //!             [--route device|host]
 //!   eval      --model tiny    perplexity + probe tasks of the base model
-//!   repro <id>                regenerate a paper table/figure (or `all`)
+//!   repro [<id>] [--route device|host]
+//!                             regenerate a paper table/figure (default:
+//!                             `all`).  `--route host` runs the synthetic
+//!                             artifact-free environment end-to-end.
 //!   tsqr-demo --workers 4     out-of-core tree-TSQR demonstration
 //!
 //! Methods resolve by name through the `coala::compressor` registry —
@@ -16,7 +19,7 @@
 use coala::calib::dataset::{Corpus, TaskBank};
 use coala::coala::compressor::{registry, resolve, Compressor, Route};
 use coala::coordinator::{CompressionJob, Pipeline, TsqrTreeRunner};
-use coala::error::{Error, Result};
+use coala::error::Result;
 use coala::eval::{eval_tasks, perplexity};
 use coala::model::ModelWeights;
 use coala::runtime::{conformance, Executor};
@@ -30,14 +33,6 @@ fn main() {
     if let Err(e) = dispatch(cmd, &args) {
         eprintln!("error: {e}");
         std::process::exit(1);
-    }
-}
-
-fn route_from(args: &Args) -> Result<Route> {
-    match args.get_or("route", "device") {
-        "device" => Ok(Route::Device),
-        "host" => Ok(Route::Host),
-        other => Err(Error::Config(format!("--route is device or host, got `{other}`"))),
     }
 }
 
@@ -75,8 +70,9 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
             println!(
                 "\nparameterized specs: coala:lambda=L (adaptive μ, Eq. 5) | coala:mu=M\n\
                  accumulate + factorize run on either route: --route device (PJRT\n\
-                 artifacts) or --route host (pure Rust); activation capture itself\n\
-                 always needs the fwd_acts artifacts"
+                 artifacts) or --route host (pure Rust).  `compress` captures\n\
+                 activations through the fwd_acts artifacts; `repro --route host`\n\
+                 needs no artifacts at all (synthetic environment)"
             );
             Ok(())
         }
@@ -90,7 +86,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
             let mut job =
                 CompressionJob::new(cfg, comp.method(), args.get_f64("ratio", 0.7)?);
             job.calib_batches = args.get_usize("calib-batches", 8)?;
-            let route = route_from(args)?;
+            let route = args.route()?;
             println!(
                 "compressing {cfg} with {} at {:.0}% kept ({:?} route) …",
                 comp.name(),
@@ -132,17 +128,15 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
             Ok(())
         }
         "repro" => {
-            let id = args
-                .positional
-                .get(1)
-                .ok_or_else(|| Error::Config("repro needs an experiment id".into()))?;
+            // `coala repro --route host` (no id) regenerates everything
+            let id = args.positional.get(1).map(String::as_str).unwrap_or("all");
             coala::repro::run(id, args)
         }
         "tsqr-demo" => {
             let workers = args.get_usize("workers", 4)?;
             let n = args.get_usize("n", 192)?;
             let chunks_n = args.get_usize("chunks", 8)?;
-            let host = route_from(args)? == Route::Host;
+            let host = args.route()? == Route::Host;
             let (c, runner) = if host {
                 (args.get_usize("chunk-rows", 256)?, TsqrTreeRunner::host(workers))
             } else {

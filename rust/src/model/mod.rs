@@ -7,9 +7,15 @@
 //! weights **as inputs** — which is what lets the coordinator evaluate a
 //! compressed model by simply swapping reconstructed matrices into the
 //! input list, without ever re-lowering.
+//!
+//! The [`synthetic`] module is the artifact-free twin: a PRNG-generated
+//! spec + weight set with the same parameter families and a pure-Rust
+//! forward pass, so the repro drivers run end-to-end with no build step.
 
 pub mod compressed;
+pub mod synthetic;
 pub mod weights;
 
 pub use compressed::CompressedModel;
+pub use synthetic::{synthetic_manifest, synthetic_weights, HostModel};
 pub use weights::ModelWeights;

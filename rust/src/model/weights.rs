@@ -118,7 +118,13 @@ mod tests {
     use crate::runtime::Manifest;
 
     fn setup() -> Option<(Manifest, ModelWeights)> {
-        let m = Manifest::load("artifacts").ok()?;
+        let m = match Manifest::load("artifacts") {
+            Ok(m) => m,
+            Err(_) => {
+                eprintln!("skipped: weights artifact test (artifacts/ not present)");
+                return None;
+            }
+        };
         let spec = m.config("tiny").ok()?.clone();
         let w = ModelWeights::load("artifacts", &spec).ok()?;
         Some((m, w))

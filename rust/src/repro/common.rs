@@ -1,29 +1,209 @@
-//! Shared experiment plumbing.
+//! Shared experiment plumbing: the backend-agnostic environment every
+//! repro driver runs against.
+//!
+//! [`Env`] has two constructors behind one interface:
+//!
+//! * **artifact route** (`--route device`, the default): PJRT executor +
+//!   on-disk artifacts, exactly the original behavior;
+//! * **synthetic host route** (`--route host`): a deterministic,
+//!   PRNG-generated model spec + weights + Markov corpus + regime-
+//!   controlled activations ([`crate::model::synthetic`],
+//!   [`crate::calib::synthetic`]) with evaluation through the pure-Rust
+//!   forward — zero files, zero PJRT, zero non-default features.
+//!
+//! Drivers ask the environment for weights, calibration captures,
+//! compression runs, task banks, and evaluation; they never branch on
+//! the route themselves.
 
-use crate::calib::dataset::Corpus;
-use crate::error::Result;
+use crate::calib::activations::{chunk_for_proj, ActivationSource, DeviceActivationSource};
+use crate::calib::dataset::{Corpus, TaskBank};
+use crate::calib::synthetic::SyntheticActivations;
+use crate::coala::compressor::Route;
+use crate::coordinator::{CompressionJob, CompressionOutcome, Pipeline};
+use crate::error::{Error, Result};
+use crate::eval::TaskScores;
+use crate::model::synthetic as synth;
 use crate::model::ModelWeights;
 use crate::runtime::executor::Executor;
+use crate::runtime::manifest::ModelSpec;
+use crate::tensor::Matrix;
 use crate::util::cli::Args;
 use crate::util::json::Json;
 
-/// Loaded environment for experiments that need the runtime.
+/// Loaded environment for experiments.
 pub struct Env {
+    /// Holds the manifest on both routes; executes artifacts only on the
+    /// artifact route (the synthetic manifest has an empty artifact
+    /// table, so stray device calls fail loudly).
     pub ex: Executor,
     pub corpus: Corpus,
+    /// Which backend accumulates + factorizes in compression jobs.
+    pub route: Route,
+    seed: u64,
+    synthetic: bool,
 }
 
 impl Env {
+    /// Route dispatch: `--route host` builds the synthetic environment
+    /// (seeded by `--seed`), anything else loads the artifacts.
     pub fn load(args: &Args) -> Result<Env> {
-        let dir = crate::artifacts_dir(args.get("artifacts"));
-        Ok(Env { ex: Executor::new(&dir)?, corpus: Corpus::load(&dir)? })
+        match args.route()? {
+            Route::Host => {
+                let seed = args.get_usize("seed", synth::DEFAULT_SEED as usize)?;
+                Env::synthetic(seed as u64)
+            }
+            Route::Device => Env::from_artifacts(args),
+        }
     }
 
-    pub fn weights(&self, config: &str) -> Result<(crate::runtime::manifest::ModelSpec, ModelWeights)> {
+    /// The artifact/PJRT environment (requires `artifacts/` on disk).
+    pub fn from_artifacts(args: &Args) -> Result<Env> {
+        let dir = crate::artifacts_dir(args.get("artifacts"));
+        Ok(Env {
+            ex: Executor::new(&dir)?,
+            corpus: Corpus::load(&dir)?,
+            route: Route::Device,
+            seed: 0,
+            synthetic: false,
+        })
+    }
+
+    /// The synthetic host environment: everything generated from `seed`.
+    pub fn synthetic(seed: u64) -> Result<Env> {
+        let manifest = synth::synthetic_manifest();
+        let corpus = Corpus::synthetic(synth::VOCAB, synth::SPLIT_LEN, seed);
+        Ok(Env {
+            ex: Executor::from_manifest(manifest)?,
+            corpus,
+            route: Route::Host,
+            seed,
+            synthetic: true,
+        })
+    }
+
+    pub fn is_synthetic(&self) -> bool {
+        self.synthetic
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Spec + weights for a config, whichever route is active.
+    pub fn weights(&self, config: &str) -> Result<(ModelSpec, ModelWeights)> {
         let spec = self.ex.manifest.config(config)?.clone();
-        let dir = &self.ex.manifest.dir.clone();
-        let w = ModelWeights::load(dir, &spec)?;
+        let w = if self.synthetic {
+            synth::synthetic_weights(&spec, self.seed)
+        } else {
+            let dir = self.ex.manifest.dir.clone();
+            ModelWeights::load(&dir, &spec)?
+        };
         Ok((spec, w))
+    }
+
+    /// The synthetic activation source for a spec (None on the artifact
+    /// route, where activations come from `fwd_acts` capture).
+    pub fn activation_source(&self, spec: &ModelSpec) -> Option<SyntheticActivations> {
+        self.synthetic
+            .then(|| SyntheticActivations::new(spec.clone(), self.seed))
+    }
+
+    /// Run one compression job end-to-end on the active route.
+    pub fn run_job(
+        &self,
+        spec: &ModelSpec,
+        weights: &ModelWeights,
+        job: &CompressionJob,
+    ) -> Result<CompressionOutcome> {
+        let pipe = Pipeline::new(&self.ex, spec.clone(), weights).with_route(self.route);
+        match self.activation_source(spec) {
+            Some(src) => pipe.run_with_source(job, &src),
+            None => pipe.run(job, &self.corpus),
+        }
+    }
+
+    /// Capture the calibration matrix Xᵀ (rows) feeding one projection,
+    /// plus the projection's weight matrix — the stability drivers' raw
+    /// material.
+    pub fn capture_xt(
+        &self,
+        config: &str,
+        proj: &str,
+        batches: usize,
+    ) -> Result<(Matrix<f32>, Matrix<f32>)> {
+        let (spec, w) = self.weights(config)?;
+        let wm = w.matrix(proj)?;
+        let src: Box<dyn ActivationSource + '_> = match self.activation_source(&spec) {
+            Some(s) => Box::new(s),
+            None => Box::new(DeviceActivationSource::new(
+                &self.ex,
+                &spec,
+                &w,
+                &self.corpus,
+                "calib",
+                batches,
+            )?),
+        };
+        let mut xt: Option<Matrix<f32>> = None;
+        for b in 0..batches {
+            let chunks = src.capture_batch(b)?;
+            let c = chunk_for_proj(&spec, &chunks, proj)?;
+            xt = Some(match xt {
+                None => c.xt.clone(),
+                Some(prev) => prev.vstack(&c.xt)?,
+            });
+        }
+        let xt = xt.ok_or_else(|| Error::Config("capture_xt needs ≥ 1 batch".into()))?;
+        Ok((wm, xt))
+    }
+
+    /// The probe-task bank (`which` ∈ {"base", "ft"}).
+    pub fn task_bank(&self, which: &str) -> Result<TaskBank> {
+        if self.synthetic {
+            TaskBank::synthetic(
+                synth::VOCAB,
+                synth::SEQ_LEN,
+                which,
+                &self.ex.manifest.task_names,
+                synth::BANK_ROWS,
+                self.seed,
+            )
+        } else {
+            TaskBank::load(&self.ex.manifest.dir, which, &self.ex.manifest.task_names)
+        }
+    }
+
+    /// Perplexity of a weight set over a corpus split, on the active
+    /// route's evaluator.
+    pub fn perplexity(
+        &self,
+        spec: &ModelSpec,
+        weights: &ModelWeights,
+        split: &str,
+        n_batches: usize,
+    ) -> Result<f64> {
+        let toks = self.corpus.split(split)?;
+        if self.synthetic {
+            crate::eval::perplexity_host(spec, weights, toks, n_batches)
+        } else {
+            crate::eval::perplexity(&self.ex, spec, weights, toks, n_batches)
+        }
+    }
+
+    /// Probe-task scores of a weight set, on the active route's
+    /// evaluator.
+    pub fn eval_tasks(
+        &self,
+        spec: &ModelSpec,
+        weights: &ModelWeights,
+        bank: &TaskBank,
+        limit: Option<usize>,
+    ) -> Result<TaskScores> {
+        if self.synthetic {
+            crate::eval::eval_tasks_host(spec, weights, bank, limit)
+        } else {
+            crate::eval::eval_tasks(&self.ex, spec, weights, bank, limit)
+        }
     }
 }
 
@@ -38,4 +218,61 @@ pub fn dump(id: &str, value: Json) -> Result<()> {
 /// Fast-mode row/batch scaling: COALA_REPRO_FAST=1 shrinks sweeps.
 pub fn fast() -> bool {
     std::env::var("COALA_REPRO_FAST").as_deref() == Ok("1")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_env_loads_without_any_files() {
+        let env = Env::synthetic(7).unwrap();
+        assert!(env.is_synthetic());
+        assert_eq!(env.route, Route::Host);
+        let (spec, w) = env.weights("tiny").unwrap();
+        assert_eq!(w.tensors.len(), spec.param_names.len());
+        // capture + routing works for every compressible projection
+        let (wm, xt) = env.capture_xt("tiny", "l1.wq", 2).unwrap();
+        assert_eq!((wm.rows, wm.cols), (spec.d_model, spec.d_model));
+        assert_eq!(xt.rows, 2 * spec.batch * spec.seq_len);
+        assert_eq!(xt.cols, spec.d_model);
+        // evaluation works without artifacts
+        let bank = env.task_bank("base").unwrap();
+        let scores = env.eval_tasks(&spec, &w, &bank, Some(32)).unwrap();
+        assert_eq!(scores.names.len(), 8);
+        let ppl = env.perplexity(&spec, &w, "val", 2).unwrap();
+        assert!(ppl.is_finite() && ppl > 1.0);
+    }
+
+    #[test]
+    fn synthetic_env_is_seed_deterministic() {
+        let a = Env::synthetic(11).unwrap();
+        let b = Env::synthetic(11).unwrap();
+        let c = Env::synthetic(12).unwrap();
+        let (_, wa) = a.weights("tiny").unwrap();
+        let (_, wb) = b.weights("tiny").unwrap();
+        let (_, wc) = c.weights("tiny").unwrap();
+        assert_eq!(wa.tensors["embed"].1, wb.tensors["embed"].1);
+        assert_ne!(wa.tensors["embed"].1, wc.tensors["embed"].1);
+        let (_, xa) = a.capture_xt("tiny", "l0.wv", 1).unwrap();
+        let (_, xb) = b.capture_xt("tiny", "l0.wv", 1).unwrap();
+        assert_eq!(xa.data, xb.data);
+    }
+
+    #[test]
+    fn synthetic_run_job_compresses_on_host() {
+        use crate::coala::compressor::{resolve, Compressor};
+        let env = Env::synthetic(3).unwrap();
+        let (spec, w) = env.weights("tiny").unwrap();
+        let mut job =
+            CompressionJob::new("tiny", resolve("coala:lambda=3").unwrap().method(), 0.3);
+        job.calib_batches = 2;
+        let out = env.run_job(&spec, &w, &job).unwrap();
+        assert!(out.model.all_finite());
+        assert_eq!(out.model.factors.len(), spec.compressible.len());
+        // the compressed model still evaluates end-to-end on the host
+        let rec = out.model.reconstruct_into(&w).unwrap();
+        let ppl = env.perplexity(&spec, &rec, "val", 2).unwrap();
+        assert!(ppl.is_finite(), "compressed ppl {ppl}");
+    }
 }

@@ -1,6 +1,13 @@
 //! Experiment drivers: one entry per table/figure of the paper
 //! (`coala repro <id>`).  Results print as tables and are also dumped to
 //! `results/<id>.json` for EXPERIMENTS.md.
+//!
+//! Every driver runs on either environment route (`common::Env`):
+//! `--route device` uses the PJRT artifacts; `--route host` uses the
+//! synthetic artifact-free environment (deterministic PRNG model +
+//! Markov corpus + regime-controlled activations) with pure-Rust
+//! accumulate/factorize/eval, so `coala repro --route host` regenerates
+//! every table with no build step and no `pjrt` feature.
 
 pub mod accuracy;
 pub mod common;

@@ -2,7 +2,6 @@
 //! Example G.1 (Gram precision loss).
 
 use super::common::{dump, Env};
-use crate::calib::activations::ActivationCapture;
 use crate::coala::baselines::{svdllm_factorize, svdllm_v2_factorize};
 use crate::coala::coala_factorize;
 use crate::error::Result;
@@ -15,21 +14,11 @@ use crate::util::cli::Args;
 use crate::util::json::Json;
 use crate::util::table::Table;
 
-/// Capture the calibration matrix Xᵀ (rows) for one projection.
+/// Capture the calibration matrix Xᵀ (rows) for one projection — the
+/// environment dispatches between `fwd_acts` capture and the synthetic
+/// regime-controlled generator.
 fn capture_xt(env: &Env, config: &str, proj: &str, batches: usize) -> Result<(Matrix<f32>, Matrix<f32>)> {
-    let (spec, w) = env.weights(config)?;
-    let cap = ActivationCapture::new(&env.ex, &spec);
-    let toks = env.corpus.batches("calib", spec.batch, spec.seq_len, batches)?;
-    let mut xt: Option<Matrix<f32>> = None;
-    for t in &toks {
-        let (_l, chunks) = cap.capture(t, &w)?;
-        let c = cap.chunk_for(&chunks, proj)?;
-        xt = Some(match xt {
-            None => c.xt.clone(),
-            Some(prev) => prev.vstack(&c.xt)?,
-        });
-    }
-    Ok((w.matrix(proj)?, xt.unwrap()))
+    env.capture_xt(config, proj, batches)
 }
 
 /// Fig. 1: relative error (spectral norm) of each method's W′_r against

@@ -1,4 +1,9 @@
 //! Fig. 6 (gap⁻¹ sensitivity) and Theorem 1/5 bound validation.
+//!
+//! These drivers are constructed-instance experiments (Examples G.2 and
+//! random Gaussian instances) computed entirely in host linalg: they are
+//! route-independent and need no environment, so `--route host` and
+//! `--route device` produce identical tables by design.
 
 use super::common::dump;
 use crate::coala::{coala_from_x, coala_regularized};

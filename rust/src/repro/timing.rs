@@ -4,8 +4,8 @@
 
 use super::common::{dump, Env};
 use crate::coala::compressor::{resolve, Compressor};
-use crate::coordinator::{CompressionJob, Pipeline};
-use crate::error::Result;
+use crate::coordinator::CompressionJob;
+use crate::error::{Error, Result};
 use crate::linalg::{eigh, qr_r_square, tsqr_sequential, tsqr_tree};
 use crate::tensor::ops::gram_t;
 use crate::tensor::Matrix;
@@ -31,22 +31,50 @@ pub fn table1(args: &Args) -> Result<()> {
     );
     let mut recs = Vec::new();
     for cfg in &configs {
-        let (spec, w) = env.weights(cfg)?;
-        let pipe = Pipeline::new(&env.ex, spec.clone(), &w);
+        let (model_spec, w) = env.weights(cfg)?;
         for (name, spec) in methods {
             let method = resolve(spec)?.method();
             let mut totals = Vec::new();
             let mut parts = (0.0, 0.0, 0.0);
+            let mut collapsed = false;
             for _ in 0..runs {
                 let mut job = CompressionJob::new(cfg, method, 0.3);
                 job.calib_batches = if super::common::fast() { 2 } else { 8 };
-                let out = pipe.run(&job, &env.corpus)?;
-                totals.push(out.timings.total_s);
-                parts = (
-                    out.timings.calibrate_s,
-                    out.timings.accumulate_s,
-                    out.timings.factorize_s,
-                );
+                match env.run_job(&model_spec, &w, &job) {
+                    Ok(out) => {
+                        totals.push(out.timings.total_s);
+                        parts = (
+                            out.timings.calibrate_s,
+                            out.timings.accumulate_s,
+                            out.timings.factorize_s,
+                        );
+                    }
+                    Err(e @ Error::Numerical(_)) => {
+                        // a Gram method collapsing numerically has no
+                        // meaningful wall-clock — report and move on;
+                        // any other error kind is a real driver bug
+                        println!("  [{cfg}/{name}: numerical collapse — {e}]");
+                        collapsed = true;
+                        break;
+                    }
+                    Err(e) => return Err(e),
+                }
+            }
+            if collapsed || totals.is_empty() {
+                t.row(vec![
+                    cfg.clone(),
+                    name.into(),
+                    "—".into(),
+                    "—".into(),
+                    "—".into(),
+                    "collapse".into(),
+                ]);
+                recs.push(Json::obj(vec![
+                    ("model", Json::Str(cfg.clone())),
+                    ("method", Json::Str(name.into())),
+                    ("collapsed", Json::Bool(true)),
+                ]));
+                continue;
             }
             let mean = totals.iter().sum::<f64>() / totals.len() as f64;
             let std = if totals.len() > 1 {

@@ -46,9 +46,15 @@ pub struct Executor {
 }
 
 impl Executor {
-    #[cfg(feature = "pjrt")]
     pub fn new(artifacts_dir: &str) -> Result<Executor> {
-        let manifest = Manifest::load(artifacts_dir)?;
+        Executor::from_manifest(Manifest::load(artifacts_dir)?)
+    }
+
+    /// Wrap an already-built manifest (e.g. the synthetic, artifact-free
+    /// one from `model::synthetic`).  Executing any artifact against a
+    /// manifest with an empty artifact table reports `UnknownArtifact`.
+    #[cfg(feature = "pjrt")]
+    pub fn from_manifest(manifest: Manifest) -> Result<Executor> {
         let client = xla::PjRtClient::cpu()?;
         Ok(Executor {
             manifest,
@@ -58,9 +64,11 @@ impl Executor {
         })
     }
 
+    /// Wrap an already-built manifest (e.g. the synthetic, artifact-free
+    /// one from `model::synthetic`).  Executing any artifact against a
+    /// manifest with an empty artifact table reports `UnknownArtifact`.
     #[cfg(not(feature = "pjrt"))]
-    pub fn new(artifacts_dir: &str) -> Result<Executor> {
-        let manifest = Manifest::load(artifacts_dir)?;
+    pub fn from_manifest(manifest: Manifest) -> Result<Executor> {
         Ok(Executor { manifest })
     }
 
@@ -199,7 +207,7 @@ mod tests {
     use crate::tensor::Matrix;
 
     fn executor() -> Option<Executor> {
-        if crate::runtime::device_available("artifacts") {
+        if crate::runtime::require_artifacts("executor artifact tests") {
             Some(Executor::new("artifacts").unwrap())
         } else {
             None

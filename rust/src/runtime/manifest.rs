@@ -109,6 +109,27 @@ fn specs(v: &Json, default_prefix: &str) -> Result<Vec<TensorSpec>> {
 }
 
 impl Manifest {
+    /// Assemble a manifest directly from parts — no file IO.  This is the
+    /// synthetic (artifact-free) environment route: `dir` is a sentinel
+    /// that never gets opened, and the artifact table is empty, so any
+    /// attempt to execute a device artifact against a synthetic manifest
+    /// fails loudly with `UnknownArtifact` instead of silently.
+    pub fn from_parts(
+        dir: &str,
+        task_names: Vec<String>,
+        ft_rank: usize,
+        configs: BTreeMap<String, ModelSpec>,
+    ) -> Manifest {
+        Manifest {
+            dir: dir.to_string(),
+            abi_version: 1,
+            task_names,
+            ft_rank,
+            configs,
+            artifacts: BTreeMap::new(),
+        }
+    }
+
     pub fn load(dir: &str) -> Result<Manifest> {
         let path = format!("{dir}/manifest.json");
         let j = Json::parse_file(&path)?;

@@ -39,3 +39,25 @@ pub use value::Value;
 pub fn device_available(dir: &str) -> bool {
     cfg!(feature = "pjrt") && std::path::Path::new(&format!("{dir}/manifest.json")).exists()
 }
+
+/// Artifact gate for tests: like [`device_available`], but when the gate
+/// is closed it *says so* on stderr instead of letting the test count as
+/// silently passed.  Every artifact-dependent test should early-return
+/// through this helper so CI logs show the true coverage:
+///
+/// ```ignore
+/// if !coala::runtime::require_artifacts("my_test") { return; }
+/// ```
+pub fn require_artifacts(test: &str) -> bool {
+    if device_available("artifacts") {
+        true
+    } else {
+        let why = if cfg!(feature = "pjrt") {
+            "artifacts/ not present"
+        } else {
+            "built without the `pjrt` feature"
+        };
+        eprintln!("skipped: {test} ({why}; run `make artifacts` + enable pjrt to cover it)");
+        false
+    }
+}

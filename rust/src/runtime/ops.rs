@@ -158,7 +158,7 @@ mod tests {
     use crate::tensor::ops::{context_rel_err, fro, gram_t, matmul};
 
     fn executor() -> Option<Executor> {
-        if crate::runtime::device_available("artifacts") {
+        if crate::runtime::require_artifacts("ops artifact tests") {
             Some(Executor::new("artifacts").unwrap())
         } else {
             None

@@ -3,6 +3,7 @@
 //! Supports `--flag value`, `--flag=value`, boolean `--flag`, and
 //! positional arguments.  The `coala` binary defines subcommands on top.
 
+use crate::coala::compressor::Route;
 use crate::error::{Error, Result};
 use std::collections::BTreeMap;
 
@@ -75,6 +76,20 @@ impl Args {
         }
     }
 
+    /// `--route device|host` → [`Route`] (default device).  Every repro
+    /// driver and the compress/tsqr-demo subcommands share this flag:
+    /// `host` selects pure-Rust accumulate/factorize and, in the repro
+    /// harness, the synthetic artifact-free environment.
+    pub fn route(&self) -> Result<Route> {
+        match self.get_or("route", "device") {
+            "device" => Ok(Route::Device),
+            "host" => Ok(Route::Host),
+            other => Err(Error::Config(format!(
+                "--route is device or host, got `{other}`"
+            ))),
+        }
+    }
+
     /// Assemble the method spec the `coala::compressor` registry resolves:
     /// `--method NAME` plus an optional `--lambda`/`--mu` parameter
     /// (spelled `NAME:lambda=V` / `NAME:mu=V`).  `--method coala:lambda=3`
@@ -123,6 +138,16 @@ mod tests {
         let a = Args::parse(&sv(&["--methods", "coala,svdllm"]));
         assert_eq!(a.get_list("methods", &["x"]), vec!["coala", "svdllm"]);
         assert_eq!(a.get_list("other", &["x"]), vec!["x"]);
+    }
+
+    #[test]
+    fn route_flag() {
+        assert_eq!(Args::parse(&sv(&[])).route().unwrap(), Route::Device);
+        assert_eq!(
+            Args::parse(&sv(&["--route", "host"])).route().unwrap(),
+            Route::Host
+        );
+        assert!(Args::parse(&sv(&["--route", "tpu"])).route().is_err());
     }
 
     #[test]

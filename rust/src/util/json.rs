@@ -126,7 +126,12 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if !n.is_finite() {
+                    // JSON has no inf/NaN; serialize as null (what
+                    // serde_json does).  The stability tables genuinely
+                    // produce infinities on collapsed Gram routes.
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     let _ = write!(out, "{}", *n as i64);
                 } else {
                     let _ = write!(out, "{n}");
@@ -359,6 +364,16 @@ mod tests {
         assert_eq!(v.req("b").unwrap().req("c").unwrap().as_str(), Some("x\ny"));
         let re = Json::parse(&v.dump()).unwrap();
         assert_eq!(v, re);
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        let v = Json::from_f64s(&[1.0, f64::INFINITY, f64::NAN, -2.5]);
+        let s = v.dump();
+        assert_eq!(s, "[1,null,null,-2.5]");
+        // and the dump still re-parses
+        let re = Json::parse(&s).unwrap();
+        assert_eq!(re.as_arr().unwrap()[1], Json::Null);
     }
 
     #[test]

@@ -114,6 +114,118 @@ fn gram_methods_report_near_singular_inputs() {
     }
 }
 
+/// Context error of a compressor's host-route rank-`rank` reconstruction.
+fn host_context_err(
+    comp: &dyn Compressor,
+    w: &Matrix<f32>,
+    x: &Matrix<f32>,
+    rank: usize,
+) -> Result<f64, String> {
+    let calib = accumulate_host(comp, x, 3);
+    let f = comp.factorize_host(w, &calib, rank, 60).map_err(|e| e.to_string())?;
+    let t = f.factors.truncate(rank);
+    if !(t.a.all_finite() && t.b.all_finite()) {
+        return Err(format!("{}: Ok with non-finite factors", comp.name()));
+    }
+    let rec = t.reconstruct().map_err(|e| e.to_string())?;
+    context_rel_err(w, &rec, x).map_err(|e| e.to_string())
+}
+
+/// Near-singular + insufficient-data stress: every registered method on
+/// (a) rank-deficient X via duplicated sample columns, (b) k < n
+/// calibration.  Contract: never panic; never let NaN/Inf flow out of an
+/// `Ok`; only the Gram route may refuse; and the inversion-free optimal
+/// methods (COALA μ=0 ≡ α=1) must stay no worse than plain SVD on the
+/// context error — the paper's stability guarantee (scenarios 2–3).
+#[test]
+fn near_singular_and_insufficient_data_stress() {
+    use coala::calib::accumulate::AccumKind;
+    let (m, n, rank) = (10usize, 8usize, 3usize);
+    let w: Matrix<f32> = Matrix::randn(m, n, 41);
+
+    // (a) duplicated sample columns: 24 samples, only 5 distinct → the
+    // feature Gram XXᵀ is exactly singular (rank 5 < n = 8)
+    let base: Matrix<f32> = Matrix::randn(n, 5, 42);
+    let x_dup = Matrix::from_fn(n, 24, |i, j| base.get(i, j % 5));
+    // (b) insufficient data: k = 4 < n = 8 samples
+    let x_thin: Matrix<f32> = Matrix::randn(n, 4, 43);
+
+    for (label, x) in [("duplicated-columns", &x_dup), ("k<n", &x_thin)] {
+        let svd_err = host_context_err(resolve("svd").unwrap().as_ref(), &w, x, rank)
+            .unwrap_or_else(|e| panic!("plain SVD must survive {label}: {e}"));
+        assert!(svd_err.is_finite(), "plain SVD err on {label}");
+        for comp in registry() {
+            match host_context_err(comp.as_ref(), &w, x, rank) {
+                Ok(err) => {
+                    assert!(
+                        err.is_finite(),
+                        "{} on {label}: non-finite context error",
+                        comp.name()
+                    );
+                }
+                Err(msg) => {
+                    // only the Gram route is allowed to collapse here,
+                    // and it must do so with a reported error
+                    assert_eq!(
+                        comp.accum_kind(),
+                        AccumKind::Gram,
+                        "{} must survive {label}: {msg}",
+                        comp.name()
+                    );
+                }
+            }
+        }
+        // the paper-guaranteed orderings: the inversion-free optimal
+        // methods match-or-beat context-free SVD on ‖(W−W′)X‖
+        for spec in ["coala", "alpha1"] {
+            let comp = resolve(spec).unwrap();
+            let err = host_context_err(comp.as_ref(), &w, x, rank)
+                .unwrap_or_else(|e| panic!("{spec} must survive {label}: {e}"));
+            assert!(
+                err <= svd_err + 5e-2,
+                "{spec} on {label}: {err} worse than plain SVD {svd_err}"
+            );
+        }
+    }
+}
+
+/// The same contract on the regime-controlled synthetic activation
+/// generator the host-route drivers calibrate from.
+#[test]
+fn regime_chunks_stress_every_method() {
+    use coala::calib::synthetic::{synth_chunk, Regime};
+
+    let (m, n, rank) = (12usize, 16usize, 4usize);
+    let w: Matrix<f32> = Matrix::randn(m, n, 51);
+    for regime in [Regime::WellConditioned, Regime::NearSingular, Regime::Spiked] {
+        for comp in registry() {
+            let mut acc =
+                make_accumulator(comp.accum_kind(), n, AccumBackend::Host, Precision::F32);
+            for b in 0..2u64 {
+                acc.fold_chunk(&synth_chunk(40, n, regime, 60 + b)).unwrap();
+            }
+            let calib = acc.finish();
+            match comp.factorize_host(&w, &calib, rank, 60) {
+                Ok(f) => {
+                    let t = f.factors.truncate(rank);
+                    assert!(
+                        t.a.all_finite() && t.b.all_finite(),
+                        "{} on {regime:?}: Ok with non-finite factors",
+                        comp.name()
+                    );
+                }
+                Err(e) => {
+                    assert!(
+                        !e.to_string().is_empty(),
+                        "{} on {regime:?}: empty error",
+                        comp.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
 #[test]
 fn spec_round_trips_every_registry_entry() {
     // every canonical instance's printed spec resolves back to itself —

@@ -1,0 +1,197 @@
+//! Property tests for the host linalg invariants, driven by the
+//! miniature `util::prop` harness (seeded generation + greedy
+//! shrinking).  These are the numerical contracts the stability claims
+//! rest on, pinned with no artifacts and no PJRT:
+//!
+//! * Householder QR: QᵀQ ≈ I and A ≈ Q·R;
+//! * streaming (`TsqrFolder`) and tree TSQR R-factors agree with the
+//!   direct QR of the stacked matrix up to row signs;
+//! * Jacobi eigh reconstructs its input (V·Λ·Vᵀ ≈ S, VᵀV ≈ I);
+//! * triangular solves round-trip (solve(U, U·X) ≈ X, both triangles).
+
+use coala::linalg::{
+    eigh, householder_qr, qr_r_square, solve_lower, solve_upper, tsqr_sequential, tsqr_tree,
+};
+use coala::tensor::ops::{fro, gram_t, matmul};
+use coala::tensor::Matrix;
+use coala::util::prop::assert_prop;
+
+/// Flip row signs so the diagonal is non-negative — QR's R is unique up
+/// to exactly this transformation.
+fn normalize_row_signs(r: &Matrix<f64>) -> Matrix<f64> {
+    let mut out = r.clone();
+    for i in 0..out.rows.min(out.cols) {
+        if out.get(i, i) < 0.0 {
+            for j in 0..out.cols {
+                out.set(i, j, -out.get(i, j));
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn qr_orthogonality_and_reconstruction() {
+    assert_prop(
+        "qr-QtQ-and-A-eq-QR",
+        17,
+        8,
+        |rng| (1 + rng.below(10), rng.below(16), rng.below(1000)),
+        |&(n, extra, seed)| {
+            if n == 0 {
+                return Ok(()); // shrinking can zero the dimension
+            }
+            let m = n + extra;
+            let a: Matrix<f64> = Matrix::randn(m, n, seed as u64);
+            let (q, r) = householder_qr(&a).map_err(|e| e.to_string())?;
+            let qtq = matmul(&q.transpose(), &q).map_err(|e| e.to_string())?;
+            for i in 0..n {
+                for j in 0..n {
+                    let want = if i == j { 1.0 } else { 0.0 };
+                    let got = qtq.get(i, j);
+                    if (got - want).abs() > 1e-9 {
+                        return Err(format!("QᵀQ[{i}][{j}] = {got}"));
+                    }
+                }
+            }
+            let qr = matmul(&q, &r).map_err(|e| e.to_string())?;
+            let err = fro(&qr.sub(&a).map_err(|e| e.to_string())?);
+            if err > 1e-9 * (1.0 + fro(&a)) {
+                return Err(format!("‖A − QR‖ = {err}"));
+            }
+            // R upper triangular
+            for i in 0..r.rows {
+                for j in 0..i {
+                    if r.get(i, j) != 0.0 {
+                        return Err(format!("R[{i}][{j}] below diagonal nonzero"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn tsqr_agrees_with_direct_qr_up_to_row_signs() {
+    assert_prop(
+        "tsqr-vs-direct-qr",
+        23,
+        8,
+        |rng| (1 + rng.below(8), 1 + rng.below(4), rng.below(1000)),
+        |&(n, n_chunks, seed)| {
+            if n == 0 || n_chunks == 0 {
+                return Ok(());
+            }
+            let rows = n + 3; // tall chunks
+            let chunks: Vec<Matrix<f64>> = (0..n_chunks)
+                .map(|i| Matrix::randn(rows, n, seed as u64 * 100 + i as u64))
+                .collect();
+            let mut full = chunks[0].clone();
+            for c in &chunks[1..] {
+                full = full.vstack(c).map_err(|e| e.to_string())?;
+            }
+            let direct =
+                normalize_row_signs(&qr_r_square(&full).map_err(|e| e.to_string())?);
+            let scale = 1.0 + fro(&direct);
+            for (label, r) in [
+                ("sequential", tsqr_sequential(&chunks).map_err(|e| e.to_string())?),
+                ("tree", tsqr_tree(&chunks, 3).map_err(|e| e.to_string())?),
+            ] {
+                let r = normalize_row_signs(&r);
+                if (r.rows, r.cols) != (direct.rows, direct.cols) {
+                    return Err(format!("{label}: shape {}x{}", r.rows, r.cols));
+                }
+                let err = fro(&r.sub(&direct).map_err(|e| e.to_string())?);
+                if err > 1e-8 * scale {
+                    return Err(format!("{label}: ‖R − R_direct‖ = {err}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn eigh_reconstructs_symmetric_input() {
+    assert_prop(
+        "eigh-VLVt-eq-S",
+        31,
+        8,
+        |rng| (1 + rng.below(8), rng.below(1000)),
+        |&(n, seed)| {
+            if n == 0 {
+                return Ok(());
+            }
+            let a: Matrix<f64> = Matrix::randn(n + 2, n, seed as u64);
+            let s = gram_t(&a); // SPD, symmetric by construction
+            let (lam, v) = eigh(&s, 60).map_err(|e| e.to_string())?;
+            // VᵀV = I
+            let vtv = matmul(&v.transpose(), &v).map_err(|e| e.to_string())?;
+            for i in 0..n {
+                for j in 0..n {
+                    let want = if i == j { 1.0 } else { 0.0 };
+                    if (vtv.get(i, j) - want).abs() > 1e-8 {
+                        return Err(format!("VᵀV[{i}][{j}] = {}", vtv.get(i, j)));
+                    }
+                }
+            }
+            // V·Λ·Vᵀ = S
+            let mut vl = v.clone();
+            for i in 0..n {
+                for j in 0..n {
+                    vl.set(i, j, v.get(i, j) * lam[j]);
+                }
+            }
+            let rec = matmul(&vl, &v.transpose()).map_err(|e| e.to_string())?;
+            let err = fro(&rec.sub(&s).map_err(|e| e.to_string())?);
+            if err > 1e-8 * (1.0 + fro(&s)) {
+                return Err(format!("‖VΛVᵀ − S‖ = {err}"));
+            }
+            // eigenvalues of a Gram matrix are non-negative (up to roundoff)
+            if lam.iter().any(|l| *l < -1e-9 * (1.0 + fro(&s))) {
+                return Err(format!("negative eigenvalue: {lam:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn triangular_solves_round_trip() {
+    assert_prop(
+        "triangular-round-trip",
+        41,
+        8,
+        |rng| (1 + rng.below(8), 1 + rng.below(5), rng.below(1000)),
+        |&(n, k, seed)| {
+            if n == 0 || k == 0 {
+                return Ok(());
+            }
+            // well-conditioned triangle: QR's R with the diagonal pushed
+            // away from zero
+            let a: Matrix<f64> = Matrix::randn(n + 2, n, seed as u64);
+            let mut u = qr_r_square(&a).map_err(|e| e.to_string())?;
+            for i in 0..n {
+                let d = u.get(i, i);
+                let sign = if d >= 0.0 { 1.0 } else { -1.0 };
+                u.set(i, i, sign * (d.abs() + 1.0));
+            }
+            let x: Matrix<f64> = Matrix::randn(n, k, seed as u64 + 7);
+            let b = matmul(&u, &x).map_err(|e| e.to_string())?;
+            let got = solve_upper(&u, &b).map_err(|e| e.to_string())?;
+            let err = fro(&got.sub(&x).map_err(|e| e.to_string())?);
+            if err > 1e-9 * (1.0 + fro(&x)) {
+                return Err(format!("upper round-trip err {err}"));
+            }
+            let l = u.transpose();
+            let bl = matmul(&l, &x).map_err(|e| e.to_string())?;
+            let got = solve_lower(&l, &bl).map_err(|e| e.to_string())?;
+            let err = fro(&got.sub(&x).map_err(|e| e.to_string())?);
+            if err > 1e-9 * (1.0 + fro(&x)) {
+                return Err(format!("lower round-trip err {err}"));
+            }
+            Ok(())
+        },
+    );
+}
