@@ -1,48 +1,105 @@
-//! Bench: end-to-end pipeline stages + the overlapped scheduler vs the
-//! sequential calibration (the §Perf L3 target).
+//! Bench: the source-agnostic execution engine on the host route —
+//! sequential vs parallel plans over worker counts — plus the
+//! artifact-backed end-to-end pipeline, overlapped scheduler, and
+//! tree-TSQR when a device is available.
+//!
+//! Dumps `BENCH_pipeline.json` (mean/std/min per target) so future PRs
+//! have a perf trajectory baseline.  `COALA_BENCH_FAST=1` shrinks the
+//! iteration budget for smoke runs.
 
 use coala::calib::accumulate::AccumKind;
 use coala::calib::dataset::Corpus;
-use coala::coala::compressor::{resolve, Compressor};
+use coala::calib::synthetic::SyntheticActivations;
+use coala::coala::compressor::{resolve, Compressor, Route};
 use coala::coordinator::scheduler::calibrate_overlapped;
-use coala::coordinator::{CompressionJob, Pipeline, TsqrTreeRunner};
+use coala::coordinator::{CompressionJob, EnginePlan, Pipeline, TsqrTreeRunner};
+use coala::model::synthetic::{synthetic_manifest, synthetic_weights};
 use coala::model::ModelWeights;
 use coala::runtime::Executor;
 use coala::tensor::Matrix;
-use coala::util::bench::{bench, BenchOpts};
+use coala::util::bench::{bench, BenchOpts, Stats};
+use coala::util::json::Json;
+
+fn record(stats: &Stats, workers: usize) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str(stats.name.clone())),
+        ("workers", Json::Num(workers as f64)),
+        ("iters", Json::Num(stats.iters as f64)),
+        ("mean_s", Json::Num(stats.mean_s)),
+        ("std_s", Json::Num(stats.std_s)),
+        ("min_s", Json::Num(stats.min_s)),
+    ])
+}
 
 fn main() {
-    if !coala::runtime::device_available("artifacts") {
-        println!("pipeline bench: needs artifacts/ and the pjrt feature");
-        return;
-    }
-    let ex = Executor::new("artifacts").unwrap();
-    let corpus = Corpus::load("artifacts").unwrap();
-    let spec = ex.manifest.config("tiny").unwrap().clone();
-    let w = ModelWeights::load("artifacts", &spec).unwrap();
     let opts = BenchOpts::heavy().from_env();
 
-    let pipe = Pipeline::new(&ex, spec.clone(), &w);
-    let mut job = CompressionJob::new("tiny", resolve("coala").unwrap().method(), 0.5);
-    job.calib_batches = 4;
-    bench("pipeline/coala e2e (4 batches)", &opts, || {
-        std::hint::black_box(pipe.run(&job, &corpus).unwrap());
-    });
-
-    let batches = corpus.batches("calib", spec.batch, spec.seq_len, 4).unwrap();
-    bench("scheduler/overlapped calibrate", &opts, || {
-        std::hint::black_box(
-            calibrate_overlapped("artifacts", "tiny", batches.clone(), 2, AccumKind::RFactor)
-                .unwrap(),
-        );
-    });
-
-    let chunks: Vec<Matrix<f32>> =
-        (0..8).map(|i| Matrix::randn(spec.chunk_cols(), spec.d_model, i as u64)).collect();
-    for workers in [1usize, 2, 4] {
-        let runner = TsqrTreeRunner::new("artifacts", workers);
-        bench(&format!("tsqr-tree/workers={workers}"), &opts, || {
-            std::hint::black_box(runner.run(chunks.clone()).unwrap());
+    // ---- host route: engine plans over worker counts (always runs) ------
+    let ex = Executor::from_manifest(synthetic_manifest()).unwrap();
+    let spec = ex.manifest.config("small").unwrap().clone();
+    let w = synthetic_weights(&spec, 1);
+    let src = SyntheticActivations::new(spec.clone(), 1);
+    let mut job = CompressionJob::new("small", resolve("coala").unwrap().method(), 0.5);
+    job.calib_batches = 6;
+    let mut host_records = Vec::new();
+    for workers in [1usize, 2, 4, 8] {
+        let pipe = Pipeline::new(&ex, spec.clone(), &w)
+            .with_route(Route::Host)
+            .with_plan(EnginePlan::with_workers(workers));
+        let label = if workers == 1 {
+            "engine/host sequential (workers=1)".to_string()
+        } else {
+            format!("engine/host workers={workers}")
+        };
+        let stats = bench(&label, &opts, || {
+            std::hint::black_box(pipe.run_with_source(&job, &src).unwrap());
         });
+        host_records.push(record(&stats, workers));
     }
+
+    // ---- artifact-backed targets (need artifacts/ + the pjrt feature) ----
+    let mut device_records = Vec::new();
+    if coala::runtime::device_available("artifacts") {
+        let ex = Executor::new("artifacts").unwrap();
+        let corpus = Corpus::load("artifacts").unwrap();
+        let spec = ex.manifest.config("tiny").unwrap().clone();
+        let w = ModelWeights::load("artifacts", &spec).unwrap();
+
+        let pipe = Pipeline::new(&ex, spec.clone(), &w);
+        let mut job = CompressionJob::new("tiny", resolve("coala").unwrap().method(), 0.5);
+        job.calib_batches = 4;
+        let stats = bench("pipeline/coala e2e (4 batches)", &opts, || {
+            std::hint::black_box(pipe.run(&job, &corpus).unwrap());
+        });
+        device_records.push(record(&stats, 1));
+
+        let batches = corpus.batches("calib", spec.batch, spec.seq_len, 4).unwrap();
+        // queue_cap = 2; the overlapped scheduler runs one worker per stage
+        let stats = bench("scheduler/overlapped calibrate", &opts, || {
+            std::hint::black_box(
+                calibrate_overlapped("artifacts", "tiny", batches.clone(), 2, AccumKind::RFactor)
+                    .unwrap(),
+            );
+        });
+        device_records.push(record(&stats, 1));
+
+        let chunks: Vec<Matrix<f32>> =
+            (0..8).map(|i| Matrix::randn(spec.chunk_cols(), spec.d_model, i as u64)).collect();
+        for workers in [1usize, 2, 4] {
+            let runner = TsqrTreeRunner::new("artifacts", workers);
+            let stats = bench(&format!("tsqr-tree/workers={workers}"), &opts, || {
+                std::hint::black_box(runner.run(chunks.clone()).unwrap());
+            });
+            device_records.push(record(&stats, workers));
+        }
+    } else {
+        println!("pipeline bench: artifacts/ + pjrt unavailable — device targets skipped");
+    }
+
+    let out = Json::obj(vec![
+        ("host_engine", Json::Arr(host_records)),
+        ("device", Json::Arr(device_records)),
+    ]);
+    std::fs::write("BENCH_pipeline.json", out.dump()).unwrap();
+    println!("[BENCH_pipeline.json written]");
 }

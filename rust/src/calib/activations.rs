@@ -13,9 +13,11 @@ use crate::tensor::Matrix;
 /// of one forward batch.  Two implementations exist: the device capture
 /// (`fwd_acts` artifacts, [`DeviceActivationSource`]) and the synthetic
 /// PRNG generator ([`crate::calib::synthetic::SyntheticActivations`]),
-/// which needs no artifacts at all.  The pipeline folds chunks from a
-/// source without knowing which one it is.
-pub trait ActivationSource {
+/// which needs no artifacts at all.  The execution engine
+/// (`coordinator::engine`) folds chunks from a source without knowing
+/// which one it is; `Sync` is a supertrait because the engine shares
+/// one source across its capture workers.
+pub trait ActivationSource: Sync {
     /// Chunks for calibration batch `b` — one per (layer, stream) of the
     /// model spec.  Must be deterministic in `b`.
     fn capture_batch(&self, b: usize) -> Result<Vec<CalibChunk>>;
@@ -124,6 +126,17 @@ impl<'a> DeviceActivationSource<'a> {
     ) -> Result<DeviceActivationSource<'a>> {
         let tokens = corpus.batches(split, spec.batch, spec.seq_len, batches)?;
         Ok(DeviceActivationSource { cap: ActivationCapture::new(ex, spec), weights, tokens })
+    }
+
+    /// Source over pre-built token batches (the overlapped scheduler's
+    /// entry point, where batches arrive already assembled).
+    pub fn from_batches(
+        ex: &'a Executor,
+        spec: &'a ModelSpec,
+        weights: &'a ModelWeights,
+        tokens: Vec<Value>,
+    ) -> DeviceActivationSource<'a> {
+        DeviceActivationSource { cap: ActivationCapture::new(ex, spec), weights, tokens }
     }
 }
 

@@ -1,0 +1,665 @@
+//! The source-agnostic parallel execution engine — the one
+//! calibrate → accumulate → factorize control flow in the crate.
+//!
+//! Every driver that used to hand-roll this staging (the sequential
+//! [`super::pipeline::Pipeline`], the overlapped
+//! [`super::scheduler::calibrate_overlapped`], the multi-device
+//! [`super::tsqr_tree::TsqrTreeRunner`]) is now a thin configuration of
+//! this module: an [`EnginePlan`] choosing how many workers each stage
+//! gets, plus an [`ActivationSource`] saying where chunks come from
+//! (device capture or the synthetic host generator).
+//!
+//! ```text
+//!   capture workers ──(b, chunks)──▶ bounded channel (backpressure)
+//!        │                               │
+//!        │ source.capture_batch(b)       ▼
+//!        │                    accumulate shards: per-(layer, stream,
+//!        │                    batch) leaf states via CalibAccumulator
+//!        ▼                               │
+//!   canonical pairwise merge tree over batch order (merge_state)
+//!        ▼
+//!   CalibStates ──▶ factorize workers fan the Compressor registry
+//!                   across projections ──▶ CompressedModel
+//! ```
+//!
+//! **Determinism.** Results are bitwise-independent of every worker
+//! count.  Each (layer, stream, batch) leaf folds exactly that batch's
+//! chunks for the key (in the source's chunk order), so leaves are
+//! identical no matter which worker computes them, and the
+//! partial states reduce through a *canonical* pairwise merge tree over
+//! ascending batch index — the tree shape depends only on the batch
+//! count, never on `capture_workers`/`accum_shards` (floating-point
+//! merges are not associative, so an opportunistic reduction order would
+//! leak the worker count into the bits).  Sibling pairs merge as soon as
+//! both subtrees are finished, whichever shard holds the second one, so
+//! the reduction overlaps with capture.  The factorize stage is
+//! embarrassingly parallel per projection and collects results in
+//! projection order.  This is the stable parallel-merge-of-partial-
+//! factors regime where the paper's inversion-free accumulation pays off
+//! over Gram-based schemes (cf. Phan et al., 2020).
+//!
+//! X is never materialized: peak memory is `queue_cap` batches of chunks
+//! in flight plus O(log batches) pending merge-tree nodes per (layer,
+//! stream) key.  A failure in either stage cancels the other promptly
+//! (capture workers stop pulling batches; shards drain the channel
+//! without folding), and both errors surface via [`Error::context`].
+
+use crate::calib::accumulate::{
+    make_accumulator, merge_states, AccumBackend, AccumKind, CalibAccumulator, CalibState,
+};
+use crate::calib::activations::{ActivationSource, CalibChunk};
+use crate::coala::compressor::{compressor_for, Compressor, Route};
+use crate::coala::factorize::Factors;
+use crate::coala::Method;
+use crate::error::{Error, Result};
+use crate::model::{CompressedModel, ModelWeights};
+use crate::runtime::executor::Executor;
+use crate::runtime::manifest::ModelSpec;
+use crate::tensor::lowp::Precision;
+use crate::util::threads::parallel_map;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
+
+/// Per-(layer, stream) finished accumulator states.
+pub type CalibStates = BTreeMap<(usize, String), CalibState>;
+
+/// Per-stage busy time (drives Table 1 + the §Perf profile).  With
+/// overlapped stages these are *worker-seconds per stage* (summed across
+/// workers), not wall-clock; `total_s` is set to the wall-clock of the
+/// whole run by the pipeline entry points.
+#[derive(Debug, Clone, Default)]
+pub struct StageTimings {
+    pub calibrate_s: f64,
+    pub accumulate_s: f64,
+    pub factorize_s: f64,
+    pub total_s: f64,
+}
+
+/// How many workers each engine stage gets.  Every plan computes
+/// bitwise-identical results; the plan only chooses the parallelism.
+#[derive(Debug, Clone, Copy)]
+pub struct EnginePlan {
+    /// Threads calling `ActivationSource::capture_batch` concurrently.
+    pub capture_workers: usize,
+    /// Threads folding chunks into leaf states (sharded accumulate).
+    pub accum_shards: usize,
+    /// Threads fanning per-projection factorizations.
+    pub factorize_workers: usize,
+    /// Bounded-channel capacity in batches (the backpressure knob): if
+    /// accumulation falls behind, capture blocks instead of buffering
+    /// unbounded chunks.
+    pub queue_cap: usize,
+}
+
+impl Default for EnginePlan {
+    fn default() -> Self {
+        EnginePlan::sequential()
+    }
+}
+
+impl EnginePlan {
+    /// One worker per stage — the sequential configuration (capture and
+    /// accumulate still overlap through the channel).
+    pub fn sequential() -> EnginePlan {
+        EnginePlan { capture_workers: 1, accum_shards: 1, factorize_workers: 1, queue_cap: 2 }
+    }
+
+    /// `workers` threads for every stage (the `--workers` CLI knob).
+    pub fn with_workers(workers: usize) -> EnginePlan {
+        let w = workers.max(1);
+        EnginePlan { capture_workers: w, accum_shards: w, factorize_workers: w, queue_cap: 2 }
+    }
+
+    fn normalized(&self) -> EnginePlan {
+        EnginePlan {
+            capture_workers: self.capture_workers.max(1),
+            accum_shards: self.accum_shards.max(1),
+            factorize_workers: self.factorize_workers.max(1),
+            queue_cap: self.queue_cap.max(1),
+        }
+    }
+}
+
+/// Capture + sharded accumulate + canonical merge-tree reduction: drive
+/// `batches` batches of `source` into per-(layer, stream) states.
+///
+/// Capture workers and accumulate shards run concurrently, connected by
+/// a bounded channel.  Errors from *both* stages are surfaced: when both
+/// fail, the capture error carries the accumulate error in its
+/// [`Error::context`] chain instead of silently dropping one of them.
+pub fn calibrate(
+    source: &dyn ActivationSource,
+    kind: AccumKind,
+    batches: usize,
+    backend: AccumBackend<'_>,
+    precision: Precision,
+    plan: &EnginePlan,
+    timings: &mut StageTimings,
+) -> Result<CalibStates> {
+    let plan = plan.normalized();
+    let next_batch = AtomicUsize::new(0);
+    let cancelled = AtomicBool::new(false);
+    let slots: Mutex<SlotMap> = Mutex::new(HashMap::new());
+    let (tx, rx) = mpsc::sync_channel::<(usize, Vec<CalibChunk>)>(plan.queue_cap);
+    // each shard owns an Arc share of the receiver, so if every shard
+    // dies (even by panic) the channel closes and blocked senders exit
+    let rx = Arc::new(Mutex::new(rx));
+
+    let mut capture_secs = 0.0;
+    let mut accum_secs = 0.0;
+    let mut capture_err: Option<Error> = None;
+    let mut accum_err: Option<Error> = None;
+
+    std::thread::scope(|s| {
+        let mut cap_handles = Vec::new();
+        for _ in 0..plan.capture_workers {
+            let tx = tx.clone();
+            let next = &next_batch;
+            let cancelled = &cancelled;
+            cap_handles.push(s.spawn(move || -> (f64, Result<()>) {
+                let mut busy = 0.0;
+                loop {
+                    if cancelled.load(Ordering::Relaxed) {
+                        // some stage failed; its error surfaces below
+                        return (busy, Ok(()));
+                    }
+                    let b = next.fetch_add(1, Ordering::Relaxed);
+                    if b >= batches {
+                        return (busy, Ok(()));
+                    }
+                    let t0 = Instant::now();
+                    let chunks = match source.capture_batch(b) {
+                        Ok(c) => c,
+                        Err(e) => {
+                            cancelled.store(true, Ordering::Relaxed);
+                            return (busy + t0.elapsed().as_secs_f64(), Err(e));
+                        }
+                    };
+                    busy += t0.elapsed().as_secs_f64();
+                    if tx.send((b, chunks)).is_err() {
+                        // every accumulate shard died; their error
+                        // surfaces below — stop producing
+                        return (busy, Ok(()));
+                    }
+                }
+            }));
+        }
+        drop(tx); // shards see EOF once every capture worker finishes
+
+        let mut acc_handles = Vec::new();
+        for _ in 0..plan.accum_shards {
+            let rx = rx.clone();
+            let slots = &slots;
+            let cancelled = &cancelled;
+            acc_handles.push(s.spawn(move || -> (f64, Result<()>) {
+                let mut busy = 0.0;
+                let mut failed: Option<Error> = None;
+                loop {
+                    let payload = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    let Ok((b, chunks)) = payload else {
+                        // channel closed: every batch was delivered
+                        return (busy, failed.map_or(Ok(()), Err));
+                    };
+                    if failed.is_some() || cancelled.load(Ordering::Relaxed) {
+                        continue; // drain so blocked capture workers exit
+                    }
+                    let t0 = Instant::now();
+                    let res = (|| -> Result<()> {
+                        // fold every chunk of the batch into its key's
+                        // leaf (a source may emit several chunks per
+                        // (layer, stream); chunk order within a batch
+                        // is the source's, so leaves stay worker-count
+                        // independent), then push the finished leaves
+                        // into the merge tree
+                        let mut leaf: BTreeMap<(usize, String), Box<dyn CalibAccumulator + '_>> =
+                            BTreeMap::new();
+                        for c in chunks {
+                            let acc = leaf
+                                .entry((c.layer, c.stream.clone()))
+                                .or_insert_with(|| {
+                                    make_accumulator(kind, c.xt.cols, backend, precision)
+                                });
+                            acc.fold_chunk(&c.xt)?;
+                        }
+                        for (key, acc) in leaf {
+                            insert_state(slots, batches, &key, acc.finish(), backend, precision, b)?;
+                        }
+                        Ok(())
+                    })();
+                    if let Err(e) = res {
+                        cancelled.store(true, Ordering::Relaxed);
+                        failed = Some(e);
+                    }
+                    busy += t0.elapsed().as_secs_f64();
+                }
+            }));
+        }
+        drop(rx); // only the shards keep the receiver alive now
+
+        for h in cap_handles {
+            match h.join() {
+                Ok((secs, res)) => {
+                    capture_secs += secs;
+                    if let Err(e) = res {
+                        capture_err.get_or_insert(e);
+                    }
+                }
+                Err(_) => {
+                    capture_err.get_or_insert(Error::msg("capture worker panicked"));
+                }
+            }
+        }
+        for h in acc_handles {
+            match h.join() {
+                Ok((secs, res)) => {
+                    accum_secs += secs;
+                    if let Err(e) = res {
+                        accum_err.get_or_insert(e);
+                    }
+                }
+                Err(_) => {
+                    accum_err.get_or_insert(Error::msg("accumulate worker panicked"));
+                }
+            }
+        }
+    });
+
+    match (capture_err, accum_err) {
+        (Some(c), Some(a)) => {
+            // both stages failed: chain so neither error is lost
+            return Err(c.context(format!(
+                "capture stage failed (accumulate stage also failed: {a})"
+            )));
+        }
+        (Some(c), None) => return Err(c.context("capture stage failed")),
+        (None, Some(a)) => return Err(a.context("accumulate stage failed")),
+        (None, None) => {}
+    }
+
+    // ---- collect the merge-tree roots -----------------------------------
+    // On the normal path every key has exactly one finished root.  A key
+    // the source omitted from some batches leaves orphan subtrees; fold
+    // them in canonical (level, index) order so even that is worker-
+    // count independent.
+    let t_red = Instant::now();
+    let mut per_key: BTreeMap<(usize, String), Vec<((u32, usize), CalibState)>> = BTreeMap::new();
+    for ((key, level, index), state) in slots.into_inner().unwrap() {
+        per_key.entry(key).or_default().push(((level, index), state));
+    }
+    let mut out = CalibStates::new();
+    for (key, mut nodes) in per_key {
+        nodes.sort_by_key(|(pos, _)| *pos);
+        let state = if nodes.len() == 1 {
+            nodes.pop().unwrap().1
+        } else {
+            reduce_tree(nodes.into_iter().map(|(_, st)| st).collect(), backend, precision)?
+        };
+        out.insert(key, state);
+    }
+    timings.calibrate_s += capture_secs;
+    timings.accumulate_s += accum_secs + t_red.elapsed().as_secs_f64();
+    Ok(out)
+}
+
+/// Pending merge-tree nodes: (key, level, index) → finished subtree
+/// state.  Leaf `b` sits at (0, b); node (L, i) is the merge of
+/// (L−1, 2i) and (L−1, 2i+1), with a trailing odd node promoting
+/// unchanged — the same shape as [`reduce_tree`].
+type SlotMap = HashMap<((usize, String), u32, usize), CalibState>;
+
+/// Node count at a merge-tree level: ceil(batches / 2^level).
+fn level_size(batches: usize, level: u32) -> usize {
+    let mut n = batches;
+    for _ in 0..level {
+        if n <= 1 {
+            break;
+        }
+        n = n.div_ceil(2);
+    }
+    n
+}
+
+/// Insert a finished subtree node and greedily merge completed sibling
+/// pairs up the canonical tree.  Pairs always merge left-to-right, so
+/// the result is bitwise-independent of arrival order and worker count,
+/// and at most O(log batches) nodes per key are pending at any moment —
+/// the out-of-core property the streaming design exists for.
+fn insert_state(
+    slots: &Mutex<SlotMap>,
+    batches: usize,
+    key: &(usize, String),
+    state: CalibState,
+    backend: AccumBackend<'_>,
+    precision: Precision,
+    batch: usize,
+) -> Result<()> {
+    let mut level = 0u32;
+    let mut index = batch;
+    let mut state = state;
+    loop {
+        let size = level_size(batches, level);
+        if size <= 1 {
+            // the root: the only node of its level
+            slots.lock().unwrap().insert((key.clone(), level, 0), state);
+            return Ok(());
+        }
+        if index == size - 1 && size % 2 == 1 {
+            // odd tail: no sibling at this level — promote unchanged
+            level += 1;
+            index /= 2;
+            continue;
+        }
+        let sibling = (key.clone(), level, index ^ 1);
+        let mut guard = slots.lock().unwrap();
+        match guard.remove(&sibling) {
+            Some(other) => {
+                drop(guard); // merge outside the lock
+                let (a, b) = if index % 2 == 0 { (state, other) } else { (other, state) };
+                state = merge_states(a, b, backend, precision)?;
+                level += 1;
+                index /= 2;
+            }
+            None => {
+                guard.insert((key.clone(), level, index), state);
+                return Ok(());
+            }
+        }
+    }
+}
+
+/// Pairwise merge of partial states in a fixed left-to-right tree: the
+/// shape depends only on the partial count, so the result is independent
+/// of how many workers produced the partials.  [`insert_state`] performs
+/// the same reduction incrementally; this eager form serves the orphan
+/// fallback and the single-vector case.
+fn reduce_tree(
+    mut level: Vec<CalibState>,
+    backend: AccumBackend<'_>,
+    precision: Precision,
+) -> Result<CalibState> {
+    if level.is_empty() {
+        return Err(Error::Config("reduce over zero partial states".into()));
+    }
+    while level.len() > 1 {
+        let mut next = Vec::with_capacity(level.len().div_ceil(2));
+        let mut it = level.into_iter();
+        while let Some(a) = it.next() {
+            match it.next() {
+                Some(b) => next.push(merge_states(a, b, backend, precision)?),
+                None => next.push(a),
+            }
+        }
+        level = next;
+    }
+    Ok(level.pop().unwrap())
+}
+
+/// Parallel factorize stage: fan the per-projection factorizations of a
+/// method across `workers` threads through the `Compressor` registry.
+/// Results assemble in projection order, so the outcome is independent
+/// of the worker count.
+#[allow(clippy::too_many_arguments)]
+pub fn factorize(
+    config: &str,
+    spec: &ModelSpec,
+    weights: &ModelWeights,
+    method: &Method,
+    budget: &super::budget::RankBudget,
+    accums: &CalibStates,
+    route: Route,
+    ex: &Executor,
+    host_sweeps: usize,
+    workers: usize,
+) -> Result<(CompressedModel, BTreeMap<String, f64>)> {
+    type ProjResult = Result<(String, Option<f64>, Factors<f32>)>;
+    let projs = &spec.compressible;
+    let results = parallel_map(projs.len(), workers.max(1), |i| -> ProjResult {
+        let proj = &projs[i];
+        let w = weights.matrix(proj)?;
+        let layer: usize = proj[1..]
+            .split('.')
+            .next()
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| Error::Config(format!("bad projection name `{proj}`")))?;
+        let stream = spec.stream_of(proj)?.to_string();
+        let calib = accums
+            .get(&(layer, stream))
+            .ok_or_else(|| Error::Config(format!("no accumulator for {proj}")))?;
+        let rank = budget.rank(proj)?;
+        let comp = compressor_for(method);
+        let fz = comp.factorize(route, ex, &w, calib, rank, host_sweeps)?;
+        Ok((proj.clone(), fz.mu, fz.factors.truncate(rank)))
+    });
+
+    let mut model = CompressedModel::new(config);
+    let mut mus = BTreeMap::new();
+    for res in results {
+        let (proj, mu, factors) = res?;
+        if let Some(mu) = mu {
+            mus.insert(proj.clone(), mu);
+        }
+        model.insert(&proj, factors);
+    }
+    Ok((model, mus))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calib::synthetic::SyntheticActivations;
+    use crate::model::synthetic::synthetic_manifest;
+    use crate::tensor::Matrix;
+
+    struct FailingSource {
+        fail_at: usize,
+    }
+
+    impl ActivationSource for FailingSource {
+        fn capture_batch(&self, b: usize) -> Result<Vec<CalibChunk>> {
+            if b >= self.fail_at {
+                return Err(Error::msg(format!("capture exploded at batch {b}")));
+            }
+            Ok(vec![CalibChunk {
+                layer: 0,
+                stream: "s".into(),
+                xt: Matrix::randn(6, 4, b as u64),
+            }])
+        }
+    }
+
+    #[test]
+    fn calibrate_covers_every_stream_and_is_plan_invariant() {
+        let spec = synthetic_manifest().config("tiny").unwrap().clone();
+        let src = SyntheticActivations::new(spec.clone(), 3);
+        let mut reference: Option<CalibStates> = None;
+        for plan in [
+            EnginePlan::sequential(),
+            EnginePlan::with_workers(3),
+            EnginePlan { capture_workers: 2, accum_shards: 4, factorize_workers: 1, queue_cap: 1 },
+        ] {
+            let mut t = StageTimings::default();
+            let states = calibrate(
+                &src,
+                AccumKind::RFactor,
+                2,
+                AccumBackend::Host,
+                Precision::F32,
+                &plan,
+                &mut t,
+            )
+            .unwrap();
+            assert_eq!(states.len(), spec.n_layers * spec.act_streams.len());
+            match &reference {
+                None => reference = Some(states),
+                Some(want) => {
+                    for (k, s) in want {
+                        let (a, b) = (s.r().unwrap(), states[k].r().unwrap());
+                        assert_eq!(a.data, b.data, "{k:?} differs across plans");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn capture_error_surfaces() {
+        let src = FailingSource { fail_at: 1 };
+        let err = calibrate(
+            &src,
+            AccumKind::RFactor,
+            3,
+            AccumBackend::Host,
+            Precision::F32,
+            &EnginePlan::with_workers(2),
+            &mut StageTimings::default(),
+        )
+        .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("capture stage failed"), "{msg}");
+        assert!(msg.contains("capture exploded"), "{msg}");
+    }
+
+    #[test]
+    fn concurrent_stage_failures_surface_with_stage_context() {
+        // capture dies on batch 1 while the accumulate stage dies
+        // folding batch 0 (the synthetic manifest has no artifacts, so
+        // the device backend's tsqr_step fails).  Scheduling decides
+        // whether cancellation prevents the second failure; in every
+        // interleaving the surfaced error names its failed stage (and
+        // when both fail, the context chain carries both — the old
+        // scheduler silently dropped one).
+        let ex = crate::runtime::executor::Executor::from_manifest(synthetic_manifest()).unwrap();
+        let src = FailingSource { fail_at: 1 };
+        let err = calibrate(
+            &src,
+            AccumKind::RFactor,
+            2,
+            AccumBackend::Device(&ex),
+            Precision::F32,
+            &EnginePlan::sequential(),
+            &mut StageTimings::default(),
+        )
+        .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("stage failed"), "{msg}");
+    }
+
+    #[test]
+    fn stage_failure_cancels_remaining_batches_promptly() {
+        // a merge failure at batch 1 (width change, scales route) must
+        // stop the run long before all 1000 batches are captured
+        struct CountingSource {
+            calls: std::sync::atomic::AtomicUsize,
+        }
+        impl ActivationSource for CountingSource {
+            fn capture_batch(&self, b: usize) -> Result<Vec<CalibChunk>> {
+                self.calls.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                let cols = if b == 0 { 4 } else { 3 };
+                Ok(vec![CalibChunk {
+                    layer: 0,
+                    stream: "s".into(),
+                    xt: Matrix::randn(5, cols, b as u64),
+                }])
+            }
+        }
+        let src = CountingSource { calls: std::sync::atomic::AtomicUsize::new(0) };
+        let err = calibrate(
+            &src,
+            AccumKind::Scales,
+            1000,
+            AccumBackend::Host,
+            Precision::F32,
+            &EnginePlan::sequential(),
+            &mut StageTimings::default(),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("accumulate stage failed"), "{err}");
+        let captured = src.calls.load(std::sync::atomic::Ordering::Relaxed);
+        assert!(captured < 900, "cancellation did not stop capture: {captured} batches");
+    }
+
+    #[test]
+    fn merge_width_mismatch_is_reported() {
+        struct TwoWidths;
+        impl ActivationSource for TwoWidths {
+            fn capture_batch(&self, b: usize) -> Result<Vec<CalibChunk>> {
+                let cols = if b == 0 { 4 } else { 3 };
+                Ok(vec![CalibChunk {
+                    layer: 0,
+                    stream: "s".into(),
+                    xt: Matrix::randn(5, cols, b as u64),
+                }])
+            }
+        }
+        let err = calibrate(
+            &TwoWidths,
+            AccumKind::Scales,
+            2,
+            AccumBackend::Host,
+            Precision::F32,
+            &EnginePlan::sequential(),
+            &mut StageTimings::default(),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("width mismatch"), "{err}");
+    }
+
+    #[test]
+    fn reduce_tree_rejects_empty() {
+        assert!(reduce_tree(Vec::new(), AccumBackend::Host, Precision::F32).is_err());
+    }
+
+    #[test]
+    fn multiple_chunks_per_stream_in_one_batch_all_fold() {
+        // a source may split a batch into several chunks for the same
+        // (layer, stream); every chunk must land in the leaf (an early
+        // engine draft overwrote the first with the second)
+        struct SplitSource;
+        impl ActivationSource for SplitSource {
+            fn capture_batch(&self, b: usize) -> Result<Vec<CalibChunk>> {
+                Ok(vec![
+                    CalibChunk { layer: 0, stream: "s".into(), xt: Matrix::randn(5, 4, b as u64) },
+                    CalibChunk {
+                        layer: 0,
+                        stream: "s".into(),
+                        xt: Matrix::randn(7, 4, 100 + b as u64),
+                    },
+                ])
+            }
+        }
+        let mut reference: Option<CalibStates> = None;
+        for plan in [EnginePlan::sequential(), EnginePlan::with_workers(4)] {
+            let states = calibrate(
+                &SplitSource,
+                AccumKind::Scales,
+                3,
+                AccumBackend::Host,
+                Precision::F32,
+                &plan,
+                &mut StageTimings::default(),
+            )
+            .unwrap();
+            let CalibState::Scales { rows, .. } = &states[&(0, "s".to_string())] else {
+                panic!("not scales");
+            };
+            // 3 batches × (5 + 7) rows: nothing silently dropped
+            assert_eq!(*rows, 3 * 12);
+            match &reference {
+                None => reference = Some(states),
+                Some(want) => {
+                    let (CalibState::Scales { sum_abs: a, .. }, CalibState::Scales { sum_abs: b, .. }) =
+                        (&want[&(0, "s".to_string())], &states[&(0, "s".to_string())])
+                    else {
+                        panic!("not scales");
+                    };
+                    assert_eq!(a, b, "split-chunk leaves differ across plans");
+                }
+            }
+        }
+    }
+}

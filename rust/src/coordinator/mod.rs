@@ -1,32 +1,41 @@
 //! The L3 coordinator (S7/S8) — the systems half of the reproduction.
 //!
-//! Compressing a model is a streaming pipeline:
+//! Compressing a model is a staged job graph, executed by the one
+//! source-agnostic engine ([`engine`]):
 //!
 //! ```text
-//!   corpus ─▶ capture (fwd_acts) ─▶ accumulate (CalibAccumulator:
-//!                 │                  TSQR R / Gram / scales)
-//!                 │ batch-sized chunks, bounded channel (backpressure)
-//!                 ▼
-//!   per-projection CalibState ─▶ rank budget ─▶ factorize (Compressor:
-//!                 ▼                              │ device or host route)
-//!   CompressedModel ◀────────────────────────────┘
+//!   ActivationSource ─▶ capture workers ─▶ bounded channel (backpressure)
+//!   (fwd_acts device       │                    │
+//!    capture or the        ▼                    ▼
+//!    synthetic host   per-(layer, stream, batch) leaf states
+//!    generator)            │   (CalibAccumulator: TSQR R / Gram / scales)
+//!                          ▼
+//!        canonical pairwise merge tree (merge_state, batch order)
+//!                          ▼
+//!   per-projection CalibState ─▶ rank budget ─▶ factorize workers
+//!                          ▼              (Compressor registry, device
+//!   CompressedModel ◀──────┘               or host route)
 //! ```
 //!
 //! X is never materialized: each forward batch contributes a (B·T × n)
 //! chunk that is folded into the accumulator a method declares
 //! (`calib::accumulate`) and dropped — the paper's §4.2 out-of-memory
-//! scenario.  Method dispatch is indirect through the `Compressor`
-//! registry (`coala::compressor`); the coordinator never matches on
-//! method variants, so new methods and new accumulation strategies plug
-//! in without touching this layer.  Multi-device tree TSQR is simulated
-//! by a worker pool where every worker owns its *own* PJRT client
-//! ([`tsqr_tree`]).
+//! scenario.  Results are bitwise-independent of every worker count
+//! (the merge tree is fixed by the batch order), so parallelism is a
+//! pure deployment knob.  Method dispatch is indirect through the
+//! `Compressor` registry (`coala::compressor`); the coordinator never
+//! matches on method variants.  The sequential pipeline ([`pipeline`]),
+//! the overlapped scheduler ([`scheduler`]), and the multi-device tree
+//! TSQR ([`tsqr_tree`]) are thin [`engine::EnginePlan`] configurations
+//! of the same engine.
 
 pub mod budget;
+pub mod engine;
 pub mod pipeline;
 pub mod scheduler;
 pub mod tsqr_tree;
 
 pub use budget::RankBudget;
-pub use pipeline::{CalibStates, CompressionJob, CompressionOutcome, Pipeline};
+pub use engine::{CalibStates, EnginePlan, StageTimings};
+pub use pipeline::{CompressionJob, CompressionOutcome, Pipeline};
 pub use tsqr_tree::TsqrTreeRunner;

@@ -1,24 +1,37 @@
 //! The per-model compression pipeline — streaming calibration in, a
 //! `CompressedModel` out.
 //!
+//! The pipeline owns no control flow of its own: both stages are thin
+//! configurations of the source-agnostic execution engine
+//! ([`super::engine`]).  `calibrate_from` runs the engine's capture ∥
+//! sharded-accumulate graph over any [`ActivationSource`];
+//! `run_with_accums` runs the engine's parallel factorize stage through
+//! the [`Compressor`] registry.  An [`EnginePlan`] chooses the worker
+//! counts (the default is the sequential plan); every plan produces
+//! bitwise-identical results.
+//!
 //! Method dispatch is fully indirect: the job's [`Method`] descriptor
 //! resolves to a [`Compressor`] through `coala::compressor`, which names
 //! the accumulator it consumes (`calib::accumulate`) and factorizes on
 //! either the PJRT device route or the pure-Rust host route.  The
 //! pipeline itself never matches on method variants.
 
-use crate::calib::accumulate::{make_accumulator, AccumBackend, CalibAccumulator, CalibState};
+use crate::calib::accumulate::AccumBackend;
 use crate::calib::activations::{ActivationSource, DeviceActivationSource};
 use crate::calib::dataset::Corpus;
 use crate::coala::compressor::{compressor_for, Compressor, Route, HOST_SWEEPS};
 use crate::coala::Method;
-use crate::error::{Error, Result};
-use crate::model::{CompressedModel, ModelWeights};
+use crate::error::Result;
+use crate::model::ModelWeights;
 use crate::runtime::executor::Executor;
 use crate::runtime::manifest::ModelSpec;
 use crate::tensor::lowp::Precision;
 use std::collections::BTreeMap;
 use std::time::Instant;
+
+use super::engine::{self, EnginePlan};
+
+pub use super::engine::{CalibStates, StageTimings};
 
 /// What to compress and how.
 #[derive(Debug, Clone)]
@@ -50,27 +63,15 @@ impl CompressionJob {
     }
 }
 
-/// Per-stage wall-clock (drives Table 1 + the §Perf profile).
-#[derive(Debug, Clone, Default)]
-pub struct StageTimings {
-    pub calibrate_s: f64,
-    pub accumulate_s: f64,
-    pub factorize_s: f64,
-    pub total_s: f64,
-}
-
 /// Result of one compression run.
 #[derive(Debug)]
 pub struct CompressionOutcome {
-    pub model: CompressedModel,
+    pub model: crate::model::CompressedModel,
     pub budget: super::budget::RankBudget,
     pub timings: StageTimings,
     /// per-projection chosen μ (adaptive rule diagnostics)
     pub mus: BTreeMap<String, f64>,
 }
-
-/// Per-(layer, stream) finished accumulator states.
-pub type CalibStates = BTreeMap<(usize, String), CalibState>;
 
 /// The pipeline: owns nothing but borrows the executor (compile cache is
 /// shared across jobs — e.g. the whole Fig. 5 λ sweep reuses artifacts).
@@ -82,16 +83,31 @@ pub struct Pipeline<'a> {
     pub route: Route,
     /// Jacobi sweeps for the host route's SVDs.
     pub host_sweeps: usize,
+    /// Worker counts per engine stage (sequential by default).
+    pub plan: EnginePlan,
 }
 
 impl<'a> Pipeline<'a> {
     pub fn new(ex: &'a Executor, spec: ModelSpec, weights: &'a ModelWeights) -> Pipeline<'a> {
-        Pipeline { ex, spec, weights, route: Route::Device, host_sweeps: HOST_SWEEPS }
+        Pipeline {
+            ex,
+            spec,
+            weights,
+            route: Route::Device,
+            host_sweeps: HOST_SWEEPS,
+            plan: EnginePlan::default(),
+        }
     }
 
     /// Same pipeline, factorizing (and accumulating) on the host route.
     pub fn with_route(mut self, route: Route) -> Pipeline<'a> {
         self.route = route;
+        self
+    }
+
+    /// Same pipeline, with an explicit engine plan (worker counts).
+    pub fn with_plan(mut self, plan: EnginePlan) -> Pipeline<'a> {
+        self.plan = plan;
         self
     }
 
@@ -122,9 +138,9 @@ impl<'a> Pipeline<'a> {
     }
 
     /// Streaming calibration from *any* [`ActivationSource`] — the
-    /// device capture or the synthetic PRNG generator: fold every batch
-    /// into per-stream accumulators.  X is never materialized (peak
-    /// memory = one chunk + accumulators).
+    /// device capture or the synthetic PRNG generator — through the
+    /// engine's capture ∥ accumulate graph.  X is never materialized
+    /// (peak memory = the in-flight queue + partial accumulators).
     pub fn calibrate_from(
         &self,
         job: &CompressionJob,
@@ -132,25 +148,15 @@ impl<'a> Pipeline<'a> {
         timings: &mut StageTimings,
     ) -> Result<CalibStates> {
         let comp = compressor_for(&job.method);
-        let kind = comp.accum_kind();
-        let backend = self.accum_backend();
-        let mut accums: BTreeMap<(usize, String), Box<dyn CalibAccumulator + 'a>> =
-            BTreeMap::new();
-        for b in 0..job.calib_batches {
-            let t0 = Instant::now();
-            let chunks = source.capture_batch(b)?;
-            timings.calibrate_s += t0.elapsed().as_secs_f64();
-            let t1 = Instant::now();
-            for c in chunks {
-                let key = (c.layer, c.stream.clone());
-                let entry = accums.entry(key).or_insert_with(|| {
-                    make_accumulator(kind, c.xt.cols, backend, job.accum_precision)
-                });
-                entry.fold_chunk(&c.xt)?;
-            }
-            timings.accumulate_s += t1.elapsed().as_secs_f64();
-        }
-        Ok(accums.into_iter().map(|(k, a)| (k, a.finish())).collect())
+        engine::calibrate(
+            source,
+            comp.accum_kind(),
+            job.calib_batches,
+            self.accum_backend(),
+            job.accum_precision,
+            &self.plan,
+            timings,
+        )
     }
 
     /// Run the full job (device capture route).
@@ -180,6 +186,14 @@ impl<'a> Pipeline<'a> {
 
     /// Factorize + assemble given pre-computed accumulators — lets a μ/λ
     /// sweep (Figs. 4/5) reuse one calibration pass across many jobs.
+    /// The per-projection factorizations fan across the plan's
+    /// `factorize_workers`.
+    ///
+    /// `total_s` here is the *sum of stage busy-times* (the
+    /// serial-equivalent cost; calibrate/accumulate are worker-seconds
+    /// when stages overlapped).  [`Pipeline::run`] and
+    /// [`Pipeline::run_with_source`] overwrite it with the actual
+    /// wall-clock of the whole run.
     pub fn run_with_accums(
         &self,
         job: &CompressionJob,
@@ -187,25 +201,19 @@ impl<'a> Pipeline<'a> {
         mut timings: StageTimings,
     ) -> Result<CompressionOutcome> {
         let budget = super::budget::RankBudget::allocate(&self.spec, job.ratio, job.rank_policy)?;
-        let comp = compressor_for(&job.method);
-
-        let mut model = CompressedModel::new(&job.config);
-        let mut mus = BTreeMap::new();
         let t2 = Instant::now();
-        for proj in self.spec.compressible.clone() {
-            let w = self.weights.matrix(&proj)?;
-            let layer: usize = proj[1..].split('.').next().unwrap().parse().unwrap();
-            let stream = self.spec.stream_of(&proj)?.to_string();
-            let calib = accums
-                .get(&(layer, stream))
-                .ok_or_else(|| Error::Config(format!("no accumulator for {proj}")))?;
-            let rank = budget.rank(&proj)?;
-            let fz = comp.factorize(self.route, self.ex, &w, calib, rank, self.host_sweeps)?;
-            if let Some(mu) = fz.mu {
-                mus.insert(proj.clone(), mu);
-            }
-            model.insert(&proj, fz.factors.truncate(rank));
-        }
+        let (model, mus) = engine::factorize(
+            &job.config,
+            &self.spec,
+            self.weights,
+            &job.method,
+            &budget,
+            accums,
+            self.route,
+            self.ex,
+            self.host_sweeps,
+            self.plan.factorize_workers,
+        )?;
         timings.factorize_s = t2.elapsed().as_secs_f64();
         timings.total_s = timings.calibrate_s + timings.accumulate_s + timings.factorize_s;
         Ok(CompressionOutcome { model, budget, timings, mus })
@@ -300,6 +308,35 @@ mod tests {
         assert_eq!(out.model.factors.len(), spec.compressible.len());
         let achieved = out.model.achieved_ratio(&w, &spec);
         assert!((achieved - 0.4).abs() < 0.15, "achieved {achieved}");
+    }
+
+    #[test]
+    fn parallel_plan_matches_sequential_bitwise() {
+        // the host route through a parallel plan is byte-identical to
+        // the sequential plan — the engine's core guarantee
+        use crate::calib::synthetic::SyntheticActivations;
+        use crate::model::synthetic::{synthetic_manifest, synthetic_weights};
+        let ex = Executor::from_manifest(synthetic_manifest()).unwrap();
+        let spec = ex.manifest.config("tiny").unwrap().clone();
+        let w = synthetic_weights(&spec, 2);
+        let src = SyntheticActivations::new(spec.clone(), 2);
+        let mut job = CompressionJob::new("tiny", Method::Coala(MuRule::None), 0.4);
+        job.calib_batches = 3;
+        let seq = Pipeline::new(&ex, spec.clone(), &w)
+            .with_route(Route::Host)
+            .run_with_source(&job, &src)
+            .unwrap();
+        let par = Pipeline::new(&ex, spec.clone(), &w)
+            .with_route(Route::Host)
+            .with_plan(EnginePlan::with_workers(4))
+            .run_with_source(&job, &src)
+            .unwrap();
+        assert_eq!(seq.model.factors.len(), par.model.factors.len());
+        for (proj, f_seq) in &seq.model.factors {
+            let f_par = &par.model.factors[proj];
+            assert_eq!(f_seq.a.data, f_par.a.data, "{proj}: A factor differs");
+            assert_eq!(f_seq.b.data, f_par.b.data, "{proj}: B factor differs");
+        }
     }
 
     #[test]

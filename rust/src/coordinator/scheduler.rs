@@ -1,32 +1,42 @@
-//! Two-stage streaming scheduler: capture ∥ accumulate with backpressure.
+//! Overlapped streaming calibration: capture ∥ accumulate with
+//! backpressure, as a thin configuration of the execution engine.
 //!
-//! The sequential pipeline alternates "run fwd_acts" and "fold chunks
-//! into the accumulator"; both are device-bound, so on a multi-device box
-//! they can overlap.  This scheduler runs capture on one simulated device
-//! and accumulation on another, connected by a **bounded** channel — if
-//! the accumulator falls behind, the capture stage blocks (backpressure)
-//! instead of buffering unbounded activation chunks (which is the whole
-//! point of the streaming design: X must never materialize).
+//! The engine always runs capture workers and accumulate shards as
+//! separate threads connected by a **bounded** channel — if accumulation
+//! falls behind, capture blocks (backpressure) instead of buffering
+//! unbounded activation chunks (which is the whole point of the
+//! streaming design: X must never materialize).  This module provides
+//! the two historical entry points on top:
 //!
-//! Accumulation goes through the [`CalibAccumulator`] interface, so the
-//! overlapped path serves any accumulator kind (R / Gram / scales), not
-//! just the COALA R route.
+//! * [`calibrate_overlapped`] — the artifact route: `fwd_acts` capture
+//!   on one simulated device, accumulation on another (each with its own
+//!   executor), exactly the original two-device overlap;
+//! * [`calibrate_overlapped_source`] — the source-agnostic route: any
+//!   [`ActivationSource`] (synthetic host generator included, so the
+//!   backpressure path runs with zero artifacts) with a chosen worker
+//!   count.  Results are bitwise-independent of the worker count.
+//!
+//! Accumulation goes through the [`crate::calib::accumulate::CalibAccumulator`]
+//! interface, so the overlapped path serves any accumulator kind
+//! (R / Gram / scales), not just the COALA R route.  A failure in either
+//! stage is reported; when both fail, the errors are chained through
+//! [`crate::error::Error::context`] so neither is silently dropped.
 
-use crate::calib::accumulate::{make_accumulator, AccumBackend, AccumKind, CalibAccumulator};
-use crate::calib::activations::ActivationCapture;
-use crate::error::{Error, Result};
+use super::engine::{self, EnginePlan, StageTimings};
+use crate::calib::accumulate::{AccumBackend, AccumKind};
+use crate::calib::activations::{ActivationSource, DeviceActivationSource};
+use crate::error::Result;
 use crate::model::ModelWeights;
 use crate::runtime::executor::{Executor, Value};
 use crate::tensor::lowp::Precision;
-use crate::tensor::Matrix;
-use std::collections::BTreeMap;
-use std::sync::mpsc;
 
 /// Outcome of the overlapped calibration: per-(layer, stream) states.
-pub use super::pipeline::CalibStates;
+pub use super::engine::CalibStates;
 
-/// Overlapped calibrate-and-fold.  `queue_cap` bounds the number of
-/// in-flight batches' chunks (backpressure knob).
+/// Overlapped calibrate-and-fold over the `fwd_acts` artifacts.
+/// `queue_cap` bounds the number of in-flight batches' chunks
+/// (backpressure knob).  Capture and accumulation each own a separate
+/// executor — the two-simulated-devices setup.
 pub fn calibrate_overlapped(
     artifacts_dir: &str,
     config: &str,
@@ -34,53 +44,60 @@ pub fn calibrate_overlapped(
     queue_cap: usize,
     kind: AccumKind,
 ) -> Result<CalibStates> {
-    let (tx, rx) = mpsc::sync_channel::<Vec<(usize, String, Matrix<f32>)>>(queue_cap.max(1));
-    let dir_a = artifacts_dir.to_string();
-    let dir_b = artifacts_dir.to_string();
-    let cfg_name = config.to_string();
+    let ex_capture = Executor::new(artifacts_dir)?; // capture device
+    let spec = ex_capture.manifest.config(config)?.clone();
+    let weights = ModelWeights::load(artifacts_dir, &spec)?;
+    let n_batches = batches.len();
+    let source = DeviceActivationSource::from_batches(&ex_capture, &spec, &weights, batches);
+    let ex_accum = Executor::new(artifacts_dir)?; // accumulate device
+    calibrate_overlapped_source(
+        &source,
+        n_batches,
+        kind,
+        AccumBackend::Device(&ex_accum),
+        Precision::F32,
+        1,
+        queue_cap,
+    )
+}
 
-    let producer = std::thread::spawn(move || -> Result<()> {
-        let ex = Executor::new(&dir_a)?; // capture device
-        let spec = ex.manifest.config(&cfg_name)?.clone();
-        let weights = ModelWeights::load(&dir_a, &spec)?;
-        let cap = ActivationCapture::new(&ex, &spec);
-        for tokens in &batches {
-            let (_logits, chunks) = cap.capture(tokens, &weights)?;
-            let payload: Vec<(usize, String, Matrix<f32>)> =
-                chunks.into_iter().map(|c| (c.layer, c.stream, c.xt)).collect();
-            if tx.send(payload).is_err() {
-                break; // consumer died; its error surfaces below
-            }
-        }
-        Ok(())
-    });
-
-    let consumer = std::thread::spawn(move || -> Result<CalibStates> {
-        let ex = Executor::new(&dir_b)?; // accumulate device
-        let mut accums: BTreeMap<(usize, String), Box<dyn CalibAccumulator + '_>> =
-            BTreeMap::new();
-        for payload in rx {
-            for (layer, stream, xt) in payload {
-                let acc = accums.entry((layer, stream)).or_insert_with(|| {
-                    make_accumulator(kind, xt.cols, AccumBackend::Device(&ex), Precision::F32)
-                });
-                acc.fold_chunk(&xt)?;
-            }
-        }
-        Ok(accums.into_iter().map(|(k, a)| (k, a.finish())).collect())
-    });
-
-    producer
-        .join()
-        .map_err(|_| Error::msg("capture stage panicked"))??;
-    consumer.join().map_err(|_| Error::msg("accumulate stage panicked"))?
+/// Overlapped calibrate-and-fold from any [`ActivationSource`]:
+/// `workers` capture threads feed `workers` accumulate shards through a
+/// `queue_cap`-bounded channel; partial states merge through the
+/// engine's canonical reduction tree, so the result is bitwise-identical
+/// at any worker count.
+pub fn calibrate_overlapped_source(
+    source: &dyn ActivationSource,
+    batches: usize,
+    kind: AccumKind,
+    backend: AccumBackend<'_>,
+    precision: Precision,
+    workers: usize,
+    queue_cap: usize,
+) -> Result<CalibStates> {
+    let mut plan = EnginePlan::with_workers(workers);
+    plan.queue_cap = queue_cap.max(1);
+    engine::calibrate(
+        source,
+        kind,
+        batches,
+        backend,
+        precision,
+        &plan,
+        &mut StageTimings::default(),
+    )
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::calib::accumulate::{make_accumulator, CalibAccumulator};
+    use crate::calib::activations::ActivationCapture;
     use crate::calib::dataset::Corpus;
+    use crate::calib::synthetic::SyntheticActivations;
+    use crate::model::synthetic::synthetic_manifest;
     use crate::tensor::ops::fro;
+    use std::collections::BTreeMap;
 
     #[test]
     fn overlapped_matches_sequential() {
@@ -104,7 +121,7 @@ mod tests {
                         AccumKind::RFactor,
                         c.xt.cols,
                         AccumBackend::Device(&ex),
-                        Precision::F32,
+                        crate::tensor::lowp::Precision::F32,
                     )
                 });
                 acc.fold_chunk(&c.xt).unwrap();
@@ -123,6 +140,54 @@ mod tests {
             let g_par = crate::tensor::ops::matmul(&r_par.transpose(), r_par).unwrap();
             let err = fro(&g_seq.sub(&g_par).unwrap()) / fro(&g_seq).max(1e-9);
             assert!(err < 1e-4, "{k:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn overlapped_source_runs_on_host_and_is_worker_count_invariant() {
+        // no artifacts anywhere: the synthetic source through the
+        // backpressure path, bitwise identical at every worker count
+        let spec = synthetic_manifest().config("tiny").unwrap().clone();
+        let src = SyntheticActivations::new(spec.clone(), 9);
+        for kind in [AccumKind::RFactor, AccumKind::Gram, AccumKind::Scales] {
+            let mut reference: Option<CalibStates> = None;
+            for workers in [1usize, 2, 8] {
+                let states = calibrate_overlapped_source(
+                    &src,
+                    3,
+                    kind,
+                    AccumBackend::Host,
+                    Precision::F32,
+                    workers,
+                    2,
+                )
+                .unwrap();
+                assert_eq!(states.len(), spec.n_layers * spec.act_streams.len());
+                match &reference {
+                    None => reference = Some(states),
+                    Some(want) => {
+                        for (k, sw) in want {
+                            use crate::calib::accumulate::CalibState;
+                            match (sw, &states[k]) {
+                                (CalibState::R(a), CalibState::R(b)) => {
+                                    assert_eq!(a.data, b.data, "{kind:?} {k:?}")
+                                }
+                                (CalibState::Gram(a), CalibState::Gram(b)) => {
+                                    assert_eq!(a.data, b.data, "{kind:?} {k:?}")
+                                }
+                                (
+                                    CalibState::Scales { sum_abs: a, rows: ra },
+                                    CalibState::Scales { sum_abs: b, rows: rb },
+                                ) => {
+                                    assert_eq!(a, b, "{kind:?} {k:?}");
+                                    assert_eq!(ra, rb, "{kind:?} {k:?}");
+                                }
+                                other => panic!("state kind mismatch: {other:?}"),
+                            }
+                        }
+                    }
+                }
+            }
         }
     }
 }

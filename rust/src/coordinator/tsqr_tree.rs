@@ -1,23 +1,55 @@
-//! Multi-device tree TSQR (the paper's §4.2 binary-tree diagram).
+//! Multi-device tree TSQR (the paper's §4.2 binary-tree diagram) as a
+//! thin configuration of the execution engine.
 //!
-//! Each worker thread owns its **own PJRT client + executable cache** —
-//! the faithful simulation of "one GPU per tree leaf": no shared device
-//! state, R factors (tiny n × n matrices) are the only thing crossing
-//! the tree edges, exactly like the multi-GPU all-reduce-of-R pattern.
+//! Each chunk of Xᵀ becomes one engine batch; the engine's accumulate
+//! shards QR the leaves in parallel and its canonical pairwise reduction
+//! merges the R factors up the tree — tiny n × n matrices are the only
+//! thing crossing tree edges, exactly like the multi-GPU
+//! all-reduce-of-R pattern.  Because the reduction tree is fixed by the
+//! chunk order, the final R is bitwise-independent of the worker count.
+//!
+//! On the device route the shards now share **one** executor (a single
+//! PJRT client with a mutex-guarded compile cache), unlike the
+//! pre-engine runner where every worker owned its own client; the tree
+//! *communication* pattern is simulated faithfully, per-leaf device
+//! state is not.
 //!
 //! Both the leaf folds and the reduction edges drive the
-//! [`CalibAccumulator`] interface from `calib::accumulate`, so the same
-//! runner reduces any mergeable accumulator state and can fall back to
-//! the host route when no artifacts exist.
+//! [`crate::calib::accumulate::CalibAccumulator`] interface, so the same
+//! runner reduces any mergeable accumulator state and falls back to the
+//! host route when no artifacts exist.
 
-use crate::calib::accumulate::{
-    make_accumulator, merge_states, AccumBackend, AccumKind, CalibAccumulator, CalibState,
-};
+use super::engine::{self, EnginePlan, StageTimings};
+use crate::calib::accumulate::{AccumBackend, AccumKind};
+use crate::calib::activations::{ActivationSource, CalibChunk};
 use crate::error::{Error, Result};
 use crate::runtime::executor::Executor;
 use crate::tensor::lowp::Precision;
 use crate::tensor::Matrix;
-use std::sync::mpsc;
+
+/// The single pseudo-stream the chunk source publishes under.
+const STREAM: &str = "tsqr";
+
+/// An [`ActivationSource`] over a pre-chunked Xᵀ: batch `b` is chunk
+/// `b`.  Chunks hand over by `take()` — each batch is pulled exactly
+/// once, so no copy of Xᵀ is ever made.
+struct ChunkSource {
+    chunks: Vec<std::sync::Mutex<Option<Matrix<f32>>>>,
+}
+
+impl ActivationSource for ChunkSource {
+    fn capture_batch(&self, b: usize) -> Result<Vec<CalibChunk>> {
+        let xt = self
+            .chunks
+            .get(b)
+            .ok_or_else(|| Error::Config(format!("tsqr chunk {b} out of range")))?
+            .lock()
+            .unwrap()
+            .take()
+            .ok_or_else(|| Error::Config(format!("tsqr chunk {b} pulled twice")))?;
+        Ok(vec![CalibChunk { layer: 0, stream: STREAM.to_string(), xt }])
+    }
+}
 
 /// Runs tree-TSQR over chunk streams with `workers` simulated devices.
 pub struct TsqrTreeRunner {
@@ -41,63 +73,19 @@ impl TsqrTreeRunner {
         TsqrTreeRunner { artifacts_dir: String::new(), workers: workers.max(1), host: true }
     }
 
-    fn fold_share(&self, share: &[&Matrix<f32>], n: usize) -> Result<CalibState> {
-        let ex;
-        let backend = if self.host {
-            AccumBackend::Host
-        } else {
-            ex = Executor::new(&self.artifacts_dir)?; // own PJRT client
-            AccumBackend::Device(&ex)
-        };
-        let mut acc = make_accumulator(AccumKind::RFactor, n, backend, Precision::F32);
-        for &c in share {
-            acc.fold_chunk(c)?;
-        }
-        Ok(acc.finish())
-    }
-
-    /// Leaf phase: worker w sequentially folds chunks w, w+P, w+2P, …
-    /// into a local R; reduction phase: pairwise merges up the tree.
+    /// Leaf phase: `workers` engine shards QR the chunks in parallel;
+    /// reduction phase: the engine's canonical pairwise merge tree.
     ///
-    /// `chunks` are (c × n) row-blocks of Xᵀ; all must share n and c
-    /// (the AOT artifact is shape-specialized).
+    /// `chunks` are (c × n) row-blocks of Xᵀ; all must share n (the AOT
+    /// artifact is shape-specialized; the host route checks at merge).
     pub fn run(&self, chunks: Vec<Matrix<f32>>) -> Result<Matrix<f32>> {
         if chunks.is_empty() {
             return Err(Error::Config("tsqr over zero chunks".into()));
         }
-        let n = chunks[0].cols;
-        let workers = self.workers.min(chunks.len());
-        if workers <= 1 {
-            // single device: plain streaming fold
-            let share: Vec<&Matrix<f32>> = chunks.iter().collect();
-            return self.fold_share(&share, n)?.r().cloned();
-        }
-
-        // ---- leaf phase: one thread per simulated device ----------------
-        let (tx, rx) = mpsc::channel::<Result<(usize, CalibState)>>();
-        std::thread::scope(|s| {
-            // distribute chunks round-robin; each worker folds its share
-            let mut shares: Vec<Vec<&Matrix<f32>>> = vec![Vec::new(); workers];
-            for (i, c) in chunks.iter().enumerate() {
-                shares[i % workers].push(c);
-            }
-            for (w, share) in shares.into_iter().enumerate() {
-                let tx = tx.clone();
-                s.spawn(move || {
-                    let res = self.fold_share(&share, n);
-                    let _ = tx.send(res.map(|r| (w, r)));
-                });
-            }
-        });
-        drop(tx);
-        let mut leaves: Vec<(usize, CalibState)> = Vec::with_capacity(workers);
-        for got in rx {
-            leaves.push(got?);
-        }
-        leaves.sort_by_key(|(w, _)| *w); // deterministic reduction order
-        let mut level: Vec<CalibState> = leaves.into_iter().map(|(_, r)| r).collect();
-
-        // ---- reduction phase: binary tree of R merges --------------------
+        let batches = chunks.len();
+        let source = ChunkSource {
+            chunks: chunks.into_iter().map(|c| std::sync::Mutex::new(Some(c))).collect(),
+        };
         let ex;
         let backend = if self.host {
             AccumBackend::Host
@@ -105,18 +93,26 @@ impl TsqrTreeRunner {
             ex = Executor::new(&self.artifacts_dir)?;
             AccumBackend::Device(&ex)
         };
-        while level.len() > 1 {
-            let mut next = Vec::with_capacity(level.len().div_ceil(2));
-            let mut it = level.into_iter();
-            while let Some(a) = it.next() {
-                match it.next() {
-                    Some(b) => next.push(merge_states(a, b, backend, Precision::F32)?),
-                    None => next.push(a),
-                }
-            }
-            level = next;
-        }
-        level.pop().unwrap().r().cloned()
+        let plan = EnginePlan {
+            capture_workers: 1,
+            accum_shards: self.workers,
+            factorize_workers: 1,
+            queue_cap: self.workers.max(2),
+        };
+        let mut timings = StageTimings::default();
+        let mut states = engine::calibrate(
+            &source,
+            AccumKind::RFactor,
+            batches,
+            backend,
+            Precision::F32,
+            &plan,
+            &mut timings,
+        )?;
+        let state = states
+            .remove(&(0, STREAM.to_string()))
+            .ok_or_else(|| Error::Config("tree-TSQR produced no state".into()))?;
+        Ok(state.r()?.clone())
     }
 }
 
@@ -165,6 +161,17 @@ mod tests {
             let got = matmul(&r.transpose(), &r).unwrap();
             let err = fro(&got.sub(&want).unwrap()) / fro(&want);
             assert!(err < 1e-3, "workers={workers}: {err}");
+        }
+    }
+
+    #[test]
+    fn host_tree_is_bitwise_worker_count_invariant() {
+        // the fixed reduction tree makes R independent of parallelism
+        let chunks: Vec<Matrix<f32>> = (0..7).map(|i| Matrix::randn(11, 8, 70 + i)).collect();
+        let want = TsqrTreeRunner::host(1).run(chunks.clone()).unwrap();
+        for workers in [2usize, 4, 8] {
+            let got = TsqrTreeRunner::host(workers).run(chunks.clone()).unwrap();
+            assert_eq!(want.data, got.data, "workers={workers}");
         }
     }
 

@@ -26,6 +26,11 @@ pub enum Error {
     Config(String),
 
     Msg(String),
+
+    /// A message layered over an underlying error (`Error::context`),
+    /// so multi-stage failures — e.g. both the capture and accumulate
+    /// stages of the execution engine dying — surface every cause.
+    Context { msg: String, source: Box<Error> },
 }
 
 impl fmt::Display for Error {
@@ -41,6 +46,7 @@ impl fmt::Display for Error {
             Error::Numerical(m) => write!(f, "numerical failure: {m}"),
             Error::Config(m) => write!(f, "config error: {m}"),
             Error::Msg(m) => write!(f, "{m}"),
+            Error::Context { msg, source } => write!(f, "{msg}: {source}"),
         }
     }
 }
@@ -51,6 +57,7 @@ impl std::error::Error for Error {
             Error::Io(e) => Some(e),
             #[cfg(feature = "pjrt")]
             Error::Xla(e) => Some(e),
+            Error::Context { source, .. } => Some(source.as_ref()),
             _ => None,
         }
     }
@@ -78,10 +85,32 @@ impl Error {
     pub fn shape(m: impl Into<String>) -> Self {
         Error::Shape(m.into())
     }
+    /// Wrap with a higher-level message, keeping `self` as the source.
+    pub fn context(self, msg: impl Into<String>) -> Self {
+        Error::Context { msg: msg.into(), source: Box::new(self) }
+    }
 }
 
 impl From<String> for Error {
     fn from(s: String) -> Self {
         Error::Msg(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::error::Error as _;
+
+    #[test]
+    fn context_chains_display_and_source() {
+        let inner = Error::Numerical("collapse".into());
+        let outer = inner.context("accumulate stage failed");
+        assert_eq!(
+            outer.to_string(),
+            "accumulate stage failed: numerical failure: collapse"
+        );
+        let src = outer.source().expect("context keeps its source");
+        assert_eq!(src.to_string(), "numerical failure: collapse");
     }
 }

@@ -16,8 +16,7 @@
 //!   TSQR, streamed Gram, per-channel activation scales) share one
 //!   `fold_chunk`/`merge_state`/`finish` interface, each running on
 //!   either backend: the PJRT artifacts (`Device`) or pure-Rust linalg
-//!   (`Host`).  Every driver — the sequential pipeline, the overlapped
-//!   scheduler, the multi-device tree-TSQR runner — folds through this
+//!   (`Host`).  The execution engine folds every driver through this
 //!   interface; the raw calibration matrix X is never materialized.
 //! * [`coala::compressor::Compressor`] — one impl per compression
 //!   method.  Each declares the accumulator kind it consumes and
@@ -32,6 +31,18 @@
 //!   that), and activation capture is an [`calib::activations::ActivationSource`]
 //!   with two implementations: the `fwd_acts` artifacts and the
 //!   synthetic PRNG generator.
+//! * [`coordinator::engine`] — the one calibrate→accumulate→factorize
+//!   control flow.  Capture workers stream any `ActivationSource` into
+//!   a bounded channel (backpressure: X never materializes), accumulate
+//!   shards build per-(layer, stream, batch) leaf states, a canonical
+//!   pairwise `merge_state` tree reduces them in batch order, and the
+//!   factorize stage fans per-projection factorizations across worker
+//!   threads through the `Compressor` registry.  The sequential
+//!   pipeline, the overlapped scheduler, and the multi-device tree-TSQR
+//!   runner are thin [`coordinator::engine::EnginePlan`] configurations
+//!   of this engine, and results are bitwise-independent of every
+//!   worker count (the reduction tree is fixed by batch order), so
+//!   `--workers`/`--queue-cap` are pure deployment knobs.
 //!
 //! ## Reproducing the tables without artifacts
 //!

@@ -5,13 +5,18 @@
 //!   info                      print manifest / model / artifact summary
 //!   methods                   list the registered compression methods
 //!   compress  --model tiny --method coala --ratio 0.7 [--lambda 3]
-//!             [--route device|host]
+//!             [--route device|host] [--workers N] [--queue-cap N]
 //!   eval      --model tiny    perplexity + probe tasks of the base model
-//!   repro [<id>] [--route device|host]
+//!   repro [<id>] [--route device|host] [--workers N] [--queue-cap N]
 //!                             regenerate a paper table/figure (default:
 //!                             `all`).  `--route host` runs the synthetic
 //!                             artifact-free environment end-to-end.
 //!   tsqr-demo --workers 4     out-of-core tree-TSQR demonstration
+//!
+//! `--workers`/`--queue-cap` configure the execution engine
+//! (`coordinator::engine`): capture, sharded accumulate, and parallel
+//! factorize all scale with `--workers`, and results are identical at
+//! any worker count.
 //!
 //! Methods resolve by name through the `coala::compressor` registry —
 //! `methods` prints every spec the registry accepts.
@@ -87,13 +92,15 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
                 CompressionJob::new(cfg, comp.method(), args.get_f64("ratio", 0.7)?);
             job.calib_batches = args.get_usize("calib-batches", 8)?;
             let route = args.route()?;
+            let plan = args.engine_plan()?;
             println!(
-                "compressing {cfg} with {} at {:.0}% kept ({:?} route) …",
+                "compressing {cfg} with {} at {:.0}% kept ({:?} route, {} workers) …",
                 comp.name(),
                 job.ratio * 100.0,
-                route
+                route,
+                plan.factorize_workers
             );
-            let pipe = Pipeline::new(&ex, spec.clone(), &w).with_route(route);
+            let pipe = Pipeline::new(&ex, spec.clone(), &w).with_route(route).with_plan(plan);
             let out = pipe.run(&job, &corpus)?;
             println!(
                 "done in {:.2}s (calibrate {:.2}s / accumulate {:.2}s / factorize {:.2}s)",

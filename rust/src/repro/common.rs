@@ -19,7 +19,7 @@ use crate::calib::activations::{chunk_for_proj, ActivationSource, DeviceActivati
 use crate::calib::dataset::{Corpus, TaskBank};
 use crate::calib::synthetic::SyntheticActivations;
 use crate::coala::compressor::Route;
-use crate::coordinator::{CompressionJob, CompressionOutcome, Pipeline};
+use crate::coordinator::{CompressionJob, CompressionOutcome, EnginePlan, Pipeline};
 use crate::error::{Error, Result};
 use crate::eval::TaskScores;
 use crate::model::synthetic as synth;
@@ -39,6 +39,10 @@ pub struct Env {
     pub corpus: Corpus,
     /// Which backend accumulates + factorizes in compression jobs.
     pub route: Route,
+    /// Worker counts for the execution engine (`--workers`,
+    /// `--queue-cap`); the sequential plan by default.  Results are
+    /// identical at any worker count.
+    pub plan: EnginePlan,
     seed: u64,
     synthetic: bool,
 }
@@ -47,13 +51,14 @@ impl Env {
     /// Route dispatch: `--route host` builds the synthetic environment
     /// (seeded by `--seed`), anything else loads the artifacts.
     pub fn load(args: &Args) -> Result<Env> {
-        match args.route()? {
+        let env = match args.route()? {
             Route::Host => {
                 let seed = args.get_usize("seed", synth::DEFAULT_SEED as usize)?;
-                Env::synthetic(seed as u64)
+                Env::synthetic(seed as u64)?
             }
-            Route::Device => Env::from_artifacts(args),
-        }
+            Route::Device => Env::from_artifacts(args)?,
+        };
+        Ok(env.with_plan(args.engine_plan()?))
     }
 
     /// The artifact/PJRT environment (requires `artifacts/` on disk).
@@ -63,6 +68,7 @@ impl Env {
             ex: Executor::new(&dir)?,
             corpus: Corpus::load(&dir)?,
             route: Route::Device,
+            plan: EnginePlan::default(),
             seed: 0,
             synthetic: false,
         })
@@ -76,9 +82,16 @@ impl Env {
             ex: Executor::from_manifest(manifest)?,
             corpus,
             route: Route::Host,
+            plan: EnginePlan::default(),
             seed,
             synthetic: true,
         })
+    }
+
+    /// Same environment with an explicit engine plan (worker counts).
+    pub fn with_plan(mut self, plan: EnginePlan) -> Env {
+        self.plan = plan;
+        self
     }
 
     pub fn is_synthetic(&self) -> bool {
@@ -115,7 +128,9 @@ impl Env {
         weights: &ModelWeights,
         job: &CompressionJob,
     ) -> Result<CompressionOutcome> {
-        let pipe = Pipeline::new(&self.ex, spec.clone(), weights).with_route(self.route);
+        let pipe = Pipeline::new(&self.ex, spec.clone(), weights)
+            .with_route(self.route)
+            .with_plan(self.plan);
         match self.activation_source(spec) {
             Some(src) => pipe.run_with_source(job, &src),
             None => pipe.run(job, &self.corpus),
@@ -274,5 +289,22 @@ mod tests {
         let rec = out.model.reconstruct_into(&w).unwrap();
         let ppl = env.perplexity(&spec, &rec, "val", 2).unwrap();
         assert!(ppl.is_finite(), "compressed ppl {ppl}");
+    }
+
+    #[test]
+    fn parallel_plan_env_matches_sequential_bitwise() {
+        use crate::coala::compressor::{resolve, Compressor};
+        let mut job = CompressionJob::new("tiny", resolve("coala").unwrap().method(), 0.4);
+        job.calib_batches = 2;
+        let env_seq = Env::synthetic(3).unwrap();
+        let env_par = Env::synthetic(3).unwrap().with_plan(EnginePlan::with_workers(4));
+        let (spec, w) = env_seq.weights("tiny").unwrap();
+        let a = env_seq.run_job(&spec, &w, &job).unwrap();
+        let b = env_par.run_job(&spec, &w, &job).unwrap();
+        for (proj, fa) in &a.model.factors {
+            let fb = &b.model.factors[proj];
+            assert_eq!(fa.a.data, fb.a.data, "{proj}");
+            assert_eq!(fa.b.data, fb.b.data, "{proj}");
+        }
     }
 }

@@ -17,6 +17,15 @@ use std::time::Instant;
 /// Table 1: full-model compression wall-clock, mean ± std over runs.
 pub fn table1(args: &Args) -> Result<()> {
     let env = Env::load(args)?;
+    if env.plan.factorize_workers > 1 || env.plan.accum_shards > 1 {
+        println!(
+            "[engine plan: {} capture / {} accumulate / {} factorize workers, queue {}]",
+            env.plan.capture_workers,
+            env.plan.accum_shards,
+            env.plan.factorize_workers,
+            env.plan.queue_cap
+        );
+    }
     let runs = if super::common::fast() { 1 } else { args.get_usize("runs", 3)? };
     let configs = args.get_list("configs", &["tiny", "small"]);
     // (display label, registry spec) — resolved through coala::compressor

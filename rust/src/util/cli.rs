@@ -4,6 +4,7 @@
 //! positional arguments.  The `coala` binary defines subcommands on top.
 
 use crate::coala::compressor::Route;
+use crate::coordinator::engine::EnginePlan;
 use crate::error::{Error, Result};
 use std::collections::BTreeMap;
 
@@ -90,6 +91,19 @@ impl Args {
         }
     }
 
+    /// `--workers N` / `--queue-cap N` → the execution-engine plan every
+    /// driver threads through (`coordinator::engine`).  `--workers`
+    /// gives every stage N threads (default 1 = the sequential plan);
+    /// `--queue-cap` bounds the in-flight capture batches (backpressure,
+    /// default 2).  Results are identical at any worker count.
+    pub fn engine_plan(&self) -> Result<EnginePlan> {
+        let workers = self.get_usize("workers", 1)?;
+        let queue_cap = self.get_usize("queue-cap", 2)?;
+        let mut plan = EnginePlan::with_workers(workers);
+        plan.queue_cap = queue_cap.max(1);
+        Ok(plan)
+    }
+
     /// Assemble the method spec the `coala::compressor` registry resolves:
     /// `--method NAME` plus an optional `--lambda`/`--mu` parameter
     /// (spelled `NAME:lambda=V` / `NAME:mu=V`).  `--method coala:lambda=3`
@@ -148,6 +162,31 @@ mod tests {
             Route::Host
         );
         assert!(Args::parse(&sv(&["--route", "tpu"])).route().is_err());
+    }
+
+    #[test]
+    fn engine_plan_flags() {
+        let p = Args::parse(&sv(&[])).engine_plan().unwrap();
+        assert_eq!(
+            (p.capture_workers, p.accum_shards, p.factorize_workers, p.queue_cap),
+            (1, 1, 1, 2)
+        );
+        let p = Args::parse(&sv(&["--workers", "4", "--queue-cap", "8"]))
+            .engine_plan()
+            .unwrap();
+        assert_eq!(
+            (p.capture_workers, p.accum_shards, p.factorize_workers, p.queue_cap),
+            (4, 4, 4, 8)
+        );
+        // zero never reaches the engine: everything clamps to ≥ 1
+        let p = Args::parse(&sv(&["--workers", "0", "--queue-cap", "0"]))
+            .engine_plan()
+            .unwrap();
+        assert_eq!(
+            (p.capture_workers, p.accum_shards, p.factorize_workers, p.queue_cap),
+            (1, 1, 1, 1)
+        );
+        assert!(Args::parse(&sv(&["--workers", "x"])).engine_plan().is_err());
     }
 
     #[test]

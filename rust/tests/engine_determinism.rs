@@ -1,0 +1,116 @@
+//! Determinism stress for the execution engine: calibration states and
+//! compressed factors must be **bitwise identical** for every worker
+//! count, across all three accumulator kinds (TSQR R / Gram / scales),
+//! on synthetic data that includes the nearly singular regime (the
+//! synthetic `tiny` model's layer 1 activations live in a low-rank
+//! subspace with a 1e-2 noise floor — exactly where an order-dependent
+//! floating-point reduction would leak the worker count into the bits).
+
+use coala::calib::accumulate::CalibState;
+use coala::calib::synthetic::{regime_for_layer, Regime, SyntheticActivations};
+use coala::coala::compressor::{resolve, Compressor, Route};
+use coala::coordinator::pipeline::StageTimings;
+use coala::coordinator::{CalibStates, CompressionJob, EnginePlan, Pipeline};
+use coala::model::synthetic::{synthetic_manifest, synthetic_weights};
+use coala::runtime::Executor;
+
+fn assert_states_bitwise_eq(want: &CalibStates, got: &CalibStates, label: &str) {
+    assert_eq!(want.len(), got.len(), "{label}: state count");
+    for (k, sw) in want {
+        match (sw, &got[k]) {
+            (CalibState::R(a), CalibState::R(b)) => {
+                assert_eq!(a.data, b.data, "{label} {k:?}: R bits differ")
+            }
+            (CalibState::Gram(a), CalibState::Gram(b)) => {
+                assert_eq!(a.data, b.data, "{label} {k:?}: Gram bits differ")
+            }
+            (
+                CalibState::Scales { sum_abs: a, rows: ra },
+                CalibState::Scales { sum_abs: b, rows: rb },
+            ) => {
+                assert_eq!(a, b, "{label} {k:?}: scale sums differ");
+                assert_eq!(ra, rb, "{label} {k:?}: row counts differ");
+            }
+            (CalibState::None, CalibState::None) => {}
+            other => panic!("{label} {k:?}: state kind mismatch: {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn engine_results_are_bitwise_identical_across_worker_counts() {
+    let ex = Executor::from_manifest(synthetic_manifest()).unwrap();
+    let spec = ex.manifest.config("tiny").unwrap().clone();
+    // the stress regime really is present: layer 1 is nearly singular
+    assert_eq!(regime_for_layer(1), Regime::NearSingular);
+    let w = synthetic_weights(&spec, 5);
+    let src = SyntheticActivations::new(spec.clone(), 5);
+
+    // one method per accumulator kind: R factor / Gram / scales
+    for method_spec in ["coala", "svdllm", "asvd"] {
+        let comp = resolve(method_spec).unwrap();
+        let mut job = CompressionJob::new("tiny", comp.method(), 0.4);
+        job.calib_batches = 3;
+
+        let mut ref_states: Option<CalibStates> = None;
+        let mut ref_factors: Option<Vec<(String, Vec<f32>, Vec<f32>)>> = None;
+        for workers in [1usize, 2, 8] {
+            let label = format!("{method_spec} workers={workers}");
+            let pipe = Pipeline::new(&ex, spec.clone(), &w)
+                .with_route(Route::Host)
+                .with_plan(EnginePlan::with_workers(workers));
+
+            let mut t = StageTimings::default();
+            let states = pipe.calibrate_from(&job, &src, &mut t).unwrap();
+            let out = pipe.run_with_source(&job, &src).unwrap();
+            assert!(out.model.all_finite(), "{label}");
+            let factors: Vec<(String, Vec<f32>, Vec<f32>)> = out
+                .model
+                .factors
+                .iter()
+                .map(|(k, f)| (k.clone(), f.a.data.clone(), f.b.data.clone()))
+                .collect();
+
+            match (&ref_states, &ref_factors) {
+                (None, None) => {
+                    ref_states = Some(states);
+                    ref_factors = Some(factors);
+                }
+                (Some(sw), Some(fw)) => {
+                    assert_states_bitwise_eq(sw, &states, &label);
+                    assert_eq!(fw, &factors, "{label}: compressed factors differ");
+                }
+                _ => unreachable!(),
+            }
+        }
+    }
+}
+
+#[test]
+fn queue_capacity_does_not_change_results() {
+    // backpressure (queue_cap = 1) vs a roomy queue: identical bits
+    let ex = Executor::from_manifest(synthetic_manifest()).unwrap();
+    let spec = ex.manifest.config("tiny").unwrap().clone();
+    let w = synthetic_weights(&spec, 7);
+    let src = SyntheticActivations::new(spec.clone(), 7);
+    let comp = resolve("coala").unwrap();
+    let mut job = CompressionJob::new("tiny", comp.method(), 0.5);
+    job.calib_batches = 4;
+
+    let mut reference: Option<CalibStates> = None;
+    for queue_cap in [1usize, 8] {
+        let mut plan = EnginePlan::with_workers(3);
+        plan.queue_cap = queue_cap;
+        let pipe = Pipeline::new(&ex, spec.clone(), &w)
+            .with_route(Route::Host)
+            .with_plan(plan);
+        let mut t = StageTimings::default();
+        let states = pipe.calibrate_from(&job, &src, &mut t).unwrap();
+        match &reference {
+            None => reference = Some(states),
+            Some(want) => {
+                assert_states_bitwise_eq(want, &states, &format!("queue_cap={queue_cap}"))
+            }
+        }
+    }
+}

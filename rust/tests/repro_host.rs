@@ -9,10 +9,15 @@
 //!    the table values (COALA tracks the fp64 reference; the
 //!    reduced-precision Gram routes do not; the Gram path loses σ_min;
 //!    the near-singular layer really is near-singular);
-//! 3. **snapshot** — values are compared order-of-magnitude against
-//!    `tests/golden/stability.json` when it exists (the file is created
-//!    on first run so it can be committed), so future PRs cannot
-//!    silently degrade the numbers.
+//! 3. **snapshot** — values are compared order-of-magnitude against the
+//!    committed `tests/golden/stability.json` (canonical values,
+//!    regenerable with `python3 python/tools/golden_stability.py`), so
+//!    future PRs cannot silently degrade the numbers.  The comparison
+//!    uses a per-key noise floor: below it a value is implementation
+//!    rounding noise (e.g. f32 subspace rotation inside a near-
+//!    degenerate σ cluster), so only the order of magnitude *above* the
+//!    floor is load-bearing.  If the file is missing the test recreates
+//!    it from the current run (commit it to pin the numbers).
 //!
 //! Everything here is one #[test]: the drivers share the results/
 //! directory and the COALA_REPRO_FAST env var, so sequencing matters.
@@ -43,9 +48,6 @@ fn num(v: &Json) -> Option<f64> {
     v.as_f64().filter(|x| x.is_finite())
 }
 
-fn clamp_log(x: f64) -> f64 {
-    x.abs().max(1e-300).log10()
-}
 
 #[test]
 fn host_route_stability_tables_are_deterministic_and_hold_claims() {
@@ -123,9 +125,16 @@ fn host_route_stability_tables_are_deterministic_and_hold_claims() {
         );
     }
 
-    // ---- snapshot: order-of-magnitude stability across PRs ---------------
+    // ---- snapshot: absolute values pinned across PRs ---------------------
+    let mut fig2_sigma = Vec::new();
+    for layer in spectra {
+        let s = layer.as_arr().unwrap();
+        fig2_sigma.push(s[0].clone());
+        fig2_sigma.push(s.last().unwrap().clone());
+    }
     let snapshot = Json::obj(vec![
         ("fig1_coala", Json::from_f64s(&coala_errs)),
+        ("fig2_sigma", Json::Arr(fig2_sigma)),
         (
             "g1_exact",
             Json::Arr(
@@ -145,20 +154,37 @@ fn host_route_stability_tables_are_deterministic_and_hold_claims() {
         }
         Ok(prev) => {
             let prev = Json::parse(&prev).unwrap();
-            for key in ["fig1_coala", "g1_exact"] {
+            // noise floors: fig1's errors are f32-vs-fp64 differences,
+            // noise-dominated below ~3e-2 (the claims assertions above
+            // guard the fine scale); g1's σ_min values are stable f64
+            // quantities, so only true zero-noise is floored
+            for (key, floor) in [("fig1_coala", 3e-2), ("g1_exact", 1e-3)] {
                 let old = prev.req(key).unwrap().as_arr().unwrap();
                 let new = snapshot.req(key).unwrap().as_arr().unwrap();
                 assert_eq!(old.len(), new.len(), "{key}: row count changed");
                 for (i, (o, n)) in old.iter().zip(new).enumerate() {
-                    let (o, n) = (o.as_f64().unwrap_or(0.0), n.as_f64().unwrap_or(0.0));
-                    if o.abs() < 1e-3 && n.abs() < 1e-3 {
-                        continue; // both at float-noise level: equivalent
-                    }
+                    let o = o.as_f64().unwrap_or(0.0).abs().max(floor);
+                    let n = n.as_f64().unwrap_or(0.0).abs().max(floor);
                     assert!(
-                        (clamp_log(o) - clamp_log(n)).abs() <= 1.0,
+                        (o.log10() - n.log10()).abs() <= 1.0,
                         "{key}[{i}] drifted more than a decade: {o} → {n}"
                     );
                 }
+            }
+            // fig2's σ spectra are f64 quantities of fixed synthetic data
+            // — pinned tightly (1 % relative: cross-libm data generation
+            // differs by at most an ulp of the f32 activations, which
+            // perturbs even the smallest σ far less than this; any real
+            // regression moves σ by factors)
+            let old = prev.req("fig2_sigma").unwrap().as_arr().unwrap();
+            let new = snapshot.req("fig2_sigma").unwrap().as_arr().unwrap();
+            assert_eq!(old.len(), new.len(), "fig2_sigma: row count changed");
+            for (i, (o, n)) in old.iter().zip(new).enumerate() {
+                let (o, n) = (o.as_f64().unwrap_or(0.0), n.as_f64().unwrap_or(0.0));
+                assert!(
+                    (o - n).abs() <= 1e-2 * o.abs().max(n.abs()) + 1e-9,
+                    "fig2_sigma[{i}] drifted: {o} → {n}"
+                );
             }
         }
     }
