@@ -8,7 +8,7 @@
 //! ```
 
 use coala::calib::dataset::{Corpus, TaskBank};
-use coala::finetune::{init_adapters, AdapterInit, FineTuner};
+use coala::finetune::{init_adapters, AdapterInit, DeviceFineTuner, FineTuner};
 use coala::model::ModelWeights;
 use coala::runtime::Executor;
 
@@ -24,7 +24,7 @@ fn main() -> coala::Result<()> {
     for strat in [AdapterInit::LoRA, AdapterInit::PiSSA, AdapterInit::CoalaA1] {
         let mut set =
             init_adapters(&ex, &spec, &weights, &corpus, strat, rank, "ft_calib", 3)?;
-        let tuner = FineTuner::new(&ex, &spec, rank);
+        let tuner = DeviceFineTuner::new(&ex, &spec, rank);
         let before = tuner.eval_tasks(&set, &bank, Some(128))?.average();
         let losses = tuner.train_on_batches(&mut set, &pool, 60, 1e-3)?;
         let after = tuner.eval_tasks(&set, &bank, Some(128))?.average();

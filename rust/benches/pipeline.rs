@@ -1,7 +1,9 @@
 //! Bench: the source-agnostic execution engine on the host route —
-//! sequential vs parallel plans over worker counts — plus the
-//! artifact-backed end-to-end pipeline, overlapped scheduler, and
-//! tree-TSQR when a device is available.
+//! sequential vs parallel plans over worker counts, on both the `small`
+//! and `large` synthetic configs — the host training subsystem's
+//! parallel gradient accumulation, plus the artifact-backed end-to-end
+//! pipeline, overlapped scheduler, and tree-TSQR when a device is
+//! available.
 //!
 //! Dumps `BENCH_pipeline.json` (mean/std/min per target) so future PRs
 //! have a perf trajectory baseline.  `COALA_BENCH_FAST=1` shrinks the
@@ -35,26 +37,54 @@ fn main() {
     let opts = BenchOpts::heavy().from_env();
 
     // ---- host route: engine plans over worker counts (always runs) ------
+    // `small` is the historical baseline; `large` (6 layers, 36
+    // projections, d=64/ff=192) is big enough that the parallel
+    // factorize stage and capture fan-out actually matter.
     let ex = Executor::from_manifest(synthetic_manifest()).unwrap();
-    let spec = ex.manifest.config("small").unwrap().clone();
-    let w = synthetic_weights(&spec, 1);
-    let src = SyntheticActivations::new(spec.clone(), 1);
-    let mut job = CompressionJob::new("small", resolve("coala").unwrap().method(), 0.5);
-    job.calib_batches = 6;
     let mut host_records = Vec::new();
-    for workers in [1usize, 2, 4, 8] {
-        let pipe = Pipeline::new(&ex, spec.clone(), &w)
-            .with_route(Route::Host)
-            .with_plan(EnginePlan::with_workers(workers));
-        let label = if workers == 1 {
-            "engine/host sequential (workers=1)".to_string()
-        } else {
-            format!("engine/host workers={workers}")
-        };
-        let stats = bench(&label, &opts, || {
-            std::hint::black_box(pipe.run_with_source(&job, &src).unwrap());
-        });
-        host_records.push(record(&stats, workers));
+    for cfg in ["small", "large"] {
+        let spec = ex.manifest.config(cfg).unwrap().clone();
+        let w = synthetic_weights(&spec, 1);
+        let src = SyntheticActivations::new(spec.clone(), 1);
+        let mut job = CompressionJob::new(cfg, resolve("coala").unwrap().method(), 0.5);
+        job.calib_batches = if cfg == "large" { 8 } else { 6 };
+        for workers in [1usize, 2, 4, 8] {
+            let pipe = Pipeline::new(&ex, spec.clone(), &w)
+                .with_route(Route::Host)
+                .with_plan(EnginePlan::with_workers(workers));
+            let label = if workers == 1 {
+                format!("engine/host {cfg} sequential (workers=1)")
+            } else {
+                format!("engine/host {cfg} workers={workers}")
+            };
+            let stats = bench(&label, &opts, || {
+                std::hint::black_box(pipe.run_with_source(&job, &src).unwrap());
+            });
+            host_records.push(record(&stats, workers));
+        }
+    }
+
+    // ---- host fine-tuning: parallel gradient accumulation ----------------
+    let mut ft_records = Vec::new();
+    {
+        use coala::finetune::{init_adapters_from_source, AdapterInit, FineTuner, HostFineTuner};
+        let spec = ex.manifest.config("large").unwrap().clone();
+        let w = synthetic_weights(&spec, 1);
+        let src = SyntheticActivations::new(spec.clone(), 1);
+        let corpus = Corpus::synthetic(spec.vocab, 4096, 1);
+        let set = init_adapters_from_source(&spec, &w, &src, AdapterInit::CoalaA1, 4, 2, 30)
+            .unwrap();
+        let pool = corpus
+            .train_batches("ft_train", spec.batch, spec.seq_len, 3, 11)
+            .unwrap();
+        for workers in [1usize, 2, 4, 8] {
+            let tuner = HostFineTuner::new(spec.clone(), 4).with_workers(workers);
+            let stats = bench(&format!("finetune/host large workers={workers}"), &opts, || {
+                let mut s = set.clone();
+                std::hint::black_box(tuner.train_on_batches(&mut s, &pool, 8, 1e-3).unwrap());
+            });
+            ft_records.push(record(&stats, workers));
+        }
     }
 
     // ---- artifact-backed targets (need artifacts/ + the pjrt feature) ----
@@ -98,6 +128,7 @@ fn main() {
 
     let out = Json::obj(vec![
         ("host_engine", Json::Arr(host_records)),
+        ("host_finetune", Json::Arr(ft_records)),
         ("device", Json::Arr(device_records)),
     ]);
     std::fs::write("BENCH_pipeline.json", out.dump()).unwrap();

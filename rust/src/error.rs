@@ -89,6 +89,18 @@ impl Error {
     pub fn context(self, msg: impl Into<String>) -> Self {
         Error::Context { msg: msg.into(), source: Box::new(self) }
     }
+    /// True iff this error (or the root of its `Context` chain) is a
+    /// numerical failure — the computation itself collapsed (e.g. a
+    /// non-positive Cholesky pivot in a Gram inversion), as opposed to
+    /// a setup/IO/config problem.  Drivers that *report* collapses
+    /// (Table 4) use this to tell the two apart.
+    pub fn is_numerical(&self) -> bool {
+        match self {
+            Error::Numerical(_) => true,
+            Error::Context { source, .. } => source.is_numerical(),
+            _ => false,
+        }
+    }
 }
 
 impl From<String> for Error {
@@ -112,5 +124,13 @@ mod tests {
         );
         let src = outer.source().expect("context keeps its source");
         assert_eq!(src.to_string(), "numerical failure: collapse");
+    }
+
+    #[test]
+    fn numerical_detection_unwraps_context() {
+        assert!(Error::Numerical("x".into()).is_numerical());
+        assert!(Error::Numerical("x".into()).context("stage").is_numerical());
+        assert!(!Error::Config("x".into()).is_numerical());
+        assert!(!Error::Config("x".into()).context("stage").is_numerical());
     }
 }

@@ -47,18 +47,13 @@ pub fn perplexity_host(
     Ok((total / count as f64).exp())
 }
 
-/// Mean NLL over a pool of (batch × seq_len+1) token batches — the host
-/// twin of the fine-tune loss (used by the Table 4 host route to score
-/// adapter initializations).
-pub fn pool_nll_host(
-    spec: &ModelSpec,
-    weights: &ModelWeights,
-    pool: &[Value],
-) -> Result<f64> {
-    let model = HostModel::new(spec, weights)?;
-    let table = model.logits_table();
-    let mut total = 0.0f64;
-    let mut count = 0usize;
+/// The teacher-forcing (current → next) token pairs of a pool of
+/// (batch × seq_len+1) batches, in stream order.  One walk shared by
+/// the pool-loss evaluator below and the host trainer's gradient
+/// batches ([`crate::finetune::grad::GradModel`]), so the loss both
+/// report is over literally the same pair multiset.
+pub fn pool_pairs(spec: &ModelSpec, pool: &[Value]) -> Result<Vec<(usize, usize)>> {
+    let mut pairs = Vec::new();
     for v in pool {
         let Value::I32(dims, data) = v else {
             return Err(Error::shape("token pool must be int batches".into()));
@@ -71,12 +66,26 @@ pub fn pool_nll_host(
             for t in 0..win - 1 {
                 let cur = data[row * win + t] as usize % spec.vocab;
                 let next = data[row * win + t + 1] as usize % spec.vocab;
-                total += nll(&table[cur], next);
-                count += 1;
+                pairs.push((cur, next));
             }
         }
     }
-    Ok(total / count.max(1) as f64)
+    Ok(pairs)
+}
+
+/// Mean NLL over a pool of (batch × seq_len+1) token batches — the host
+/// twin of the fine-tune loss (used by the Table 4 host route to score
+/// adapter initializations).
+pub fn pool_nll_host(
+    spec: &ModelSpec,
+    weights: &ModelWeights,
+    pool: &[Value],
+) -> Result<f64> {
+    let model = HostModel::new(spec, weights)?;
+    let table = model.logits_table();
+    let pairs = pool_pairs(spec, pool)?;
+    let total: f64 = pairs.iter().map(|&(cur, next)| nll(&table[cur], next)).sum();
+    Ok(total / pairs.len().max(1) as f64)
 }
 
 /// Probe-task accuracy through the host forward — the host twin of
@@ -197,6 +206,9 @@ mod tests {
         let pool = corpus
             .train_batches("train", spec.batch, spec.seq_len, 3, 5)
             .unwrap();
+        let pairs = pool_pairs(&spec, &pool).unwrap();
+        assert_eq!(pairs.len(), 3 * spec.batch * spec.seq_len);
+        assert!(pairs.iter().all(|&(c, n)| c < spec.vocab && n < spec.vocab));
         let base_nll = pool_nll_host(&spec, &w, &pool).unwrap();
         assert!(base_nll.is_finite() && base_nll > 0.0);
         // better than uniform guessing

@@ -8,6 +8,6 @@ pub mod host;
 pub mod perplexity;
 pub mod tasks;
 
-pub use host::{eval_tasks_host, perplexity_host, pool_nll_host};
+pub use host::{eval_tasks_host, perplexity_host, pool_nll_host, pool_pairs};
 pub use perplexity::perplexity;
 pub use tasks::{eval_tasks, TaskScores};

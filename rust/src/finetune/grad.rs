@@ -1,0 +1,566 @@
+//! Manual fp64 backprop for the synthetic per-token forward — the host
+//! twin of the `ft_step` artifact's gradient graph.
+//!
+//! [`GradModel`] mirrors [`crate::model::synthetic::HostModel`]'s
+//! architecture (embedding → gated per-token attention block → SiLU MLP
+//! → unembedding, RMS-norms throughout) with every compressible
+//! projection in *adapted* form: `W_eff = W_res + A·B` with the base
+//! `W_res` frozen and only the rank-r factors (A, B) trainable — exactly
+//! the Table 4 parameterization.  The backward pass is hand-derived and
+//! never materializes `∂L/∂W_eff` (an out×in matrix per projection per
+//! token); it accumulates the factor gradients directly:
+//!
+//! ```text
+//!   ∂L/∂A = dy · (B·x)ᵀ        (out × r)
+//!   ∂L/∂B = (Aᵀ·dy) · xᵀ      (r × in)
+//! ```
+//!
+//! where `x` is the projection input and `dy` the output cotangent —
+//! O((out+in)·r) per token instead of O(out·in).
+//!
+//! Everything runs at fp64: the finite-difference checker
+//! (`tests/grad_check.rs`) verifies every parameter group against
+//! central differences, which is only meaningful above f32 rounding.
+//!
+//! **Determinism.** The per-token forward means a batch's loss depends
+//! only on its (current, next) token-pair multiset.  Gradient
+//! accumulation fans the *distinct* current tokens across
+//! `util::threads` workers and reduces the per-token contributions in
+//! ascending token order — the same canonical fixed-order reduction the
+//! execution engine uses for calibration batches — so losses, gradients,
+//! and therefore whole training runs are bitwise-independent of the
+//! worker count.
+
+use super::init::AdapterSet;
+use crate::error::{Error, Result};
+use crate::runtime::manifest::ModelSpec;
+use crate::tensor::Matrix;
+use crate::util::threads::parallel_map;
+
+/// Projection slots of one layer, in `spec.compressible` family order.
+const SLOTS: [&str; 6] = ["wq", "wk", "wv", "wo", "w_up", "w_down"];
+
+/// One adapted projection: frozen residual + trainable rank-r factors.
+struct ProjParam {
+    w_res: Matrix<f64>,
+    a: Matrix<f64>,
+    b: Matrix<f64>,
+}
+
+/// Gradients of one projection's adapter factors, aligned with
+/// [`GradModel::proj_names`]: `(∂L/∂A, ∂L/∂B)`.
+pub type AdapterGrads = Vec<(Matrix<f64>, Matrix<f64>)>;
+
+/// The differentiable fp64 model: frozen base + trainable adapters.
+pub struct GradModel {
+    vocab: usize,
+    d_model: usize,
+    embed: Matrix<f64>,
+    unembed: Matrix<f64>,
+    lnf: Vec<f64>,
+    ln1: Vec<Vec<f64>>,
+    ln2: Vec<Vec<f64>>,
+    /// `spec.compressible`, the canonical projection order.
+    projs: Vec<String>,
+    /// Parameters aligned with `projs`.
+    params: Vec<ProjParam>,
+    /// `idx[layer][slot]` → flat index into `projs`/`params`.
+    idx: Vec<[usize; 6]>,
+}
+
+fn vec1_f64(w: &crate::model::ModelWeights, name: &str) -> Result<Vec<f64>> {
+    let (dims, data) = w
+        .tensors
+        .get(name)
+        .ok_or_else(|| Error::Config(format!("no parameter `{name}`")))?;
+    if dims.len() != 1 {
+        return Err(Error::shape(format!("{name} is {dims:?}, not 1-D")));
+    }
+    Ok(data.iter().map(|&x| x as f64).collect())
+}
+
+fn matvec(w: &Matrix<f64>, x: &[f64]) -> Vec<f64> {
+    (0..w.rows)
+        .map(|i| w.row(i).iter().zip(x).map(|(a, b)| a * b).sum::<f64>())
+        .collect()
+}
+
+/// `wᵀ·y` without materializing the transpose.
+fn matvec_t(w: &Matrix<f64>, y: &[f64]) -> Vec<f64> {
+    let mut out = vec![0.0; w.cols];
+    for (i, yi) in y.iter().enumerate() {
+        for (o, wij) in out.iter_mut().zip(w.row(i)) {
+            *o += wij * yi;
+        }
+    }
+    out
+}
+
+/// `dst += dy·xᵀ` (rank-1 accumulate).
+fn outer_acc(dst: &mut Matrix<f64>, dy: &[f64], x: &[f64]) {
+    debug_assert_eq!((dst.rows, dst.cols), (dy.len(), x.len()));
+    for (i, di) in dy.iter().enumerate() {
+        for (d, xj) in dst.row_mut(i).iter_mut().zip(x) {
+            *d += di * xj;
+        }
+    }
+}
+
+fn sigmoid(x: f64) -> f64 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+fn silu(x: f64) -> f64 {
+    x * sigmoid(x)
+}
+
+/// d silu / dx = σ(x)·(1 + x·(1 − σ(x))).
+fn silu_d(x: f64) -> f64 {
+    let s = sigmoid(x);
+    s * (1.0 + x * (1.0 - s))
+}
+
+/// The forward's normalization (same semantics as the f32 host model:
+/// mean-square in f64, ε = 1e-6).
+fn rmsnorm(x: &[f64], gain: &[f64]) -> Vec<f64> {
+    let ms = x.iter().map(|v| v * v).sum::<f64>() / x.len().max(1) as f64;
+    let inv = 1.0 / (ms + 1e-6).sqrt();
+    x.iter().zip(gain).map(|(v, g)| v * inv * g).collect()
+}
+
+/// Cotangent of [`rmsnorm`]: with `inv = (ms+ε)^{-1/2}` and
+/// `s = Σⱼ dyⱼ gⱼ xⱼ`,  `dxᵢ = inv·(gᵢ·dyᵢ − xᵢ·inv²·s/n)`.
+fn rmsnorm_bwd(x: &[f64], gain: &[f64], dy: &[f64]) -> Vec<f64> {
+    let n = x.len().max(1) as f64;
+    let ms = x.iter().map(|v| v * v).sum::<f64>() / n;
+    let inv = 1.0 / (ms + 1e-6).sqrt();
+    let s: f64 = dy.iter().zip(gain).zip(x).map(|((d, g), v)| d * g * v).sum();
+    x.iter()
+        .zip(gain)
+        .zip(dy)
+        .map(|((v, g), d)| inv * (g * d - v * inv * inv * s / n))
+        .collect()
+}
+
+/// Forward intermediates of one layer, recorded for the backward pass.
+struct LayerTape {
+    h_in: Vec<f64>,
+    a: Vec<f64>,
+    q: Vec<f64>,
+    k: Vec<f64>,
+    v: Vec<f64>,
+    gate: f64,
+    o_in: Vec<f64>,
+    h_mid: Vec<f64>,
+    m: Vec<f64>,
+    upre: Vec<f64>,
+    u: Vec<f64>,
+}
+
+impl GradModel {
+    /// Build the fp64 model from an adapter set: `set.frozen` supplies
+    /// the residual base (embedding, unembedding, norms, `W_res` per
+    /// projection), `set.adapters` the trainable factors.
+    pub fn new(spec: &ModelSpec, set: &AdapterSet) -> Result<GradModel> {
+        let w = &set.frozen;
+        let mut projs = Vec::with_capacity(spec.compressible.len());
+        let mut params = Vec::with_capacity(spec.compressible.len());
+        for proj in &spec.compressible {
+            let (a, b) = set
+                .adapters
+                .get(proj)
+                .ok_or_else(|| Error::Config(format!("no adapter for {proj}")))?;
+            let w_res = w.matrix(proj)?.cast::<f64>();
+            if a.rows != w_res.rows || b.cols != w_res.cols || a.cols != b.rows {
+                return Err(Error::shape(format!(
+                    "{proj}: adapter ({}x{})·({}x{}) does not match W {}x{}",
+                    a.rows, a.cols, b.rows, b.cols, w_res.rows, w_res.cols
+                )));
+            }
+            projs.push(proj.clone());
+            params.push(ProjParam { w_res, a: a.cast(), b: b.cast() });
+        }
+        let mut idx = Vec::with_capacity(spec.n_layers);
+        let mut ln1 = Vec::with_capacity(spec.n_layers);
+        let mut ln2 = Vec::with_capacity(spec.n_layers);
+        for l in 0..spec.n_layers {
+            let mut row = [0usize; 6];
+            for (s, slot) in SLOTS.iter().enumerate() {
+                let name = format!("l{l}.{slot}");
+                row[s] = projs
+                    .iter()
+                    .position(|p| *p == name)
+                    .ok_or_else(|| Error::Config(format!("projection `{name}` missing")))?;
+            }
+            idx.push(row);
+            ln1.push(vec1_f64(w, &format!("l{l}.ln1"))?);
+            ln2.push(vec1_f64(w, &format!("l{l}.ln2"))?);
+        }
+        Ok(GradModel {
+            vocab: spec.vocab,
+            d_model: spec.d_model,
+            embed: w.matrix("embed")?.cast(),
+            unembed: w.matrix("unembed")?.cast(),
+            lnf: vec1_f64(w, "lnf")?,
+            ln1,
+            ln2,
+            projs,
+            params,
+            idx,
+        })
+    }
+
+    pub fn n_projs(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn proj_names(&self) -> &[String] {
+        &self.projs
+    }
+
+    /// The trainable factors of projection `i` (mutable — the optimizer
+    /// updates these in place between gradient evaluations).
+    pub fn adapter_at_mut(&mut self, i: usize) -> (&mut Matrix<f64>, &mut Matrix<f64>) {
+        let p = &mut self.params[i];
+        (&mut p.a, &mut p.b)
+    }
+
+    /// Factor pair by projection name (the gradient checker's handle).
+    pub fn adapter_mut(&mut self, proj: &str) -> Result<(&mut Matrix<f64>, &mut Matrix<f64>)> {
+        let i = self
+            .projs
+            .iter()
+            .position(|p| p == proj)
+            .ok_or_else(|| Error::Config(format!("no adapter for {proj}")))?;
+        Ok(self.adapter_at_mut(i))
+    }
+
+    /// Write the (trained) factors back into `set.adapters` as f32.
+    /// `set.frozen` is untouched — the adapted model stays
+    /// `W_res + A·B`.
+    pub fn write_back(&self, set: &mut AdapterSet) {
+        for (proj, p) in self.projs.iter().zip(&self.params) {
+            set.adapters.insert(proj.clone(), (p.a.cast(), p.b.cast()));
+        }
+    }
+
+    /// Effective projection weights `W_res + A·B`, aligned with
+    /// `projs`.  Recomputed per loss/gradient call so factor mutations
+    /// (optimizer steps, finite-difference probes) always take effect.
+    fn effective(&self) -> Result<Vec<Matrix<f64>>> {
+        self.params
+            .iter()
+            .map(|p| p.w_res.add(&crate::tensor::ops::matmul(&p.a, &p.b)?))
+            .collect()
+    }
+
+    /// One per-token forward, recording the tape.  Returns the layer
+    /// tapes, the final hidden state, and the logits.
+    fn forward_token(
+        &self,
+        effs: &[Matrix<f64>],
+        token: usize,
+    ) -> (Vec<LayerTape>, Vec<f64>, Vec<f64>) {
+        let sqrt_d = (self.d_model as f64).sqrt();
+        let mut h: Vec<f64> = self.embed.row(token % self.vocab).to_vec();
+        let mut tapes = Vec::with_capacity(self.idx.len());
+        for (l, slots) in self.idx.iter().enumerate() {
+            let h_in = h.clone();
+            let a = rmsnorm(&h_in, &self.ln1[l]);
+            let q = matvec(&effs[slots[0]], &a);
+            let k = matvec(&effs[slots[1]], &a);
+            let v = matvec(&effs[slots[2]], &a);
+            let qk: f64 = q.iter().zip(&k).map(|(x, y)| x * y).sum();
+            let gate = sigmoid(qk / sqrt_d);
+            let o_in: Vec<f64> = v.iter().map(|x| x * gate).collect();
+            let o = matvec(&effs[slots[3]], &o_in);
+            let h_mid: Vec<f64> = h_in.iter().zip(&o).map(|(x, y)| x + y).collect();
+            let m = rmsnorm(&h_mid, &self.ln2[l]);
+            let upre = matvec(&effs[slots[4]], &m);
+            let u: Vec<f64> = upre.iter().map(|&x| silu(x)).collect();
+            let down = matvec(&effs[slots[5]], &u);
+            h = h_mid.iter().zip(&down).map(|(x, y)| x + y).collect();
+            tapes.push(LayerTape { h_in, a, q, k, v, gate, o_in, h_mid, m, upre, u });
+        }
+        let hf = rmsnorm(&h, &self.lnf);
+        let logits = matvec(&self.unembed, &hf);
+        (tapes, h, logits)
+    }
+
+    /// Backward through one token's tape, accumulating adapter-factor
+    /// gradients into `grads` (aligned with `projs`).
+    fn backward_token(
+        &self,
+        effs: &[Matrix<f64>],
+        tapes: &[LayerTape],
+        h_final: &[f64],
+        dlogits: &[f64],
+        grads: &mut [(Matrix<f64>, Matrix<f64>)],
+    ) {
+        let sqrt_d = (self.d_model as f64).sqrt();
+        let accum = |grads: &mut [(Matrix<f64>, Matrix<f64>)], pi: usize, x: &[f64], dy: &[f64]| {
+            let p = &self.params[pi];
+            let bx = matvec(&p.b, x);
+            outer_acc(&mut grads[pi].0, dy, &bx);
+            let aty = matvec_t(&p.a, dy);
+            outer_acc(&mut grads[pi].1, &aty, x);
+        };
+
+        let dhf = matvec_t(&self.unembed, dlogits);
+        let mut dh = rmsnorm_bwd(h_final, &self.lnf, &dhf);
+        for (l, slots) in self.idx.iter().enumerate().rev() {
+            let t = &tapes[l];
+            // --- MLP half: h_out = h_mid + W_down·silu(W_up·m) -------------
+            let ddown = dh;
+            accum(grads, slots[5], &t.u, &ddown);
+            let du = matvec_t(&effs[slots[5]], &ddown);
+            let dupre: Vec<f64> =
+                du.iter().zip(&t.upre).map(|(d, &x)| d * silu_d(x)).collect();
+            accum(grads, slots[4], &t.m, &dupre);
+            let dm = matvec_t(&effs[slots[4]], &dupre);
+            let dh_mid_norm = rmsnorm_bwd(&t.h_mid, &self.ln2[l], &dm);
+            // residual: dL/dh_mid = dL/dh_out + (through ln2)
+            let dh_mid: Vec<f64> =
+                ddown.iter().zip(&dh_mid_norm).map(|(x, y)| x + y).collect();
+            // --- attention half: h_mid = h_in + Wo·(gate·Wv·a) -------------
+            let do_ = &dh_mid;
+            accum(grads, slots[3], &t.o_in, do_);
+            let do_in = matvec_t(&effs[slots[3]], do_);
+            let dv: Vec<f64> = do_in.iter().map(|d| d * t.gate).collect();
+            let dgate: f64 = do_in.iter().zip(&t.v).map(|(d, v)| d * v).sum();
+            let dqk = dgate * t.gate * (1.0 - t.gate) / sqrt_d;
+            let dq: Vec<f64> = t.k.iter().map(|k| dqk * k).collect();
+            let dk: Vec<f64> = t.q.iter().map(|q| dqk * q).collect();
+            accum(grads, slots[0], &t.a, &dq);
+            accum(grads, slots[1], &t.a, &dk);
+            accum(grads, slots[2], &t.a, &dv);
+            let mut da = matvec_t(&effs[slots[0]], &dq);
+            for (d, x) in da.iter_mut().zip(matvec_t(&effs[slots[1]], &dk)) {
+                *d += x;
+            }
+            for (d, x) in da.iter_mut().zip(matvec_t(&effs[slots[2]], &dv)) {
+                *d += x;
+            }
+            let dh_in_norm = rmsnorm_bwd(&t.h_in, &self.ln1[l], &da);
+            dh = dh_mid.iter().zip(&dh_in_norm).map(|(x, y)| x + y).collect();
+        }
+        // dh now holds ∂L/∂embed-row — the embedding is frozen, so it is
+        // dropped here.
+    }
+
+    /// Group (cur → next) pairs by current token: sorted distinct
+    /// tokens, each with a vocab-length target-count vector.  The sort
+    /// order is the canonical reduction order.
+    fn group_pairs(&self, pairs: &[(usize, usize)]) -> Vec<(usize, Vec<f64>)> {
+        let mut by_tok: std::collections::BTreeMap<usize, Vec<f64>> = Default::default();
+        for &(cur, next) in pairs {
+            by_tok.entry(cur % self.vocab).or_insert_with(|| vec![0.0; self.vocab])
+                [next % self.vocab] += 1.0;
+        }
+        by_tok.into_iter().collect()
+    }
+
+    /// Mean cross-entropy of the adapted model over teacher-forcing
+    /// pairs (fp64 end to end).
+    pub fn loss(&self, pairs: &[(usize, usize)]) -> Result<f64> {
+        Ok(self.loss_and_grads_inner(pairs, 1, false)?.0)
+    }
+
+    /// Mean cross-entropy and adapter-factor gradients over `pairs`,
+    /// fanned across up to `workers` threads.  Bitwise-independent of
+    /// `workers`: per-token contributions are reduced in ascending
+    /// token order regardless of which thread produced them.
+    pub fn loss_and_grads(
+        &self,
+        pairs: &[(usize, usize)],
+        workers: usize,
+    ) -> Result<(f64, AdapterGrads)> {
+        let (loss, grads) = self.loss_and_grads_inner(pairs, workers, true)?;
+        Ok((loss, grads.expect("gradients requested")))
+    }
+
+    fn loss_and_grads_inner(
+        &self,
+        pairs: &[(usize, usize)],
+        workers: usize,
+        want_grads: bool,
+    ) -> Result<(f64, Option<AdapterGrads>)> {
+        if pairs.is_empty() {
+            return Err(Error::Config("loss needs ≥ 1 token pair".into()));
+        }
+        let effs = self.effective()?;
+        let groups = self.group_pairs(pairs);
+        let zero_grads = || -> AdapterGrads {
+            self.params
+                .iter()
+                .map(|p| {
+                    (
+                        Matrix::zeros(p.a.rows, p.a.cols),
+                        Matrix::zeros(p.b.rows, p.b.cols),
+                    )
+                })
+                .collect()
+        };
+
+        // One forward (+ backward) per distinct current token, processed
+        // in fixed-size chunks of the sorted group list with ONE gradient
+        // accumulator per chunk (backward_token accumulates in place, so
+        // per-token zero-initialized sets would be pure allocation
+        // churn).  Chunk boundaries are a constant of the input — never
+        // of `workers` — so the reduction stays bitwise-independent of
+        // the worker count.
+        const CHUNK: usize = 8;
+        let n_chunks = (groups.len() + CHUNK - 1) / CHUNK;
+        let per_chunk = parallel_map(n_chunks, workers, |ci| {
+            let mut loss_c = 0.0;
+            let mut g_c = want_grads.then(&zero_grads);
+            for (token, counts) in &groups[ci * CHUNK..((ci + 1) * CHUNK).min(groups.len())] {
+                let (tapes, h_final, logits) = self.forward_token(&effs, *token);
+                let mx = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                let lse = mx + logits.iter().map(|&x| (x - mx).exp()).sum::<f64>().ln();
+                let ct: f64 = counts.iter().sum();
+                loss_c += ct * lse;
+                for (c, l) in counts.iter().zip(&logits) {
+                    loss_c -= c * l;
+                }
+                if let Some(g) = g_c.as_mut() {
+                    // dL/dlogits_j = ct·softmax_j − counts_j  (1/N later)
+                    let dlogits: Vec<f64> = logits
+                        .iter()
+                        .zip(counts)
+                        .map(|(&l, c)| ct * (l - lse).exp() - c)
+                        .collect();
+                    self.backward_token(&effs, &tapes, &h_final, &dlogits, g);
+                }
+            }
+            (loss_c, g_c)
+        });
+
+        // canonical reduction: ascending chunk (= token) order
+        let n = pairs.len() as f64;
+        let mut total = 0.0;
+        let mut grads = want_grads.then(&zero_grads);
+        for (loss_c, g_c) in per_chunk {
+            total += loss_c;
+            if let (Some(acc), Some(g)) = (grads.as_mut(), g_c) {
+                for ((aa, ab), (ga, gb)) in acc.iter_mut().zip(g) {
+                    for (x, y) in aa.data.iter_mut().zip(ga.data) {
+                        *x += y;
+                    }
+                    for (x, y) in ab.data.iter_mut().zip(gb.data) {
+                        *x += y;
+                    }
+                }
+            }
+        }
+        if let Some(acc) = grads.as_mut() {
+            for (ga, gb) in acc.iter_mut() {
+                for x in ga.data.iter_mut() {
+                    *x /= n;
+                }
+                for x in gb.data.iter_mut() {
+                    *x /= n;
+                }
+            }
+        }
+        Ok((total / n, grads))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calib::synthetic::SyntheticActivations;
+    use crate::finetune::init::{init_adapters_from_source, AdapterInit};
+    use crate::model::synthetic::{synthetic_manifest, synthetic_weights};
+
+    fn model_for(strategy: AdapterInit) -> (crate::runtime::manifest::ModelSpec, AdapterSet) {
+        let m = synthetic_manifest();
+        let spec = m.config("tiny").unwrap().clone();
+        let w = synthetic_weights(&spec, 5);
+        let src = SyntheticActivations::new(spec.clone(), 5);
+        let set = init_adapters_from_source(&spec, &w, &src, strategy, 4, 2, 30).unwrap();
+        (spec, set)
+    }
+
+    fn pairs() -> Vec<(usize, usize)> {
+        let corpus = crate::calib::dataset::Corpus::synthetic(64, 512, 5);
+        let toks = corpus.split("ft_train").unwrap();
+        toks.windows(2).take(48).map(|w| (w[0] as usize, w[1] as usize)).collect()
+    }
+
+    #[test]
+    fn loss_is_finite_and_grouping_preserves_it() {
+        let (spec, set) = model_for(AdapterInit::PiSSA);
+        let model = GradModel::new(&spec, &set).unwrap();
+        let ps = pairs();
+        let loss = model.loss(&ps).unwrap();
+        assert!(loss.is_finite() && loss > 0.0, "loss {loss}");
+        // permuting the pair list must not change the grouped loss
+        let mut rev = ps.clone();
+        rev.reverse();
+        assert_eq!(loss, model.loss(&rev).unwrap());
+    }
+
+    #[test]
+    fn lora_init_has_zero_b_gradient_and_nonzero_a_gradient() {
+        // LoRA: A = 0 ⇒ ∂L/∂B = Aᵀ·dy·xᵀ = 0 exactly; ∂L/∂A = dy·(Bx)ᵀ ≠ 0
+        let (spec, set) = model_for(AdapterInit::LoRA);
+        let model = GradModel::new(&spec, &set).unwrap();
+        let (_, grads) = model.loss_and_grads(&pairs(), 1).unwrap();
+        let a_norm: f64 = grads.iter().map(|(ga, _)| crate::tensor::ops::fro(ga)).sum();
+        let b_norm: f64 = grads.iter().map(|(_, gb)| crate::tensor::ops::fro(gb)).sum();
+        assert_eq!(b_norm, 0.0, "B gradient must vanish at A = 0");
+        assert!(a_norm > 0.0, "A gradient must not vanish");
+    }
+
+    #[test]
+    fn gradients_are_bitwise_worker_invariant() {
+        let (spec, set) = model_for(AdapterInit::CoalaA1);
+        let model = GradModel::new(&spec, &set).unwrap();
+        let ps = pairs();
+        let (l1, g1) = model.loss_and_grads(&ps, 1).unwrap();
+        for workers in [2usize, 4, 8] {
+            let (lw, gw) = model.loss_and_grads(&ps, workers).unwrap();
+            assert_eq!(l1.to_bits(), lw.to_bits(), "loss differs at {workers} workers");
+            for (i, ((a1, b1), (aw, bw))) in g1.iter().zip(&gw).enumerate() {
+                assert_eq!(a1.data, aw.data, "dA[{i}] differs at {workers} workers");
+                assert_eq!(b1.data, bw.data, "dB[{i}] differs at {workers} workers");
+            }
+        }
+    }
+
+    #[test]
+    fn adapter_mutation_changes_the_loss() {
+        let (spec, set) = model_for(AdapterInit::PiSSA);
+        let mut model = GradModel::new(&spec, &set).unwrap();
+        let ps = pairs();
+        let before = model.loss(&ps).unwrap();
+        {
+            let (a, _) = model.adapter_mut("l0.wq").unwrap();
+            a.set(0, 0, a.get(0, 0) + 0.5);
+        }
+        let after = model.loss(&ps).unwrap();
+        assert_ne!(before, after, "effective weights must be recomputed per call");
+    }
+
+    #[test]
+    fn write_back_round_trips_to_f32() {
+        let (spec, set0) = model_for(AdapterInit::CoalaA2);
+        let mut set = set0.clone();
+        let mut model = GradModel::new(&spec, &set).unwrap();
+        {
+            let (a, b) = model.adapter_mut("l1.wv").unwrap();
+            a.set(0, 0, 7.0);
+            b.set(0, 0, -3.0);
+        }
+        model.write_back(&mut set);
+        let (a, b) = &set.adapters["l1.wv"];
+        assert_eq!(a.get(0, 0), 7.0);
+        assert_eq!(b.get(0, 0), -3.0);
+        // untouched projections survive the f32 round trip
+        let (orig_a, _) = &set0.adapters["l0.wq"];
+        let (new_a, _) = &set.adapters["l0.wq"];
+        assert_eq!(orig_a.data, new_a.data);
+    }
+}

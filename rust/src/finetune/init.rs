@@ -41,6 +41,21 @@ impl AdapterInit {
         matches!(self, AdapterInit::CorDA | AdapterInit::CoalaA1 | AdapterInit::CoalaA2)
     }
 
+    /// Parse a strategy name (the `--init` CLI flag): case-insensitive,
+    /// accepting both the display names and the registry-style aliases.
+    pub fn resolve(name: &str) -> crate::error::Result<AdapterInit> {
+        match name.to_ascii_lowercase().as_str() {
+            "lora" => Ok(AdapterInit::LoRA),
+            "pissa" | "svd" => Ok(AdapterInit::PiSSA),
+            "corda" => Ok(AdapterInit::CorDA),
+            "coala1" | "alpha1" | "coala(a=1)" => Ok(AdapterInit::CoalaA1),
+            "coala2" | "alpha2" | "coala(a=2)" => Ok(AdapterInit::CoalaA2),
+            other => Err(Error::Config(format!(
+                "unknown adapter init `{other}` (try lora|pissa|corda|coala1|coala2)"
+            ))),
+        }
+    }
+
     /// The compressor-registry spec computing this init's factorization
     /// (None for LoRA, which is not a factorization of W).  Table 4 is
     /// exactly a comparison of registry methods used as adapter inits.
@@ -63,6 +78,27 @@ pub struct AdapterSet {
     pub adapters: BTreeMap<String, (Matrix<f32>, Matrix<f32>)>,
     /// base weights with W_res = W − A·B substituted into each projection
     pub frozen: ModelWeights,
+}
+
+impl AdapterSet {
+    /// The adapted model as a full weight set: `W_res + A·B` merged back
+    /// into every projection.  Used by the host evaluators (the device
+    /// route keeps factors separate — its artifacts take them as inputs).
+    pub fn merged(&self) -> Result<ModelWeights> {
+        let mut out = self.frozen.clone();
+        for (proj, (a, b)) in &self.adapters {
+            let delta = crate::tensor::ops::matmul(a, b)?;
+            let eff = out.matrix(proj)?.add(&delta)?;
+            out.set_matrix(proj, &eff)?;
+        }
+        Ok(out)
+    }
+
+    /// True iff every adapter factor is finite (a Gram-inversion
+    /// collapse shows up here as NaN/inf factors).
+    pub fn all_finite(&self) -> bool {
+        self.adapters.values().all(|(a, b)| a.all_finite() && b.all_finite())
+    }
 }
 
 /// Split full factors into a balanced (A√σ, √σ⁻¹B) pair at rank r —
@@ -308,6 +344,38 @@ mod tests {
                 let err = fro(&rec.sub(&orig).unwrap()) / fro(&orig);
                 assert!(err < 1e-3, "{}/{proj}: {err}", strat.name());
             }
+        }
+    }
+
+    #[test]
+    fn init_names_resolve() {
+        assert_eq!(AdapterInit::resolve("LoRA").unwrap(), AdapterInit::LoRA);
+        assert_eq!(AdapterInit::resolve("pissa").unwrap(), AdapterInit::PiSSA);
+        assert_eq!(AdapterInit::resolve("coala1").unwrap(), AdapterInit::CoalaA1);
+        assert_eq!(AdapterInit::resolve("ALPHA2").unwrap(), AdapterInit::CoalaA2);
+        assert_eq!(AdapterInit::resolve("CoALA(a=1)").unwrap(), AdapterInit::CoalaA1);
+        assert!(AdapterInit::resolve("nope").is_err());
+    }
+
+    #[test]
+    fn merged_set_reconstructs_the_base_model_at_init() {
+        // merged() = W_res + A·B must equal the original weights for any
+        // residualized init (the adapted model starts at the base model)
+        use crate::calib::synthetic::SyntheticActivations;
+        use crate::model::synthetic::{synthetic_manifest, synthetic_weights};
+        let m = synthetic_manifest();
+        let spec = m.config("tiny").unwrap().clone();
+        let w = synthetic_weights(&spec, 7);
+        let src = SyntheticActivations::new(spec.clone(), 7);
+        let set = init_adapters_from_source(&spec, &w, &src, AdapterInit::PiSSA, 4, 2, 30)
+            .unwrap();
+        assert!(set.all_finite());
+        let merged = set.merged().unwrap();
+        for proj in &spec.compressible {
+            let orig = w.matrix(proj).unwrap();
+            let got = merged.matrix(proj).unwrap();
+            let err = fro(&got.sub(&orig).unwrap()) / fro(&orig);
+            assert!(err < 1e-3, "{proj}: {err}");
         }
     }
 

@@ -4,11 +4,19 @@
 //! W_eff = W_res + A·B.  The *initialization* is the experimental
 //! variable: LoRA (zero ΔW), PiSSA (top-r SVD of W), CorDA (original,
 //! Gram-inverting), and COALA α ∈ {1, 2} (robust, context-aware).
-//! Training itself is the `ft_step_<cfg>_r<r>` artifact — one Adam step
-//! over the adapters with the base frozen — driven from this module.
+//! Training runs through the route-agnostic [`FineTuner`] trait:
+//! [`DeviceFineTuner`] drives the `ft_step_<cfg>_r<r>` artifact, and
+//! [`HostFineTuner`] is the pure-Rust training subsystem — the manual
+//! fp64 backward pass of [`grad::GradModel`] plus [`optim::Adam`] under
+//! the shared [`optim::cosine_decay_lr`] schedule — so Table 4's
+//! fine-tuning loop closes with zero artifacts.
 
+pub mod grad;
 pub mod init;
+pub mod optim;
 pub mod trainer;
 
+pub use grad::GradModel;
 pub use init::{init_adapters, init_adapters_from_source, AdapterInit, AdapterSet};
-pub use trainer::{FineTuner, FtReport};
+pub use optim::{cosine_decay_lr, Adam};
+pub use trainer::{DeviceFineTuner, FineTuner, FtReport, HostFineTuner};

@@ -1,0 +1,162 @@
+//! Optimizer + learning-rate schedule shared by both fine-tuning routes.
+//!
+//! The `ft_step` artifact bakes Adam with the hyperparameters below into
+//! its AOT graph and takes the already-scheduled learning rate as a
+//! scalar input; the host trainer ([`super::trainer::HostFineTuner`])
+//! runs the same update in pure Rust at fp64.  The schedule
+//! ([`cosine_decay_lr`]) was previously duplicated host-side in the
+//! device trainer's step loop — both routes now call this one function,
+//! so Table 4's training protocol cannot drift between backends.
+
+use crate::tensor::Matrix;
+
+/// Adam first-moment decay (the artifact trainer's value).
+pub const ADAM_BETA1: f64 = 0.9;
+/// Adam second-moment decay.
+pub const ADAM_BETA2: f64 = 0.999;
+/// Adam denominator fuzz.
+pub const ADAM_EPS: f64 = 1e-8;
+/// Linear-warmup length in steps.
+pub const WARMUP_STEPS: usize = 10;
+/// Fraction of the cosine half-period swept by `total_steps` (the decay
+/// ends at ~10 % of the base LR rather than 0, matching the artifact
+/// trainer).
+pub const COSINE_HORIZON: f64 = 0.9;
+
+/// The scheduled learning rate for `step` (0-based) of a `total_steps`
+/// run: linear warmup over [`WARMUP_STEPS`] steps into a cosine decay
+/// over [`COSINE_HORIZON`] of the half-period.
+pub fn cosine_decay_lr(base: f64, step: usize, total_steps: usize) -> f64 {
+    let warm = ((step + 1) as f64 / WARMUP_STEPS as f64).min(1.0);
+    let cos = 0.5
+        * (1.0
+            + (std::f64::consts::PI * step as f64 / total_steps.max(1) as f64 * COSINE_HORIZON)
+                .cos());
+    base * warm * cos
+}
+
+/// Adam over an indexed set of parameter groups (one group per adapter
+/// factor).  State is fp64 and allocated lazily on the first update of
+/// each group, so the optimizer needs no shape bookkeeping up front.
+/// The update order is fixed by the caller's group indices, and every
+/// operation is a deterministic elementwise fp64 map — optimizer steps
+/// are bitwise-reproducible for a given gradient sequence.
+pub struct Adam {
+    beta1: f64,
+    beta2: f64,
+    eps: f64,
+    /// Bias-correction step counter (1-based after the first
+    /// [`Adam::begin_step`]).
+    t: usize,
+    /// Per-group (m, v) moment estimates.
+    state: Vec<Option<(Matrix<f64>, Matrix<f64>)>>,
+}
+
+impl Adam {
+    pub fn new(n_groups: usize) -> Adam {
+        Adam {
+            beta1: ADAM_BETA1,
+            beta2: ADAM_BETA2,
+            eps: ADAM_EPS,
+            t: 0,
+            state: (0..n_groups).map(|_| None).collect(),
+        }
+    }
+
+    /// Advance the bias-correction counter — call once per optimization
+    /// step, before the group updates of that step.
+    pub fn begin_step(&mut self) {
+        self.t += 1;
+    }
+
+    /// One Adam update of `param` from `grad` for parameter group
+    /// `group` at the (already scheduled) learning rate `lr`.
+    pub fn update(&mut self, group: usize, lr: f64, param: &mut Matrix<f64>, grad: &Matrix<f64>) {
+        assert!(self.t > 0, "Adam::begin_step before the first update");
+        assert_eq!(
+            (param.rows, param.cols),
+            (grad.rows, grad.cols),
+            "Adam group {group}: param/grad shape mismatch"
+        );
+        let (m, v) = self.state[group].get_or_insert_with(|| {
+            (
+                Matrix::zeros(param.rows, param.cols),
+                Matrix::zeros(param.rows, param.cols),
+            )
+        });
+        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+        for ((p, g), (mi, vi)) in param
+            .data
+            .iter_mut()
+            .zip(&grad.data)
+            .zip(m.data.iter_mut().zip(v.data.iter_mut()))
+        {
+            *mi = self.beta1 * *mi + (1.0 - self.beta1) * g;
+            *vi = self.beta2 * *vi + (1.0 - self.beta2) * g * g;
+            let m_hat = *mi / bc1;
+            let v_hat = *vi / bc2;
+            *p -= lr * m_hat / (v_hat.sqrt() + self.eps);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_matches_the_device_trainer_formula() {
+        // the exact expression the device trainer used inline before the
+        // dedup — byte-for-byte the same arithmetic
+        for (step, total) in [(0usize, 100usize), (5, 100), (17, 100), (99, 100), (3, 16)] {
+            let warm = ((step + 1) as f64 / 10.0).min(1.0);
+            let cos =
+                0.5 * (1.0 + (std::f64::consts::PI * step as f64 / total as f64 * 0.9).cos());
+            assert_eq!(cosine_decay_lr(1e-3, step, total), 1e-3 * warm * cos);
+        }
+    }
+
+    #[test]
+    fn schedule_warms_up_then_decays() {
+        let total = 100;
+        let lrs: Vec<f64> = (0..total).map(|i| cosine_decay_lr(1.0, i, total)).collect();
+        // warmup: strictly increasing at the start
+        assert!(lrs[0] < lrs[4] && lrs[4] < lrs[9]);
+        // decay: strictly decreasing after warmup
+        assert!(lrs[20] > lrs[50] && lrs[50] > lrs[99]);
+        // ends low but not at zero (COSINE_HORIZON < 1)
+        assert!(lrs[99] > 0.0 && lrs[99] < 0.1);
+        assert!(lrs.iter().all(|l| l.is_finite() && *l >= 0.0));
+    }
+
+    #[test]
+    fn adam_minimizes_a_quadratic() {
+        // minimize ½‖x − c‖² per entry; gradient is (x − c)
+        let c = Matrix::<f64>::from_fn(3, 4, |i, j| (i as f64) - 0.5 * (j as f64));
+        let mut x = Matrix::<f64>::zeros(3, 4);
+        let mut adam = Adam::new(1);
+        for _ in 0..400 {
+            adam.begin_step();
+            let grad = x.sub(&c).unwrap();
+            adam.update(0, 0.05, &mut x, &grad);
+        }
+        let err = crate::tensor::ops::fro(&x.sub(&c).unwrap());
+        assert!(err < 1e-2, "Adam did not converge: residual {err}");
+    }
+
+    #[test]
+    fn adam_is_deterministic() {
+        let run = || {
+            let mut x = Matrix::<f64>::randn(4, 4, 7);
+            let mut adam = Adam::new(1);
+            for t in 0..50 {
+                adam.begin_step();
+                let g = Matrix::<f64>::randn(4, 4, 100 + t);
+                adam.update(0, cosine_decay_lr(1e-2, t as usize, 50), &mut x, &g);
+            }
+            x
+        };
+        assert_eq!(run().data, run().data);
+    }
+}

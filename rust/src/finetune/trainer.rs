@@ -1,8 +1,22 @@
-//! Adapter fine-tuning loop over the `ft_step_<cfg>_r<r>` artifact.
+//! Adapter fine-tuning — one [`FineTuner`] trait, two backends.
+//!
+//! [`DeviceFineTuner`] drives the `ft_step_<cfg>_r<r>` PJRT artifact
+//! (Adam state lives host-side between steps, the artifact is pure);
+//! [`HostFineTuner`] runs the same protocol in pure Rust: the fp64
+//! backward pass of [`super::grad::GradModel`] plus
+//! [`super::optim::Adam`] under the shared cosine-decay schedule.  Both
+//! routes train over a fixed batch pool with the loss recorded *before*
+//! each update, so Table 4's loss traces have identical semantics on
+//! either backend.  Drivers obtain the right implementation from
+//! [`crate::repro::common::Env::fine_tuner`] — route resolution lives
+//! there, like the compressor registry, never in driver code.
 
+use super::grad::GradModel;
 use super::init::AdapterSet;
+use super::optim::{cosine_decay_lr, Adam};
 use crate::calib::dataset::{Corpus, TaskBank};
 use crate::error::{Error, Result};
+use crate::eval::TaskScores;
 use crate::runtime::executor::{Executor, Value};
 use crate::runtime::manifest::ModelSpec;
 use crate::tensor::Matrix;
@@ -15,21 +29,47 @@ pub struct FtReport {
     pub task_scores: crate::eval::TaskScores,
 }
 
+/// The route-agnostic fine-tuning interface (Table 4's protocol).
+pub trait FineTuner {
+    /// Train for `steps` Adam steps at base LR `lr` (cosine-decayed via
+    /// [`super::optim::cosine_decay_lr`]), cycling over a fixed batch
+    /// pool — the "small fine-tuning set, multiple epochs" regime.
+    /// Mutates `set.adapters`; returns the per-step losses, each
+    /// measured before its update.
+    fn train_on_batches(
+        &self,
+        set: &mut AdapterSet,
+        pool: &[Value],
+        steps: usize,
+        lr: f64,
+    ) -> Result<Vec<f32>>;
+
+    /// Probe-task accuracy of the adapted model `W_res + A·B`.
+    fn eval_tasks(
+        &self,
+        set: &AdapterSet,
+        bank: &TaskBank,
+        limit: Option<usize>,
+    ) -> Result<TaskScores>;
+}
+
+// ------------------------------------------------------------ device route
+
 /// Drives the AOT train-step: state lives host-side between steps (the
 /// artifact is pure), tokens stream from the ft_train split.
-pub struct FineTuner<'a> {
+pub struct DeviceFineTuner<'a> {
     pub ex: &'a Executor,
-    pub spec: &'a ModelSpec,
+    pub spec: ModelSpec,
     pub rank: usize,
     step_artifact: String,
     logits_artifact: String,
 }
 
-impl<'a> FineTuner<'a> {
-    pub fn new(ex: &'a Executor, spec: &'a ModelSpec, rank: usize) -> FineTuner<'a> {
-        FineTuner {
+impl<'a> DeviceFineTuner<'a> {
+    pub fn new(ex: &'a Executor, spec: &ModelSpec, rank: usize) -> DeviceFineTuner<'a> {
+        DeviceFineTuner {
             ex,
-            spec,
+            spec: spec.clone(),
             rank,
             step_artifact: format!("ft_step_{}_r{rank}", spec.name),
             logits_artifact: format!("ft_logits_{}_r{rank}", spec.name),
@@ -50,8 +90,8 @@ impl<'a> FineTuner<'a> {
         Ok(out)
     }
 
-    /// Train for `steps` Adam steps at `lr` (cosine-decayed host-side),
-    /// sampling fresh windows from ft_train.  Mutates `set.adapters`.
+    /// Train for `steps` Adam steps at `lr`, sampling fresh windows from
+    /// ft_train.  Mutates `set.adapters`.
     pub fn train(
         &self,
         set: &mut AdapterSet,
@@ -62,19 +102,19 @@ impl<'a> FineTuner<'a> {
     ) -> Result<Vec<f32>> {
         let batches =
             corpus.train_batches("ft_train", self.spec.batch, self.spec.seq_len, steps, seed)?;
-        self.train_on_batches(set, &batches, steps, lr)
+        FineTuner::train_on_batches(self, set, &batches, steps, lr)
     }
+}
 
-    /// Train cycling over a fixed batch pool (deterministic; also the
-    /// "small fine-tuning set, multiple epochs" regime of Table 4).
-    pub fn train_on_batches(
+impl FineTuner for DeviceFineTuner<'_> {
+    fn train_on_batches(
         &self,
         set: &mut AdapterSet,
         pool: &[Value],
         steps: usize,
         lr: f64,
     ) -> Result<Vec<f32>> {
-        let frozen_vals = set.frozen.to_values(self.spec)?;
+        let frozen_vals = set.frozen.to_values(&self.spec)?;
         let mut ad_vals = self.adapter_values(set)?;
         let mut m_vals: Vec<Value> = ad_vals
             .iter()
@@ -85,9 +125,7 @@ impl<'a> FineTuner<'a> {
         let mut losses = Vec::with_capacity(steps);
         for i in 0..steps {
             let tokens = &pool[i % pool.len()];
-            let warm = ((i + 1) as f64 / 10.0).min(1.0);
-            let cos = 0.5 * (1.0 + (std::f64::consts::PI * i as f64 / steps as f64 * 0.9).cos());
-            let lr_i = (lr * warm * cos) as f32;
+            let lr_i = cosine_decay_lr(lr, i, steps) as f32;
             let mut inputs =
                 vec![tokens.clone(), Value::scalar_f32(lr_i), Value::scalar_f32(i as f32)];
             inputs.extend(frozen_vals.iter().cloned());
@@ -113,13 +151,13 @@ impl<'a> FineTuner<'a> {
     }
 
     /// Probe-task accuracy of the adapted model (ft_logits artifact).
-    pub fn eval_tasks(
+    fn eval_tasks(
         &self,
         set: &AdapterSet,
         bank: &TaskBank,
         limit: Option<usize>,
-    ) -> Result<crate::eval::TaskScores> {
-        let frozen_vals = set.frozen.to_values(self.spec)?;
+    ) -> Result<TaskScores> {
+        let frozen_vals = set.frozen.to_values(&self.spec)?;
         let ad_vals = self.adapter_values(set)?;
         let n = limit.unwrap_or(bank.n).min(bank.n);
         let n_tasks = bank.task_names.len();
@@ -166,12 +204,92 @@ impl<'a> FineTuner<'a> {
             accuracy.push(acc * 100.0);
             stderr.push((acc * (1.0 - acc) / cnt as f64).sqrt() * 100.0);
         }
-        Ok(crate::eval::TaskScores {
+        Ok(TaskScores {
             names: bank.task_names.clone(),
             accuracy,
             stderr,
             counts: total,
         })
+    }
+}
+
+// -------------------------------------------------------------- host route
+
+/// Pure-Rust fine-tuning for the synthetic environment: fp64 backprop
+/// through [`GradModel`] + [`Adam`], no artifacts, no PJRT.  Gradient
+/// accumulation fans across `workers` threads with a canonical
+/// fixed-order reduction, so training runs are bitwise-independent of
+/// the worker count (like calibration already is).
+pub struct HostFineTuner {
+    spec: ModelSpec,
+    pub rank: usize,
+    workers: usize,
+}
+
+impl HostFineTuner {
+    pub fn new(spec: ModelSpec, rank: usize) -> HostFineTuner {
+        HostFineTuner { spec, rank, workers: 1 }
+    }
+
+    /// Fan gradient accumulation across up to `workers` threads
+    /// (results are identical at any value).
+    pub fn with_workers(mut self, workers: usize) -> HostFineTuner {
+        self.workers = workers.max(1);
+        self
+    }
+}
+
+impl FineTuner for HostFineTuner {
+    fn train_on_batches(
+        &self,
+        set: &mut AdapterSet,
+        pool: &[Value],
+        steps: usize,
+        lr: f64,
+    ) -> Result<Vec<f32>> {
+        if pool.is_empty() {
+            return Err(Error::Config("host fine-tuning needs ≥ 1 batch".into()));
+        }
+        if set.rank != self.rank {
+            return Err(Error::Config(format!(
+                "adapter set is rank {} but the tuner was built for rank {} \
+                 (the device route's artifacts are rank-specific; the host \
+                 route enforces the same contract)",
+                set.rank, self.rank
+            )));
+        }
+        let mut model = GradModel::new(&self.spec, set)?;
+        let mut adam = Adam::new(2 * model.n_projs());
+        let pair_sets: Vec<Vec<(usize, usize)>> = pool
+            .iter()
+            .map(|v| crate::eval::pool_pairs(&self.spec, std::slice::from_ref(v)))
+            .collect::<Result<_>>()?;
+
+        let mut losses = Vec::with_capacity(steps);
+        for i in 0..steps {
+            let pairs = &pair_sets[i % pair_sets.len()];
+            let (loss, grads) = model.loss_and_grads(pairs, self.workers)?;
+            losses.push(loss as f32);
+            let lr_i = cosine_decay_lr(lr, i, steps);
+            adam.begin_step();
+            for gi in 0..model.n_projs() {
+                let (ga, gb) = &grads[gi];
+                let (a, b) = model.adapter_at_mut(gi);
+                adam.update(2 * gi, lr_i, a, ga);
+                adam.update(2 * gi + 1, lr_i, b, gb);
+            }
+        }
+        model.write_back(set);
+        Ok(losses)
+    }
+
+    fn eval_tasks(
+        &self,
+        set: &AdapterSet,
+        bank: &TaskBank,
+        limit: Option<usize>,
+    ) -> Result<TaskScores> {
+        crate::eval::eval_tasks_host(&self.spec, &set.merged()?, bank, limit)
     }
 }
 
@@ -207,7 +325,7 @@ mod tests {
         let mut set =
             init_adapters(&ex, &spec, &w, &corpus, AdapterInit::PiSSA, rank, "ft_calib", 2)
                 .unwrap();
-        let tuner = FineTuner::new(&ex, &spec, rank);
+        let tuner = DeviceFineTuner::new(&ex, &spec, rank);
         // deterministic: cycle a small fixed pool (epochs over a tiny
         // fine-tuning set — the actual Table 4 regime)
         let pool = corpus
@@ -235,12 +353,80 @@ mod tests {
         let corpus = Corpus::load("artifacts").unwrap();
         let set = init_adapters(&ex, &spec, &w, &corpus, AdapterInit::LoRA, rank, "ft_calib", 1)
             .unwrap();
-        let tuner = FineTuner::new(&ex, &spec, rank);
+        let tuner = DeviceFineTuner::new(&ex, &spec, rank);
         let bank = TaskBank::load("artifacts", "ft", &ex.manifest.task_names).unwrap();
         let scores = tuner.eval_tasks(&set, &bank, Some(32)).unwrap();
         assert_eq!(scores.names.len(), 8);
         // LoRA init = exactly the base model; ft facts are NEW, so
         // accuracy should be near chance (the adaptation gap exists)
         assert!(scores.average() < 60.0);
+    }
+
+    // ---- host route: artifact-free training ------------------------------
+
+    fn host_world() -> (ModelSpec, AdapterSet, Corpus) {
+        use crate::calib::synthetic::SyntheticActivations;
+        use crate::finetune::init::init_adapters_from_source;
+        use crate::model::synthetic::{synthetic_manifest, synthetic_weights};
+        let m = synthetic_manifest();
+        let spec = m.config("tiny").unwrap().clone();
+        let w = synthetic_weights(&spec, 3);
+        let src = SyntheticActivations::new(spec.clone(), 3);
+        let set =
+            init_adapters_from_source(&spec, &w, &src, AdapterInit::CoalaA1, 4, 2, 30).unwrap();
+        let corpus = Corpus::synthetic(spec.vocab, 4096, 3);
+        (spec, set, corpus)
+    }
+
+    #[test]
+    fn host_training_reduces_loss_and_keeps_adapters_finite() {
+        let (spec, mut set, corpus) = host_world();
+        let pool = corpus
+            .train_batches("ft_train", spec.batch, spec.seq_len, 3, 11)
+            .unwrap();
+        let tuner = HostFineTuner::new(spec.clone(), 4);
+        let losses = tuner.train_on_batches(&mut set, &pool, 60, 3e-3).unwrap();
+        assert_eq!(losses.len(), 60);
+        assert!(losses.iter().all(|l| l.is_finite()), "{losses:?}");
+        let head = (losses[0] + losses[1]) as f64 / 2.0;
+        let tail = (losses[58] + losses[59]) as f64 / 2.0;
+        assert!(tail < head - 0.02, "host loss did not go down: {head} -> {tail}");
+        for (proj, (a, b)) in &set.adapters {
+            assert!(a.all_finite() && b.all_finite(), "{proj} not finite");
+        }
+        // trained model evaluates end-to-end through the host forward
+        let bank = TaskBank::synthetic(
+            spec.vocab,
+            spec.seq_len,
+            "ft",
+            &crate::model::synthetic::synthetic_manifest().task_names,
+            96,
+            3,
+        )
+        .unwrap();
+        let scores = FineTuner::eval_tasks(&tuner, &set, &bank, None).unwrap();
+        assert_eq!(scores.names.len(), 8);
+    }
+
+    #[test]
+    fn host_training_is_bitwise_worker_invariant() {
+        let (spec, set, corpus) = host_world();
+        let pool = corpus
+            .train_batches("ft_train", spec.batch, spec.seq_len, 2, 7)
+            .unwrap();
+        let run = |workers: usize| {
+            let mut s = set.clone();
+            let tuner = HostFineTuner::new(spec.clone(), 4).with_workers(workers);
+            let losses = tuner.train_on_batches(&mut s, &pool, 20, 2e-3).unwrap();
+            (losses, s)
+        };
+        let (l1, s1) = run(1);
+        let (l4, s4) = run(4);
+        assert_eq!(l1, l4, "losses differ across worker counts");
+        for (proj, (a1, b1)) in &s1.adapters {
+            let (a4, b4) = &s4.adapters[proj];
+            assert_eq!(a1.data, a4.data, "{proj} A differs");
+            assert_eq!(b1.data, b4.data, "{proj} B differs");
+        }
     }
 }

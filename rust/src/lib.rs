@@ -43,6 +43,21 @@
 //!   of this engine, and results are bitwise-independent of every
 //!   worker count (the reduction tree is fixed by batch order), so
 //!   `--workers`/`--queue-cap` are pure deployment knobs.
+//! * [`finetune`] — the Table 4 subsystem, split the same way.
+//!   Initialization strategies (LoRA/PiSSA/CorDA/COALA-α) resolve
+//!   through the compressor registry; *training* runs through the
+//!   route-agnostic [`finetune::FineTuner`] trait with two backends:
+//!   the `ft_step` PJRT artifact ([`finetune::DeviceFineTuner`]) and
+//!   the pure-Rust host training subsystem
+//!   ([`finetune::HostFineTuner`]) — a hand-derived fp64 backward pass
+//!   for the synthetic per-token forward ([`finetune::grad::GradModel`],
+//!   verified against central differences in `tests/grad_check.rs`)
+//!   plus Adam under the shared cosine-decay schedule
+//!   ([`finetune::optim`]).  Adapter gradients never materialize
+//!   ∂L/∂W: the factor gradients `dA = dy·(Bx)ᵀ`, `dB = (Aᵀdy)·xᵀ`
+//!   are accumulated directly, fanned across `util::threads` workers
+//!   and reduced in canonical token order — training runs, like
+//!   calibration, are bitwise-independent of the worker count.
 //!
 //! ## Reproducing the tables without artifacts
 //!
@@ -73,7 +88,12 @@
 //! * **math** — accumulation through `CalibAccumulator` with
 //!   `AccumBackend::Host` and factorization through
 //!   `Compressor::factorize_host`; evaluation through
-//!   [`eval::host`].
+//!   [`eval::host`];
+//! * **training** — Table 4's fine-tuning loop runs end-to-end on the
+//!   host route: real Adam steps through [`finetune::HostFineTuner`]'s
+//!   fp64 backprop, no `ft_step` artifact required (`coala finetune
+//!   --route host` is the CLI entry; CI smoke-tests that the loss
+//!   strictly decreases).
 //!
 //! Everything is seeded (`--seed`), so tables are bit-reproducible; the
 //! golden regression suite (`tests/repro_host.rs`) pins determinism and

@@ -7,6 +7,15 @@
 //!   compress  --model tiny --method coala --ratio 0.7 [--lambda 3]
 //!             [--route device|host] [--workers N] [--queue-cap N]
 //!   eval      --model tiny    perplexity + probe tasks of the base model
+//!   finetune  --init coala1 --steps 60 --lr 3e-3 [--route device|host]
+//!             [--rank R] [--check]
+//!                             initialize + Adam-train rank-r adapters on
+//!                             the shifted fine-tune distribution.
+//!                             `--route host` trains with the pure-Rust
+//!                             fp64 backprop subsystem (no artifacts);
+//!                             `--check` exits non-zero unless the loss
+//!                             strictly decreased and every adapter is
+//!                             finite (the CI smoke gate).
 //!   repro [<id>] [--route device|host] [--workers N] [--queue-cap N]
 //!                             regenerate a paper table/figure (default:
 //!                             `all`).  `--route host` runs the synthetic
@@ -134,6 +143,57 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
             println!("  avg        {:5.1}", s.average());
             Ok(())
         }
+        "finetune" => {
+            use coala::finetune::{AdapterInit, FineTuner as _};
+            use coala::repro::common::Env;
+            let env = Env::load(args)?;
+            let cfg = args.get_or("model", "tiny");
+            let (spec, w) = env.weights(cfg)?;
+            let rank = args.get_usize("rank", env.ex.manifest.ft_rank)?;
+            let strat = AdapterInit::resolve(args.get_or("init", "coala1"))?;
+            let steps = args.get_usize("steps", 60)?.max(1);
+            let lr = args.get_f64("lr", 3e-3)?;
+            println!(
+                "fine-tuning {cfg} from {} at rank {rank} for {steps} Adam steps ({} route) …",
+                strat.name(),
+                if env.is_synthetic() { "host" } else { "device" }
+            );
+            let mut set = env.init_adapters(&spec, &w, strat, rank, 3)?;
+            let pool = env.ft_pool(&spec)?;
+            let tuner = env.fine_tuner(&spec, rank);
+            let losses = tuner.train_on_batches(&mut set, &pool, steps, lr)?;
+            let (first, last) = (losses[0], *losses.last().unwrap());
+            println!("loss: {first:.4} -> {last:.4} over {} steps", losses.len());
+            let bank = env.task_bank("ft")?;
+            let scores = tuner.eval_tasks(&set, &bank, None)?;
+            println!("shifted-fact probe avg acc: {:.1}%", scores.average());
+            if args.get_bool("check") {
+                // losses are recorded *before* each update, so comparing
+                // first vs last needs at least two of them
+                if losses.len() < 2 {
+                    return Err(coala::Error::Config(
+                        "--check needs --steps ≥ 2 (losses are pre-update)".into(),
+                    ));
+                }
+                if !losses.iter().all(|l| l.is_finite()) {
+                    return Err(coala::Error::Numerical(format!(
+                        "non-finite training loss: {losses:?}"
+                    )));
+                }
+                if last >= first {
+                    return Err(coala::Error::Numerical(format!(
+                        "loss did not decrease: {first} -> {last}"
+                    )));
+                }
+                if !set.all_finite() {
+                    return Err(coala::Error::Numerical(
+                        "trained adapters contain non-finite values".into(),
+                    ));
+                }
+                println!("check passed: loss strictly decreased, all adapters finite");
+            }
+            Ok(())
+        }
         "repro" => {
             // `coala repro --route host` (no id) regenerates everything
             let id = args.positional.get(1).map(String::as_str).unwrap_or("all");
@@ -162,7 +222,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         _ => {
             println!(
                 "coala — context-aware low-rank approximation (COALA) coordinator\n\n\
-                 usage: coala <selfcheck|info|methods|compress|eval|repro|tsqr-demo> [--flags]\n\
+                 usage: coala <selfcheck|info|methods|compress|eval|finetune|repro|tsqr-demo> [--flags]\n\
                  see README.md for the full tour"
             );
             Ok(())

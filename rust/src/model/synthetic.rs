@@ -2,8 +2,8 @@
 //! world).
 //!
 //! Everything the repro drivers need from `artifacts/` is generated
-//! deterministically from a seed instead: a [`ModelSpec`] pair
-//! (tiny/small) with the same parameter families as the build-time
+//! deterministically from a seed instead: [`ModelSpec`]s
+//! (tiny/small/large) with the same parameter families as the build-time
 //! transformer, PRNG [`ModelWeights`] whose unembedding is aligned with
 //! the corpus' Markov chain (so the base model genuinely beats chance),
 //! and a pure-Rust forward pass ([`HostModel`]) that evaluates any
@@ -26,9 +26,9 @@ use crate::tensor::Matrix;
 use crate::util::prng::Rng;
 use std::collections::BTreeMap;
 
-/// Shared shape constants of the synthetic environment (both configs use
-/// the same vocab/sequence geometry so one corpus and one task bank
-/// serve both).
+/// Shared shape constants of the synthetic environment (every config
+/// uses the same vocab/sequence geometry so one corpus and one task
+/// bank serve them all).
 pub const VOCAB: usize = 64;
 pub const SEQ_LEN: usize = 16;
 pub const BATCH: usize = 4;
@@ -97,13 +97,17 @@ fn synthetic_spec(name: &str, d_model: usize, d_ff: usize, n_layers: usize) -> M
     }
 }
 
-/// The synthetic manifest: tiny + small configs, no artifacts on disk.
-/// `tiny` has exactly 3 layers so the three activation regimes of
-/// [`crate::calib::synthetic`] all appear.
+/// The synthetic manifest: tiny + small + large configs, no artifacts on
+/// disk.  `tiny` has exactly 3 layers so the three activation regimes of
+/// [`crate::calib::synthetic`] all appear; `large` (6 layers, 36
+/// projections) exists to put real load on the engine's parallel
+/// factorize stage and the host trainer's parallel gradient
+/// accumulation — `benches/pipeline.rs` sweeps worker counts over it.
 pub fn synthetic_manifest() -> Manifest {
     let mut configs = BTreeMap::new();
     configs.insert("tiny".to_string(), synthetic_spec("tiny", 32, 96, 3));
     configs.insert("small".to_string(), synthetic_spec("small", 48, 144, 4));
+    configs.insert("large".to_string(), synthetic_spec("large", 64, 192, 6));
     let task_names: Vec<String> = (0..8).map(|i| format!("t{i}")).collect();
     Manifest::from_parts("<synthetic>", task_names, FT_RANK, configs)
 }
@@ -305,7 +309,7 @@ mod tests {
     #[test]
     fn manifest_specs_are_consistent() {
         let m = synthetic_manifest();
-        for name in ["tiny", "small"] {
+        for name in ["tiny", "small", "large"] {
             let spec = m.config(name).unwrap();
             assert_eq!(spec.compressible.len(), 6 * spec.n_layers);
             // every compressible projection routes to a stream and has a

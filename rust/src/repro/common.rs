@@ -22,6 +22,7 @@ use crate::coala::compressor::Route;
 use crate::coordinator::{CompressionJob, CompressionOutcome, EnginePlan, Pipeline};
 use crate::error::{Error, Result};
 use crate::eval::TaskScores;
+use crate::finetune::{AdapterInit, AdapterSet, DeviceFineTuner, FineTuner, HostFineTuner};
 use crate::model::synthetic as synth;
 use crate::model::ModelWeights;
 use crate::runtime::executor::Executor;
@@ -52,10 +53,7 @@ impl Env {
     /// (seeded by `--seed`), anything else loads the artifacts.
     pub fn load(args: &Args) -> Result<Env> {
         let env = match args.route()? {
-            Route::Host => {
-                let seed = args.get_usize("seed", synth::DEFAULT_SEED as usize)?;
-                Env::synthetic(seed as u64)?
-            }
+            Route::Host => Env::synthetic(args.seed(synth::DEFAULT_SEED)?)?,
             Route::Device => Env::from_artifacts(args)?,
         };
         Ok(env.with_plan(args.engine_plan()?))
@@ -170,6 +168,73 @@ impl Env {
         }
         let xt = xt.ok_or_else(|| Error::Config("capture_xt needs ≥ 1 batch".into()))?;
         Ok((wm, xt))
+    }
+
+    /// Route-resolved adapter initialization (the Table 4 rows).  The
+    /// device route calibrates on `calib_batches` batches of the
+    /// artifact `ft_calib` split; the host route streams a
+    /// separately-seeded regime-controlled activation source — in both
+    /// cases the low-data regime where CorDA's Gram inversion degrades.
+    pub fn init_adapters(
+        &self,
+        spec: &ModelSpec,
+        weights: &ModelWeights,
+        strategy: AdapterInit,
+        rank: usize,
+        calib_batches: usize,
+    ) -> Result<AdapterSet> {
+        if self.synthetic {
+            // NOT derived from the shifted ft corpus (the synthetic
+            // generator is chain-agnostic): the host route stresses the
+            // *numerical* low-data behavior of each init
+            let src = SyntheticActivations::new(spec.clone(), self.seed ^ 0xF7CA);
+            crate::finetune::init_adapters_from_source(
+                spec,
+                weights,
+                &src,
+                strategy,
+                rank,
+                calib_batches,
+                40,
+            )
+        } else {
+            crate::finetune::init_adapters(
+                &self.ex,
+                spec,
+                weights,
+                &self.corpus,
+                strategy,
+                rank,
+                "ft_calib",
+                calib_batches,
+            )
+        }
+    }
+
+    /// The Table 4 fine-tuning pool: 3 fixed-seed batches of
+    /// `batch × seq_len+1` shifted-distribution windows — 24 examples
+    /// at the artifact geometry (batch 8), 12 at the synthetic one
+    /// (batch 4); the small-pool/multi-epoch regime either way.  One
+    /// definition shared by the repro driver and the `finetune` CLI/CI
+    /// smoke gate, so they always train on the same pool as the table
+    /// they guard.
+    pub fn ft_pool(&self, spec: &ModelSpec) -> Result<Vec<crate::runtime::executor::Value>> {
+        self.corpus.train_batches("ft_train", spec.batch, spec.seq_len, 3, 11)
+    }
+
+    /// The active route's [`FineTuner`]: the `ft_step` artifact driver
+    /// or the pure-Rust fp64 trainer (with gradient accumulation fanned
+    /// across the engine plan's worker count).  Like compression jobs,
+    /// drivers never branch on the route themselves.
+    pub fn fine_tuner<'a>(&'a self, spec: &ModelSpec, rank: usize) -> Box<dyn FineTuner + 'a> {
+        if self.synthetic {
+            Box::new(
+                HostFineTuner::new(spec.clone(), rank)
+                    .with_workers(self.plan.factorize_workers),
+            )
+        } else {
+            Box::new(DeviceFineTuner::new(&self.ex, spec, rank))
+        }
     }
 
     /// The probe-task bank (`which` ∈ {"base", "ft"}).
@@ -289,6 +354,27 @@ mod tests {
         let rec = out.model.reconstruct_into(&w).unwrap();
         let ppl = env.perplexity(&spec, &rec, "val", 2).unwrap();
         assert!(ppl.is_finite(), "compressed ppl {ppl}");
+    }
+
+    #[test]
+    fn env_fine_tuner_trains_on_the_host_route() {
+        let env = Env::synthetic(5).unwrap();
+        let (spec, w) = env.weights("tiny").unwrap();
+        let mut set = env
+            .init_adapters(&spec, &w, AdapterInit::PiSSA, 4, 2)
+            .unwrap();
+        let pool = env
+            .corpus
+            .train_batches("ft_train", spec.batch, spec.seq_len, 2, 9)
+            .unwrap();
+        let tuner = env.fine_tuner(&spec, 4);
+        let losses = tuner.train_on_batches(&mut set, &pool, 12, 2e-3).unwrap();
+        assert_eq!(losses.len(), 12);
+        assert!(losses.iter().all(|l| l.is_finite()), "{losses:?}");
+        assert!(set.all_finite());
+        let bank = env.task_bank("ft").unwrap();
+        let scores = tuner.eval_tasks(&set, &bank, Some(32)).unwrap();
+        assert_eq!(scores.names.len(), 8);
     }
 
     #[test]

@@ -1,20 +1,20 @@
-//! Table 4: PEFT-initialization comparison at rank r (24-example
+//! Table 4: PEFT-initialization comparison at rank r (3-batch low-data
 //! calibration, short fine-tune on the *shifted* fact distribution,
 //! probe accuracy on the new facts).
 //!
-//! Routes: the artifact route runs the full protocol (init → `ft_step`
-//! Adam training → `ft_logits` scoring).  The synthetic host route runs
-//! the *initialization-quality* protocol: adapters are built through the
-//! compressor registry's host factorizations on the low-data shifted
-//! calibration stream, and the adapted model (W_res + A·B) is scored
-//! directly by the host forward — no training step, since backprop only
-//! exists as an AOT artifact.  That is exactly the regime where the
-//! paper's Table 4 separates methods anyway: CorDA's Gram inversion
-//! collapses at 24 examples while α ∈ {1, 2} stays finite.
+//! One protocol, both routes: adapters are initialized through the
+//! route's factorization backend (`Env::init_adapters`), trained with
+//! real Adam steps through the route's [`crate::finetune::FineTuner`]
+//! (`ft_step` artifact on the device route, the pure-Rust fp64
+//! backprop trainer on the host route), and scored on the shifted task
+//! bank by the route's evaluator.  The drivers below never branch on
+//! the route.  CorDA's Gram inversion can collapse in the 24-example
+//! low-data regime — a collapsed init is reported honestly (NaN losses,
+//! zero scores) instead of being trained on garbage.
 
 use super::common::{dump, Env};
 use crate::error::Result;
-use crate::finetune::{init_adapters, init_adapters_from_source, AdapterInit, FineTuner};
+use crate::finetune::{AdapterInit, FineTuner};
 use crate::util::cli::Args;
 use crate::util::json::Json;
 use crate::util::table::Table;
@@ -23,24 +23,23 @@ pub fn table4(args: &Args) -> Result<()> {
     let env = Env::load(args)?;
     let (spec, weights) = env.weights("tiny")?;
     let rank = env.ex.manifest.ft_rank;
-    let steps = if super::common::fast() { 100 } else { args.get_usize("steps", 200)? };
+    let steps =
+        if super::common::fast() { 100 } else { args.get_usize("steps", 200)? }.max(1);
     let lr = args.get_f64("lr", 1e-3)?;
     let bank = env.task_bank("ft")?;
     let limit = None;
 
-    // 24-example fine-tuning pool (3 batches of 8) cycled for `steps`
-    let pool = env.corpus.train_batches("ft_train", spec.batch, spec.seq_len, 3, 11)?;
+    // small fixed fine-tuning pool (3 batches) cycled for `steps`
+    let pool = env.ft_pool(&spec)?;
 
     let mut header = vec!["init", "loss₀", "loss_end", "avg"];
     let names = bank.task_names.clone();
     for n in &names {
         header.push(n);
     }
-    let title = if env.is_synthetic() {
-        format!("Table 4 — PEFT init quality, host route (rank {rank}, no training step)")
-    } else {
-        format!("Table 4 — PEFT init comparison (rank {rank}, {steps} steps)")
-    };
+    let route = if env.is_synthetic() { "host backprop" } else { "ft_step artifact" };
+    let title =
+        format!("Table 4 — PEFT init comparison (rank {rank}, {steps} Adam steps, {route})");
     let mut t = Table::new(&title, &header);
     let strategies = [
         AdapterInit::LoRA,
@@ -51,11 +50,8 @@ pub fn table4(args: &Args) -> Result<()> {
     ];
     let mut recs = Vec::new();
     for strat in strategies {
-        let (l0, lend, avg, accs, stds) = if env.is_synthetic() {
-            score_host(&env, &spec, &weights, strat, rank, &pool, &bank, limit)?
-        } else {
-            score_device(&env, &spec, &weights, strat, rank, &pool, &bank, steps, lr, limit)?
-        };
+        let (l0, lend, avg, accs, stds) =
+            score(&env, &spec, &weights, strat, rank, &pool, &bank, steps, lr, limit)?;
         let mut cells = vec![
             strat.name().to_string(),
             format!("{l0:.3}"),
@@ -67,23 +63,17 @@ pub fn table4(args: &Args) -> Result<()> {
         recs.push(Json::obj(vec![
             ("init", Json::Str(strat.name().into())),
             ("avg", Json::Num(avg)),
+            ("loss0", Json::Num(l0)),
             ("loss_end", Json::Num(lend)),
             ("accs", Json::from_f64s(&accs)),
         ]));
     }
     t.print();
-    if env.is_synthetic() {
-        println!(
-            "expected shape: CorDA's Gram inversion degrades/collapses in the\n\
-             low-data regime; COALA α=1/α=2 and PiSSA stay finite.  (Training\n\
-             steps need the ft_step artifact — run --route device for them.)"
-        );
-    } else {
-        println!(
-            "expected shape (paper Table 4): unrobust CorDA degraded; COALA α=1/α=2\n\
-             ≈ PiSSA ≥ LoRA, with α=1 slightly ahead."
-        );
-    }
+    println!(
+        "expected shape (paper Table 4): unrobust CorDA degraded/collapsed in the\n\
+         low-data regime; COALA α=1/α=2 ≈ PiSSA ≥ LoRA after training, with α=1\n\
+         slightly ahead."
+    );
     dump("table4", Json::Arr(recs))
 }
 
@@ -94,8 +84,10 @@ fn collapsed(n_tasks: usize) -> Row {
     (f64::NAN, f64::NAN, 0.0, vec![0.0; n_tasks], vec![0.0; n_tasks])
 }
 
+/// The one Table 4 scoring protocol: init → train → probe, entirely
+/// through the environment's route-resolved backends.
 #[allow(clippy::too_many_arguments)]
-fn score_device(
+fn score(
     env: &Env,
     spec: &crate::runtime::manifest::ModelSpec,
     weights: &crate::model::ModelWeights,
@@ -107,24 +99,31 @@ fn score_device(
     lr: f64,
     limit: Option<usize>,
 ) -> Result<Row> {
-    let mut set = init_adapters(
-        &env.ex,
-        spec,
-        weights,
-        &env.corpus,
-        strat,
-        rank,
-        "ft_calib",
-        3, // 24 examples = 3 batches of 8: the low-data regime
-    )?;
-    let sane = set.adapters.values().all(|(a, b)| a.all_finite() && b.all_finite());
-    if !sane {
-        // CorDA's Gram inversion can produce non-finite adapters in
-        // the low-data regime — report the collapse honestly.
+    // 3 calibration batches (24 examples at the artifact geometry): the
+    // low-data regime where CorDA's Gram inversion degrades.  Only
+    // *numerical* failures are the collapse Table 4 reports; setup/IO/
+    // config errors (e.g. a missing artifact split on the device route)
+    // still abort the run.
+    let mut set = match env.init_adapters(spec, weights, strat, rank, 3) {
+        Ok(set) => set,
+        Err(e) if e.is_numerical() => {
+            println!("  [{}: init collapsed — {e}]", strat.name());
+            return Ok(collapsed(bank.task_names.len()));
+        }
+        Err(e) => return Err(e),
+    };
+    if !set.all_finite() {
         return Ok(collapsed(bank.task_names.len()));
     }
-    let tuner = FineTuner::new(&env.ex, spec, rank);
+    let tuner = env.fine_tuner(spec, rank);
     let losses = tuner.train_on_batches(&mut set, pool, steps, lr)?;
+    // divergence DURING training (finite-but-extreme init factors can
+    // overflow the forward) is the same collapse: scoring NaN adapters
+    // would fabricate choice-0 hit rates as accuracy
+    if !set.all_finite() || losses.iter().any(|l| !l.is_finite()) {
+        println!("  [{}: training diverged — reported as collapse]", strat.name());
+        return Ok(collapsed(bank.task_names.len()));
+    }
     let scores = tuner.eval_tasks(&set, bank, limit)?;
     Ok((
         losses[0] as f64,
@@ -133,47 +132,4 @@ fn score_device(
         scores.accuracy.clone(),
         scores.stderr.clone(),
     ))
-}
-
-#[allow(clippy::too_many_arguments)]
-fn score_host(
-    env: &Env,
-    spec: &crate::runtime::manifest::ModelSpec,
-    weights: &crate::model::ModelWeights,
-    strat: AdapterInit,
-    rank: usize,
-    pool: &[crate::runtime::executor::Value],
-    bank: &crate::calib::dataset::TaskBank,
-    limit: Option<usize>,
-) -> Result<Row> {
-    // A separately-seeded regime-controlled activation stream, 3 batches
-    // — the low-data regime.  Note this is NOT derived from the shifted
-    // ft corpus (the synthetic generator is chain-agnostic); the host
-    // route stresses the *numerical* low-data behavior of each init, not
-    // base-vs-shifted calibration distributions.
-    let src = crate::calib::synthetic::SyntheticActivations::new(
-        spec.clone(),
-        env.seed() ^ 0xF7CA,
-    );
-    let set = match init_adapters_from_source(spec, weights, &src, strat, rank, 3, 40) {
-        Ok(set) => set,
-        Err(e) => {
-            println!("  [{}: init collapsed — {e}]", strat.name());
-            return Ok(collapsed(bank.task_names.len()));
-        }
-    };
-    let sane = set.adapters.values().all(|(a, b)| a.all_finite() && b.all_finite());
-    if !sane {
-        return Ok(collapsed(bank.task_names.len()));
-    }
-    // adapted model = W_res + A·B swapped into the weight set
-    let mut adapted = set.frozen.clone();
-    for (proj, (a, b)) in &set.adapters {
-        let delta = crate::tensor::ops::matmul(a, b)?;
-        let eff = adapted.matrix(proj)?.add(&delta)?;
-        adapted.set_matrix(proj, &eff)?;
-    }
-    let l0 = crate::eval::pool_nll_host(spec, &adapted, pool)?;
-    let scores = env.eval_tasks(spec, &adapted, bank, limit)?;
-    Ok((l0, l0, scores.average(), scores.accuracy.clone(), scores.stderr.clone()))
 }

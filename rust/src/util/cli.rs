@@ -77,6 +77,18 @@ impl Args {
         }
     }
 
+    /// `--seed N` → the environment seed (u64; shared by the repro
+    /// harness and the `finetune` subcommand, so one flag spelling
+    /// drives every synthetic generator).
+    pub fn seed(&self, default: u64) -> Result<u64> {
+        match self.get("seed") {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--seed expects an integer, got `{v}`"))),
+        }
+    }
+
     /// `--route device|host` → [`Route`] (default device).  Every repro
     /// driver and the compress/tsqr-demo subcommands share this flag:
     /// `host` selects pure-Rust accumulate/factorize and, in the repro
@@ -152,6 +164,18 @@ mod tests {
         let a = Args::parse(&sv(&["--methods", "coala,svdllm"]));
         assert_eq!(a.get_list("methods", &["x"]), vec!["coala", "svdllm"]);
         assert_eq!(a.get_list("other", &["x"]), vec!["x"]);
+    }
+
+    #[test]
+    fn seed_flag() {
+        assert_eq!(Args::parse(&sv(&[])).seed(7).unwrap(), 7);
+        assert_eq!(Args::parse(&sv(&["--seed", "123"])).seed(7).unwrap(), 123);
+        // full u64 range (usize-based parsing used to be the only path)
+        assert_eq!(
+            Args::parse(&sv(&["--seed", "18446744073709551615"])).seed(0).unwrap(),
+            u64::MAX
+        );
+        assert!(Args::parse(&sv(&["--seed", "x"])).seed(0).is_err());
     }
 
     #[test]

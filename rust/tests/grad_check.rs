@@ -1,0 +1,165 @@
+//! Finite-difference verification of the host training subsystem's
+//! backward pass (`finetune::grad::GradModel`).
+//!
+//! Every adapter parameter group — (A, B) for all 6 projection families
+//! of every layer — is checked against fp64 central differences:
+//!
+//! ```text
+//!   ∂L/∂θ ≈ (L(θ + h) − L(θ − h)) / 2h
+//! ```
+//!
+//! The whole check runs at fp64 (model, loss, perturbation), which is
+//! the only precision where central differences resolve the gradient
+//! above rounding noise.  Three regimes are covered:
+//!
+//! 1. a spectrally-initialized model (PiSSA) at its natural scale;
+//! 2. adapters built from the *near-singular* calibration regime (the
+//!    tiny config's layer 1 activations are rank-deficient by
+//!    construction) and then amplified until gates and SiLUs saturate —
+//!    the backward must stay exact where the forward is stiff;
+//! 3. CorDA's Gram-inverting init, whose factors carry extreme values
+//!    in the low-data regime (checked only when the inversion stays
+//!    finite — a collapse is the Table 4 failure mode, not a gradient
+//!    bug).
+//!
+//! A cross-precision consistency test pins the fp64 forward to the f32
+//! host evaluator, so the gradients verified here are gradients of the
+//! loss the tables actually report.
+
+use coala::calib::dataset::Corpus;
+use coala::calib::synthetic::SyntheticActivations;
+use coala::finetune::{init_adapters_from_source, AdapterInit, AdapterSet, GradModel};
+use coala::model::synthetic::{synthetic_manifest, synthetic_weights};
+use coala::runtime::manifest::ModelSpec;
+use coala::util::prng::Rng;
+
+const SEED: u64 = 11;
+
+fn world(strategy: AdapterInit) -> Option<(ModelSpec, AdapterSet)> {
+    let m = synthetic_manifest();
+    let spec = m.config("tiny").unwrap().clone();
+    let w = synthetic_weights(&spec, SEED);
+    // calibration from the regime-controlled source: layer 1's
+    // activations are NearSingular by construction, so context-aware
+    // inits inherit the near-singular regime
+    let src = SyntheticActivations::new(spec.clone(), SEED);
+    let set = init_adapters_from_source(&spec, &w, &src, strategy, 4, 2, 30).ok()?;
+    set.all_finite().then_some((spec, set))
+}
+
+fn pairs(n: usize) -> Vec<(usize, usize)> {
+    let corpus = Corpus::synthetic(64, 1024, SEED);
+    let toks = corpus.split("ft_train").unwrap();
+    toks.windows(2).take(n).map(|w| (w[0] as usize, w[1] as usize)).collect()
+}
+
+/// Check `samples` entries of every (A, B) group of `model` against
+/// central differences.  Perturbation scale follows the entry magnitude
+/// so both O(1) and near-zero parameters are probed sensibly.
+fn check_all_groups(model: &mut GradModel, ps: &[(usize, usize)], tag: &str) {
+    let (_, grads) = model.loss_and_grads(ps, 2).unwrap();
+    let names: Vec<String> = model.proj_names().to_vec();
+    let mut rng = Rng::new(0xC8EC);
+    let samples = 4;
+    for (pi, proj) in names.iter().enumerate() {
+        for which in 0..2 {
+            let g = if which == 0 { &grads[pi].0 } else { &grads[pi].1 };
+            let (rows, cols) = (g.rows, g.cols);
+            let picked = rng.choose_distinct(rows * cols, samples.min(rows * cols));
+            for flat in picked {
+                let (i, j) = (flat / cols, flat % cols);
+                let ana = g.get(i, j);
+                let probe = |m: &mut GradModel, v: f64| {
+                    let (a, b) = m.adapter_mut(proj).unwrap();
+                    if which == 0 {
+                        a.set(i, j, v);
+                    } else {
+                        b.set(i, j, v);
+                    }
+                };
+                let x0 = {
+                    let (a, b) = model.adapter_mut(proj).unwrap();
+                    if which == 0 { a.get(i, j) } else { b.get(i, j) }
+                };
+                let h = 1e-5 * x0.abs().max(1.0);
+                probe(model, x0 + h);
+                let lp = model.loss(ps).unwrap();
+                probe(model, x0 - h);
+                let lm = model.loss(ps).unwrap();
+                probe(model, x0); // restore exactly
+                let num = (lp - lm) / (2.0 * h);
+                let tol = 5e-7 + 3e-5 * ana.abs().max(num.abs());
+                assert!(
+                    (ana - num).abs() <= tol,
+                    "{tag}: {proj} {}[{i},{j}]: analytic {ana:e} vs central-diff {num:e} \
+                     (|Δ| = {:e} > tol {tol:e})",
+                    if which == 0 { "A" } else { "B" },
+                    (ana - num).abs()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn gradients_match_central_differences_at_natural_scale() {
+    let (spec, set) = world(AdapterInit::PiSSA).expect("PiSSA init is deterministic");
+    let mut model = GradModel::new(&spec, &set).unwrap();
+    check_all_groups(&mut model, &pairs(24), "pissa");
+}
+
+#[test]
+fn gradients_match_central_differences_in_the_saturated_near_singular_regime() {
+    // adapters from the near-singular calibration regime, then blown up
+    // ×5 per factor (×25 on ΔW): hidden states leave the base model's
+    // scale, gates and SiLUs saturate, RMS-norms see large inputs
+    let (spec, set) = world(AdapterInit::CoalaA2).expect("α=2 init is inversion-free");
+    let mut model = GradModel::new(&spec, &set).unwrap();
+    for pi in 0..model.n_projs() {
+        let (a, b) = model.adapter_at_mut(pi);
+        for v in a.data.iter_mut() {
+            *v *= 5.0;
+        }
+        for v in b.data.iter_mut() {
+            *v *= 5.0;
+        }
+    }
+    let ps = pairs(24);
+    assert!(model.loss(&ps).unwrap().is_finite(), "stressed forward must stay finite");
+    check_all_groups(&mut model, &ps, "saturated");
+}
+
+#[test]
+fn gradients_match_central_differences_for_the_gram_inverting_init() {
+    // CorDA explicitly inverts the Gram matrix; in the low-data regime
+    // its factors are extreme or outright non-finite.  When the init
+    // survives, the backward must still be exact on it; when it
+    // collapses, that is Table 4's reported failure, not a gradient bug.
+    match world(AdapterInit::CorDA) {
+        Some((spec, set)) => {
+            let mut model = GradModel::new(&spec, &set).unwrap();
+            check_all_groups(&mut model, &pairs(24), "corda");
+        }
+        None => eprintln!(
+            "skipped: CorDA init collapsed at this seed (the Table 4 low-data failure)"
+        ),
+    }
+}
+
+#[test]
+fn fp64_loss_matches_the_f32_host_evaluator() {
+    let (spec, set) = world(AdapterInit::CoalaA1).unwrap();
+    let corpus = Corpus::synthetic(spec.vocab, 4096, SEED);
+    let pool = corpus
+        .train_batches("ft_train", spec.batch, spec.seq_len, 3, 11)
+        .unwrap();
+    let ps = coala::eval::pool_pairs(&spec, &pool).unwrap();
+    let model = GradModel::new(&spec, &set).unwrap();
+    let f64_loss = model.loss(&ps).unwrap();
+    let f32_loss = coala::eval::pool_nll_host(&spec, &set.merged().unwrap(), &pool).unwrap();
+    let gap = (f64_loss - f32_loss).abs();
+    assert!(
+        gap < 1e-3 * f64_loss.abs().max(1.0),
+        "fp64 training loss {f64_loss} vs f32 eval loss {f32_loss} (gap {gap})"
+    );
+}

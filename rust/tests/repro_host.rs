@@ -10,14 +10,32 @@
 //!    reduced-precision Gram routes do not; the Gram path loses σ_min;
 //!    the near-singular layer really is near-singular);
 //! 3. **snapshot** — values are compared order-of-magnitude against the
-//!    committed `tests/golden/stability.json` (canonical values,
-//!    regenerable with `python3 python/tools/golden_stability.py`), so
-//!    future PRs cannot silently degrade the numbers.  The comparison
-//!    uses a per-key noise floor: below it a value is implementation
-//!    rounding noise (e.g. f32 subspace rotation inside a near-
-//!    degenerate σ cluster), so only the order of magnitude *above* the
-//!    floor is load-bearing.  If the file is missing the test recreates
-//!    it from the current run (commit it to pin the numbers).
+//!    committed `tests/golden/stability.json`, so future PRs cannot
+//!    silently degrade the numbers.  The comparison uses a per-key
+//!    noise floor: below it a value is implementation rounding noise
+//!    (e.g. f32 subspace rotation inside a near-degenerate σ cluster),
+//!    so only the order of magnitude *above* the floor is load-bearing.
+//!    If the file is missing the test recreates it from the current run
+//!    (commit it to pin the numbers).
+//!
+//! **Snapshot provenance and the fig1 floor.**  The committed snapshot
+//! was produced by `python3 python/tools/golden_stability.py` — a NumPy
+//! port (LAPACK, not the crate's Jacobi kernels) — because no growth
+//! environment so far has had a Rust toolchain to run the crate
+//! natively (PR 3 and PR 4 both hit this; `cargo`/`rustc` absent).
+//! fig1's f32-vs-fp64 errors do not transfer across implementations,
+//! so they sit behind a loose 3e-2 absolute floor.  To tighten it,
+//! run in any environment with a native toolchain:
+//!
+//! ```text
+//! COALA_GOLDEN_REGEN=1 cargo test -q --test repro_host
+//! git add rust/tests/golden/stability.json
+//! ```
+//!
+//! The regenerated snapshot is tagged `"source": "crate"`, and this
+//! test then automatically drops fig1's floor to 10× each recorded
+//! value (absolute fig1 errors become pinned).  Until that happens the
+//! loose floor is a *documented* blocker, not a silent one.
 //!
 //! Everything here is one #[test]: the drivers share the results/
 //! directory and the COALA_REPRO_FAST env var, so sequencing matters.
@@ -133,6 +151,9 @@ fn host_route_stability_tables_are_deterministic_and_hold_claims() {
         fig2_sigma.push(s.last().unwrap().clone());
     }
     let snapshot = Json::obj(vec![
+        // provenance marker: this snapshot came from the crate's own
+        // kernels, so its fig1 values transfer exactly to future runs
+        ("source", Json::Str("crate".into())),
         ("fig1_coala", Json::from_f64s(&coala_errs)),
         ("fig2_sigma", Json::Arr(fig2_sigma)),
         (
@@ -146,29 +167,50 @@ fn host_route_stability_tables_are_deterministic_and_hold_claims() {
         ),
     ]);
     let path = "tests/golden/stability.json";
-    match std::fs::read_to_string(path) {
-        Err(_) => {
+    let regen = std::env::var("COALA_GOLDEN_REGEN").as_deref() == Ok("1");
+    let existing = if regen { None } else { std::fs::read_to_string(path).ok() };
+    match existing {
+        None => {
             std::fs::create_dir_all("tests/golden").unwrap();
             std::fs::write(path, snapshot.dump()).unwrap();
-            eprintln!("golden snapshot created at {path} — commit it to pin the numbers");
+            eprintln!("golden snapshot written at {path} — commit it to pin the numbers");
         }
-        Ok(prev) => {
+        Some(prev) => {
             let prev = Json::parse(&prev).unwrap();
-            // noise floors: fig1's errors are f32-vs-fp64 differences,
-            // noise-dominated below ~3e-2 (the claims assertions above
-            // guard the fine scale); g1's σ_min values are stable f64
-            // quantities, so only true zero-noise is floored
-            for (key, floor) in [("fig1_coala", 3e-2), ("g1_exact", 1e-3)] {
+            // A crate-native snapshot pins fig1 tightly (values from the
+            // same kernels transfer): floor = 10× the recorded value.
+            // The python-generated snapshot (no "source" key) does not —
+            // fig1 errors are implementation-specific below ~3e-2, so
+            // only that loose absolute floor applies (see module docs
+            // for the regen recipe).
+            let native = prev
+                .req("source")
+                .ok()
+                .and_then(|s| s.as_str())
+                == Some("crate");
+            // g1's σ_min values are stable f64 quantities on either
+            // generator, so only true zero-noise is floored
+            for (key, is_fig1) in [("fig1_coala", true), ("g1_exact", false)] {
                 let old = prev.req(key).unwrap().as_arr().unwrap();
                 let new = snapshot.req(key).unwrap().as_arr().unwrap();
                 assert_eq!(old.len(), new.len(), "{key}: row count changed");
                 for (i, (o, n)) in old.iter().zip(new).enumerate() {
-                    let o = o.as_f64().unwrap_or(0.0).abs().max(floor);
-                    let n = n.as_f64().unwrap_or(0.0).abs().max(floor);
-                    assert!(
-                        (o.log10() - n.log10()).abs() <= 1.0,
-                        "{key}[{i}] drifted more than a decade: {o} → {n}"
-                    );
+                    let o_raw = o.as_f64().unwrap_or(0.0);
+                    let n_raw = n.as_f64().unwrap_or(0.0);
+                    let ok = if is_fig1 && native {
+                        // crate-native snapshot: fig1 values transfer, so
+                        // the absolute pin is direct — at most 10× the
+                        // recorded error (improvements always pass)
+                        n_raw.abs() <= (10.0 * o_raw.abs()).max(1e-12)
+                    } else {
+                        // floor-then-decade: below the noise floor only
+                        // the order of magnitude above it is load-bearing
+                        let floor = if is_fig1 { 3e-2 } else { 1e-3 };
+                        let o = o_raw.abs().max(floor);
+                        let n = n_raw.abs().max(floor);
+                        (o.log10() - n.log10()).abs() <= 1.0
+                    };
+                    assert!(ok, "{key}[{i}] regressed: {o_raw} → {n_raw}");
                 }
             }
             // fig2's σ spectra are f64 quantities of fixed synthetic data
