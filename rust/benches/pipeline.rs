@@ -1,6 +1,8 @@
 //! Bench: the source-agnostic execution engine on the host route —
 //! sequential vs parallel plans over worker counts, on both the `small`
-//! and `large` synthetic configs — the host training subsystem's
+//! and `large` synthetic configs — a sharded-calibration sweep over
+//! shard counts (accumulate-only + state codec + canonical merge, the
+//! multi-process deployment path), the host training subsystem's
 //! parallel gradient accumulation, plus the artifact-backed end-to-end
 //! pipeline, overlapped scheduler, and tree-TSQR when a device is
 //! available.
@@ -61,6 +63,55 @@ fn main() {
                 std::hint::black_box(pipe.run_with_source(&job, &src).unwrap());
             });
             host_records.push(record(&stats, workers));
+        }
+    }
+
+    // ---- sharded calibration: N × accumulate-only + codec + merge --------
+    // the multi-process deployment path, measured in-process: each shard
+    // accumulates its batch range, the state crosses the binary codec
+    // (serialize + deserialize, as it would over a filesystem), and the
+    // canonical merge reassembles the run.  shards=1 is the degenerate
+    // single-shard baseline; the result is bitwise identical at every
+    // shard count, so this measures pure orchestration overhead.
+    let mut shard_records = Vec::new();
+    {
+        use coala::calib::accumulate::{AccumBackend, AccumKind};
+        use coala::calib::state::ShardState;
+        use coala::coordinator::{engine, ShardPlan, StageTimings};
+        use coala::tensor::lowp::Precision;
+        let spec = ex.manifest.config("small").unwrap().clone();
+        let src = SyntheticActivations::new(spec.clone(), 1);
+        let total = 8;
+        for shards in [1usize, 2, 4, 8] {
+            let plan = ShardPlan::new(total, shards).unwrap();
+            let stats = bench(&format!("shard/host small shards={shards}"), &opts, || {
+                let parts: Vec<ShardState> = (0..shards)
+                    .map(|i| {
+                        let st = engine::accumulate_shard(
+                            &src,
+                            AccumKind::RFactor,
+                            plan.range(i).unwrap(),
+                            AccumBackend::Host,
+                            Precision::F32,
+                            &EnginePlan::sequential(),
+                            &mut StageTimings::default(),
+                            None,
+                            "small:host:seed1",
+                        )
+                        .unwrap();
+                        ShardState::decode(&st.encode(), "<memory>").unwrap()
+                    })
+                    .collect();
+                std::hint::black_box(
+                    engine::merge_shard_states(
+                        parts,
+                        AccumBackend::Host,
+                        &mut StageTimings::default(),
+                    )
+                    .unwrap(),
+                );
+            });
+            shard_records.push(record(&stats, shards));
         }
     }
 
@@ -128,6 +179,7 @@ fn main() {
 
     let out = Json::obj(vec![
         ("host_engine", Json::Arr(host_records)),
+        ("host_shard", Json::Arr(shard_records)),
         ("host_finetune", Json::Arr(ft_records)),
         ("device", Json::Arr(device_records)),
     ]);

@@ -1,11 +1,14 @@
 //! Calibration data plumbing (S11): corpus, batching, activation
 //! capture (through the `fwd_acts` artifact on the device route, or the
-//! PRNG generator on the synthetic host route), and the streaming
-//! accumulators every compression method folds its chunks through.
+//! PRNG generator on the synthetic host route), the streaming
+//! accumulators every compression method folds its chunks through, and
+//! the binary state codec ([`state`]) that makes accumulator states
+//! durable and mergeable across processes.
 
 pub mod accumulate;
 pub mod activations;
 pub mod dataset;
+pub mod state;
 pub mod synthetic;
 
 pub use accumulate::{
@@ -14,4 +17,5 @@ pub use accumulate::{
 };
 pub use activations::{ActivationCapture, ActivationSource, CalibChunk, DeviceActivationSource};
 pub use dataset::{Corpus, TaskBank};
+pub use state::{ShardState, StateNode};
 pub use synthetic::SyntheticActivations;

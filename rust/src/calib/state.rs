@@ -1,0 +1,807 @@
+//! `calib::state` — the versioned binary codec that makes accumulator
+//! states durable and mergeable across processes.
+//!
+//! Everything the engine's merge tree passes between workers in RAM can
+//! be written to disk and read back **bit-exactly**: the three
+//! [`CalibState`] merge states (TSQR R, streamed Gram, activation
+//! scales), compressed factor outputs ([`CompressedModel`]), and
+//! fine-tuning adapters ([`AdapterSet`]).  Floats are serialized as
+//! their IEEE-754 bit patterns (`to_bits`/`from_bits`, little-endian),
+//! so NaN payloads, infinities, and signed zeros round-trip unchanged —
+//! the determinism guarantees of `coordinator::engine` extend across a
+//! serialize/deserialize boundary, which is what lets N `coala shard`
+//! processes plus one `coala merge` reproduce the single-process run
+//! bitwise.
+//!
+//! ## File format
+//!
+//! Every file starts with a fixed header:
+//!
+//! ```text
+//!   magic   [4]  = b"CALS"
+//!   version u16  = 1            (little-endian)
+//!   payload u8   — 1 shard state, 2 factors, 3 adapters
+//! ```
+//!
+//! followed by the payload.  Unknown magic, a different version, or a
+//! payload-kind mismatch are rejected with the offending file named
+//! ([`crate::error::Error::Format`]); filesystem failures carry their
+//! path ([`crate::error::Error::io`]).  Writes go through a temp file +
+//! rename, so a kill mid-write never leaves a torn state file — the
+//! property checkpoint/resume relies on.
+//!
+//! The shard-state payload is the unit of multi-process calibration: a
+//! [`ShardState`] holds the *pending merge-tree nodes* of a batch range
+//! `[start, done)` of a `total`-batch run — exactly what
+//! `coordinator::engine` holds in RAM mid-run.  `done == end` marks a
+//! complete shard (what `coala shard` emits); `done < end` is a resume
+//! checkpoint.
+
+use crate::calib::accumulate::{AccumKind, CalibState};
+use crate::coala::factorize::Factors;
+use crate::error::{Error, Result};
+use crate::finetune::AdapterSet;
+use crate::model::{CompressedModel, ModelWeights};
+use crate::tensor::lowp::Precision;
+use crate::tensor::Matrix;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// File magic: "CALibration State".
+pub const MAGIC: [u8; 4] = *b"CALS";
+/// Codec version this build reads and writes.
+pub const VERSION: u16 = 1;
+
+const PAYLOAD_SHARD: u8 = 1;
+const PAYLOAD_FACTORS: u8 = 2;
+const PAYLOAD_ADAPTERS: u8 = 3;
+
+fn payload_name(p: u8) -> &'static str {
+    match p {
+        PAYLOAD_SHARD => "shard state",
+        PAYLOAD_FACTORS => "factors",
+        PAYLOAD_ADAPTERS => "adapters",
+        _ => "unknown",
+    }
+}
+
+// ------------------------------------------------------------- writer
+
+struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    fn new(payload: u8) -> Writer {
+        let mut buf = Vec::with_capacity(64);
+        buf.extend_from_slice(&MAGIC);
+        buf.extend_from_slice(&VERSION.to_le_bytes());
+        buf.push(payload);
+        Writer { buf }
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn size(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+    fn f32(&mut self, v: f32) {
+        self.u32(v.to_bits());
+    }
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+    fn str(&mut self, s: &str) {
+        self.size(s.len());
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+    fn f32s(&mut self, v: &[f32]) {
+        self.size(v.len());
+        for &x in v {
+            self.f32(x);
+        }
+    }
+    fn f64s(&mut self, v: &[f64]) {
+        self.size(v.len());
+        for &x in v {
+            self.f64(x);
+        }
+    }
+    fn matrix(&mut self, m: &Matrix<f32>) {
+        self.size(m.rows);
+        self.size(m.cols);
+        for &x in &m.data {
+            self.f32(x);
+        }
+    }
+}
+
+// ------------------------------------------------------------- reader
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    /// where the bytes came from (file path or "<memory>") — every
+    /// decode error names it.
+    src: &'a str,
+}
+
+impl<'a> Reader<'a> {
+    /// Validate the magic/version/payload header and position the
+    /// reader at the payload.
+    fn open(buf: &'a [u8], src: &'a str, payload: u8) -> Result<Reader<'a>> {
+        let mut r = Reader { buf, pos: 0, src };
+        let magic = r.bytes(4, "magic")?;
+        if magic != &MAGIC[..] {
+            return Err(r.err("not a COALA state file (bad magic)"));
+        }
+        let version = u16::from_le_bytes(r.bytes(2, "version")?.try_into().unwrap());
+        if version != VERSION {
+            return Err(r.err(format!(
+                "state-codec version {version} (this build reads version {VERSION})"
+            )));
+        }
+        let got = r.u8("payload kind")?;
+        if got != payload {
+            return Err(r.err(format!(
+                "payload is {} (kind {got}), expected {} (kind {payload})",
+                payload_name(got),
+                payload_name(payload)
+            )));
+        }
+        Ok(r)
+    }
+
+    fn err(&self, msg: impl Into<String>) -> Error {
+        Error::Format { path: self.src.to_string(), msg: msg.into() }
+    }
+
+    fn bytes(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| self.err(format!("truncated: {what} needs {n} more bytes")))?;
+        let out = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(out)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.bytes(1, what)?[0])
+    }
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.bytes(4, what)?.try_into().unwrap()))
+    }
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.bytes(8, what)?.try_into().unwrap()))
+    }
+    fn size(&mut self, what: &str) -> Result<usize> {
+        let v = self.u64(what)?;
+        usize::try_from(v).map_err(|_| self.err(format!("{what} {v} overflows usize")))
+    }
+    fn f32(&mut self, what: &str) -> Result<f32> {
+        Ok(f32::from_bits(self.u32(what)?))
+    }
+    fn f64(&mut self, what: &str) -> Result<f64> {
+        Ok(f64::from_bits(self.u64(what)?))
+    }
+
+    fn str(&mut self, what: &str) -> Result<String> {
+        let n = self.size(what)?;
+        let raw = self.bytes(n, what)?;
+        String::from_utf8(raw.to_vec()).map_err(|_| self.err(format!("{what} is not UTF-8")))
+    }
+
+    fn f32s(&mut self, what: &str) -> Result<Vec<f32>> {
+        let n = self.size(what)?;
+        // bound before allocating: each element is 4 bytes
+        if n > self.buf.len() - self.pos.min(self.buf.len()) {
+            return Err(self.err(format!("truncated: {what} claims {n} elements")));
+        }
+        (0..n).map(|_| self.f32(what)).collect()
+    }
+
+    fn f64s(&mut self, what: &str) -> Result<Vec<f64>> {
+        let n = self.size(what)?;
+        if n > self.buf.len() - self.pos.min(self.buf.len()) {
+            return Err(self.err(format!("truncated: {what} claims {n} elements")));
+        }
+        (0..n).map(|_| self.f64(what)).collect()
+    }
+
+    fn matrix(&mut self, what: &str) -> Result<Matrix<f32>> {
+        let rows = self.size(what)?;
+        let cols = self.size(what)?;
+        let n = rows
+            .checked_mul(cols)
+            .ok_or_else(|| self.err(format!("{what}: {rows}x{cols} overflows")))?;
+        if n > (self.buf.len() - self.pos.min(self.buf.len())) / 4 + 1 {
+            return Err(self.err(format!("truncated: {what} claims {rows}x{cols}")));
+        }
+        let mut data = Vec::with_capacity(n);
+        for _ in 0..n {
+            data.push(self.f32(what)?);
+        }
+        Matrix::from_vec(rows, cols, data)
+    }
+
+    /// Every payload byte must be consumed — trailing garbage means a
+    /// torn or concatenated file.
+    fn finish(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            return Err(self.err(format!(
+                "{} trailing bytes after the payload",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+// ----------------------------------------------------- enum tag codecs
+
+fn kind_tag(k: AccumKind) -> u8 {
+    match k {
+        AccumKind::None => 0,
+        AccumKind::RFactor => 1,
+        AccumKind::Gram => 2,
+        AccumKind::Scales => 3,
+    }
+}
+
+fn kind_of(tag: u8, r: &Reader) -> Result<AccumKind> {
+    match tag {
+        0 => Ok(AccumKind::None),
+        1 => Ok(AccumKind::RFactor),
+        2 => Ok(AccumKind::Gram),
+        3 => Ok(AccumKind::Scales),
+        t => Err(r.err(format!("unknown accumulator kind tag {t}"))),
+    }
+}
+
+fn precision_tag(p: Precision) -> u8 {
+    match p {
+        Precision::F32 => 0,
+        Precision::F16 => 1,
+        Precision::Bf16 => 2,
+    }
+}
+
+fn precision_of(tag: u8, r: &Reader) -> Result<Precision> {
+    match tag {
+        0 => Ok(Precision::F32),
+        1 => Ok(Precision::F16),
+        2 => Ok(Precision::Bf16),
+        t => Err(r.err(format!("unknown precision tag {t}"))),
+    }
+}
+
+fn put_state(w: &mut Writer, s: &CalibState) {
+    match s {
+        CalibState::None => w.u8(0),
+        CalibState::R(m) => {
+            w.u8(1);
+            w.matrix(m);
+        }
+        CalibState::Gram(m) => {
+            w.u8(2);
+            w.matrix(m);
+        }
+        CalibState::Scales { sum_abs, rows } => {
+            w.u8(3);
+            w.size(*rows);
+            w.f64s(sum_abs);
+        }
+    }
+}
+
+fn take_state(r: &mut Reader) -> Result<CalibState> {
+    match r.u8("state tag")? {
+        0 => Ok(CalibState::None),
+        1 => Ok(CalibState::R(r.matrix("R state")?)),
+        2 => Ok(CalibState::Gram(r.matrix("Gram state")?)),
+        3 => {
+            let rows = r.size("scales rows")?;
+            let sum_abs = r.f64s("scales sums")?;
+            Ok(CalibState::Scales { sum_abs, rows })
+        }
+        t => Err(r.err(format!("unknown calibration-state tag {t}"))),
+    }
+}
+
+// --------------------------------------------------------- shard state
+
+/// One pending merge-tree node: the finished state of the canonical
+/// subtree rooted at `(level, index)` for a `(layer, stream)` key.
+/// Leaf `b` sits at `(0, b)` with *global* batch indices, so nodes from
+/// different shards slot into one tree.
+#[derive(Debug, Clone)]
+pub struct StateNode {
+    pub layer: usize,
+    pub stream: String,
+    pub level: u32,
+    pub index: usize,
+    pub state: CalibState,
+}
+
+/// Serializable calibration progress: the pending merge-tree nodes
+/// after folding batches `[start, done)` of a run whose canonical tree
+/// spans `total` batches.  `coala shard` emits a complete one
+/// (`done == end`); the engine's checkpointing writes partial ones and
+/// resumes from them.
+#[derive(Debug, Clone)]
+pub struct ShardState {
+    pub kind: AccumKind,
+    /// Emulated accumulation arithmetic (Table 2's fp16) — merges of
+    /// resumed/shipped states must round exactly like the original run.
+    pub precision: Precision,
+    /// Free-form fingerprint of the activation source that produced
+    /// these states (model config, route, seed, …).  Merging shards or
+    /// resuming a checkpoint from a *different* source would silently
+    /// produce states no real run computes, so merge and resume both
+    /// require the fingerprints to match.
+    pub source: String,
+    /// Batch count of the whole (multi-shard) run — fixes the tree shape.
+    pub total: usize,
+    /// This shard's batch range `[start, end)`.
+    pub start: usize,
+    pub end: usize,
+    /// Batches actually folded: `[start, done)`; `done == end` ⇔ complete.
+    pub done: usize,
+    /// Pending nodes in canonical (layer, stream, level, index) order.
+    pub nodes: Vec<StateNode>,
+}
+
+impl ShardState {
+    pub fn is_complete(&self) -> bool {
+        self.done == self.end
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new(PAYLOAD_SHARD);
+        w.u8(kind_tag(self.kind));
+        w.u8(precision_tag(self.precision));
+        w.str(&self.source);
+        w.size(self.total);
+        w.size(self.start);
+        w.size(self.end);
+        w.size(self.done);
+        w.size(self.nodes.len());
+        for n in &self.nodes {
+            w.size(n.layer);
+            w.str(&n.stream);
+            w.u32(n.level);
+            w.size(n.index);
+            put_state(&mut w, &n.state);
+        }
+        w.buf
+    }
+
+    /// Decode from bytes; `src` names the origin in error messages.
+    pub fn decode(bytes: &[u8], src: &str) -> Result<ShardState> {
+        let mut r = Reader::open(bytes, src, PAYLOAD_SHARD)?;
+        let kind = kind_of(r.u8("accumulator kind")?, &r)?;
+        let precision = precision_of(r.u8("precision")?, &r)?;
+        let source = r.str("source fingerprint")?;
+        let total = r.size("total batches")?;
+        let start = r.size("shard start")?;
+        let end = r.size("shard end")?;
+        let done = r.size("shard done")?;
+        if !(start <= done && done <= end && end <= total) {
+            return Err(r.err(format!(
+                "inconsistent shard header: start {start} ≤ done {done} ≤ end {end} ≤ total {total} violated"
+            )));
+        }
+        let n_nodes = r.size("node count")?;
+        let mut nodes = Vec::with_capacity(n_nodes.min(1 << 20));
+        for _ in 0..n_nodes {
+            let layer = r.size("node layer")?;
+            let stream = r.str("node stream")?;
+            let level = r.u32("node level")?;
+            let index = r.size("node index")?;
+            let state = take_state(&mut r)?;
+            if state.kind() != kind {
+                return Err(r.err(format!(
+                    "node ({layer}, {stream}) holds a {:?} state in a {kind:?} shard",
+                    state.kind()
+                )));
+            }
+            nodes.push(StateNode { layer, stream, level, index, state });
+        }
+        r.finish()?;
+        Ok(ShardState { kind, precision, source, total, start, end, done, nodes })
+    }
+
+    /// Write atomically (temp file + rename): a kill mid-write never
+    /// leaves a torn file behind.
+    pub fn write(&self, path: impl AsRef<Path>) -> Result<()> {
+        write_atomic(path.as_ref(), &self.encode())
+    }
+
+    pub fn read(path: impl AsRef<Path>) -> Result<ShardState> {
+        let p = path.as_ref();
+        let bytes = std::fs::read(p).map_err(|e| Error::io(p, e))?;
+        ShardState::decode(&bytes, &p.display().to_string())
+    }
+}
+
+// ------------------------------------------------------------- factors
+
+/// Serialize a compressed model's factor outputs.  Deterministic
+/// (BTreeMap order), so two runs that agree bitwise on factors produce
+/// byte-identical files — `cmp` is a valid equality check.
+pub fn encode_factors(model: &CompressedModel) -> Vec<u8> {
+    let mut w = Writer::new(PAYLOAD_FACTORS);
+    w.str(&model.base_config);
+    w.size(model.factors.len());
+    for (proj, f) in &model.factors {
+        w.str(proj);
+        w.matrix(&f.a);
+        w.matrix(&f.b);
+        w.f32s(&f.spectrum);
+    }
+    w.buf
+}
+
+pub fn decode_factors(bytes: &[u8], src: &str) -> Result<CompressedModel> {
+    let mut r = Reader::open(bytes, src, PAYLOAD_FACTORS)?;
+    let base_config = r.str("config name")?;
+    let n = r.size("factor count")?;
+    let mut factors = BTreeMap::new();
+    for _ in 0..n {
+        let proj = r.str("projection name")?;
+        let a = r.matrix("A factor")?;
+        let b = r.matrix("B factor")?;
+        let spectrum = r.f32s("spectrum")?;
+        factors.insert(proj, Factors { a, b, spectrum });
+    }
+    r.finish()?;
+    Ok(CompressedModel { base_config, factors })
+}
+
+pub fn write_factors(path: impl AsRef<Path>, model: &CompressedModel) -> Result<()> {
+    write_atomic(path.as_ref(), &encode_factors(model))
+}
+
+pub fn read_factors(path: impl AsRef<Path>) -> Result<CompressedModel> {
+    let p = path.as_ref();
+    let bytes = std::fs::read(p).map_err(|e| Error::io(p, e))?;
+    decode_factors(&bytes, &p.display().to_string())
+}
+
+// ------------------------------------------------------------ adapters
+
+/// Serialize an adapter set (factors + the frozen residual weights), so
+/// a trained or initialized [`AdapterSet`] survives a process boundary.
+pub fn encode_adapters(set: &AdapterSet) -> Vec<u8> {
+    let mut w = Writer::new(PAYLOAD_ADAPTERS);
+    w.size(set.rank);
+    w.size(set.adapters.len());
+    for (proj, (a, b)) in &set.adapters {
+        w.str(proj);
+        w.matrix(a);
+        w.matrix(b);
+    }
+    w.str(&set.frozen.config);
+    w.size(set.frozen.tensors.len());
+    for (name, (dims, data)) in &set.frozen.tensors {
+        w.str(name);
+        w.size(dims.len());
+        for &d in dims {
+            w.size(d);
+        }
+        w.f32s(data);
+    }
+    w.f32s(&set.frozen.pretrain_loss);
+    w.f32(set.frozen.build_val_ppl);
+    w.buf
+}
+
+pub fn decode_adapters(bytes: &[u8], src: &str) -> Result<AdapterSet> {
+    let mut r = Reader::open(bytes, src, PAYLOAD_ADAPTERS)?;
+    let rank = r.size("rank")?;
+    let n = r.size("adapter count")?;
+    let mut adapters = BTreeMap::new();
+    for _ in 0..n {
+        let proj = r.str("projection name")?;
+        let a = r.matrix("adapter A")?;
+        let b = r.matrix("adapter B")?;
+        adapters.insert(proj, (a, b));
+    }
+    let config = r.str("frozen config")?;
+    let n_tensors = r.size("tensor count")?;
+    let mut tensors = BTreeMap::new();
+    for _ in 0..n_tensors {
+        let name = r.str("tensor name")?;
+        let n_dims = r.size("tensor rank")?;
+        if n_dims > 8 {
+            return Err(r.err(format!("tensor `{name}` claims {n_dims} dims")));
+        }
+        let mut dims = Vec::with_capacity(n_dims);
+        for _ in 0..n_dims {
+            dims.push(r.size("tensor dim")?);
+        }
+        let data = r.f32s("tensor data")?;
+        let want: usize = dims
+            .iter()
+            .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+            .ok_or_else(|| r.err(format!("tensor `{name}` shape overflows")))?;
+        if data.len() != want {
+            return Err(r.err(format!(
+                "tensor `{name}`: {} values for shape {dims:?}",
+                data.len()
+            )));
+        }
+        tensors.insert(name, (dims, data));
+    }
+    let pretrain_loss = r.f32s("pretrain loss")?;
+    let build_val_ppl = r.f32("val ppl")?;
+    r.finish()?;
+    Ok(AdapterSet {
+        rank,
+        adapters,
+        frozen: ModelWeights { config, tensors, pretrain_loss, build_val_ppl },
+    })
+}
+
+pub fn write_adapters(path: impl AsRef<Path>, set: &AdapterSet) -> Result<()> {
+    write_atomic(path.as_ref(), &encode_adapters(set))
+}
+
+pub fn read_adapters(path: impl AsRef<Path>) -> Result<AdapterSet> {
+    let p = path.as_ref();
+    let bytes = std::fs::read(p).map_err(|e| Error::io(p, e))?;
+    decode_adapters(&bytes, &p.display().to_string())
+}
+
+// ------------------------------------------------------------ file io
+
+fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent).map_err(|e| Error::io(parent, e))?;
+        }
+    }
+    let tmp = path.with_file_name(format!(
+        "{}.tmp",
+        path.file_name().map(|n| n.to_string_lossy().into_owned()).unwrap_or_default()
+    ));
+    std::fs::write(&tmp, bytes).map_err(|e| Error::io(&tmp, e))?;
+    std::fs::rename(&tmp, path).map_err(|e| Error::io(path, e))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nasty_matrix(rows: usize, cols: usize, seed: u64) -> Matrix<f32> {
+        let mut m = Matrix::randn(rows, cols, seed);
+        // non-finite and sign-sensitive payloads must survive bit-exactly
+        m.data[0] = f32::NAN;
+        m.data[1] = f32::from_bits(0x7fc0_1234); // NaN with payload
+        m.data[2] = f32::INFINITY;
+        m.data[3] = f32::NEG_INFINITY;
+        m.data[4] = -0.0;
+        m.data[5] = f32::MIN_POSITIVE / 2.0; // subnormal
+        m
+    }
+
+    fn bits32(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    fn bits64(v: &[f64]) -> Vec<u64> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn shard_state_roundtrips_every_kind_bit_exactly() {
+        let states = vec![
+            (AccumKind::RFactor, CalibState::R(nasty_matrix(6, 6, 1))),
+            (AccumKind::Gram, CalibState::Gram(nasty_matrix(5, 5, 2))),
+            (
+                AccumKind::Scales,
+                CalibState::Scales {
+                    sum_abs: vec![f64::NAN, f64::INFINITY, -0.0, 1.5e-310, 3.25],
+                    rows: 17,
+                },
+            ),
+            (AccumKind::None, CalibState::None),
+        ];
+        for (kind, state) in states {
+            let st = ShardState {
+                kind,
+                precision: Precision::F16,
+                source: "tiny:host:seed7".into(),
+                total: 8,
+                start: 2,
+                end: 6,
+                done: 4,
+                nodes: vec![StateNode {
+                    layer: 3,
+                    stream: "down".into(),
+                    level: 1,
+                    index: 1,
+                    state,
+                }],
+            };
+            let got = ShardState::decode(&st.encode(), "<memory>").unwrap();
+            assert_eq!(got.kind, st.kind);
+            assert_eq!(got.precision, st.precision);
+            assert_eq!(got.source, st.source);
+            assert_eq!(
+                (got.total, got.start, got.end, got.done),
+                (st.total, st.start, st.end, st.done)
+            );
+            assert!(!got.is_complete());
+            assert_eq!(got.nodes.len(), 1);
+            let (a, b) = (&st.nodes[0], &got.nodes[0]);
+            assert_eq!((a.layer, &a.stream, a.level, a.index), (b.layer, &b.stream, b.level, b.index));
+            match (&a.state, &b.state) {
+                (CalibState::R(x), CalibState::R(y)) | (CalibState::Gram(x), CalibState::Gram(y)) => {
+                    assert_eq!(bits32(&x.data), bits32(&y.data));
+                    assert_eq!((x.rows, x.cols), (y.rows, y.cols));
+                }
+                (
+                    CalibState::Scales { sum_abs: x, rows: rx },
+                    CalibState::Scales { sum_abs: y, rows: ry },
+                ) => {
+                    assert_eq!(bits64(x), bits64(y));
+                    assert_eq!(rx, ry);
+                }
+                (CalibState::None, CalibState::None) => {}
+                other => panic!("kind changed in roundtrip: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn header_mismatches_are_rejected_with_source() {
+        let st = ShardState {
+            kind: AccumKind::Gram,
+            precision: Precision::F32,
+            source: String::new(),
+            total: 1,
+            start: 0,
+            end: 1,
+            done: 1,
+            nodes: vec![],
+        };
+        let good = st.encode();
+
+        let mut bad_magic = good.clone();
+        bad_magic[0] = b'X';
+        let e = ShardState::decode(&bad_magic, "m.state").unwrap_err().to_string();
+        assert!(e.contains("m.state") && e.contains("magic"), "{e}");
+
+        let mut bad_version = good.clone();
+        bad_version[4] = 99;
+        let e = ShardState::decode(&bad_version, "v.state").unwrap_err().to_string();
+        assert!(e.contains("version 99"), "{e}");
+
+        // a factors payload is not a shard state
+        let factors = encode_factors(&CompressedModel::new("tiny"));
+        let e = ShardState::decode(&factors, "f.state").unwrap_err().to_string();
+        assert!(e.contains("factors") && e.contains("shard state"), "{e}");
+        assert!(decode_factors(&good, "s.state").is_err());
+
+        // truncation and trailing garbage
+        assert!(ShardState::decode(&good[..good.len() - 1], "t.state").is_err());
+        let mut trailing = good.clone();
+        trailing.push(0);
+        assert!(ShardState::decode(&trailing, "g.state").is_err());
+
+        // inconsistent header arithmetic
+        let mut inconsistent = st.clone();
+        inconsistent.done = 2; // done > end
+        assert!(ShardState::decode(&inconsistent.encode(), "h.state").is_err());
+    }
+
+    #[test]
+    fn factors_roundtrip_bit_exactly() {
+        let mut model = CompressedModel::new("small");
+        model.insert(
+            "l0.wq",
+            Factors { a: nasty_matrix(8, 3, 3), b: nasty_matrix(3, 8, 4), spectrum: vec![f32::NAN, 2.0, 0.0] },
+        );
+        model.insert(
+            "l1.w_up",
+            Factors { a: nasty_matrix(8, 2, 5), b: nasty_matrix(2, 12, 6), spectrum: vec![] },
+        );
+        let bytes = encode_factors(&model);
+        let got = decode_factors(&bytes, "<memory>").unwrap();
+        assert_eq!(got.base_config, "small");
+        assert_eq!(got.factors.len(), 2);
+        for (proj, f) in &model.factors {
+            let g = &got.factors[proj];
+            assert_eq!(bits32(&f.a.data), bits32(&g.a.data));
+            assert_eq!(bits32(&f.b.data), bits32(&g.b.data));
+            assert_eq!(bits32(&f.spectrum), bits32(&g.spectrum));
+        }
+        // determinism: encoding the decoded model reproduces the bytes
+        assert_eq!(bytes, encode_factors(&got));
+    }
+
+    #[test]
+    fn adapters_roundtrip_with_frozen_weights() {
+        let mut adapters = BTreeMap::new();
+        adapters.insert("l0.wq".to_string(), (nasty_matrix(6, 2, 7), nasty_matrix(2, 6, 8)));
+        let mut tensors = BTreeMap::new();
+        tensors.insert("embed".to_string(), (vec![4, 6], nasty_matrix(4, 6, 9).data));
+        tensors.insert("l0.norm".to_string(), (vec![6], vec![1.0f32; 6]));
+        let set = AdapterSet {
+            rank: 2,
+            adapters,
+            frozen: ModelWeights {
+                config: "tiny".into(),
+                tensors,
+                pretrain_loss: vec![2.5, 1.25],
+                build_val_ppl: f32::NAN,
+            },
+        };
+        let got = decode_adapters(&encode_adapters(&set), "<memory>").unwrap();
+        assert_eq!(got.rank, 2);
+        let (a0, b0) = &set.adapters["l0.wq"];
+        let (a1, b1) = &got.adapters["l0.wq"];
+        assert_eq!(bits32(&a0.data), bits32(&a1.data));
+        assert_eq!(bits32(&b0.data), bits32(&b1.data));
+        assert_eq!(got.frozen.config, "tiny");
+        assert_eq!(got.frozen.tensors["embed"].0, vec![4, 6]);
+        assert_eq!(
+            bits32(&set.frozen.tensors["embed"].1),
+            bits32(&got.frozen.tensors["embed"].1)
+        );
+        assert_eq!(bits32(&set.frozen.pretrain_loss), bits32(&got.frozen.pretrain_loss));
+        assert_eq!(set.frozen.build_val_ppl.to_bits(), got.frozen.build_val_ppl.to_bits());
+    }
+
+    #[test]
+    fn file_errors_name_the_path() {
+        let e = ShardState::read("/nonexistent-dir/nope.state").unwrap_err().to_string();
+        assert!(e.contains("/nonexistent-dir/nope.state"), "{e}");
+        let e = read_factors("/nonexistent-dir/nope.factors").unwrap_err().to_string();
+        assert!(e.contains("nope.factors"), "{e}");
+    }
+
+    #[test]
+    fn write_is_atomic_and_reads_back() {
+        let dir = std::env::temp_dir().join(format!("coala-state-{}", std::process::id()));
+        let path = dir.join("x.state");
+        let st = ShardState {
+            kind: AccumKind::RFactor,
+            precision: Precision::F32,
+            source: "atomic-test".into(),
+            total: 4,
+            start: 0,
+            end: 4,
+            done: 4,
+            nodes: vec![StateNode {
+                layer: 0,
+                stream: "attn".into(),
+                level: 2,
+                index: 0,
+                state: CalibState::R(nasty_matrix(7, 7, 10)),
+            }],
+        };
+        st.write(&path).unwrap();
+        // no temp residue
+        assert!(!dir.join("x.state.tmp").exists());
+        let got = ShardState::read(&path).unwrap();
+        assert!(got.is_complete());
+        let (CalibState::R(a), CalibState::R(b)) = (&st.nodes[0].state, &got.nodes[0].state)
+        else {
+            panic!("kind changed");
+        };
+        assert_eq!(bits32(&a.data), bits32(&b.data));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -48,6 +48,7 @@ use crate::calib::accumulate::{
     make_accumulator, merge_states, AccumBackend, AccumKind, CalibAccumulator, CalibState,
 };
 use crate::calib::activations::{ActivationSource, CalibChunk};
+use crate::calib::state::{ShardState, StateNode};
 use crate::coala::compressor::{compressor_for, Compressor, Route};
 use crate::coala::factorize::Factors;
 use crate::coala::Method;
@@ -122,6 +123,98 @@ impl EnginePlan {
     }
 }
 
+/// A contiguous batch range `[start, end)` of a calibration run whose
+/// canonical merge tree spans `total` batches.  Leaf indices stay
+/// *global* (the batch number), so states accumulated over one shard's
+/// range slot into the same tree as every other shard's — the invariant
+/// behind the bitwise shard/merge guarantee.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardRange {
+    pub start: usize,
+    pub end: usize,
+    pub total: usize,
+}
+
+impl ShardRange {
+    /// The whole run as one range (the single-process case).
+    pub fn full(batches: usize) -> ShardRange {
+        ShardRange { start: 0, end: batches, total: batches }
+    }
+
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.start == self.end
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.start > self.end || self.end > self.total {
+            return Err(Error::Config(format!(
+                "bad shard range: [{}, {}) of {} batches",
+                self.start, self.end, self.total
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Checkpoint/resume configuration for a calibration run: every `every`
+/// batches the pending merge-tree states are written (atomically) to
+/// `dir`, and with `resume` an existing checkpoint is loaded instead of
+/// starting from batch `start`.  Checkpointed runs produce bitwise the
+/// same result as uninterrupted ones: the canonical tree does not care
+/// where the run was cut.
+#[derive(Debug, Clone)]
+pub struct CheckpointCfg {
+    pub dir: String,
+    /// Batches between checkpoint writes (≥ 1).
+    pub every: usize,
+    /// Load `dir`'s checkpoint for the range, if present.
+    pub resume: bool,
+    /// Extra identity folded into the run's source fingerprint (e.g.
+    /// the synthetic seed) so one checkpoint directory can serve many
+    /// runs without a stale checkpoint resuming the wrong one.
+    pub source: String,
+}
+
+impl CheckpointCfg {
+    pub fn new(dir: impl Into<String>, every: usize, resume: bool) -> CheckpointCfg {
+        CheckpointCfg { dir: dir.into(), every: every.max(1), resume, source: String::new() }
+    }
+
+    /// Same configuration with an identity stamp (see `source`).
+    pub fn with_source(mut self, source: impl Into<String>) -> CheckpointCfg {
+        self.source = source.into();
+        self
+    }
+
+    /// The checkpoint file for one run: keyed by accumulator kind,
+    /// precision, the source fingerprint (hashed), and the batch range
+    /// — so one directory holds many shards'/methods'/configs'
+    /// checkpoints side by side, and a driver sweeping several methods
+    /// never trips over another run's file.
+    pub fn file(
+        &self,
+        kind: AccumKind,
+        precision: Precision,
+        range: &ShardRange,
+        source_id: &str,
+    ) -> std::path::PathBuf {
+        // FNV-1a over the fingerprint: short, stable, filename-safe
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in source_id.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        std::path::Path::new(&self.dir).join(format!(
+            "ckpt-{kind:?}-{precision:?}-{h:016x}-{}-{}-of-{}.state",
+            range.start, range.end, range.total
+        ))
+    }
+}
+
 /// Capture + sharded accumulate + canonical merge-tree reduction: drive
 /// `batches` batches of `source` into per-(layer, stream) states.
 ///
@@ -138,10 +231,265 @@ pub fn calibrate(
     plan: &EnginePlan,
     timings: &mut StageTimings,
 ) -> Result<CalibStates> {
-    let plan = plan.normalized();
-    let next_batch = AtomicUsize::new(0);
-    let cancelled = AtomicBool::new(false);
+    calibrate_checkpointed(source, kind, batches, backend, precision, plan, timings, None, "")
+}
+
+/// [`calibrate`] with optionally durable progress: with `Some(ckpt)`
+/// the pending merge-tree states are checkpointed to `ckpt.dir` every
+/// `ckpt.every` batches, and a killed run resumes from the last
+/// checkpoint (`ckpt.resume`) — producing bitwise the same factors as
+/// an uninterrupted run.  `source_id` fingerprints the activation
+/// source (model, route, seed, …); a checkpoint recorded under a
+/// different fingerprint is rejected instead of silently mixing runs.
+#[allow(clippy::too_many_arguments)]
+pub fn calibrate_checkpointed(
+    source: &dyn ActivationSource,
+    kind: AccumKind,
+    batches: usize,
+    backend: AccumBackend<'_>,
+    precision: Precision,
+    plan: &EnginePlan,
+    timings: &mut StageTimings,
+    ckpt: Option<&CheckpointCfg>,
+    source_id: &str,
+) -> Result<CalibStates> {
+    let slots = run_windowed(
+        source,
+        kind,
+        ShardRange::full(batches),
+        backend,
+        precision,
+        plan,
+        timings,
+        ckpt,
+        source_id,
+    )?;
+    collect_states(slots, backend, precision, timings)
+}
+
+/// Accumulate-only over one shard's batch range: fold batches
+/// `[range.start, range.end)` and return the pending merge-tree nodes
+/// as a serializable [`ShardState`] — no factorization, no reduction
+/// past what the range allows.  `coala shard` writes the result to
+/// disk; [`merge_shard_states`] (or `coala merge`) turns N of them back
+/// into the exact states the single-process run computes.
+#[allow(clippy::too_many_arguments)]
+pub fn accumulate_shard(
+    source: &dyn ActivationSource,
+    kind: AccumKind,
+    range: ShardRange,
+    backend: AccumBackend<'_>,
+    precision: Precision,
+    plan: &EnginePlan,
+    timings: &mut StageTimings,
+    ckpt: Option<&CheckpointCfg>,
+    source_id: &str,
+) -> Result<ShardState> {
+    let slots =
+        run_windowed(source, kind, range, backend, precision, plan, timings, ckpt, source_id)?;
+    Ok(snapshot(&slots, kind, precision, &range, range.end, source_id))
+}
+
+/// Merge complete shard states (from N `coala shard` processes) into
+/// per-(layer, stream) states.  Every node re-enters the canonical tree
+/// at its recorded (level, index), so the result is **bitwise
+/// identical** to the single-process engine run at any shard count:
+/// sibling merges happen between exactly the same operands in exactly
+/// the same order.  The shards must tile `[0, total)` with one
+/// consistent (kind, precision, total) header.
+pub fn merge_shard_states(
+    parts: Vec<ShardState>,
+    backend: AccumBackend<'_>,
+    timings: &mut StageTimings,
+) -> Result<CalibStates> {
+    let first = parts.first().ok_or_else(|| Error::Config("merge of zero shard states".into()))?;
+    let (kind, precision, total) = (first.kind, first.precision, first.total);
+    let source = first.source.clone();
+    for p in &parts {
+        if p.kind != kind || p.precision != precision || p.total != total {
+            return Err(Error::Config(format!(
+                "mixed shard headers: ({:?}, {:?}, {} batches) vs ({:?}, {:?}, {} batches)",
+                kind, precision, total, p.kind, p.precision, p.total
+            )));
+        }
+        if p.source != source {
+            return Err(Error::Config(format!(
+                "shards come from different sources: `{source}` vs `{}` — merging them would \
+                 produce states no real run computes",
+                p.source
+            )));
+        }
+        if !p.is_complete() {
+            return Err(Error::Config(format!(
+                "shard [{}, {}) is an incomplete checkpoint (folded through batch {}) — finish it before merging",
+                p.start, p.end, p.done
+            )));
+        }
+    }
+    let mut spans: Vec<(usize, usize)> = parts.iter().map(|p| (p.start, p.end)).collect();
+    spans.sort_unstable();
+    let mut cursor = 0;
+    for (s, e) in spans {
+        if s != cursor {
+            return Err(Error::Config(format!(
+                "shards do not tile [0, {total}): expected a shard starting at batch {cursor}, found [{s}, {e})"
+            )));
+        }
+        cursor = e;
+    }
+    if cursor != total {
+        return Err(Error::Config(format!(
+            "shards do not tile [0, {total}): coverage stops at batch {cursor}"
+        )));
+    }
+
     let slots: Mutex<SlotMap> = Mutex::new(HashMap::new());
+    for p in parts {
+        for node in p.nodes {
+            insert_node(
+                &slots,
+                total,
+                &(node.layer, node.stream),
+                node.state,
+                backend,
+                precision,
+                node.level,
+                node.index,
+            )?;
+        }
+    }
+    collect_states(slots.into_inner().unwrap(), backend, precision, timings)
+}
+
+/// The windowed capture ∥ accumulate driver behind every entry point:
+/// runs `range` in windows of `ckpt.every` batches (one window when not
+/// checkpointing), persisting the pending slots after each window.  On
+/// error the in-memory slots are discarded — the last on-disk
+/// checkpoint stays consistent, which is what makes kill/resume safe.
+#[allow(clippy::too_many_arguments)]
+fn run_windowed(
+    source: &dyn ActivationSource,
+    kind: AccumKind,
+    range: ShardRange,
+    backend: AccumBackend<'_>,
+    precision: Precision,
+    plan: &EnginePlan,
+    timings: &mut StageTimings,
+    ckpt: Option<&CheckpointCfg>,
+    source_id: &str,
+) -> Result<SlotMap> {
+    range.validate()?;
+    let mut map = SlotMap::new();
+    let mut done = range.start;
+    if let Some(c) = ckpt {
+        std::fs::create_dir_all(&c.dir).map_err(|e| Error::io(&c.dir, e))?;
+        let file = c.file(kind, precision, &range, source_id);
+        if c.resume && file.exists() {
+            let st = ShardState::read(&file)?;
+            if st.kind != kind || st.precision != precision {
+                return Err(Error::Config(format!(
+                    "checkpoint {} holds ({:?}, {:?}), run wants ({kind:?}, {precision:?})",
+                    file.display(),
+                    st.kind,
+                    st.precision
+                )));
+            }
+            if st.source != source_id {
+                return Err(Error::Config(format!(
+                    "checkpoint {} was recorded from source `{}`, run uses `{source_id}` — \
+                     refusing to mix calibration runs",
+                    file.display(),
+                    st.source
+                )));
+            }
+            if st.total != range.total || st.start != range.start || st.end != range.end {
+                return Err(Error::Config(format!(
+                    "checkpoint {} covers [{}, {}) of {}, run wants [{}, {}) of {}",
+                    file.display(),
+                    st.start,
+                    st.end,
+                    st.total,
+                    range.start,
+                    range.end,
+                    range.total
+                )));
+            }
+            done = st.done;
+            for n in st.nodes {
+                map.insert(((n.layer, n.stream), n.level, n.index), n.state);
+            }
+        }
+    }
+    let slots = Mutex::new(map);
+    while done < range.end {
+        let w1 = match ckpt {
+            Some(c) => (done + c.every).min(range.end),
+            None => range.end,
+        };
+        run_pass(source, kind, &range, done, w1, backend, precision, plan, &slots, timings)?;
+        done = w1;
+        if let Some(c) = ckpt {
+            let st = snapshot(&slots.lock().unwrap(), kind, precision, &range, done, source_id);
+            st.write(c.file(kind, precision, &range, source_id))?;
+        }
+    }
+    Ok(slots.into_inner().unwrap())
+}
+
+/// Snapshot the pending slots as a [`ShardState`] in canonical node
+/// order (deterministic bytes for deterministic content).
+fn snapshot(
+    slots: &SlotMap,
+    kind: AccumKind,
+    precision: Precision,
+    range: &ShardRange,
+    done: usize,
+    source_id: &str,
+) -> ShardState {
+    let mut nodes: Vec<StateNode> = slots
+        .iter()
+        .map(|((key, level, index), state)| StateNode {
+            layer: key.0,
+            stream: key.1.clone(),
+            level: *level,
+            index: *index,
+            state: state.clone(),
+        })
+        .collect();
+    nodes.sort_by(|a, b| {
+        (a.layer, &a.stream, a.level, a.index).cmp(&(b.layer, &b.stream, b.level, b.index))
+    });
+    ShardState {
+        kind,
+        precision,
+        source: source_id.to_string(),
+        total: range.total,
+        start: range.start,
+        end: range.end,
+        done,
+        nodes,
+    }
+}
+
+/// One capture ∥ accumulate pass over batches `[w0, w1)` of the range,
+/// folding leaves into `slots` through the canonical tree.
+#[allow(clippy::too_many_arguments)]
+fn run_pass(
+    source: &dyn ActivationSource,
+    kind: AccumKind,
+    range: &ShardRange,
+    w0: usize,
+    w1: usize,
+    backend: AccumBackend<'_>,
+    precision: Precision,
+    plan: &EnginePlan,
+    slots: &Mutex<SlotMap>,
+    timings: &mut StageTimings,
+) -> Result<()> {
+    let plan = plan.normalized();
+    let batches = range.total;
+    let next_batch = AtomicUsize::new(w0);
+    let cancelled = AtomicBool::new(false);
     let (tx, rx) = mpsc::sync_channel::<(usize, Vec<CalibChunk>)>(plan.queue_cap);
     // each shard owns an Arc share of the receiver, so if every shard
     // dies (even by panic) the channel closes and blocked senders exit
@@ -166,7 +514,7 @@ pub fn calibrate(
                         return (busy, Ok(()));
                     }
                     let b = next.fetch_add(1, Ordering::Relaxed);
-                    if b >= batches {
+                    if b >= w1 {
                         return (busy, Ok(()));
                     }
                     let t0 = Instant::now();
@@ -227,7 +575,8 @@ pub fn calibrate(
                             acc.fold_chunk(&c.xt)?;
                         }
                         for (key, acc) in leaf {
-                            insert_state(slots, batches, &key, acc.finish(), backend, precision, b)?;
+                            // leaf b enters the canonical tree at (0, b)
+                            insert_node(slots, batches, &key, acc.finish(), backend, precision, 0, b)?;
                         }
                         Ok(())
                     })();
@@ -281,14 +630,25 @@ pub fn calibrate(
         (None, None) => {}
     }
 
-    // ---- collect the merge-tree roots -----------------------------------
-    // On the normal path every key has exactly one finished root.  A key
-    // the source omitted from some batches leaves orphan subtrees; fold
-    // them in canonical (level, index) order so even that is worker-
-    // count independent.
+    timings.calibrate_s += capture_secs;
+    timings.accumulate_s += accum_secs;
+    Ok(())
+}
+
+/// Collect the merge-tree roots into per-(layer, stream) states.
+/// On the normal path every key has exactly one finished root.  A key
+/// the source omitted from some batches leaves orphan subtrees; fold
+/// them in canonical (level, index) order so even that is worker-
+/// count (and shard-count) independent.
+fn collect_states(
+    slots: SlotMap,
+    backend: AccumBackend<'_>,
+    precision: Precision,
+    timings: &mut StageTimings,
+) -> Result<CalibStates> {
     let t_red = Instant::now();
     let mut per_key: BTreeMap<(usize, String), Vec<((u32, usize), CalibState)>> = BTreeMap::new();
-    for ((key, level, index), state) in slots.into_inner().unwrap() {
+    for ((key, level, index), state) in slots {
         per_key.entry(key).or_default().push(((level, index), state));
     }
     let mut out = CalibStates::new();
@@ -301,8 +661,7 @@ pub fn calibrate(
         };
         out.insert(key, state);
     }
-    timings.calibrate_s += capture_secs;
-    timings.accumulate_s += accum_secs + t_red.elapsed().as_secs_f64();
+    timings.accumulate_s += t_red.elapsed().as_secs_f64();
     Ok(out)
 }
 
@@ -324,22 +683,27 @@ fn level_size(batches: usize, level: u32) -> usize {
     n
 }
 
-/// Insert a finished subtree node and greedily merge completed sibling
-/// pairs up the canonical tree.  Pairs always merge left-to-right, so
-/// the result is bitwise-independent of arrival order and worker count,
-/// and at most O(log batches) nodes per key are pending at any moment —
-/// the out-of-core property the streaming design exists for.
-fn insert_state(
+/// Insert a finished subtree node at (level, index) and greedily merge
+/// completed sibling pairs up the canonical tree.  Pairs always merge
+/// left-to-right, so the result is bitwise-independent of arrival order
+/// and worker count, and at most O(log batches) nodes per key are
+/// pending at any moment — the out-of-core property the streaming
+/// design exists for.  Leaves enter at (0, batch); shard files re-enter
+/// wherever their subtree stalled, which is why merging shard files
+/// replays the single-process reduction exactly.
+#[allow(clippy::too_many_arguments)]
+fn insert_node(
     slots: &Mutex<SlotMap>,
     batches: usize,
     key: &(usize, String),
     state: CalibState,
     backend: AccumBackend<'_>,
     precision: Precision,
-    batch: usize,
+    level: u32,
+    index: usize,
 ) -> Result<()> {
-    let mut level = 0u32;
-    let mut index = batch;
+    let mut level = level;
+    let mut index = index;
     let mut state = state;
     loop {
         let size = level_size(batches, level);
@@ -374,7 +738,7 @@ fn insert_state(
 
 /// Pairwise merge of partial states in a fixed left-to-right tree: the
 /// shape depends only on the partial count, so the result is independent
-/// of how many workers produced the partials.  [`insert_state`] performs
+/// of how many workers produced the partials.  [`insert_node`] performs
 /// the same reduction incrementally; this eager form serves the orphan
 /// fallback and the single-vector case.
 fn reduce_tree(
@@ -612,6 +976,201 @@ mod tests {
     #[test]
     fn reduce_tree_rejects_empty() {
         assert!(reduce_tree(Vec::new(), AccumBackend::Host, Precision::F32).is_err());
+    }
+
+    fn assert_gram_states_eq(want: &CalibStates, got: &CalibStates, label: &str) {
+        assert_eq!(want.len(), got.len(), "{label}");
+        for (k, s) in want {
+            let (a, b) = (s.gram().unwrap(), got[k].gram().unwrap());
+            assert_eq!(a.data, b.data, "{label} {k:?}");
+        }
+    }
+
+    #[test]
+    fn shard_accumulate_plus_merge_reproduces_in_process_states() {
+        let spec = synthetic_manifest().config("tiny").unwrap().clone();
+        let src = SyntheticActivations::new(spec.clone(), 3);
+        let total = 5;
+        let mut t = StageTimings::default();
+        let want = calibrate(
+            &src,
+            AccumKind::Gram,
+            total,
+            AccumBackend::Host,
+            Precision::F32,
+            &EnginePlan::sequential(),
+            &mut t,
+        )
+        .unwrap();
+        for shards in [1usize, 2, 3, 5] {
+            let plan = super::super::shard::ShardPlan::new(total, shards).unwrap();
+            let parts: Vec<ShardState> = (0..shards)
+                .map(|i| {
+                    accumulate_shard(
+                        &src,
+                        AccumKind::Gram,
+                        plan.range(i).unwrap(),
+                        AccumBackend::Host,
+                        Precision::F32,
+                        &EnginePlan::with_workers(2),
+                        &mut StageTimings::default(),
+                        None,
+                        "tiny:test",
+                    )
+                    .unwrap()
+                })
+                .collect();
+            let got = merge_shard_states(parts, AccumBackend::Host, &mut StageTimings::default())
+                .unwrap();
+            assert_gram_states_eq(&want, &got, &format!("shards={shards}"));
+        }
+    }
+
+    #[test]
+    fn merge_rejects_gaps_overlaps_and_incomplete_checkpoints() {
+        let spec = synthetic_manifest().config("tiny").unwrap().clone();
+        let src = SyntheticActivations::new(spec.clone(), 3);
+        let shard = |start: usize, end: usize| {
+            accumulate_shard(
+                &src,
+                AccumKind::Gram,
+                ShardRange { start, end, total: 4 },
+                AccumBackend::Host,
+                Precision::F32,
+                &EnginePlan::sequential(),
+                &mut StageTimings::default(),
+                None,
+                "tiny:test",
+            )
+            .unwrap()
+        };
+        let mut t = StageTimings::default();
+        // gap: [0,2) + [3,4)
+        let err = merge_shard_states(vec![shard(0, 2), shard(3, 4)], AccumBackend::Host, &mut t)
+            .unwrap_err();
+        assert!(err.to_string().contains("tile"), "{err}");
+        // short coverage: [0,2) alone
+        assert!(merge_shard_states(vec![shard(0, 2)], AccumBackend::Host, &mut t).is_err());
+        // incomplete checkpoint
+        let mut partial = shard(2, 4);
+        partial.done = 3;
+        let err = merge_shard_states(vec![shard(0, 2), partial], AccumBackend::Host, &mut t)
+            .unwrap_err();
+        assert!(err.to_string().contains("incomplete"), "{err}");
+        // shards from different sources must not merge silently
+        let mut alien = shard(2, 4);
+        alien.source = "other-model:seed9".into();
+        let err = merge_shard_states(vec![shard(0, 2), alien], AccumBackend::Host, &mut t)
+            .unwrap_err();
+        assert!(err.to_string().contains("different sources"), "{err}");
+        // zero shards
+        assert!(merge_shard_states(Vec::new(), AccumBackend::Host, &mut t).is_err());
+    }
+
+    #[test]
+    fn checkpointed_run_survives_a_kill_and_resumes_bitwise() {
+        let spec = synthetic_manifest().config("tiny").unwrap().clone();
+        let src = SyntheticActivations::new(spec.clone(), 4);
+        let total = 6;
+        let mut t = StageTimings::default();
+        let want = calibrate(
+            &src,
+            AccumKind::Gram,
+            total,
+            AccumBackend::Host,
+            Precision::F32,
+            &EnginePlan::sequential(),
+            &mut t,
+        )
+        .unwrap();
+
+        struct DieAt<'a> {
+            inner: &'a SyntheticActivations,
+            from: usize,
+        }
+        impl ActivationSource for DieAt<'_> {
+            fn capture_batch(&self, b: usize) -> Result<Vec<CalibChunk>> {
+                if b >= self.from {
+                    return Err(Error::msg(format!("killed at batch {b}")));
+                }
+                self.inner.capture_batch(b)
+            }
+        }
+
+        let dir = std::env::temp_dir().join(format!("coala-engine-ckpt-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let ckpt = CheckpointCfg::new(dir.display().to_string(), 2, true);
+        let sid = "tiny:host:seed4";
+        let range = ShardRange::full(total);
+        // "kill" mid-run: capture dies at batch 4, checkpoints for
+        // [0, 4) are already on disk
+        let err = calibrate_checkpointed(
+            &DieAt { inner: &src, from: 4 },
+            AccumKind::Gram,
+            total,
+            AccumBackend::Host,
+            Precision::F32,
+            &EnginePlan::with_workers(2),
+            &mut StageTimings::default(),
+            Some(&ckpt),
+            sid,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("capture stage failed"), "{err}");
+        let file = ckpt.file(AccumKind::Gram, Precision::F32, &range, sid);
+        let saved = ShardState::read(&file).unwrap();
+        assert_eq!(saved.done, 4, "checkpoint did not persist the completed windows");
+        assert_eq!(saved.source, sid);
+
+        // resume with the healthy source: bitwise equal to uninterrupted
+        let got = calibrate_checkpointed(
+            &src,
+            AccumKind::Gram,
+            total,
+            AccumBackend::Host,
+            Precision::F32,
+            &EnginePlan::with_workers(2),
+            &mut StageTimings::default(),
+            Some(&ckpt),
+            sid,
+        )
+        .unwrap();
+        assert_gram_states_eq(&want, &got, "resumed");
+
+        // a mismatched checkpoint on the expected filename (here: the
+        // Gram file copied over the RFactor slot, simulating a renamed
+        // or hash-colliding file) is rejected loudly, not resumed
+        let r_file = ckpt.file(AccumKind::RFactor, Precision::F32, &range, sid);
+        std::fs::copy(&file, &r_file).unwrap();
+        let err = calibrate_checkpointed(
+            &src,
+            AccumKind::RFactor,
+            total,
+            AccumBackend::Host,
+            Precision::F32,
+            &EnginePlan::sequential(),
+            &mut StageTimings::default(),
+            Some(&ckpt),
+            sid,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("checkpoint"), "{err}");
+        // a different source fingerprint resolves to a different file,
+        // so the stale Gram checkpoint is simply not picked up
+        let fresh = calibrate_checkpointed(
+            &src,
+            AccumKind::Gram,
+            total,
+            AccumBackend::Host,
+            Precision::F32,
+            &EnginePlan::sequential(),
+            &mut StageTimings::default(),
+            Some(&ckpt),
+            "tiny:host:seed5-different",
+        )
+        .unwrap();
+        assert_gram_states_eq(&want, &fresh, "fresh-start under new fingerprint");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

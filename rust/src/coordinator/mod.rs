@@ -28,14 +28,25 @@
 //! the overlapped scheduler ([`scheduler`]), and the multi-device tree
 //! TSQR ([`tsqr_tree`]) are thin [`engine::EnginePlan`] configurations
 //! of the same engine.
+//!
+//! The same property makes calibration *durable and multi-process*
+//! ([`shard`] + [`crate::calib::state`]): a [`shard::ShardPlan`]
+//! partitions the batches, `coala shard` runs accumulate-only over one
+//! range and serializes its pending merge-tree nodes, `coala merge`
+//! folds N state files back into the canonical tree — bitwise identical
+//! to the single-process run — and any run can checkpoint its pending
+//! states every N batches ([`engine::CheckpointCfg`]) and resume after
+//! a kill with no effect on the resulting bits.
 
 pub mod budget;
 pub mod engine;
 pub mod pipeline;
 pub mod scheduler;
+pub mod shard;
 pub mod tsqr_tree;
 
 pub use budget::RankBudget;
-pub use engine::{CalibStates, EnginePlan, StageTimings};
+pub use engine::{CalibStates, CheckpointCfg, EnginePlan, ShardRange, StageTimings};
 pub use pipeline::{CompressionJob, CompressionOutcome, Pipeline};
+pub use shard::ShardPlan;
 pub use tsqr_tree::TsqrTreeRunner;

@@ -29,7 +29,7 @@ use crate::tensor::lowp::Precision;
 use std::collections::BTreeMap;
 use std::time::Instant;
 
-use super::engine::{self, EnginePlan};
+use super::engine::{self, CheckpointCfg, EnginePlan};
 
 pub use super::engine::{CalibStates, StageTimings};
 
@@ -85,6 +85,10 @@ pub struct Pipeline<'a> {
     pub host_sweeps: usize,
     /// Worker counts per engine stage (sequential by default).
     pub plan: EnginePlan,
+    /// When set, calibration checkpoints its pending merge states to
+    /// disk every N batches and can resume after a kill
+    /// (`--checkpoint-dir`/`--resume`); results are bitwise unchanged.
+    pub checkpoint: Option<CheckpointCfg>,
 }
 
 impl<'a> Pipeline<'a> {
@@ -96,6 +100,7 @@ impl<'a> Pipeline<'a> {
             route: Route::Device,
             host_sweeps: HOST_SWEEPS,
             plan: EnginePlan::default(),
+            checkpoint: None,
         }
     }
 
@@ -108,6 +113,12 @@ impl<'a> Pipeline<'a> {
     /// Same pipeline, with an explicit engine plan (worker counts).
     pub fn with_plan(mut self, plan: EnginePlan) -> Pipeline<'a> {
         self.plan = plan;
+        self
+    }
+
+    /// Same pipeline, checkpointing calibration progress to disk.
+    pub fn with_checkpoint(mut self, ckpt: Option<CheckpointCfg>) -> Pipeline<'a> {
+        self.checkpoint = ckpt;
         self
     }
 
@@ -148,7 +159,14 @@ impl<'a> Pipeline<'a> {
         timings: &mut StageTimings,
     ) -> Result<CalibStates> {
         let comp = compressor_for(&job.method);
-        engine::calibrate(
+        // fingerprint of this calibration run (model config, route,
+        // batch count, plus whatever identity the checkpoint config
+        // carries — e.g. the synthetic seed): keys the checkpoint file
+        // and guards resume against mixing different runs
+        let sid = self.checkpoint.as_ref().map_or_else(String::new, |c| {
+            format!("{}:{:?}:b{}:{}", self.spec.name, self.route, job.calib_batches, c.source)
+        });
+        engine::calibrate_checkpointed(
             source,
             comp.accum_kind(),
             job.calib_batches,
@@ -156,6 +174,8 @@ impl<'a> Pipeline<'a> {
             job.accum_precision,
             &self.plan,
             timings,
+            self.checkpoint.as_ref(),
+            &sid,
         )
     }
 

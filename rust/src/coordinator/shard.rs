@@ -1,0 +1,99 @@
+//! Shard planning for multi-process calibration.
+//!
+//! A [`ShardPlan`] partitions the `total_batches` of a calibration run
+//! into contiguous, near-even batch ranges — one per worker process.
+//! Each worker runs `coala shard` (→ [`super::engine::accumulate_shard`])
+//! over its range and writes a state file through the
+//! [`crate::calib::state`] codec; `coala merge`
+//! (→ [`super::engine::merge_shard_states`]) folds the files back into
+//! the canonical merge tree.  Because leaf indices are global batch
+//! numbers and the tree shape depends only on `total_batches`, the
+//! merged result is **bitwise identical** to the single-process engine
+//! run at any shard count — sharding, like `--workers`, is a pure
+//! deployment knob.
+
+use super::engine::ShardRange;
+use crate::error::{Error, Result};
+
+/// Contiguous near-even partition of `[0, total_batches)` into
+/// `shard_count` ranges.  The first `total % count` shards get one
+/// extra batch, so any two shards differ by at most one batch of work.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardPlan {
+    pub total_batches: usize,
+    pub shard_count: usize,
+}
+
+impl ShardPlan {
+    pub fn new(total_batches: usize, shard_count: usize) -> Result<ShardPlan> {
+        if total_batches == 0 {
+            return Err(Error::Config("shard plan over zero batches".into()));
+        }
+        if shard_count == 0 {
+            return Err(Error::Config("shard plan with zero shards".into()));
+        }
+        if shard_count > total_batches {
+            return Err(Error::Config(format!(
+                "{shard_count} shards over {total_batches} batches: some shards would be empty"
+            )));
+        }
+        Ok(ShardPlan { total_batches, shard_count })
+    }
+
+    /// The batch range of shard `index` (0-based).
+    pub fn range(&self, index: usize) -> Result<ShardRange> {
+        if index >= self.shard_count {
+            return Err(Error::Config(format!(
+                "shard index {index} out of range (plan has {} shards)",
+                self.shard_count
+            )));
+        }
+        let base = self.total_batches / self.shard_count;
+        let rem = self.total_batches % self.shard_count;
+        let start = index * base + index.min(rem);
+        let len = base + usize::from(index < rem);
+        Ok(ShardRange { start, end: start + len, total: self.total_batches })
+    }
+
+    /// Every shard's range, in order (the shard manifest).
+    pub fn ranges(&self) -> Vec<ShardRange> {
+        (0..self.shard_count).map(|i| self.range(i).unwrap()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranges_tile_the_batches_evenly() {
+        for total in [1usize, 2, 5, 8, 17] {
+            for count in 1..=total {
+                let plan = ShardPlan::new(total, count).unwrap();
+                let ranges = plan.ranges();
+                assert_eq!(ranges.len(), count);
+                let mut cursor = 0;
+                let mut min_len = usize::MAX;
+                let mut max_len = 0;
+                for r in &ranges {
+                    assert_eq!(r.start, cursor, "{total}/{count}");
+                    assert_eq!(r.total, total);
+                    assert!(!r.is_empty(), "{total}/{count}: empty shard");
+                    min_len = min_len.min(r.len());
+                    max_len = max_len.max(r.len());
+                    cursor = r.end;
+                }
+                assert_eq!(cursor, total);
+                assert!(max_len - min_len <= 1, "{total}/{count}: uneven ({min_len}..{max_len})");
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_plans_are_rejected() {
+        assert!(ShardPlan::new(0, 1).is_err());
+        assert!(ShardPlan::new(4, 0).is_err());
+        assert!(ShardPlan::new(4, 5).is_err());
+        assert!(ShardPlan::new(4, 2).unwrap().range(2).is_err());
+    }
+}

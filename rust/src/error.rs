@@ -8,7 +8,10 @@ use std::fmt;
 
 #[derive(Debug)]
 pub enum Error {
-    Io(std::io::Error),
+    /// Filesystem failure, with the offending path when the call site
+    /// knows it (`Error::io`) — codec/checkpoint errors must name the
+    /// file, not just "permission denied".
+    Io { path: Option<String>, source: std::io::Error },
 
     #[cfg(feature = "pjrt")]
     Xla(xla::Error),
@@ -36,7 +39,8 @@ pub enum Error {
 impl fmt::Display for Error {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
-            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Io { path: Some(p), source } => write!(f, "io error at {p}: {source}"),
+            Error::Io { path: None, source } => write!(f, "io error: {source}"),
             #[cfg(feature = "pjrt")]
             Error::Xla(e) => write!(f, "xla error: {e}"),
             Error::Format { path, msg } => write!(f, "format error in {path}: {msg}"),
@@ -54,7 +58,7 @@ impl fmt::Display for Error {
 impl std::error::Error for Error {
     fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
         match self {
-            Error::Io(e) => Some(e),
+            Error::Io { source, .. } => Some(source),
             #[cfg(feature = "pjrt")]
             Error::Xla(e) => Some(e),
             Error::Context { source, .. } => Some(source.as_ref()),
@@ -65,7 +69,7 @@ impl std::error::Error for Error {
 
 impl From<std::io::Error> for Error {
     fn from(e: std::io::Error) -> Self {
-        Error::Io(e)
+        Error::Io { path: None, source: e }
     }
 }
 
@@ -84,6 +88,10 @@ impl Error {
     }
     pub fn shape(m: impl Into<String>) -> Self {
         Error::Shape(m.into())
+    }
+    /// An io error carrying the path it happened at.
+    pub fn io(path: impl AsRef<std::path::Path>, e: std::io::Error) -> Self {
+        Error::Io { path: Some(path.as_ref().display().to_string()), source: e }
     }
     /// Wrap with a higher-level message, keeping `self` as the source.
     pub fn context(self, msg: impl Into<String>) -> Self {
@@ -124,6 +132,15 @@ mod tests {
         );
         let src = outer.source().expect("context keeps its source");
         assert_eq!(src.to_string(), "numerical failure: collapse");
+    }
+
+    #[test]
+    fn io_errors_carry_the_offending_path() {
+        let e = Error::io("/tmp/x.state", std::io::Error::new(std::io::ErrorKind::NotFound, "gone"));
+        assert!(e.to_string().contains("/tmp/x.state"), "{e}");
+        assert!(e.source().is_some());
+        let bare: Error = std::io::Error::new(std::io::ErrorKind::PermissionDenied, "oops").into();
+        assert_eq!(bare.to_string(), "io error: oops");
     }
 
     #[test]

@@ -43,6 +43,26 @@
 //!   of this engine, and results are bitwise-independent of every
 //!   worker count (the reduction tree is fixed by batch order), so
 //!   `--workers`/`--queue-cap` are pure deployment knobs.
+//! * [`calib::state`] + [`coordinator::shard`] — the same determinism,
+//!   across *processes*.  A versioned binary codec (magic/version/kind
+//!   header, floats as IEEE bit patterns — fp64 bit-exact round-trip,
+//!   NaN payloads included) serializes every accumulator merge state
+//!   (TSQR R, streamed Gram, activation scales), compressed factor
+//!   outputs, and adapter sets.  A [`coordinator::shard::ShardPlan`]
+//!   partitions the calibration batches into contiguous ranges with
+//!   *global* leaf indices: `coala shard` accumulates one range and
+//!   writes its pending merge-tree nodes to a state file, `coala merge`
+//!   re-inserts the nodes of N files into the canonical tree — sibling
+//!   merges happen between exactly the same operands in exactly the
+//!   same order, so the merged factors are **bitwise identical** to the
+//!   single-process run at any shard count (state files carry a source
+//!   fingerprint, so shards of *different* runs refuse to merge).  The
+//!   same machinery gives
+//!   checkpoint/resume: any run can persist its pending states every N
+//!   batches (`--checkpoint-dir`, atomic temp-file writes) and a
+//!   killed run resumes (`--resume`) with no effect on the resulting
+//!   bits — calibration bigger than one machine's RAM, one process's
+//!   lifetime, or one node is now a deployment configuration.
 //! * [`finetune`] — the Table 4 subsystem, split the same way.
 //!   Initialization strategies (LoRA/PiSSA/CorDA/COALA-α) resolve
 //!   through the compressor registry; *training* runs through the

@@ -8,7 +8,7 @@
 //!             [--route device|host] [--workers N] [--queue-cap N]
 //!   eval      --model tiny    perplexity + probe tasks of the base model
 //!   finetune  --init coala1 --steps 60 --lr 3e-3 [--route device|host]
-//!             [--rank R] [--check]
+//!             [--rank R] [--check] [--save-adapters FILE]
 //!                             initialize + Adam-train rank-r adapters on
 //!                             the shifted fine-tune distribution.
 //!                             `--route host` trains with the pure-Rust
@@ -20,20 +20,38 @@
 //!                             regenerate a paper table/figure (default:
 //!                             `all`).  `--route host` runs the synthetic
 //!                             artifact-free environment end-to-end.
+//!   shard     --shard-index I --shard-count N --calib-batches B
+//!             --out FILE [--model tiny --method coala --route host]
+//!                             accumulate-only over shard I of an
+//!                             N-shard calibration plan and write the
+//!                             merge states to FILE (no factorization)
+//!   merge     <s0.state> <s1.state> … --out FILE [--ratio R]
+//!             | --from-source --calib-batches B --out FILE
+//!                             merge shard state files through the
+//!                             canonical batch-order tree, factorize,
+//!                             and write the factors to FILE — bitwise
+//!                             identical to the single-process run
+//!                             (`--from-source` runs that single-process
+//!                             reference and writes the same file
+//!                             format, so `cmp` checks the guarantee)
 //!   tsqr-demo --workers 4     out-of-core tree-TSQR demonstration
 //!
 //! `--workers`/`--queue-cap` configure the execution engine
 //! (`coordinator::engine`): capture, sharded accumulate, and parallel
 //! factorize all scale with `--workers`, and results are identical at
-//! any worker count.
+//! any worker count.  `--checkpoint-dir DIR [--checkpoint-every N]
+//! [--resume]` on compress/shard/merge/repro makes calibration durable:
+//! pending merge states are written every N batches and a killed run
+//! resumes bitwise-identically.
 //!
 //! Methods resolve by name through the `coala::compressor` registry —
 //! `methods` prints every spec the registry accepts.
 
 use coala::calib::dataset::{Corpus, TaskBank};
+use coala::calib::state::ShardState;
 use coala::coala::compressor::{registry, resolve, Compressor, Route};
-use coala::coordinator::{CompressionJob, Pipeline, TsqrTreeRunner};
-use coala::error::Result;
+use coala::coordinator::{engine, CompressionJob, Pipeline, ShardPlan, StageTimings, TsqrTreeRunner};
+use coala::error::{Error, Result};
 use coala::eval::{eval_tasks, perplexity};
 use coala::model::ModelWeights;
 use coala::runtime::{conformance, Executor};
@@ -109,7 +127,10 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
                 route,
                 plan.factorize_workers
             );
-            let pipe = Pipeline::new(&ex, spec.clone(), &w).with_route(route).with_plan(plan);
+            let pipe = Pipeline::new(&ex, spec.clone(), &w)
+                .with_route(route)
+                .with_plan(plan)
+                .with_checkpoint(args.checkpoint()?);
             let out = pipe.run(&job, &corpus)?;
             println!(
                 "done in {:.2}s (calibrate {:.2}s / accumulate {:.2}s / factorize {:.2}s)",
@@ -192,6 +213,107 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
                 }
                 println!("check passed: loss strictly decreased, all adapters finite");
             }
+            if let Some(path) = args.get("save-adapters") {
+                coala::calib::state::write_adapters(path, &set)?;
+                println!("trained adapters written to {path}");
+            }
+            Ok(())
+        }
+        "shard" => {
+            use coala::repro::common::Env;
+            use coala::tensor::lowp::Precision;
+            let env = Env::load(args)?;
+            let cfg = args.get_or("model", "tiny");
+            let (spec, w) = env.weights(cfg)?;
+            let comp = resolve(&args.method_spec("coala"))?;
+            let total = args.get_usize("calib-batches", 8)?;
+            let plan = ShardPlan::new(total, args.get_usize("shard-count", 1)?)?;
+            let range = plan.range(args.get_usize("shard-index", 0)?)?;
+            let out = args.get_or("out", "shard.state");
+            println!(
+                "accumulating {} shard: batches [{}, {}) of {total} for {} ({:?} statistic, {} route) …",
+                cfg,
+                range.start,
+                range.end,
+                comp.name(),
+                comp.accum_kind(),
+                if env.is_synthetic() { "host" } else { "device" }
+            );
+            let src = env.calib_source(&spec, &w, total)?;
+            let mut t = StageTimings::default();
+            let state = engine::accumulate_shard(
+                src.as_ref(),
+                comp.accum_kind(),
+                range,
+                env.accum_backend(),
+                Precision::F32,
+                &env.plan,
+                &mut t,
+                env.checkpoint.as_ref(),
+                &env.source_id(cfg, total),
+            )?;
+            state.write(out)?;
+            println!(
+                "wrote {out}: {} pending merge states in {:.2}s (capture {:.2}s / accumulate {:.2}s)",
+                state.nodes.len(),
+                t.calibrate_s + t.accumulate_s,
+                t.calibrate_s,
+                t.accumulate_s
+            );
+            Ok(())
+        }
+        "merge" => {
+            use coala::repro::common::Env;
+            use coala::tensor::lowp::Precision;
+            let env = Env::load(args)?;
+            let cfg = args.get_or("model", "tiny");
+            let (spec, w) = env.weights(cfg)?;
+            let comp = resolve(&args.method_spec("coala"))?;
+            let out_path = args.get_or("out", "factors.state");
+            let mut t = StageTimings::default();
+            let states = if args.get_bool("from-source") {
+                // the single-process reference run, written in the same
+                // file format — `cmp` against a sharded merge checks
+                // the bitwise guarantee end-to-end
+                let total = args.get_usize("calib-batches", 8)?;
+                println!("single-process calibration over {total} batches …");
+                let src = env.calib_source(&spec, &w, total)?;
+                engine::calibrate_checkpointed(
+                    src.as_ref(),
+                    comp.accum_kind(),
+                    total,
+                    env.accum_backend(),
+                    Precision::F32,
+                    &env.plan,
+                    &mut t,
+                    env.checkpoint.as_ref(),
+                    &env.source_id(cfg, total),
+                )?
+            } else {
+                let files = &args.positional[1..];
+                if files.is_empty() {
+                    return Err(Error::Config(
+                        "merge needs shard state files (or --from-source for the \
+                         single-process reference)"
+                            .into(),
+                    ));
+                }
+                println!("merging {} shard state files …", files.len());
+                let parts = files.iter().map(|f| ShardState::read(f)).collect::<Result<Vec<_>>>()?;
+                engine::merge_shard_states(parts, env.accum_backend(), &mut t)?
+            };
+            let job = CompressionJob::new(cfg, comp.method(), args.get_f64("ratio", 0.5)?);
+            let pipe = Pipeline::new(&env.ex, spec.clone(), &w)
+                .with_route(env.route)
+                .with_plan(env.plan);
+            let outcome = pipe.run_with_accums(&job, &states, t)?;
+            coala::calib::state::write_factors(out_path, &outcome.model)?;
+            println!(
+                "wrote {out_path}: {} projections, achieved ratio {:.4}, all finite: {}",
+                outcome.model.factors.len(),
+                outcome.model.achieved_ratio(&w, &spec),
+                outcome.model.all_finite()
+            );
             Ok(())
         }
         "repro" => {
@@ -222,7 +344,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         _ => {
             println!(
                 "coala — context-aware low-rank approximation (COALA) coordinator\n\n\
-                 usage: coala <selfcheck|info|methods|compress|eval|finetune|repro|tsqr-demo> [--flags]\n\
+                 usage: coala <selfcheck|info|methods|compress|eval|finetune|repro|shard|merge|tsqr-demo> [--flags]\n\
                  see README.md for the full tour"
             );
             Ok(())

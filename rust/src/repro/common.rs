@@ -15,11 +15,12 @@
 //! compression runs, task banks, and evaluation; they never branch on
 //! the route themselves.
 
+use crate::calib::accumulate::AccumBackend;
 use crate::calib::activations::{chunk_for_proj, ActivationSource, DeviceActivationSource};
 use crate::calib::dataset::{Corpus, TaskBank};
 use crate::calib::synthetic::SyntheticActivations;
 use crate::coala::compressor::Route;
-use crate::coordinator::{CompressionJob, CompressionOutcome, EnginePlan, Pipeline};
+use crate::coordinator::{CheckpointCfg, CompressionJob, CompressionOutcome, EnginePlan, Pipeline};
 use crate::error::{Error, Result};
 use crate::eval::TaskScores;
 use crate::finetune::{AdapterInit, AdapterSet, DeviceFineTuner, FineTuner, HostFineTuner};
@@ -44,6 +45,9 @@ pub struct Env {
     /// `--queue-cap`); the sequential plan by default.  Results are
     /// identical at any worker count.
     pub plan: EnginePlan,
+    /// Calibration checkpointing (`--checkpoint-dir`/`--resume`); off
+    /// by default.  Results are identical with or without it.
+    pub checkpoint: Option<CheckpointCfg>,
     seed: u64,
     synthetic: bool,
 }
@@ -52,10 +56,14 @@ impl Env {
     /// Route dispatch: `--route host` builds the synthetic environment
     /// (seeded by `--seed`), anything else loads the artifacts.
     pub fn load(args: &Args) -> Result<Env> {
-        let env = match args.route()? {
+        let mut env = match args.route()? {
             Route::Host => Env::synthetic(args.seed(synth::DEFAULT_SEED)?)?,
             Route::Device => Env::from_artifacts(args)?,
         };
+        // stamp the environment identity into the checkpoint config so
+        // a stale checkpoint from a different seed/route never resumes
+        let stamp = format!("{:?}:seed{}", env.route, env.seed);
+        env.checkpoint = args.checkpoint()?.map(|c| c.with_source(stamp));
         Ok(env.with_plan(args.engine_plan()?))
     }
 
@@ -67,6 +75,7 @@ impl Env {
             corpus: Corpus::load(&dir)?,
             route: Route::Device,
             plan: EnginePlan::default(),
+            checkpoint: None,
             seed: 0,
             synthetic: false,
         })
@@ -81,6 +90,7 @@ impl Env {
             corpus,
             route: Route::Host,
             plan: EnginePlan::default(),
+            checkpoint: None,
             seed,
             synthetic: true,
         })
@@ -119,6 +129,47 @@ impl Env {
             .then(|| SyntheticActivations::new(spec.clone(), self.seed))
     }
 
+    /// The active route's accumulate backend (pure-Rust host linalg or
+    /// the PJRT artifacts).
+    pub fn accum_backend(&self) -> AccumBackend<'_> {
+        match self.route {
+            Route::Host => AccumBackend::Host,
+            Route::Device => AccumBackend::Device(&self.ex),
+        }
+    }
+
+    /// Fingerprint of this environment's calibration source for a
+    /// (config, batch-count) run — stamped into shard state files and
+    /// checkpoints so mismatched shards/checkpoints are rejected
+    /// instead of silently merged (`coala shard`/`merge` use it).
+    pub fn source_id(&self, config: &str, batches: usize) -> String {
+        format!("{config}:{:?}:seed{}:b{batches}", self.route, self.seed)
+    }
+
+    /// A boxed calibration source for whichever route is active — the
+    /// synthetic generator or the `fwd_acts` device capture over
+    /// `batches` batches of the calib split.  The `coala shard`/`merge`
+    /// subcommands drive the engine through this without branching on
+    /// the route.
+    pub fn calib_source<'s>(
+        &'s self,
+        spec: &'s ModelSpec,
+        weights: &'s ModelWeights,
+        batches: usize,
+    ) -> Result<Box<dyn ActivationSource + 's>> {
+        match self.activation_source(spec) {
+            Some(src) => Ok(Box::new(src)),
+            None => Ok(Box::new(DeviceActivationSource::new(
+                &self.ex,
+                spec,
+                weights,
+                &self.corpus,
+                "calib",
+                batches,
+            )?)),
+        }
+    }
+
     /// Run one compression job end-to-end on the active route.
     pub fn run_job(
         &self,
@@ -128,7 +179,8 @@ impl Env {
     ) -> Result<CompressionOutcome> {
         let pipe = Pipeline::new(&self.ex, spec.clone(), weights)
             .with_route(self.route)
-            .with_plan(self.plan);
+            .with_plan(self.plan)
+            .with_checkpoint(self.checkpoint.clone());
         match self.activation_source(spec) {
             Some(src) => pipe.run_with_source(job, &src),
             None => pipe.run(job, &self.corpus),
@@ -375,6 +427,29 @@ mod tests {
         let bank = env.task_bank("ft").unwrap();
         let scores = tuner.eval_tasks(&set, &bank, Some(32)).unwrap();
         assert_eq!(scores.names.len(), 8);
+    }
+
+    #[test]
+    fn checkpointed_run_job_matches_plain_run_bitwise() {
+        use crate::coala::compressor::{resolve, Compressor};
+        let mut job = CompressionJob::new("tiny", resolve("coala").unwrap().method(), 0.4);
+        job.calib_batches = 3;
+        let env = Env::synthetic(6).unwrap();
+        let (spec, w) = env.weights("tiny").unwrap();
+        let plain = env.run_job(&spec, &w, &job).unwrap();
+
+        let dir = std::env::temp_dir().join(format!("coala-env-ckpt-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut env_ck = Env::synthetic(6).unwrap();
+        env_ck.checkpoint = Some(CheckpointCfg::new(dir.display().to_string(), 1, false));
+        let ck = env_ck.run_job(&spec, &w, &job).unwrap();
+        assert!(dir.exists(), "no checkpoint was written");
+        for (proj, fa) in &plain.model.factors {
+            let fb = &ck.model.factors[proj];
+            assert_eq!(fa.a.data, fb.a.data, "{proj}");
+            assert_eq!(fa.b.data, fb.b.data, "{proj}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! positional arguments.  The `coala` binary defines subcommands on top.
 
 use crate::coala::compressor::Route;
-use crate::coordinator::engine::EnginePlan;
+use crate::coordinator::engine::{CheckpointCfg, EnginePlan};
 use crate::error::{Error, Result};
 use std::collections::BTreeMap;
 
@@ -116,6 +116,26 @@ impl Args {
         Ok(plan)
     }
 
+    /// `--checkpoint-dir DIR [--checkpoint-every N] [--resume]` →
+    /// calibration checkpointing: pending merge states are written to
+    /// DIR every N batches (default 4, atomically), and `--resume`
+    /// continues a killed run from the last checkpoint.  Checkpointed
+    /// and resumed runs produce bitwise the same factors as
+    /// uninterrupted ones.  `None` when `--checkpoint-dir` is absent.
+    pub fn checkpoint(&self) -> Result<Option<CheckpointCfg>> {
+        let Some(dir) = self.get("checkpoint-dir") else {
+            if self.get_bool("resume") {
+                return Err(Error::Config("--resume needs --checkpoint-dir".into()));
+            }
+            return Ok(None);
+        };
+        Ok(Some(CheckpointCfg::new(
+            dir,
+            self.get_usize("checkpoint-every", 4)?,
+            self.get_bool("resume"),
+        )))
+    }
+
     /// Assemble the method spec the `coala::compressor` registry resolves:
     /// `--method NAME` plus an optional `--lambda`/`--mu` parameter
     /// (spelled `NAME:lambda=V` / `NAME:mu=V`).  `--method coala:lambda=3`
@@ -211,6 +231,26 @@ mod tests {
             (1, 1, 1, 1)
         );
         assert!(Args::parse(&sv(&["--workers", "x"])).engine_plan().is_err());
+    }
+
+    #[test]
+    fn checkpoint_flags() {
+        assert!(Args::parse(&sv(&[])).checkpoint().unwrap().is_none());
+        let c = Args::parse(&sv(&["--checkpoint-dir", "/tmp/ck", "--resume"]))
+            .checkpoint()
+            .unwrap()
+            .unwrap();
+        assert_eq!(c.dir, "/tmp/ck");
+        assert_eq!(c.every, 4);
+        assert!(c.resume);
+        let c = Args::parse(&sv(&["--checkpoint-dir", "ck", "--checkpoint-every", "0"]))
+            .checkpoint()
+            .unwrap()
+            .unwrap();
+        assert_eq!(c.every, 1, "every clamps to ≥ 1");
+        assert!(!c.resume);
+        // --resume without a directory is a configuration error
+        assert!(Args::parse(&sv(&["--resume"])).checkpoint().is_err());
     }
 
     #[test]

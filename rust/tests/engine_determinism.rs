@@ -6,13 +6,15 @@
 //! subspace with a 1e-2 noise floor — exactly where an order-dependent
 //! floating-point reduction would leak the worker count into the bits).
 
-use coala::calib::accumulate::CalibState;
+use coala::calib::accumulate::{AccumBackend, CalibState};
+use coala::calib::state::ShardState;
 use coala::calib::synthetic::{regime_for_layer, Regime, SyntheticActivations};
 use coala::coala::compressor::{resolve, Compressor, Route};
 use coala::coordinator::pipeline::StageTimings;
-use coala::coordinator::{CalibStates, CompressionJob, EnginePlan, Pipeline};
+use coala::coordinator::{engine, CalibStates, CheckpointCfg, CompressionJob, EnginePlan, Pipeline, ShardPlan};
 use coala::model::synthetic::{synthetic_manifest, synthetic_weights};
 use coala::runtime::Executor;
+use coala::tensor::lowp::Precision;
 
 fn assert_states_bitwise_eq(want: &CalibStates, got: &CalibStates, label: &str) {
     assert_eq!(want.len(), got.len(), "{label}: state count");
@@ -84,6 +86,135 @@ fn engine_results_are_bitwise_identical_across_worker_counts() {
             }
         }
     }
+}
+
+#[test]
+fn shard_files_merged_out_of_process_match_the_engine_bitwise() {
+    // The tentpole guarantee: N `coala shard` state files merged through
+    // the codec must reproduce the single-process engine run **bitwise**
+    // — states *and* factor files — for every accumulator kind, at every
+    // shard count, including the nearly singular regime (layer 1).
+    let ex = Executor::from_manifest(synthetic_manifest()).unwrap();
+    let spec = ex.manifest.config("tiny").unwrap().clone();
+    assert_eq!(regime_for_layer(1), Regime::NearSingular);
+    let w = synthetic_weights(&spec, 9);
+    let src = SyntheticActivations::new(spec.clone(), 9);
+    let total = 6;
+
+    for method_spec in ["coala", "svdllm", "asvd"] {
+        let comp = resolve(method_spec).unwrap();
+        let kind = comp.accum_kind();
+        let mut job = CompressionJob::new("tiny", comp.method(), 0.4);
+        job.calib_batches = total;
+        let pipe = Pipeline::new(&ex, spec.clone(), &w).with_route(Route::Host);
+
+        // single-process reference: engine states + factor file bytes
+        let want = engine::calibrate(
+            &src,
+            kind,
+            total,
+            AccumBackend::Host,
+            Precision::F32,
+            &EnginePlan::sequential(),
+            &mut StageTimings::default(),
+        )
+        .unwrap();
+        let want_out = pipe.run_with_accums(&job, &want, StageTimings::default()).unwrap();
+        let want_bytes = coala::calib::state::encode_factors(&want_out.model);
+
+        for shards in [1usize, 2, 3, 5] {
+            let plan = ShardPlan::new(total, shards).unwrap();
+            // each shard accumulates independently (with its own worker
+            // plan — shard-internal parallelism must not leak either),
+            // then its state travels through the binary codec
+            let parts: Vec<ShardState> = (0..shards)
+                .map(|i| {
+                    let st = engine::accumulate_shard(
+                        &src,
+                        kind,
+                        plan.range(i).unwrap(),
+                        AccumBackend::Host,
+                        Precision::F32,
+                        &EnginePlan::with_workers(1 + i % 3),
+                        &mut StageTimings::default(),
+                        None,
+                        "tiny:host:seed9",
+                    )
+                    .unwrap();
+                    ShardState::decode(&st.encode(), "<memory>").unwrap()
+                })
+                .collect();
+            let got =
+                engine::merge_shard_states(parts, AccumBackend::Host, &mut StageTimings::default())
+                    .unwrap();
+            assert_states_bitwise_eq(&want, &got, &format!("{method_spec} shards={shards}"));
+            let got_out = pipe.run_with_accums(&job, &got, StageTimings::default()).unwrap();
+            assert_eq!(
+                want_bytes,
+                coala::calib::state::encode_factors(&got_out.model),
+                "{method_spec} shards={shards}: factor files differ"
+            );
+        }
+    }
+}
+
+#[test]
+fn killed_checkpointed_pipeline_resumes_bitwise() {
+    // checkpoint/resume at the pipeline level: a run killed mid-
+    // calibration and resumed from its checkpoint produces factors
+    // bitwise identical to the uninterrupted run
+    use coala::calib::activations::{ActivationSource, CalibChunk};
+    use coala::error::Error;
+
+    struct DieAt<'a> {
+        inner: &'a SyntheticActivations,
+        from: usize,
+    }
+    impl ActivationSource for DieAt<'_> {
+        fn capture_batch(&self, b: usize) -> coala::Result<Vec<CalibChunk>> {
+            if b >= self.from {
+                return Err(Error::msg(format!("simulated kill at batch {b}")));
+            }
+            self.inner.capture_batch(b)
+        }
+    }
+
+    let ex = Executor::from_manifest(synthetic_manifest()).unwrap();
+    let spec = ex.manifest.config("tiny").unwrap().clone();
+    let w = synthetic_weights(&spec, 11);
+    let src = SyntheticActivations::new(spec.clone(), 11);
+    let comp = resolve("coala").unwrap();
+    let mut job = CompressionJob::new("tiny", comp.method(), 0.4);
+    job.calib_batches = 6;
+
+    let want = Pipeline::new(&ex, spec.clone(), &w)
+        .with_route(Route::Host)
+        .run_with_source(&job, &src)
+        .unwrap();
+
+    let dir = std::env::temp_dir().join(format!("coala-resume-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let ckpt = CheckpointCfg::new(dir.display().to_string(), 2, true);
+    // run 1: dies at batch 4, after the [0,2) and [2,4) checkpoints
+    let killed = Pipeline::new(&ex, spec.clone(), &w)
+        .with_route(Route::Host)
+        .with_plan(EnginePlan::with_workers(2))
+        .with_checkpoint(Some(ckpt.clone()))
+        .run_with_source(&job, &DieAt { inner: &src, from: 4 });
+    assert!(killed.is_err(), "the killed run must fail");
+    // run 2: resumes from the checkpoint with the healthy source
+    let got = Pipeline::new(&ex, spec.clone(), &w)
+        .with_route(Route::Host)
+        .with_plan(EnginePlan::with_workers(2))
+        .with_checkpoint(Some(ckpt))
+        .run_with_source(&job, &src)
+        .unwrap();
+    for (proj, f_want) in &want.model.factors {
+        let f_got = &got.model.factors[proj];
+        assert_eq!(f_want.a.data, f_got.a.data, "{proj}: A factor differs after resume");
+        assert_eq!(f_want.b.data, f_got.b.data, "{proj}: B factor differs after resume");
+    }
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]

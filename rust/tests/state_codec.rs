@@ -1,0 +1,183 @@
+//! Property tests for the `calib::state` binary codec: bit-exact
+//! round-trips over all three accumulator kinds — on *real* accumulated
+//! states (including the nearly singular regime) and on adversarial
+//! non-finite payloads — plus header (magic/version/kind) rejection.
+
+use coala::calib::accumulate::{
+    make_accumulator, AccumBackend, AccumKind, CalibState,
+};
+use coala::calib::activations::ActivationSource;
+use coala::calib::state::{self, ShardState, StateNode};
+use coala::calib::synthetic::{regime_for_layer, Regime, SyntheticActivations};
+use coala::model::synthetic::synthetic_manifest;
+use coala::tensor::lowp::Precision;
+use coala::tensor::Matrix;
+
+fn bits32(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn assert_state_bits_eq(a: &CalibState, b: &CalibState, label: &str) {
+    match (a, b) {
+        (CalibState::R(x), CalibState::R(y)) | (CalibState::Gram(x), CalibState::Gram(y)) => {
+            assert_eq!((x.rows, x.cols), (y.rows, y.cols), "{label}: shape");
+            assert_eq!(bits32(&x.data), bits32(&y.data), "{label}: payload bits");
+        }
+        (
+            CalibState::Scales { sum_abs: x, rows: rx },
+            CalibState::Scales { sum_abs: y, rows: ry },
+        ) => {
+            assert_eq!(rx, ry, "{label}: rows");
+            let xb: Vec<u64> = x.iter().map(|v| v.to_bits()).collect();
+            let yb: Vec<u64> = y.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(xb, yb, "{label}: fp64 bits");
+        }
+        (CalibState::None, CalibState::None) => {}
+        other => panic!("{label}: kind changed in round-trip: {other:?}"),
+    }
+}
+
+fn roundtrip(state: CalibState, kind: AccumKind, label: &str) {
+    let st = ShardState {
+        kind,
+        precision: Precision::F32,
+        source: "codec-test:seed1".into(),
+        total: 7,
+        start: 0,
+        end: 7,
+        done: 7,
+        nodes: vec![StateNode { layer: 1, stream: "attn".into(), level: 0, index: 3, state }],
+    };
+    let bytes = st.encode();
+    let got = ShardState::decode(&bytes, label).unwrap();
+    assert_state_bits_eq(&st.nodes[0].state, &got.nodes[0].state, label);
+    // encode(decode(x)) == x: the codec is deterministic and total
+    assert_eq!(bytes, got.encode(), "{label}: re-encode differs");
+}
+
+#[test]
+fn real_accumulated_states_roundtrip_across_seeds_and_regimes() {
+    // fold genuine synthetic activations — layer 1 is the nearly
+    // singular regime, where the R factor carries the tiny values a
+    // lossy codec would garble first
+    let spec = synthetic_manifest().config("tiny").unwrap().clone();
+    assert_eq!(regime_for_layer(1), Regime::NearSingular);
+    for seed in [1u64, 7, 42] {
+        let src = SyntheticActivations::new(spec.clone(), seed);
+        for kind in [AccumKind::RFactor, AccumKind::Gram, AccumKind::Scales] {
+            for layer in [0usize, 1] {
+                let chunks = src.capture_batch(0).unwrap();
+                let chunk = chunks
+                    .iter()
+                    .find(|c| c.layer == layer && c.stream == "attn")
+                    .expect("attn chunk");
+                let mut acc =
+                    make_accumulator(kind, chunk.xt.cols, AccumBackend::Host, Precision::F32);
+                acc.fold_chunk(&chunk.xt).unwrap();
+                roundtrip(acc.finish(), kind, &format!("seed {seed} {kind:?} layer {layer}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn non_finite_payloads_roundtrip_bit_exactly() {
+    let mut m = Matrix::<f32>::randn(5, 5, 3);
+    m.data[0] = f32::NAN;
+    m.data[1] = f32::from_bits(0xffc0_0bad); // negative NaN with payload
+    m.data[2] = f32::INFINITY;
+    m.data[3] = f32::NEG_INFINITY;
+    m.data[4] = -0.0;
+    roundtrip(CalibState::R(m.clone()), AccumKind::RFactor, "non-finite R");
+    roundtrip(CalibState::Gram(m), AccumKind::Gram, "non-finite Gram");
+    roundtrip(
+        CalibState::Scales {
+            sum_abs: vec![f64::NAN, f64::from_bits(0x7ff0_dead_beef_0001), -0.0, 5e-324],
+            rows: 9,
+        },
+        AccumKind::Scales,
+        "non-finite scales",
+    );
+}
+
+#[test]
+fn version_and_kind_mismatches_are_rejected() {
+    let st = ShardState {
+        kind: AccumKind::RFactor,
+        precision: Precision::F32,
+        source: String::new(),
+        total: 2,
+        start: 0,
+        end: 2,
+        done: 2,
+        nodes: vec![],
+    };
+    let good = st.encode();
+
+    // version bump → rejected, names the version
+    let mut v2 = good.clone();
+    v2[4] = 2;
+    let e = ShardState::decode(&v2, "v2.state").unwrap_err().to_string();
+    assert!(e.contains("version 2") && e.contains("v2.state"), "{e}");
+
+    // magic corruption → rejected
+    let mut bad = good.clone();
+    bad[1] ^= 0xff;
+    assert!(ShardState::decode(&bad, "bad.state").is_err());
+
+    // payload-kind confusion in both directions
+    let factors = state::encode_factors(&coala::model::CompressedModel::new("tiny"));
+    assert!(ShardState::decode(&factors, "f.state").is_err());
+    assert!(state::decode_factors(&good, "s.state").is_err());
+    assert!(state::decode_adapters(&good, "a.state").is_err());
+
+    // every truncation point fails loudly rather than misreading
+    for cut in 0..good.len() {
+        assert!(
+            ShardState::decode(&good[..cut], "cut.state").is_err(),
+            "decode accepted a {cut}-byte prefix"
+        );
+    }
+}
+
+#[test]
+fn shard_files_survive_disk_and_errors_name_paths() {
+    let dir = std::env::temp_dir().join(format!("coala-codec-it-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let spec = synthetic_manifest().config("tiny").unwrap().clone();
+    let src = SyntheticActivations::new(spec.clone(), 5);
+    let chunks = src.capture_batch(1).unwrap();
+    let mut acc =
+        make_accumulator(AccumKind::Gram, chunks[0].xt.cols, AccumBackend::Host, Precision::F32);
+    acc.fold_chunk(&chunks[0].xt).unwrap();
+    let st = ShardState {
+        kind: AccumKind::Gram,
+        precision: Precision::F32,
+        source: "disk-test:seed5".into(),
+        total: 3,
+        start: 1,
+        end: 2,
+        done: 2,
+        nodes: vec![StateNode {
+            layer: chunks[0].layer,
+            stream: chunks[0].stream.clone(),
+            level: 0,
+            index: 1,
+            state: acc.finish(),
+        }],
+    };
+    let path = dir.join("g.state");
+    st.write(&path).unwrap();
+    let got = ShardState::read(&path).unwrap();
+    assert_state_bits_eq(&st.nodes[0].state, &got.nodes[0].state, "disk roundtrip");
+
+    // a missing file error names the path it failed on
+    let missing = dir.join("missing.state");
+    let e = ShardState::read(&missing).unwrap_err().to_string();
+    assert!(e.contains("missing.state"), "{e}");
+    // a corrupt file error names the file, not just "bad magic"
+    std::fs::write(dir.join("junk.state"), b"not a state file at all").unwrap();
+    let e = ShardState::read(dir.join("junk.state")).unwrap_err().to_string();
+    assert!(e.contains("junk.state"), "{e}");
+    std::fs::remove_dir_all(&dir).ok();
+}
