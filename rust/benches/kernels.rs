@@ -1,90 +1,247 @@
-//! Bench: the PJRT-executed factorization artifacts (the request-path
-//! hot ops) + host-linalg equivalents for the speedup ratio.
+//! Bench: the raw-speed host linalg kernels — packed GEMM vs the naive
+//! ikj reference, compact-WY blocked QR vs the unblocked column sweep,
+//! Jacobi SVD, the streaming-TSQR fold, and the sketch accumulator vs
+//! the exact TSQR fold — plus the PJRT-executed factorization artifacts
+//! when a device is available.
 //!
-//! The host section needs no artifacts — in particular it measures the
-//! streaming-TSQR fold with the reusable scratch buffer
-//! (`linalg::tsqr::TsqrFolder`) against the naive re-stacking fold it
-//! replaced (`[R ; chunk]` vstack + fresh QR per fold).
+//! Size sweeps cover the `large` synthetic config's hot shapes
+//! (≥ 256×192).  Dumps `BENCH_kernels.json` with the per-kernel stats
+//! *and* the blocked-vs-naive / sketch-vs-exact speedup ratios, so the
+//! perf trajectory has committed baselines.  `COALA_BENCH_FAST=1`
+//! shrinks the iteration budget for smoke runs.
 
-use coala::linalg::{qr_r_square, TsqrFolder};
+use coala::calib::accumulate::{
+    make_accumulator, AccumBackend, AccumKind, CalibAccumulator, CalibState,
+};
+use coala::linalg::{householder_qr, jacobi_svd, qr_r_square, TsqrFolder};
 use coala::runtime::{ops, Executor};
+use coala::tensor::lowp::Precision;
+use coala::tensor::ops::matmul;
 use coala::tensor::Matrix;
-use coala::util::bench::{bench, BenchOpts};
+use coala::util::bench::{bench, BenchOpts, Stats};
+use coala::util::json::Json;
 
-/// The pre-refactor fold: allocate the stacked matrix and a QR working
-/// copy on every chunk.
-fn tsqr_naive(chunks: &[Matrix<f32>]) -> Matrix<f32> {
-    let n = chunks[0].cols;
-    let mut r = Matrix::zeros(n, n);
-    for c in chunks {
-        r = qr_r_square(&r.vstack(c).unwrap()).unwrap();
-    }
-    r
+fn record(stats: &Stats) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str(stats.name.clone())),
+        ("iters", Json::Num(stats.iters as f64)),
+        ("mean_s", Json::Num(stats.mean_s)),
+        ("std_s", Json::Num(stats.std_s)),
+        ("min_s", Json::Num(stats.min_s)),
+    ])
 }
 
-fn host_benches(opts: &BenchOpts) {
-    println!("== host linalg benches (no artifacts needed) ==");
+/// A speedup entry: how many times faster `fast` ran than `slow`
+/// (by mean wall time).
+fn ratio(name: &str, slow: &Stats, fast: &Stats) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str(name.to_string())),
+        ("speedup", Json::Num(slow.mean_s / fast.mean_s.max(1e-12))),
+        ("slow_mean_s", Json::Num(slow.mean_s)),
+        ("fast_mean_s", Json::Num(fast.mean_s)),
+    ])
+}
+
+/// The pre-PR GEMM: plain single-threaded ikj with no packing — the
+/// baseline the packed microkernel is measured against.
+fn matmul_naive(a: &Matrix<f32>, b: &Matrix<f32>) -> Matrix<f32> {
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut out = Matrix::zeros(m, n);
+    for i in 0..m {
+        for l in 0..k {
+            let av = a.get(i, l);
+            let row = &b.data[l * n..(l + 1) * n];
+            let dst = &mut out.data[i * n..(i + 1) * n];
+            for (d, &bv) in dst.iter_mut().zip(row) {
+                *d += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// The pre-PR QR: unblocked column-by-column Householder sweep (the
+/// exact algorithm `householder_qr_r` ran before panel factorization).
+fn qr_r_unblocked(a: &Matrix<f32>) -> Matrix<f32> {
+    let (m, n) = (a.rows, a.cols);
+    let mut acc = a.clone();
+    let steps = m.min(n);
+    let mut v = vec![0.0f32; m];
+    for j in 0..steps {
+        let mut norm = 0.0f32;
+        for i in j..m {
+            let x = acc.get(i, j);
+            norm += x * x;
+        }
+        let norm = norm.sqrt();
+        if norm <= f32::EPSILON {
+            continue;
+        }
+        let x0 = acc.get(j, j);
+        let alpha = if x0 >= 0.0 { -norm } else { norm };
+        let mut vnorm2 = 0.0f32;
+        for i in j..m {
+            let vi = if i == j { acc.get(i, j) - alpha } else { acc.get(i, j) };
+            v[i] = vi;
+            vnorm2 += vi * vi;
+        }
+        if vnorm2 <= f32::EPSILON {
+            continue;
+        }
+        let beta = 2.0 / vnorm2;
+        for c in j..n {
+            let mut dot = 0.0f32;
+            for i in j..m {
+                dot += v[i] * acc.get(i, c);
+            }
+            let s = beta * dot;
+            for i in j..m {
+                let cur = acc.get(i, c);
+                acc.set(i, c, cur - s * v[i]);
+            }
+        }
+    }
+    acc.slice(0, steps, 0, n)
+}
+
+fn main() {
+    let opts = BenchOpts::default().from_env();
+    let mut gemm = Vec::new();
+    let mut qr = Vec::new();
+    let mut svd = Vec::new();
+    let mut accum = Vec::new();
+    let mut ratios = Vec::new();
+
+    // ---- GEMM sweep: packed microkernel vs naive ikj ---------------------
+    // shapes bracket the large-config hot paths: trailing updates inside
+    // blocked QR (tall-thin times panel) up to the ≥256×192 criterion.
+    println!("== GEMM: packed microkernel vs naive ikj ==");
+    for (m, k, n) in [(128usize, 128usize, 128usize), (256, 192, 192), (512, 256, 256)] {
+        let a = Matrix::<f32>::randn(m, k, 1);
+        let b = Matrix::<f32>::randn(k, n, 2);
+        let s_naive = bench(&format!("gemm/naive {m}x{k}x{n}"), &opts, || {
+            std::hint::black_box(matmul_naive(&a, &b));
+        });
+        let s_packed = bench(&format!("gemm/packed {m}x{k}x{n}"), &opts, || {
+            std::hint::black_box(matmul(&a, &b).unwrap());
+        });
+        ratios.push(ratio(&format!("gemm packed/naive {m}x{k}x{n}"), &s_naive, &s_packed));
+        gemm.push(record(&s_naive));
+        gemm.push(record(&s_packed));
+    }
+
+    // ---- QR sweep: compact-WY blocked vs unblocked column sweep ----------
+    println!("== QR: compact-WY blocked vs unblocked ==");
+    for (m, n) in [(256usize, 192usize), (512, 192), (512, 256)] {
+        let a = Matrix::<f32>::randn(m, n, 3);
+        let s_unblocked = bench(&format!("qr/unblocked {m}x{n}"), &opts, || {
+            std::hint::black_box(qr_r_unblocked(&a));
+        });
+        let s_blocked = bench(&format!("qr/blocked {m}x{n}"), &opts, || {
+            std::hint::black_box(coala::linalg::householder_qr_r(&a).unwrap());
+        });
+        ratios.push(ratio(&format!("qr blocked/unblocked {m}x{n}"), &s_unblocked, &s_blocked));
+        qr.push(record(&s_unblocked));
+        qr.push(record(&s_blocked));
+    }
+    {
+        // explicit-Q path (factorize consumers)
+        let a = Matrix::<f32>::randn(256, 192, 4);
+        qr.push(record(&bench("qr/blocked explicit-Q 256x192", &opts, || {
+            std::hint::black_box(householder_qr(&a).unwrap());
+        })));
+    }
+
+    // ---- SVD sweep (context for where factorize time goes) ---------------
+    println!("== SVD: one-sided Jacobi ==");
+    for n in [64usize, 128, 192] {
+        let a = Matrix::<f32>::randn(n, n, 5);
+        svd.push(record(&bench(&format!("svd/jacobi {n}x{n}"), &opts, || {
+            std::hint::black_box(jacobi_svd(&a, 12).unwrap());
+        })));
+    }
+
+    // ---- accumulators: sketch fold vs exact TSQR fold --------------------
+    // per-batch cost at a large-config-like width; the sketch folds
+    // O(s·c·n) instead of the exact fold's O((n+c)·n²)
+    println!("== accumulate: sketch vs exact TSQR ==");
     let (n, c, folds) = (192usize, 512usize, 8usize);
     let chunks: Vec<Matrix<f32>> = (0..folds).map(|i| Matrix::randn(c, n, i as u64)).collect();
-
-    bench(&format!("host/tsqr_fold naive {n}x{c}x{folds}"), opts, || {
-        std::hint::black_box(tsqr_naive(&chunks));
+    let fold_all = |kind: AccumKind| {
+        let mut acc = make_accumulator(kind, n, AccumBackend::Host, Precision::F32);
+        for ch in &chunks {
+            acc.fold_chunk(ch).unwrap();
+        }
+        acc.finish()
+    };
+    let s_exact = bench(&format!("accum/exact-tsqr {n}x{c}x{folds}"), &opts, || {
+        std::hint::black_box(fold_all(AccumKind::RFactor));
     });
-    bench(&format!("host/tsqr_fold scratch {n}x{c}x{folds}"), opts, || {
+    let s_sketch = bench(&format!("accum/sketch {n}x{c}x{folds}"), &opts, || {
+        std::hint::black_box(fold_all(AccumKind::Sketch));
+    });
+    ratios.push(ratio(&format!("accum sketch/exact {n}x{c}x{folds}"), &s_exact, &s_sketch));
+    accum.push(record(&s_exact));
+    accum.push(record(&s_sketch));
+    // the one-off QR-of-sketch that turns Y into the approximate R
+    if let CalibState::Sketch { y, .. } = fold_all(AccumKind::Sketch) {
+        accum.push(record(&bench("accum/sketch qr-of-Y", &opts, || {
+            std::hint::black_box(qr_r_square(&y).unwrap());
+        })));
+    }
+    // streaming folder with scratch reuse (the exact route's fast path)
+    accum.push(record(&bench(&format!("accum/tsqr-folder {n}x{c}x{folds}"), &opts, || {
         let mut folder = TsqrFolder::with_chunk_capacity(n, c);
         for ch in &chunks {
             folder.fold(ch).unwrap();
         }
         std::hint::black_box(folder.finish());
-    });
-    bench(&format!("host/qr {c}x{n}"), opts, || {
-        std::hint::black_box(qr_r_square(&chunks[0]).unwrap());
-    });
+    })));
 
-    let w = Matrix::<f32>::randn(n, n, 3);
-    let r = tsqr_naive(&chunks[..1]);
-    bench(&format!("host/coala_factorize {n}x{n}"), opts, || {
-        std::hint::black_box(coala::coala::coala_factorize(&w, &r, 12).unwrap());
-    });
-}
-
-fn main() {
-    let opts = BenchOpts::default().from_env();
-    host_benches(&opts);
-
-    if !coala::runtime::device_available("artifacts") {
+    // ---- artifact op benches (need artifacts/ + the pjrt feature) --------
+    let mut device = Vec::new();
+    if coala::runtime::device_available("artifacts") {
+        let ex = Executor::new("artifacts").unwrap();
+        let cfg = ex.manifest.config("tiny").unwrap().clone();
+        let (dn, df, dc) = (cfg.d_model, cfg.d_ff, cfg.chunk_cols());
+        println!("== artifact op benches (tiny shapes) ==");
+        let chunk_n = Matrix::<f32>::randn(dc, dn, 1);
+        let chunk_f = Matrix::<f32>::randn(dc, df, 2);
+        let r0n = Matrix::<f32>::zeros(dn, dn);
+        let r0f = Matrix::<f32>::zeros(df, df);
+        device.push(record(&bench(&format!("pjrt/tsqr_step {dn}x{dc}"), &opts, || {
+            std::hint::black_box(ops::tsqr_step(&ex, &r0n, &chunk_n).unwrap());
+        })));
+        device.push(record(&bench(&format!("pjrt/tsqr_step {df}x{dc}"), &opts, || {
+            std::hint::black_box(ops::tsqr_step(&ex, &r0f, &chunk_f).unwrap());
+        })));
+        let w = Matrix::<f32>::randn(dn, dn, 3);
+        let r = ops::tsqr_step(&ex, &r0n, &chunk_n).unwrap();
+        device.push(record(&bench(&format!("pjrt/factorize {dn}x{dn}"), &opts, || {
+            std::hint::black_box(ops::factorize(&ex, &w, &r).unwrap());
+        })));
+        device.push(record(&bench(&format!("pjrt/factorize_reg {dn}x{dn}"), &opts, || {
+            std::hint::black_box(ops::factorize_reg(&ex, &w, &r, 1e-2).unwrap());
+        })));
+        let g = ops::gram_update(&ex, &Matrix::zeros(dn, dn), &chunk_n).unwrap();
+        device.push(record(&bench(&format!("pjrt/svdllm {dn}x{dn}"), &opts, || {
+            std::hint::black_box(ops::svdllm(&ex, &w, &g).unwrap());
+        })));
+        device.push(record(&bench(&format!("pjrt/svdllm2 {dn}x{dn}"), &opts, || {
+            std::hint::black_box(ops::svdllm2(&ex, &w, &g).unwrap());
+        })));
+    } else {
         println!("kernels bench: no artifacts or no pjrt feature — skipping PJRT op benches");
-        return;
     }
-    let ex = Executor::new("artifacts").unwrap();
-    let cfg = ex.manifest.config("tiny").unwrap().clone();
-    let (n, f, c) = (cfg.d_model, cfg.d_ff, cfg.chunk_cols());
-    println!("== artifact op benches (tiny shapes) ==");
 
-    let chunk_n = Matrix::<f32>::randn(c, n, 1);
-    let chunk_f = Matrix::<f32>::randn(c, f, 2);
-    let r0n = Matrix::<f32>::zeros(n, n);
-    let r0f = Matrix::<f32>::zeros(f, f);
-    bench(&format!("pjrt/tsqr_step {n}x{c}"), &opts, || {
-        std::hint::black_box(ops::tsqr_step(&ex, &r0n, &chunk_n).unwrap());
-    });
-    bench(&format!("pjrt/tsqr_step {f}x{c}"), &opts, || {
-        std::hint::black_box(ops::tsqr_step(&ex, &r0f, &chunk_f).unwrap());
-    });
-
-    let w = Matrix::<f32>::randn(n, n, 3);
-    let r = ops::tsqr_step(&ex, &r0n, &chunk_n).unwrap();
-    bench(&format!("pjrt/factorize {n}x{n}"), &opts, || {
-        std::hint::black_box(ops::factorize(&ex, &w, &r).unwrap());
-    });
-    bench(&format!("pjrt/factorize_reg {n}x{n}"), &opts, || {
-        std::hint::black_box(ops::factorize_reg(&ex, &w, &r, 1e-2).unwrap());
-    });
-    let g = ops::gram_update(&ex, &Matrix::zeros(n, n), &chunk_n).unwrap();
-    bench(&format!("pjrt/svdllm {n}x{n}"), &opts, || {
-        std::hint::black_box(ops::svdllm(&ex, &w, &g).unwrap());
-    });
-    bench(&format!("pjrt/svdllm2 {n}x{n}"), &opts, || {
-        std::hint::black_box(ops::svdllm2(&ex, &w, &g).unwrap());
-    });
+    let out = Json::obj(vec![
+        ("gemm", Json::Arr(gemm)),
+        ("qr", Json::Arr(qr)),
+        ("svd", Json::Arr(svd)),
+        ("accum", Json::Arr(accum)),
+        ("ratios", Json::Arr(ratios)),
+        ("device", Json::Arr(device)),
+    ]);
+    std::fs::write("BENCH_kernels.json", out.dump()).unwrap();
+    println!("[BENCH_kernels.json written]");
 }

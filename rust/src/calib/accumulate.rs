@@ -3,33 +3,52 @@
 //! sequential pipeline, the overlapped scheduler, and the tree-TSQR
 //! runner — folds chunks through one `fold_chunk`/`finish` interface.
 //!
-//! Three accumulation strategies exist, one per family of compression
-//! methods (each [`crate::coala::compressor::Compressor`] declares which
-//! one it needs):
+//! Four accumulation strategies exist (each
+//! [`crate::coala::compressor::Compressor`] declares which one it
+//! needs, and `--accum sketch` can swap the R route for the sketch):
 //!
 //! * **R factor** (COALA / α-family): out-of-core TSQR — fold each
 //!   (B·T × n) chunk of Xᵀ into a square R with RᵀR = XXᵀ;
+//! * **Sketch** (opt-in for the R consumers): a randomized range
+//!   finder — fold each chunk into Y ← Y + Ω_b·chunk where Ω_b is a
+//!   seeded s × rows Gaussian drawn from the chunk's **global batch
+//!   index** b, so the accumulated Y (and everything downstream) is
+//!   bitwise independent of worker count, shard geometry, and merge
+//!   order.  s = O(rank) rows (see [`sketch_rows`]) make each fold
+//!   O(s·c·n) instead of the exact TSQR's O((n+c)·n²); QR of Y divided
+//!   by √s then stands in for R ([`CalibState::r_factor`]) with the
+//!   range-finder error bound of "Low-Rank Approximation, Adaptation,
+//!   and Other Tales" (PAPERS.md): the expected excess factor over the
+//!   optimal rank-r residual is √(1 + r/(p−1)) for oversampling
+//!   p = s − r;
 //! * **Gram** (SVD-LLM / CorDA): G ← G + chunkᵀ·chunk;
 //! * **Scales** (ASVD): running Σ|x| and row count per input channel.
 //!
 //! Every accumulator runs on either backend: `Device` folds through the
 //! PJRT artifacts (`runtime::ops`), `Host` through the pure-Rust linalg
-//! (`linalg::tsqr::TsqrFolder`, `tensor::ops::gram_t`).  X itself is
-//! never materialized on either route.
+//! (`linalg::tsqr::TsqrFolder`, `tensor::ops::gram_t`).  The sketch
+//! fold itself is host linalg (one packed GEMM) on both backends.
+//! X itself is never materialized on either route.
 
 use crate::error::{Error, Result};
+use crate::linalg::qr_r_square;
 use crate::linalg::tsqr::TsqrFolder;
 use crate::runtime::executor::Executor;
 use crate::runtime::ops;
 use crate::tensor::lowp::{quantize, Precision};
-use crate::tensor::ops::gram_t;
+use crate::tensor::ops::{gram_t, matmul};
 use crate::tensor::Matrix;
+use crate::util::prng::Rng;
 
 /// Which accumulation strategy a compression method consumes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AccumKind {
     /// Square R with RᵀR = (seen X)(seen X)ᵀ (QR route).
     RFactor,
+    /// Seeded Gaussian range-finder sketch Y = Σ_b Ω_b·chunk_b — the
+    /// O(rank)-per-batch stand-in for the exact R (opt-in, `--accum
+    /// sketch`).
+    Sketch,
     /// G = Σ chunkᵀ·chunk (Gram route).
     Gram,
     /// Running Σ|x| and count per input channel (ASVD route).
@@ -42,6 +61,10 @@ pub enum AccumKind {
 #[derive(Debug, Clone)]
 pub enum CalibState {
     R(Matrix<f32>),
+    /// Accumulated range-finder sketch Y (s × n) plus the number of
+    /// batch folds it has absorbed (so a resumed linear stream keeps
+    /// drawing fresh Ω indices).
+    Sketch { y: Matrix<f32>, folds: u64 },
     Gram(Matrix<f32>),
     Scales { sum_abs: Vec<f64>, rows: usize },
     None,
@@ -51,6 +74,7 @@ impl CalibState {
     pub fn kind(&self) -> AccumKind {
         match self {
             CalibState::R(_) => AccumKind::RFactor,
+            CalibState::Sketch { .. } => AccumKind::Sketch,
             CalibState::Gram(_) => AccumKind::Gram,
             CalibState::Scales { .. } => AccumKind::Scales,
             CalibState::None => AccumKind::None,
@@ -60,6 +84,25 @@ impl CalibState {
     pub fn r(&self) -> Result<&Matrix<f32>> {
         match self {
             CalibState::R(r) => Ok(r),
+            other => Err(Error::Config(format!(
+                "method needs the R-factor route, accumulator holds {:?}",
+                other.kind()
+            ))),
+        }
+    }
+
+    /// Owned R factor for the R-consuming methods.  Exact states clone
+    /// their R; sketch states take the QR of the accumulated Y = Ω·A
+    /// and rescale by 1/√s, so R̂ᵀR̂ = YᵀY/s ≈ AᵀA in expectation
+    /// (E[ΩᵀΩ] = s·I) and the whitening the consumers perform sees the
+    /// right scale even under regularization (α-family λ/μ rules).
+    pub fn r_factor(&self) -> Result<Matrix<f32>> {
+        match self {
+            CalibState::R(r) => Ok(r.clone()),
+            CalibState::Sketch { y, .. } => {
+                let s = y.rows.max(1) as f32;
+                Ok(qr_r_square(y)?.scale(1.0 / s.sqrt()))
+            }
             other => Err(Error::Config(format!(
                 "method needs the R-factor route, accumulator holds {:?}",
                 other.kind()
@@ -114,14 +157,32 @@ pub trait CalibAccumulator {
 
 /// Build the accumulator a method requires, for `width`-channel chunks.
 /// `precision` emulates the accumulation arithmetic (Table 2's fp16).
+/// Equivalent to [`make_leaf_accumulator`] at leaf index 0 — the right
+/// call for linear streams that fold batch 0, 1, 2, … in order.
 pub fn make_accumulator<'a>(
     kind: AccumKind,
     width: usize,
     backend: AccumBackend<'a>,
     precision: Precision,
 ) -> Box<dyn CalibAccumulator + 'a> {
+    make_leaf_accumulator(kind, width, backend, precision, 0)
+}
+
+/// [`make_accumulator`] with an explicit starting leaf index for
+/// position-dependent randomness: the engine passes the **global batch
+/// index** here so the sketch kind draws Ω from the batch's position in
+/// the run, never from worker or shard geometry.  The exact kinds
+/// ignore it.
+pub fn make_leaf_accumulator<'a>(
+    kind: AccumKind,
+    width: usize,
+    backend: AccumBackend<'a>,
+    precision: Precision,
+    leaf_index: usize,
+) -> Box<dyn CalibAccumulator + 'a> {
     match kind {
         AccumKind::RFactor => Box::new(RAccumulator::new(width, backend, precision)),
+        AccumKind::Sketch => Box::new(SketchAccumulator::new(width, precision, leaf_index as u64)),
         AccumKind::Gram => Box::new(GramAccumulator::new(width, backend, precision)),
         AccumKind::Scales => Box::new(ScalesAccumulator::new(width, precision)),
         AccumKind::None => Box::new(NullAccumulator),
@@ -137,6 +198,9 @@ pub fn make_accumulator_from<'a>(
 ) -> Box<dyn CalibAccumulator + 'a> {
     match state {
         CalibState::R(r) => Box::new(RAccumulator::from_r(r, backend, precision)),
+        CalibState::Sketch { y, folds } => {
+            Box::new(SketchAccumulator { precision, y, next_index: folds, folds })
+        }
         CalibState::Gram(g) => Box::new(GramAccumulator { backend, precision, g }),
         CalibState::Scales { sum_abs, rows } => {
             Box::new(ScalesAccumulator { precision, sum_abs, rows })
@@ -246,6 +310,125 @@ impl CalibAccumulator for RAccumulator<'_> {
             AccumBackend::Device(_) => CalibState::R(self.r.expect("device R state")),
             AccumBackend::Host => CalibState::R(self.folder.expect("host folder").finish()),
         }
+    }
+}
+
+// ----------------------------------------------------------- Sketch route
+
+/// Sketch height for `width`-channel chunks: n/2 + 16, clamped to
+/// [1, width].  That sits comfortably above every rank the ratio knob
+/// selects (r ≤ n/2) with the oversampling the range-finder bound wants
+/// (p = s − r ≥ 16 keeps the expected excess residual factor
+/// √(1 + r/(p−1)) below √2 and the tail probability negligible).
+/// Override with `COALA_SKETCH_ROWS`; every worker/shard of a run must
+/// agree on it, which is why `repro::common::Env::source_id` folds the
+/// knob into the run fingerprint.
+pub fn sketch_rows(width: usize) -> usize {
+    let default = (width / 2 + 16).min(width).max(1);
+    match std::env::var("COALA_SKETCH_ROWS") {
+        Ok(v) => v.parse::<usize>().map_or(default, |s| s.clamp(1, width.max(1))),
+        Err(_) => default,
+    }
+}
+
+/// Base seed of the Ω family.  Override with `COALA_SKETCH_SEED` to
+/// draw an independent sketch family (e.g. to estimate sketch variance
+/// across repetitions); like `COALA_SKETCH_ROWS`, all shards of one run
+/// must agree.
+pub fn sketch_seed_base() -> u64 {
+    std::env::var("COALA_SKETCH_SEED").ok().and_then(|v| v.parse().ok()).unwrap_or(0xC0A1A)
+}
+
+/// SplitMix64 finalizer over (base, leaf index) → the xoshiro seed for
+/// Ω at that leaf.  Consecutive indices decorrelate into independent
+/// streams, so E[Ω_aᵀΩ_b] = 0 across batches and E[YᵀY] stays an
+/// unbiased multiple of AᵀA.
+fn leaf_seed(base: u64, index: u64) -> u64 {
+    let mut z = base ^ index.wrapping_mul(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Randomized range-finder accumulator: Y ← Y + Ω_b·chunk_b with a
+/// fresh seeded Gaussian Ω_b per global batch index b.  Merging is
+/// elementwise addition of Y, so the canonical merge tree reproduces
+/// the linear stream bit for bit at any worker/shard count.  The fold
+/// is host linalg (one packed GEMM) on either backend.
+struct SketchAccumulator {
+    precision: Precision,
+    y: Matrix<f32>,
+    /// Global batch index the next `fold_chunk` sketches.
+    next_index: u64,
+    /// Batch folds absorbed so far (incl. merged siblings).
+    folds: u64,
+}
+
+impl SketchAccumulator {
+    fn new(width: usize, precision: Precision, leaf_index: u64) -> SketchAccumulator {
+        SketchAccumulator {
+            precision,
+            y: Matrix::zeros(sketch_rows(width), width),
+            next_index: leaf_index,
+            folds: 0,
+        }
+    }
+
+    fn post_round(&mut self) {
+        if self.precision != Precision::F32 {
+            self.y = quantize(&self.y, self.precision);
+        }
+    }
+}
+
+impl CalibAccumulator for SketchAccumulator {
+    fn kind(&self) -> AccumKind {
+        AccumKind::Sketch
+    }
+
+    fn fold_chunk(&mut self, xt: &Matrix<f32>) -> Result<()> {
+        if xt.cols != self.y.cols {
+            return Err(Error::shape(format!(
+                "sketch fold: chunk has {} cols, accumulator is {}-wide",
+                xt.cols,
+                self.y.cols
+            )));
+        }
+        let xt_q;
+        let xt = if self.precision == Precision::F32 {
+            xt
+        } else {
+            xt_q = quantize(xt, self.precision);
+            &xt_q
+        };
+        let s = self.y.rows;
+        let mut rng = Rng::new(leaf_seed(sketch_seed_base(), self.next_index));
+        let omega = Matrix::from_vec(s, xt.rows, rng.normal_vec_f32(s * xt.rows))?;
+        self.y = self.y.add(&matmul(&omega, xt)?)?;
+        self.next_index += 1;
+        self.folds += 1;
+        self.post_round();
+        Ok(())
+    }
+
+    fn merge_state(&mut self, other: CalibState) -> Result<()> {
+        match other {
+            CalibState::Sketch { y, folds } => {
+                // shape mismatch (different COALA_SKETCH_ROWS) errors here
+                self.y = self.y.add(&y)?;
+                self.folds += folds;
+                self.post_round();
+                Ok(())
+            }
+            other => Err(Error::Config(format!(
+                "sketch merge: sibling holds {:?}",
+                other.kind()
+            ))),
+        }
+    }
+
+    fn finish(self: Box<Self>) -> CalibState {
+        CalibState::Sketch { y: self.y, folds: self.folds }
     }
 }
 
@@ -535,6 +718,79 @@ mod tests {
         let gw = matmul(&want.r().unwrap().transpose(), want.r().unwrap()).unwrap();
         let gg = matmul(&got.r().unwrap().transpose(), got.r().unwrap()).unwrap();
         assert!(fro(&gw.sub(&gg).unwrap()) < 1e-3 * (1.0 + fro(&gw)));
+    }
+
+    #[test]
+    fn sketch_merge_is_bitwise_single_stream() {
+        // leaf-indexed Ω makes split-fold-merge ≡ the linear stream,
+        // bitwise, regardless of how the batches were partitioned
+        let cs = chunks(6, 9, 4, 70);
+        let mut seq = make_accumulator(AccumKind::Sketch, 6, AccumBackend::Host, Precision::F32);
+        for c in &cs {
+            seq.fold_chunk(c).unwrap();
+        }
+        let CalibState::Sketch { y: yw, folds: fw } = seq.finish() else { panic!("not Sketch") };
+        assert_eq!(fw, 4);
+
+        let mut a =
+            make_leaf_accumulator(AccumKind::Sketch, 6, AccumBackend::Host, Precision::F32, 0);
+        a.fold_chunk(&cs[0]).unwrap();
+        a.fold_chunk(&cs[1]).unwrap();
+        let mut b =
+            make_leaf_accumulator(AccumKind::Sketch, 6, AccumBackend::Host, Precision::F32, 2);
+        b.fold_chunk(&cs[2]).unwrap();
+        b.fold_chunk(&cs[3]).unwrap();
+        let got = merge_states(a.finish(), b.finish(), AccumBackend::Host, Precision::F32).unwrap();
+        let CalibState::Sketch { y: yg, folds: fg } = got else { panic!("not Sketch") };
+        assert_eq!(fg, 4);
+        let bits_w: Vec<u32> = yw.data.iter().map(|v| v.to_bits()).collect();
+        let bits_g: Vec<u32> = yg.data.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(bits_w, bits_g);
+    }
+
+    #[test]
+    fn sketch_r_factor_approximates_exact_gram() {
+        // R̂ᵀR̂ from the sketch tracks XᵀX well enough for whitening:
+        // same order of magnitude, finite, right shape.  The tight
+        // statistical bound is exercised in tests/engine_determinism.rs.
+        let cs = chunks(8, 32, 6, 80);
+        let mut acc = make_accumulator(AccumKind::Sketch, 8, AccumBackend::Host, Precision::F32);
+        for c in &cs {
+            acc.fold_chunk(c).unwrap();
+        }
+        let state = acc.finish();
+        assert!(state.r().is_err(), "sketch state must not pose as an exact R");
+        let r = state.r_factor().unwrap();
+        assert_eq!((r.rows, r.cols), (8, 8));
+        assert!(r.all_finite());
+        let got = matmul(&r.transpose(), &r).unwrap();
+        let want = gram_t(&full_stack(&cs));
+        // E[R̂ᵀR̂] = XᵀX, but at s = n = 8 (no oversampling headroom)
+        // the estimate fluctuates at O(1) relative error — this is a
+        // same-ballpark sanity check, not the statistical bound
+        assert!(fro(&got.sub(&want).unwrap()) < 2.5 * fro(&want));
+    }
+
+    #[test]
+    fn sketch_rejects_mismatched_folds_and_siblings() {
+        let mut acc = make_accumulator(AccumKind::Sketch, 6, AccumBackend::Host, Precision::F32);
+        assert!(acc.fold_chunk(&Matrix::randn(4, 5, 1)).is_err());
+        assert!(acc.merge_state(CalibState::Gram(Matrix::zeros(6, 6))).is_err());
+        let short = CalibState::Sketch { y: Matrix::zeros(2, 6), folds: 1 };
+        assert!(acc.merge_state(short).is_err());
+    }
+
+    #[test]
+    fn fp16_emulation_rounds_the_sketch() {
+        let cs = chunks(4, 30, 2, 45);
+        let mut acc = make_accumulator(AccumKind::Sketch, 4, AccumBackend::Host, Precision::F16);
+        for c in &cs {
+            acc.fold_chunk(c).unwrap();
+        }
+        let CalibState::Sketch { y, .. } = acc.finish() else { panic!("not Sketch") };
+        for v in &y.data {
+            assert_eq!(*v, Precision::F16.round(*v));
+        }
     }
 
     #[test]

@@ -2,9 +2,10 @@
 //! states durable and mergeable across processes.
 //!
 //! Everything the engine's merge tree passes between workers in RAM can
-//! be written to disk and read back **bit-exactly**: the three
-//! [`CalibState`] merge states (TSQR R, streamed Gram, activation
-//! scales), compressed factor outputs ([`CompressedModel`]), and
+//! be written to disk and read back **bit-exactly**: the four
+//! [`CalibState`] merge states (TSQR R, range-finder sketch, streamed
+//! Gram, activation scales), compressed factor outputs
+//! ([`CompressedModel`]), and
 //! fine-tuning adapters ([`AdapterSet`]).  Floats are serialized as
 //! their IEEE-754 bit patterns (`to_bits`/`from_bits`, little-endian),
 //! so NaN payloads, infinities, and signed zeros round-trip unchanged —
@@ -254,6 +255,7 @@ fn kind_tag(k: AccumKind) -> u8 {
         AccumKind::RFactor => 1,
         AccumKind::Gram => 2,
         AccumKind::Scales => 3,
+        AccumKind::Sketch => 4,
     }
 }
 
@@ -263,6 +265,7 @@ fn kind_of(tag: u8, r: &Reader) -> Result<AccumKind> {
         1 => Ok(AccumKind::RFactor),
         2 => Ok(AccumKind::Gram),
         3 => Ok(AccumKind::Scales),
+        4 => Ok(AccumKind::Sketch),
         t => Err(r.err(format!("unknown accumulator kind tag {t}"))),
     }
 }
@@ -300,6 +303,11 @@ fn put_state(w: &mut Writer, s: &CalibState) {
             w.size(*rows);
             w.f64s(sum_abs);
         }
+        CalibState::Sketch { y, folds } => {
+            w.u8(4);
+            w.u64(*folds);
+            w.matrix(y);
+        }
     }
 }
 
@@ -312,6 +320,11 @@ fn take_state(r: &mut Reader) -> Result<CalibState> {
             let rows = r.size("scales rows")?;
             let sum_abs = r.f64s("scales sums")?;
             Ok(CalibState::Scales { sum_abs, rows })
+        }
+        4 => {
+            let folds = r.u64("sketch folds")?;
+            let y = r.matrix("sketch state")?;
+            Ok(CalibState::Sketch { y, folds })
         }
         t => Err(r.err(format!("unknown calibration-state tag {t}"))),
     }
@@ -615,6 +628,10 @@ mod tests {
                     rows: 17,
                 },
             ),
+            (
+                AccumKind::Sketch,
+                CalibState::Sketch { y: nasty_matrix(4, 6, 3), folds: u64::MAX },
+            ),
             (AccumKind::None, CalibState::None),
         ];
         for (kind, state) in states {
@@ -657,6 +674,14 @@ mod tests {
                 ) => {
                     assert_eq!(bits64(x), bits64(y));
                     assert_eq!(rx, ry);
+                }
+                (
+                    CalibState::Sketch { y: x, folds: fx },
+                    CalibState::Sketch { y, folds: fy },
+                ) => {
+                    assert_eq!(fx, fy);
+                    assert_eq!(bits32(&x.data), bits32(&y.data));
+                    assert_eq!((x.rows, x.cols), (y.rows, y.cols));
                 }
                 (CalibState::None, CalibState::None) => {}
                 other => panic!("kind changed in roundtrip: {other:?}"),

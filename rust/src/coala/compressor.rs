@@ -147,7 +147,8 @@ impl Compressor for CoalaCompressor {
         calib: &CalibState,
         rank: usize,
     ) -> Result<Factorization> {
-        let r = calib.r()?;
+        // r_factor(): the exact TSQR R, or QR-of-sketch under `--accum sketch`
+        let r = &calib.r_factor()?;
         match self.rule {
             MuRule::None => Ok(Factorization::plain(ops::factorize(ex, w, r)?)),
             MuRule::Constant { mu } => Ok(Factorization {
@@ -172,7 +173,7 @@ impl Compressor for CoalaCompressor {
         rank: usize,
         sweeps: usize,
     ) -> Result<Factorization> {
-        let r = calib.r()?;
+        let r = &calib.r_factor()?;
         match self.rule {
             MuRule::None => Ok(Factorization::plain(coala_factorize(w, r, sweeps)?)),
             MuRule::Constant { mu } => Ok(Factorization {
@@ -215,8 +216,8 @@ impl Compressor for AlphaCompressor {
     ) -> Result<Factorization> {
         let factors = match self.alpha {
             0 => ops::plainsvd(ex, w)?,
-            1 => ops::factorize(ex, w, calib.r()?)?,
-            2 => ops::alpha2(ex, w, calib.r()?)?,
+            1 => ops::factorize(ex, w, &calib.r_factor()?)?,
+            2 => ops::alpha2(ex, w, &calib.r_factor()?)?,
             a => return Err(Error::Config(format!("alpha ∈ {{0,1,2}}, got {a}"))),
         };
         Ok(Factorization::plain(factors))
@@ -231,7 +232,7 @@ impl Compressor for AlphaCompressor {
     ) -> Result<Factorization> {
         Ok(Factorization::plain(alpha::alpha_factorize(
             w,
-            calib.r()?,
+            &calib.r_factor()?,
             self.alpha,
             sweeps,
         )?))
@@ -590,6 +591,24 @@ mod tests {
         assert!(f.mu.unwrap() > 0.0);
         let comp0 = CoalaCompressor { rule: MuRule::None };
         assert!(comp0.factorize_host(&w, &calib, 2, 40).unwrap().mu.is_none());
+    }
+
+    #[test]
+    fn r_consumers_accept_sketch_states() {
+        // `--accum sketch` hands the R consumers a Sketch state; the
+        // QR-of-sketch stand-in must flow through factorization
+        let w: Matrix<f32> = Matrix::randn(8, 6, 6);
+        let x: Matrix<f32> = Matrix::randn(6, 48, 7);
+        let calib = accumulate(AccumKind::Sketch, &x);
+        for comp in [
+            Box::new(CoalaCompressor { rule: MuRule::None }) as Box<dyn Compressor>,
+            Box::new(AlphaCompressor { alpha: 1 }),
+        ] {
+            let f = comp.factorize_host(&w, &calib, 3, 40).unwrap();
+            assert!(f.factors.u.all_finite() && f.factors.p.all_finite(), "{}", comp.name());
+        }
+        // Gram consumers still reject it
+        assert!(SvdLlmCompressor.factorize_host(&w, &calib, 3, 20).is_err());
     }
 
     #[test]

@@ -45,7 +45,7 @@
 //! without folding), and both errors surface via [`Error::context`].
 
 use crate::calib::accumulate::{
-    make_accumulator, merge_states, AccumBackend, AccumKind, CalibAccumulator, CalibState,
+    make_leaf_accumulator, merge_states, AccumBackend, AccumKind, CalibAccumulator, CalibState,
 };
 use crate::calib::activations::{ActivationSource, CalibChunk};
 use crate::calib::state::{ShardState, StateNode};
@@ -570,7 +570,10 @@ fn run_pass(
                             let acc = leaf
                                 .entry((c.layer, c.stream.clone()))
                                 .or_insert_with(|| {
-                                    make_accumulator(kind, c.xt.cols, backend, precision)
+                                    // the *global* batch index seeds
+                                    // position-dependent kinds (sketch Ω),
+                                    // keeping leaves worker/shard blind
+                                    make_leaf_accumulator(kind, c.xt.cols, backend, precision, b)
                                 });
                             acc.fold_chunk(&c.xt)?;
                         }

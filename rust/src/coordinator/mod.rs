@@ -47,6 +47,6 @@ pub mod tsqr_tree;
 
 pub use budget::RankBudget;
 pub use engine::{CalibStates, CheckpointCfg, EnginePlan, ShardRange, StageTimings};
-pub use pipeline::{CompressionJob, CompressionOutcome, Pipeline};
+pub use pipeline::{resolve_accum_kind, CompressionJob, CompressionOutcome, Pipeline};
 pub use shard::ShardPlan;
 pub use tsqr_tree::TsqrTreeRunner;

@@ -16,12 +16,12 @@
 //! either the PJRT device route or the pure-Rust host route.  The
 //! pipeline itself never matches on method variants.
 
-use crate::calib::accumulate::AccumBackend;
+use crate::calib::accumulate::{AccumBackend, AccumKind};
 use crate::calib::activations::{ActivationSource, DeviceActivationSource};
 use crate::calib::dataset::Corpus;
 use crate::coala::compressor::{compressor_for, Compressor, Route, HOST_SWEEPS};
 use crate::coala::Method;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::model::ModelWeights;
 use crate::runtime::executor::Executor;
 use crate::runtime::manifest::ModelSpec;
@@ -89,6 +89,28 @@ pub struct Pipeline<'a> {
     /// disk every N batches and can resume after a kill
     /// (`--checkpoint-dir`/`--resume`); results are bitwise unchanged.
     pub checkpoint: Option<CheckpointCfg>,
+    /// Accumulator-kind override (`--accum sketch`): swap the exact
+    /// TSQR R for the randomized range-finder sketch.  Only valid for
+    /// methods that consume the R factor; `None` keeps each method's
+    /// declared kind.
+    pub accum: Option<AccumKind>,
+}
+
+/// Resolve the accumulator kind a run uses: the method's declared kind,
+/// or the `--accum` override when the method consumes the R factor (the
+/// only kind with a drop-in approximation).  Overriding a non-R method
+/// is a configuration error, not a silent fallback.
+pub fn resolve_accum_kind(comp: &dyn Compressor, over: Option<AccumKind>) -> Result<AccumKind> {
+    let declared = comp.accum_kind();
+    match over {
+        None => Ok(declared),
+        Some(k) if k == declared => Ok(declared),
+        Some(AccumKind::Sketch) if declared == AccumKind::RFactor => Ok(AccumKind::Sketch),
+        Some(k) => Err(Error::Config(format!(
+            "--accum {k:?} does not apply to {} (consumes {declared:?})",
+            comp.name()
+        ))),
+    }
 }
 
 impl<'a> Pipeline<'a> {
@@ -101,6 +123,7 @@ impl<'a> Pipeline<'a> {
             host_sweeps: HOST_SWEEPS,
             plan: EnginePlan::default(),
             checkpoint: None,
+            accum: None,
         }
     }
 
@@ -119,6 +142,12 @@ impl<'a> Pipeline<'a> {
     /// Same pipeline, checkpointing calibration progress to disk.
     pub fn with_checkpoint(mut self, ckpt: Option<CheckpointCfg>) -> Pipeline<'a> {
         self.checkpoint = ckpt;
+        self
+    }
+
+    /// Same pipeline, with an accumulator-kind override (`--accum`).
+    pub fn with_accum(mut self, accum: Option<AccumKind>) -> Pipeline<'a> {
+        self.accum = accum;
         self
     }
 
@@ -159,6 +188,7 @@ impl<'a> Pipeline<'a> {
         timings: &mut StageTimings,
     ) -> Result<CalibStates> {
         let comp = compressor_for(&job.method);
+        let kind = resolve_accum_kind(comp.as_ref(), self.accum)?;
         // fingerprint of this calibration run (model config, route,
         // batch count, plus whatever identity the checkpoint config
         // carries — e.g. the synthetic seed): keys the checkpoint file
@@ -168,7 +198,7 @@ impl<'a> Pipeline<'a> {
         });
         engine::calibrate_checkpointed(
             source,
-            comp.accum_kind(),
+            kind,
             job.calib_batches,
             self.accum_backend(),
             job.accum_precision,
@@ -251,6 +281,28 @@ mod tests {
             return None;
         }
         Some((Executor::new("artifacts").unwrap(), Corpus::load("artifacts").unwrap()))
+    }
+
+    #[test]
+    fn accum_overrides_resolve_strictly() {
+        use crate::coala::compressor::resolve;
+        let coala = resolve("coala").unwrap();
+        let svdllm = resolve("svdllm").unwrap();
+        // no override → the declared statistic
+        assert_eq!(resolve_accum_kind(coala.as_ref(), None).unwrap(), AccumKind::RFactor);
+        assert_eq!(resolve_accum_kind(svdllm.as_ref(), None).unwrap(), AccumKind::Gram);
+        // sketch only swaps in for R consumers
+        assert_eq!(
+            resolve_accum_kind(coala.as_ref(), Some(AccumKind::Sketch)).unwrap(),
+            AccumKind::Sketch
+        );
+        assert!(resolve_accum_kind(svdllm.as_ref(), Some(AccumKind::Sketch)).is_err());
+        // a same-kind override is a no-op, any other mismatch is loud
+        assert_eq!(
+            resolve_accum_kind(svdllm.as_ref(), Some(AccumKind::Gram)).unwrap(),
+            AccumKind::Gram
+        );
+        assert!(resolve_accum_kind(coala.as_ref(), Some(AccumKind::Gram)).is_err());
     }
 
     #[test]

@@ -12,12 +12,16 @@
 //! The crate encodes exactly that split as two small traits:
 //!
 //! * [`calib::accumulate::CalibAccumulator`] — the streaming
-//!   "accumulate" stage.  Three strategies (square R via out-of-core
-//!   TSQR, streamed Gram, per-channel activation scales) share one
-//!   `fold_chunk`/`merge_state`/`finish` interface, each running on
-//!   either backend: the PJRT artifacts (`Device`) or pure-Rust linalg
-//!   (`Host`).  The execution engine folds every driver through this
-//!   interface; the raw calibration matrix X is never materialized.
+//!   "accumulate" stage.  Four strategies (square R via out-of-core
+//!   TSQR, streamed Gram, per-channel activation scales, and the seeded
+//!   Gaussian range-finder sketch Y = Σ_b Ω_b·X_b behind `--accum
+//!   sketch`) share one `fold_chunk`/`merge_state`/`finish` interface,
+//!   each running on either backend: the PJRT artifacts (`Device`) or
+//!   pure-Rust linalg (`Host`).  The execution engine folds every
+//!   driver through this interface; the raw calibration matrix X is
+//!   never materialized.  The sketch's Ω is derived from the *global*
+//!   batch index, so its merge (plain addition through the canonical
+//!   tree) keeps every bitwise-determinism guarantee below.
 //! * [`coala::compressor::Compressor`] — one impl per compression
 //!   method.  Each declares the accumulator kind it consumes and
 //!   provides **two** factorization routes: `factorize_device` (the AOT
@@ -47,7 +51,7 @@
 //!   across *processes*.  A versioned binary codec (magic/version/kind
 //!   header, floats as IEEE bit patterns — fp64 bit-exact round-trip,
 //!   NaN payloads included) serializes every accumulator merge state
-//!   (TSQR R, streamed Gram, activation scales), compressed factor
+//!   (TSQR R, streamed Gram, activation scales, sketch), compressed factor
 //!   outputs, and adapter sets.  A [`coordinator::shard::ShardPlan`]
 //!   partitions the calibration batches into contiguous ranges with
 //!   *global* leaf indices: `coala shard` accumulates one range and
@@ -140,6 +144,19 @@
 //! implementation of the same numerics (including f64) used as ground
 //! truth for the stability studies, as the host route of every
 //! compressor, and by the property tests.
+//!
+//! ### Host kernel performance
+//!
+//! The host route's BLAS-3 spine is hand-tiled rather than naive:
+//! [`tensor::ops::matmul`]/[`tensor::ops::matmul_nt`] pack panels of
+//! both operands and run a register-tiled microkernel (workers write
+//! disjoint row ranges of the preallocated output; accumulation order
+//! is ascending-k, so results are bitwise worker-count-independent),
+//! and [`linalg::householder_qr_r`] is a compact-WY *blocked* QR whose
+//! trailing updates are two of those GEMMs per panel.
+//! `benches/kernels.rs` sweeps both against their naive/unblocked
+//! references (plus sketch-vs-exact accumulation) and dumps
+//! `BENCH_kernels.json` with the speedup ratios.
 //!
 //! ### Adding a method
 //!

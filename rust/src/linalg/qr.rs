@@ -1,16 +1,30 @@
-//! Householder QR.  The R-only sweep is all COALA's algorithms ever
-//! need; the explicit-Q variant ([`householder_qr`]) exists for the
-//! property tests that pin the orthogonality invariants (QᵀQ = I,
-//! A = QR) the R-only code relies on implicitly.
+//! Blocked Householder QR (compact-WY).  The R-only sweep is all
+//! COALA's algorithms ever need; the explicit-Q variant
+//! ([`householder_qr`]) exists for the property tests that pin the
+//! orthogonality invariants (QᵀQ = I, A = QR) the R-only code relies on
+//! implicitly.
+//!
+//! Panels of `NB` columns are factored with the textbook column sweep
+//! while the block reflector Q = I − V·T·Vᵀ is accumulated (T upper
+//! triangular, built by the compact-WY recurrence
+//! T ← [[T, −τ·T·(Vᵀv)], [0, τ]]); the trailing matrix is then updated
+//! with two packed GEMMs (C ← C − V·Tᵀ·(VᵀC)), which is where ~1−NB/n
+//! of the flops land.  `tests/prop_linalg.rs` pins blocked ≡ unblocked.
 
 use crate::error::{Error, Result};
+use crate::tensor::ops::matmul;
 use crate::tensor::{Matrix, Scalar};
+
+/// Panel width for the blocked sweep.  32 keeps the unblocked panel
+/// work ≤ NB/n of the flops at `large`-config shapes while the V/T
+/// panels stay L1/L2 resident.
+const NB: usize = 32;
 
 /// R factor of A (m × n): returns min(m,n) × n upper triangular.
 ///
-/// Column-by-column Householder reflections applied in place; O(mn²).
-/// No pivoting (mirrors the L2 graph).  Rank-deficient inputs are fine:
-/// a zero column yields a zero reflector (β = 0).
+/// Compact-WY blocked Householder; O(mn²) with the trailing updates as
+/// GEMMs.  No pivoting (mirrors the L2 graph).  Rank-deficient inputs
+/// are fine: a zero column yields a zero reflector (τ = 0).
 pub fn householder_qr_r<T: Scalar>(a: &Matrix<T>) -> Matrix<T> {
     let (m, n) = (a.rows, a.cols);
     let mut acc = a.clone();
@@ -28,17 +42,48 @@ pub fn householder_qr_r<T: Scalar>(a: &Matrix<T>) -> Matrix<T> {
 }
 
 /// Triangularize the top `m` rows of `acc` **in place** (R-only
-/// Householder sweep); rows ≥ `m` of `acc` are never touched.
+/// blocked Householder sweep); rows ≥ `m` of `acc` are never touched.
 ///
-/// This is the allocation-free core shared by [`householder_qr_r`] and
-/// the streaming [`super::tsqr::TsqrFolder`], which reuses one scratch
-/// matrix across folds instead of re-stacking `[R ; chunk]`.  `v` is the
-/// caller-owned reflector workspace (`v.len() >= m`).
+/// This is the core shared by [`householder_qr_r`] and the streaming
+/// [`super::tsqr::TsqrFolder`], which reuses one scratch matrix across
+/// folds instead of re-stacking `[R ; chunk]`.  `v` is the caller-owned
+/// reflector workspace (`v.len() >= m`).
 pub(crate) fn householder_triangularize<T: Scalar>(acc: &mut Matrix<T>, m: usize, v: &mut [T]) {
     let n = acc.cols;
     debug_assert!(m <= acc.rows && v.len() >= m);
     let steps = m.min(n);
-    for j in 0..steps {
+    let mut j0 = 0;
+    while j0 < steps {
+        let nb = NB.min(steps - j0);
+        let (vmat, tmat) = panel_factor(acc, m, j0, nb, v);
+        if j0 + nb < n {
+            // trailing update: C ← (I − V·T·Vᵀ)ᵀ·C = C − V·Tᵀ·(VᵀC)
+            apply_block_left(acc, m, j0, &vmat, &tmat, j0 + nb, n, true);
+        }
+        j0 += nb;
+    }
+}
+
+/// Factor panel columns `j0 .. j0+nb` of `acc` (rows `j0..m`) with the
+/// unblocked column sweep, applying each reflector to the remaining
+/// panel columns immediately.  Returns the panel reflectors V
+/// ((m−j0) × nb, lower trapezoidal) and the compact-WY T (nb × nb,
+/// upper triangular) such that H_{j0}·…·H_{j0+nb−1} = I − V·T·Vᵀ.
+/// Skipped (zero) columns leave zero columns in both V and T, which
+/// drop out of the block reflector exactly as an identity factor would.
+fn panel_factor<T: Scalar>(
+    acc: &mut Matrix<T>,
+    m: usize,
+    j0: usize,
+    nb: usize,
+    v: &mut [T],
+) -> (Matrix<T>, Matrix<T>) {
+    let mp = m - j0;
+    let mut vmat = Matrix::zeros(mp, nb);
+    let mut tmat = Matrix::zeros(nb, nb);
+    let mut w = vec![T::ZERO; nb];
+    for jj in 0..nb {
+        let j = j0 + jj;
         // build the Householder vector from column j, rows j..m
         let mut norm2 = T::ZERO;
         for i in j..m {
@@ -66,8 +111,8 @@ pub(crate) fn householder_triangularize<T: Scalar>(acc: &mut Matrix<T>, m: usize
             continue;
         }
         let beta = (T::ONE + T::ONE) / vnorm2;
-        // acc -= beta * v (vᵀ acc)   — only rows j.. and cols j.. matter
-        for c in j..n {
+        // acc −= β v (vᵀ acc) on the remaining panel columns
+        for c in j..j0 + nb {
             let mut dot = T::ZERO;
             for i in j..m {
                 dot += v[i] * acc.get(i, c);
@@ -77,6 +122,56 @@ pub(crate) fn householder_triangularize<T: Scalar>(acc: &mut Matrix<T>, m: usize
                 let cur = acc.get(i, c);
                 acc.set(i, c, cur - v[i] * s);
             }
+        }
+        // record V column jj and extend T:
+        //   T[..jj, jj] = −β·T[..jj, ..jj]·(V[.., ..jj]ᵀ·v),  T[jj, jj] = β
+        for i in j..m {
+            vmat.set(i - j0, jj, v[i]);
+        }
+        for (p, wp) in w.iter_mut().enumerate().take(jj) {
+            let mut dot = T::ZERO;
+            for i in jj..mp {
+                dot += vmat.get(i, p) * vmat.get(i, jj);
+            }
+            *wp = dot;
+        }
+        for p in 0..jj {
+            let mut dot = T::ZERO;
+            for (q, &wq) in w.iter().enumerate().take(jj).skip(p) {
+                dot += tmat.get(p, q) * wq;
+            }
+            tmat.set(p, jj, -beta * dot);
+        }
+        tmat.set(jj, jj, beta);
+    }
+    (vmat, tmat)
+}
+
+/// Apply the block reflector of panel (`j0`, V, T) to columns
+/// `c0 .. c1` of `acc`, rows `j0..m`:
+///   `transpose_t == true`  → C ← C − V·Tᵀ·(VᵀC)   (i.e. Qᵀ·C)
+///   `transpose_t == false` → C ← C − V·T·(VᵀC)    (i.e. Q·C)
+/// All three products run through the packed GEMM.
+fn apply_block_left<T: Scalar>(
+    acc: &mut Matrix<T>,
+    m: usize,
+    j0: usize,
+    vmat: &Matrix<T>,
+    tmat: &Matrix<T>,
+    c0: usize,
+    c1: usize,
+    transpose_t: bool,
+) {
+    let mp = m - j0;
+    let c = acc.slice(j0, m, c0, c1);
+    let vt_c = matmul(&vmat.transpose(), &c).expect("blocked QR: VᵀC shape");
+    let t_eff = if transpose_t { tmat.transpose() } else { tmat.clone() };
+    let s = matmul(&t_eff, &vt_c).expect("blocked QR: T·VᵀC shape");
+    let vs = matmul(vmat, &s).expect("blocked QR: V·S shape");
+    for i in 0..mp {
+        for (jj, &x) in vs.row(i).iter().enumerate() {
+            let cur = acc.get(j0 + i, c0 + jj);
+            acc.set(j0 + i, c0 + jj, cur - x);
         }
     }
 }
@@ -84,56 +179,27 @@ pub(crate) fn householder_triangularize<T: Scalar>(acc: &mut Matrix<T>, m: usize
 /// Full thin Householder QR: A (m × n, m ≥ n) = Q·R with Q (m × n)
 /// having orthonormal columns and R (n × n) upper triangular.
 ///
-/// Same reflector construction as [`householder_qr_r`], but the
-/// reflectors are kept and applied in reverse to the thin identity to
-/// materialize Q — the form the property tests verify directly.
+/// Same blocked panel factorization as [`householder_qr_r`] (the R
+/// factors agree bitwise); the kept (V, T) panels are applied in
+/// reverse to the thin identity to materialize Q — the form the
+/// property tests verify directly.
 pub fn householder_qr<T: Scalar>(a: &Matrix<T>) -> Result<(Matrix<T>, Matrix<T>)> {
     let (m, n) = (a.rows, a.cols);
     if m < n {
         return Err(Error::shape(format!("householder_qr needs m ≥ n, got {m}x{n}")));
     }
     let mut acc = a.clone();
-    // per-column reflector (full-length v, β); β = 0 marks a skipped column
-    let mut reflectors: Vec<(Vec<T>, T)> = Vec::with_capacity(n);
-    for j in 0..n {
-        let mut norm2 = T::ZERO;
-        for i in j..m {
-            let x = acc.get(i, j);
-            norm2 += x * x;
+    let mut v = vec![T::ZERO; m];
+    let mut panels: Vec<(usize, Matrix<T>, Matrix<T>)> = Vec::new();
+    let mut j0 = 0;
+    while j0 < n {
+        let nb = NB.min(n - j0);
+        let (vmat, tmat) = panel_factor(&mut acc, m, j0, nb, &mut v);
+        if j0 + nb < n {
+            apply_block_left(&mut acc, m, j0, &vmat, &tmat, j0 + nb, n, true);
         }
-        let normx = norm2.sqrt();
-        let mut v = vec![T::ZERO; m];
-        if normx.to_f64() == 0.0 {
-            reflectors.push((v, T::ZERO));
-            continue;
-        }
-        let xj = acc.get(j, j);
-        let alpha = if xj.to_f64() >= 0.0 { -normx } else { normx };
-        for i in j..m {
-            v[i] = acc.get(i, j);
-        }
-        v[j] -= alpha;
-        let mut vnorm2 = T::ZERO;
-        for &x in v.iter().take(m).skip(j) {
-            vnorm2 += x * x;
-        }
-        if vnorm2.to_f64() <= 0.0 {
-            reflectors.push((v, T::ZERO));
-            continue;
-        }
-        let beta = (T::ONE + T::ONE) / vnorm2;
-        for c in j..n {
-            let mut dot = T::ZERO;
-            for i in j..m {
-                dot += v[i] * acc.get(i, c);
-            }
-            let s = beta * dot;
-            for i in j..m {
-                let cur = acc.get(i, c);
-                acc.set(i, c, cur - v[i] * s);
-            }
-        }
-        reflectors.push((v, beta));
+        panels.push((j0, vmat, tmat));
+        j0 += nb;
     }
     let mut r = Matrix::zeros(n, n);
     for i in 0..n {
@@ -141,26 +207,13 @@ pub fn householder_qr<T: Scalar>(a: &Matrix<T>) -> Result<(Matrix<T>, Matrix<T>)
             r.set(i, c, acc.get(i, c));
         }
     }
-    // Q = H_0 · … · H_{n−1} · [I_n; 0]: reflectors applied in reverse
+    // Q = (I − V₀T₀V₀ᵀ)·…·(I − Vₖ Tₖ Vₖᵀ)·[Iₙ; 0]: panels in reverse
     let mut q = Matrix::zeros(m, n);
     for j in 0..n {
         q.set(j, j, T::ONE);
     }
-    for (j, (v, beta)) in reflectors.iter().enumerate().rev() {
-        if beta.to_f64() == 0.0 {
-            continue;
-        }
-        for c in 0..n {
-            let mut dot = T::ZERO;
-            for i in j..m {
-                dot += v[i] * q.get(i, c);
-            }
-            let s = *beta * dot;
-            for i in j..m {
-                let cur = q.get(i, c);
-                q.set(i, c, cur - v[i] * s);
-            }
-        }
+    for (p0, vmat, tmat) in panels.iter().rev() {
+        apply_block_left(&mut q, m, *p0, vmat, tmat, 0, n, false);
     }
     Ok((q, r))
 }
@@ -211,6 +264,18 @@ mod tests {
     }
 
     #[test]
+    fn qr_gram_identity_beyond_panel_width() {
+        // more columns than one NB panel: the compact-WY trailing
+        // updates carry the factorization across panel boundaries
+        for (m, n, seed) in [(96usize, 80usize, 8u64), (64, 33, 9), (40, 64, 10)] {
+            let a: Matrix<f64> = Matrix::randn(m, n, seed);
+            let r = householder_qr_r(&a);
+            assert_eq!(r.rows, m.min(n));
+            gram_close(&r, &a, 1e-10);
+        }
+    }
+
+    #[test]
     fn upper_triangular() {
         let a: Matrix<f64> = Matrix::randn(12, 7, 6);
         let r = householder_qr_r(&a);
@@ -236,7 +301,7 @@ mod tests {
 
     #[test]
     fn explicit_q_reconstructs_and_is_orthonormal() {
-        for (m, n, seed) in [(12usize, 5usize, 1u64), (7, 7, 2), (30, 10, 3)] {
+        for (m, n, seed) in [(12usize, 5usize, 1u64), (7, 7, 2), (30, 10, 3), (80, 50, 4)] {
             let a: Matrix<f64> = Matrix::randn(m, n, seed);
             let (q, r) = householder_qr(&a).unwrap();
             assert_eq!((q.rows, q.cols), (m, n));

@@ -42,7 +42,12 @@
 //! any worker count.  `--checkpoint-dir DIR [--checkpoint-every N]
 //! [--resume]` on compress/shard/merge/repro makes calibration durable:
 //! pending merge states are written every N batches and a killed run
-//! resumes bitwise-identically.
+//! resumes bitwise-identically.  `--accum exact|sketch` on
+//! compress/shard/merge/repro swaps the R-consuming methods' exact TSQR
+//! accumulator for the O(rank)-per-batch randomized range-finder sketch
+//! (`COALA_SKETCH_ROWS`/`COALA_SKETCH_SEED` tune it; see
+//! `util::cli::Args::accum` for the error-bound rationale) — all the
+//! determinism guarantees above hold for the sketch bitwise.
 //!
 //! Methods resolve by name through the `coala::compressor` registry —
 //! `methods` prints every spec the registry accepts.
@@ -50,7 +55,9 @@
 use coala::calib::dataset::{Corpus, TaskBank};
 use coala::calib::state::ShardState;
 use coala::coala::compressor::{registry, resolve, Compressor, Route};
-use coala::coordinator::{engine, CompressionJob, Pipeline, ShardPlan, StageTimings, TsqrTreeRunner};
+use coala::coordinator::{
+    engine, resolve_accum_kind, CompressionJob, Pipeline, ShardPlan, StageTimings, TsqrTreeRunner,
+};
 use coala::error::{Error, Result};
 use coala::eval::{eval_tasks, perplexity};
 use coala::model::ModelWeights;
@@ -130,7 +137,8 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
             let pipe = Pipeline::new(&ex, spec.clone(), &w)
                 .with_route(route)
                 .with_plan(plan)
-                .with_checkpoint(args.checkpoint()?);
+                .with_checkpoint(args.checkpoint()?)
+                .with_accum(args.accum()?);
             let out = pipe.run(&job, &corpus)?;
             println!(
                 "done in {:.2}s (calibrate {:.2}s / accumulate {:.2}s / factorize {:.2}s)",
@@ -226,6 +234,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
             let cfg = args.get_or("model", "tiny");
             let (spec, w) = env.weights(cfg)?;
             let comp = resolve(&args.method_spec("coala"))?;
+            let kind = resolve_accum_kind(comp.as_ref(), env.accum)?;
             let total = args.get_usize("calib-batches", 8)?;
             let plan = ShardPlan::new(total, args.get_usize("shard-count", 1)?)?;
             let range = plan.range(args.get_usize("shard-index", 0)?)?;
@@ -236,14 +245,14 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
                 range.start,
                 range.end,
                 comp.name(),
-                comp.accum_kind(),
+                kind,
                 if env.is_synthetic() { "host" } else { "device" }
             );
             let src = env.calib_source(&spec, &w, total)?;
             let mut t = StageTimings::default();
             let state = engine::accumulate_shard(
                 src.as_ref(),
-                comp.accum_kind(),
+                kind,
                 range,
                 env.accum_backend(),
                 Precision::F32,
@@ -280,7 +289,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
                 let src = env.calib_source(&spec, &w, total)?;
                 engine::calibrate_checkpointed(
                     src.as_ref(),
-                    comp.accum_kind(),
+                    resolve_accum_kind(comp.as_ref(), env.accum)?,
                     total,
                     env.accum_backend(),
                     Precision::F32,

@@ -15,7 +15,7 @@
 //! compression runs, task banks, and evaluation; they never branch on
 //! the route themselves.
 
-use crate::calib::accumulate::AccumBackend;
+use crate::calib::accumulate::{sketch_seed_base, AccumBackend, AccumKind};
 use crate::calib::activations::{chunk_for_proj, ActivationSource, DeviceActivationSource};
 use crate::calib::dataset::{Corpus, TaskBank};
 use crate::calib::synthetic::SyntheticActivations;
@@ -48,6 +48,9 @@ pub struct Env {
     /// Calibration checkpointing (`--checkpoint-dir`/`--resume`); off
     /// by default.  Results are identical with or without it.
     pub checkpoint: Option<CheckpointCfg>,
+    /// Accumulator-kind override (`--accum sketch`) for the R-consuming
+    /// methods; `None` keeps each method's declared kind.
+    pub accum: Option<AccumKind>,
     seed: u64,
     synthetic: bool,
 }
@@ -60,9 +63,11 @@ impl Env {
             Route::Host => Env::synthetic(args.seed(synth::DEFAULT_SEED)?)?,
             Route::Device => Env::from_artifacts(args)?,
         };
+        env.accum = args.accum()?;
         // stamp the environment identity into the checkpoint config so
-        // a stale checkpoint from a different seed/route never resumes
-        let stamp = format!("{:?}:seed{}", env.route, env.seed);
+        // a stale checkpoint from a different seed/route/accumulator
+        // never resumes
+        let stamp = format!("{:?}:seed{}{}", env.route, env.seed, env.accum_stamp());
         env.checkpoint = args.checkpoint()?.map(|c| c.with_source(stamp));
         Ok(env.with_plan(args.engine_plan()?))
     }
@@ -76,6 +81,7 @@ impl Env {
             route: Route::Device,
             plan: EnginePlan::default(),
             checkpoint: None,
+            accum: None,
             seed: 0,
             synthetic: false,
         })
@@ -91,6 +97,7 @@ impl Env {
             route: Route::Host,
             plan: EnginePlan::default(),
             checkpoint: None,
+            accum: None,
             seed,
             synthetic: true,
         })
@@ -138,12 +145,30 @@ impl Env {
         }
     }
 
+    /// Sketch-accumulator fingerprint fragment: empty for exact kinds;
+    /// for `--accum sketch`, names the sketch geometry and Ω seed
+    /// family (the two knobs every worker/shard must agree on) so
+    /// states produced under different `COALA_SKETCH_ROWS` /
+    /// `COALA_SKETCH_SEED` settings can never silently merge.
+    fn accum_stamp(&self) -> String {
+        if self.accum != Some(AccumKind::Sketch) {
+            return String::new();
+        }
+        let rows = std::env::var("COALA_SKETCH_ROWS").unwrap_or_else(|_| "auto".to_string());
+        format!(":sketch:r{rows}:s{}", sketch_seed_base())
+    }
+
     /// Fingerprint of this environment's calibration source for a
     /// (config, batch-count) run — stamped into shard state files and
     /// checkpoints so mismatched shards/checkpoints are rejected
     /// instead of silently merged (`coala shard`/`merge` use it).
     pub fn source_id(&self, config: &str, batches: usize) -> String {
-        format!("{config}:{:?}:seed{}:b{batches}", self.route, self.seed)
+        format!(
+            "{config}:{:?}:seed{}:b{batches}{}",
+            self.route,
+            self.seed,
+            self.accum_stamp()
+        )
     }
 
     /// A boxed calibration source for whichever route is active — the
@@ -177,10 +202,19 @@ impl Env {
         weights: &ModelWeights,
         job: &CompressionJob,
     ) -> Result<CompressionOutcome> {
+        use crate::coala::compressor::{compressor_for, Compressor as _};
+        // repro tables run Gram/Scales methods alongside the
+        // R-consumers, so the harness applies `--accum sketch` only
+        // where it is meaningful and leaves the rest on their declared
+        // statistic.  (The single-method CLI paths — compress / shard /
+        // merge — stay strict and reject the mismatch loudly.)
+        let comp = compressor_for(&job.method);
+        let accum = self.accum.filter(|_| comp.accum_kind() == AccumKind::RFactor);
         let pipe = Pipeline::new(&self.ex, spec.clone(), weights)
             .with_route(self.route)
             .with_plan(self.plan)
-            .with_checkpoint(self.checkpoint.clone());
+            .with_checkpoint(self.checkpoint.clone())
+            .with_accum(accum);
         match self.activation_source(spec) {
             Some(src) => pipe.run_with_source(job, &src),
             None => pipe.run(job, &self.corpus),
@@ -427,6 +461,37 @@ mod tests {
         let bank = env.task_bank("ft").unwrap();
         let scores = tuner.eval_tasks(&set, &bank, Some(32)).unwrap();
         assert_eq!(scores.names.len(), 8);
+    }
+
+    #[test]
+    fn sketch_accum_stamps_the_source_id() {
+        let mut env = Env::synthetic(4).unwrap();
+        let plain = env.source_id("tiny", 6);
+        env.accum = Some(AccumKind::Sketch);
+        let sk = env.source_id("tiny", 6);
+        assert_ne!(plain, sk);
+        assert!(sk.contains(":sketch:"), "{sk}");
+    }
+
+    #[test]
+    fn sketch_run_job_compresses_on_host() {
+        use crate::coala::compressor::{resolve, Compressor};
+        let mut env = Env::synthetic(8).unwrap();
+        env.accum = Some(AccumKind::Sketch);
+        let (spec, w) = env.weights("tiny").unwrap();
+        let mut job = CompressionJob::new("tiny", resolve("coala").unwrap().method(), 0.4);
+        job.calib_batches = 2;
+        let out = env.run_job(&spec, &w, &job).unwrap();
+        assert!(out.model.all_finite());
+        assert_eq!(out.model.factors.len(), spec.compressible.len());
+        // multi-method repro tables also run Gram consumers under
+        // --accum sketch: the harness leaves them on their declared
+        // statistic (strict rejection lives in the compress/shard CLI
+        // paths via resolve_accum_kind)
+        let mut gram = CompressionJob::new("tiny", resolve("svdllm").unwrap().method(), 0.4);
+        gram.calib_batches = 2;
+        let out = env.run_job(&spec, &w, &gram).unwrap();
+        assert!(out.model.all_finite());
     }
 
     #[test]

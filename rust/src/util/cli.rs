@@ -3,6 +3,7 @@
 //! Supports `--flag value`, `--flag=value`, boolean `--flag`, and
 //! positional arguments.  The `coala` binary defines subcommands on top.
 
+use crate::calib::accumulate::AccumKind;
 use crate::coala::compressor::Route;
 use crate::coordinator::engine::{CheckpointCfg, EnginePlan};
 use crate::error::{Error, Result};
@@ -136,6 +137,28 @@ impl Args {
         )))
     }
 
+    /// `--accum exact|sketch` → optional accumulator-kind override for
+    /// the R-consuming methods (COALA, α-family).  `sketch` swaps the
+    /// exact TSQR R for the seeded Gaussian range-finder sketch
+    /// (`calib::accumulate::SketchAccumulator`): each batch folds in
+    /// O(s·c·n) instead of O((n+c)·n²), at the HMT range-finder cost of
+    /// an expected excess-residual factor √(1 + r/(p−1)) for
+    /// oversampling p = s − r.  The sketch height s defaults to
+    /// n/2 + 16 (clamped to n) and the Ω seed family to a fixed
+    /// constant; `COALA_SKETCH_ROWS` / `COALA_SKETCH_SEED` override
+    /// them, and both are folded into the run fingerprint so shards and
+    /// checkpoints of one run can't silently disagree.  `exact` (or an
+    /// absent flag) keeps the method's declared accumulator.
+    pub fn accum(&self) -> Result<Option<AccumKind>> {
+        match self.get("accum") {
+            None | Some("exact") => Ok(None),
+            Some("sketch") => Ok(Some(AccumKind::Sketch)),
+            Some(other) => Err(Error::Config(format!(
+                "--accum is exact or sketch, got `{other}`"
+            ))),
+        }
+    }
+
     /// Assemble the method spec the `coala::compressor` registry resolves:
     /// `--method NAME` plus an optional `--lambda`/`--mu` parameter
     /// (spelled `NAME:lambda=V` / `NAME:mu=V`).  `--method coala:lambda=3`
@@ -251,6 +274,17 @@ mod tests {
         assert!(!c.resume);
         // --resume without a directory is a configuration error
         assert!(Args::parse(&sv(&["--resume"])).checkpoint().is_err());
+    }
+
+    #[test]
+    fn accum_flag() {
+        assert_eq!(Args::parse(&sv(&[])).accum().unwrap(), None);
+        assert_eq!(Args::parse(&sv(&["--accum", "exact"])).accum().unwrap(), None);
+        assert_eq!(
+            Args::parse(&sv(&["--accum", "sketch"])).accum().unwrap(),
+            Some(AccumKind::Sketch)
+        );
+        assert!(Args::parse(&sv(&["--accum", "gram"])).accum().is_err());
     }
 
     #[test]

@@ -1,17 +1,19 @@
 //! Determinism stress for the execution engine: calibration states and
 //! compressed factors must be **bitwise identical** for every worker
-//! count, across all three accumulator kinds (TSQR R / Gram / scales),
-//! on synthetic data that includes the nearly singular regime (the
+//! count, across all four accumulator kinds (TSQR R / Gram / scales /
+//! sketch), on synthetic data that includes the nearly singular regime (the
 //! synthetic `tiny` model's layer 1 activations live in a low-rank
 //! subspace with a 1e-2 noise floor — exactly where an order-dependent
 //! floating-point reduction would leak the worker count into the bits).
 
-use coala::calib::accumulate::{AccumBackend, CalibState};
+use coala::calib::accumulate::{AccumBackend, AccumKind, CalibState};
 use coala::calib::state::ShardState;
 use coala::calib::synthetic::{regime_for_layer, Regime, SyntheticActivations};
 use coala::coala::compressor::{resolve, Compressor, Route};
 use coala::coordinator::pipeline::StageTimings;
-use coala::coordinator::{engine, CalibStates, CheckpointCfg, CompressionJob, EnginePlan, Pipeline, ShardPlan};
+use coala::coordinator::{
+    engine, CalibStates, CheckpointCfg, CompressionJob, EnginePlan, Pipeline, ShardPlan,
+};
 use coala::model::synthetic::{synthetic_manifest, synthetic_weights};
 use coala::runtime::Executor;
 use coala::tensor::lowp::Precision;
@@ -33,6 +35,13 @@ fn assert_states_bitwise_eq(want: &CalibStates, got: &CalibStates, label: &str) 
                 assert_eq!(a, b, "{label} {k:?}: scale sums differ");
                 assert_eq!(ra, rb, "{label} {k:?}: row counts differ");
             }
+            (
+                CalibState::Sketch { y: a, folds: fa },
+                CalibState::Sketch { y: b, folds: fb },
+            ) => {
+                assert_eq!(fa, fb, "{label} {k:?}: sketch fold counts differ");
+                assert_eq!(a.data, b.data, "{label} {k:?}: sketch bits differ");
+            }
             (CalibState::None, CalibState::None) => {}
             other => panic!("{label} {k:?}: state kind mismatch: {other:?}"),
         }
@@ -48,8 +57,15 @@ fn engine_results_are_bitwise_identical_across_worker_counts() {
     let w = synthetic_weights(&spec, 5);
     let src = SyntheticActivations::new(spec.clone(), 5);
 
-    // one method per accumulator kind: R factor / Gram / scales
-    for method_spec in ["coala", "svdllm", "asvd"] {
+    // one method per accumulator kind (R factor / Gram / scales), plus
+    // the sketched range-finder riding coala's R-consuming route
+    let cases = [
+        ("coala", None),
+        ("coala", Some(AccumKind::Sketch)),
+        ("svdllm", None),
+        ("asvd", None),
+    ];
+    for (method_spec, accum) in cases {
         let comp = resolve(method_spec).unwrap();
         let mut job = CompressionJob::new("tiny", comp.method(), 0.4);
         job.calib_batches = 3;
@@ -57,9 +73,10 @@ fn engine_results_are_bitwise_identical_across_worker_counts() {
         let mut ref_states: Option<CalibStates> = None;
         let mut ref_factors: Option<Vec<(String, Vec<f32>, Vec<f32>)>> = None;
         for workers in [1usize, 2, 8] {
-            let label = format!("{method_spec} workers={workers}");
+            let label = format!("{method_spec} accum={accum:?} workers={workers}");
             let pipe = Pipeline::new(&ex, spec.clone(), &w)
                 .with_route(Route::Host)
+                .with_accum(accum)
                 .with_plan(EnginePlan::with_workers(workers));
 
             let mut t = StageTimings::default();
@@ -101,12 +118,20 @@ fn shard_files_merged_out_of_process_match_the_engine_bitwise() {
     let src = SyntheticActivations::new(spec.clone(), 9);
     let total = 6;
 
-    for method_spec in ["coala", "svdllm", "asvd"] {
+    let cases = [
+        ("coala", None),
+        ("coala", Some(AccumKind::Sketch)),
+        ("svdllm", None),
+        ("asvd", None),
+    ];
+    for (method_spec, accum) in cases {
         let comp = resolve(method_spec).unwrap();
-        let kind = comp.accum_kind();
+        let kind = accum.unwrap_or_else(|| comp.accum_kind());
         let mut job = CompressionJob::new("tiny", comp.method(), 0.4);
         job.calib_batches = total;
-        let pipe = Pipeline::new(&ex, spec.clone(), &w).with_route(Route::Host);
+        let pipe = Pipeline::new(&ex, spec.clone(), &w)
+            .with_route(Route::Host)
+            .with_accum(accum);
 
         // single-process reference: engine states + factor file bytes
         let want = engine::calibrate(
@@ -147,12 +172,13 @@ fn shard_files_merged_out_of_process_match_the_engine_bitwise() {
             let got =
                 engine::merge_shard_states(parts, AccumBackend::Host, &mut StageTimings::default())
                     .unwrap();
-            assert_states_bitwise_eq(&want, &got, &format!("{method_spec} shards={shards}"));
+            let label = format!("{method_spec} accum={accum:?} shards={shards}");
+            assert_states_bitwise_eq(&want, &got, &label);
             let got_out = pipe.run_with_accums(&job, &got, StageTimings::default()).unwrap();
             assert_eq!(
                 want_bytes,
                 coala::calib::state::encode_factors(&got_out.model),
-                "{method_spec} shards={shards}: factor files differ"
+                "{label}: factor files differ"
             );
         }
     }
@@ -243,5 +269,49 @@ fn queue_capacity_does_not_change_results() {
                 assert_states_bitwise_eq(want, &states, &format!("queue_cap={queue_cap}"))
             }
         }
+    }
+}
+
+#[test]
+fn sketch_states_approximate_the_exact_gram_within_bound() {
+    // the statistical contract of `--accum sketch`: R̂ from the sketch
+    // is not the exact R, but its Gram form R̂ᵀR̂ = YᵀY/s must stay in
+    // the range-finder ballpark of RᵀR = XᵀX.  At tiny's widths
+    // (32 / 96) the default sketch height leaves little oversampling,
+    // so the relative error is O(1); 2.0 is ~2× the worst case from a
+    // 60-seed reference simulation of these shapes, while broken seed
+    // plumbing or dropped batches land orders of magnitude away.
+    use coala::tensor::ops::{fro, matmul};
+
+    let spec = synthetic_manifest().config("tiny").unwrap().clone();
+    let src = SyntheticActivations::new(spec.clone(), 13);
+    let calibrate = |kind| {
+        engine::calibrate(
+            &src,
+            kind,
+            4,
+            AccumBackend::Host,
+            Precision::F32,
+            &EnginePlan::sequential(),
+            &mut StageTimings::default(),
+        )
+        .unwrap()
+    };
+    let exact = calibrate(AccumKind::RFactor);
+    let sketch = calibrate(AccumKind::Sketch);
+    assert_eq!(exact.len(), sketch.len());
+    for (k, st) in &sketch {
+        let CalibState::Sketch { folds, .. } = st else {
+            panic!("{k:?}: expected a sketch state");
+        };
+        assert_eq!(*folds, 4, "{k:?}: sketch must count every batch");
+        let r_hat = st.r_factor().unwrap();
+        let r = exact[k].r().unwrap();
+        let got = matmul(&r_hat.transpose(), &r_hat).unwrap();
+        let want = matmul(&r.transpose(), &r).unwrap();
+        let err = fro(&got.sub(&want).unwrap()) / fro(&want).max(1e-12);
+        assert!(err < 2.0, "{k:?}: relative sketch Gram error {err}");
+        // the exact route must refuse to hand a sketch out as exact R
+        assert!(st.r().is_err(), "{k:?}: r() must stay strict");
     }
 }

@@ -4,13 +4,17 @@
 //! rest on, pinned with no artifacts and no PJRT:
 //!
 //! * Householder QR: QᵀQ ≈ I and A ≈ Q·R;
+//! * the compact-WY blocked QR agrees with an unblocked column-sweep
+//!   reference (same reflector convention) up to row signs, across
+//!   panel-boundary sizes and rank-deficient inputs;
 //! * streaming (`TsqrFolder`) and tree TSQR R-factors agree with the
 //!   direct QR of the stacked matrix up to row signs;
 //! * Jacobi eigh reconstructs its input (V·Λ·Vᵀ ≈ S, VᵀV ≈ I);
 //! * triangular solves round-trip (solve(U, U·X) ≈ X, both triangles).
 
 use coala::linalg::{
-    eigh, householder_qr, qr_r_square, solve_lower, solve_upper, tsqr_sequential, tsqr_tree,
+    eigh, householder_qr, householder_qr_r, qr_r_square, solve_lower, solve_upper,
+    tsqr_sequential, tsqr_tree,
 };
 use coala::tensor::ops::{fro, gram_t, matmul};
 use coala::tensor::Matrix;
@@ -70,6 +74,145 @@ fn qr_orthogonality_and_reconstruction() {
             Ok(())
         },
     );
+}
+
+/// Unblocked column-by-column Householder sweep — the pre-blocking
+/// algorithm, kept as the reference the compact-WY panel factorization
+/// must reproduce (same reflector convention: α = −sign(x₀)·‖x‖, zero
+/// columns skipped; the lower triangle is zero-filled like
+/// `householder_qr_r`).
+fn qr_r_unblocked_ref(a: &Matrix<f64>) -> Matrix<f64> {
+    let (m, n) = (a.rows, a.cols);
+    let mut acc = a.clone();
+    let mut v = vec![0.0f64; m];
+    for j in 0..m.min(n) {
+        let mut norm2 = 0.0;
+        for i in j..m {
+            let x = acc.get(i, j);
+            norm2 += x * x;
+        }
+        let normx = norm2.sqrt();
+        if normx == 0.0 {
+            continue;
+        }
+        let alpha = if acc.get(j, j) >= 0.0 { -normx } else { normx };
+        for i in j..m {
+            v[i] = acc.get(i, j);
+        }
+        v[j] -= alpha;
+        let mut vnorm2 = 0.0;
+        for &x in v.iter().take(m).skip(j) {
+            vnorm2 += x * x;
+        }
+        if vnorm2 <= 0.0 {
+            continue;
+        }
+        let beta = 2.0 / vnorm2;
+        for c in j..n {
+            let mut dot = 0.0;
+            for i in j..m {
+                dot += v[i] * acc.get(i, c);
+            }
+            let s = beta * dot;
+            for i in j..m {
+                let cur = acc.get(i, c);
+                acc.set(i, c, cur - v[i] * s);
+            }
+        }
+    }
+    let k = m.min(n);
+    let mut r = Matrix::zeros(k, n);
+    for i in 0..k {
+        for j in i..n {
+            r.set(i, j, acc.get(i, j));
+        }
+    }
+    r
+}
+
+#[test]
+fn blocked_qr_matches_unblocked_reference() {
+    assert_prop(
+        "blocked-qr-vs-unblocked",
+        53,
+        8,
+        // sizes cross the NB = 32 panel boundary in both dimensions and
+        // include wide (m < n) shapes, which exercise the
+        // trailing-update-only tail
+        |rng| (1 + rng.below(90), 1 + rng.below(90), rng.below(1000)),
+        |&(m, n, seed)| {
+            if m == 0 || n == 0 {
+                return Ok(()); // shrinking can zero a dimension
+            }
+            let mut a: Matrix<f64> = Matrix::randn(m, n, seed as u64);
+            if n > 2 {
+                // an exactly-zero column: both sweeps must skip its
+                // reflector identically, leaving a zero diagonal
+                for i in 0..m {
+                    a.set(i, n / 2, 0.0);
+                }
+            }
+            let got = normalize_row_signs(&householder_qr_r(&a));
+            let want = normalize_row_signs(&qr_r_unblocked_ref(&a));
+            if (got.rows, got.cols) != (want.rows, want.cols) {
+                return Err(format!("shape {}x{}", got.rows, got.cols));
+            }
+            let err = fro(&got.sub(&want).map_err(|e| e.to_string())?);
+            if err > 1e-9 * (1.0 + fro(&want)) {
+                return Err(format!("‖R_blocked − R_unblocked‖ = {err}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn blocked_qr_panel_boundaries_match_reference() {
+    // fixed sizes straddling the NB = 32 panel width: one panel minus a
+    // column, exactly one, one extra, multi-panel tall, and wide
+    for (m, n) in [(31, 31), (32, 32), (33, 33), (64, 33), (65, 64), (40, 96), (96, 80)] {
+        let a: Matrix<f64> = Matrix::randn(m, n, (m * 1000 + n) as u64);
+        let got = normalize_row_signs(&householder_qr_r(&a));
+        let want = normalize_row_signs(&qr_r_unblocked_ref(&a));
+        assert_eq!((got.rows, got.cols), (want.rows, want.cols), "{m}x{n}");
+        let err = fro(&got.sub(&want).unwrap());
+        assert!(
+            err < 1e-9 * (1.0 + fro(&want)),
+            "{m}x{n}: ‖R_blocked − R_unblocked‖ = {err}"
+        );
+    }
+}
+
+#[test]
+fn blocked_qr_survives_rank_deficiency() {
+    // duplicated + zero columns spread across panels: beyond exact-zero
+    // remainders R is no longer unique up to row signs (reflectors built
+    // from roundoff-level remainders are direction-arbitrary), so pin
+    // the QR contract instead: RᵀR = AᵀA, QᵀQ = I, A = QR.
+    let mut a: Matrix<f64> = Matrix::randn(48, 40, 9);
+    for i in 0..48 {
+        a.set(i, 5, 0.0);
+        let dup = a.get(i, 7);
+        a.set(i, 20, dup);
+        let dup2 = a.get(i, 11);
+        a.set(i, 37, dup2);
+    }
+    let r = householder_qr_r(&a);
+    let rtr = matmul(&r.transpose(), &r).unwrap();
+    let ata = gram_t(&a);
+    let gram_err = fro(&rtr.sub(&ata).unwrap());
+    assert!(gram_err < 1e-8 * (1.0 + fro(&ata)), "‖RᵀR − AᵀA‖ = {gram_err}");
+    let (q, rq) = householder_qr(&a).unwrap();
+    let qtq = matmul(&q.transpose(), &q).unwrap();
+    for i in 0..40 {
+        for j in 0..40 {
+            let want = if i == j { 1.0 } else { 0.0 };
+            let got = qtq.get(i, j);
+            assert!((got - want).abs() < 1e-9, "QᵀQ[{i}][{j}] = {got}");
+        }
+    }
+    let rec_err = fro(&matmul(&q, &rq).unwrap().sub(&a).unwrap());
+    assert!(rec_err < 1e-9 * (1.0 + fro(&a)), "‖A − QR‖ = {rec_err}");
 }
 
 #[test]

@@ -1,5 +1,5 @@
 //! Property tests for the `calib::state` binary codec: bit-exact
-//! round-trips over all three accumulator kinds — on *real* accumulated
+//! round-trips over all four accumulator kinds — on *real* accumulated
 //! states (including the nearly singular regime) and on adversarial
 //! non-finite payloads — plus header (magic/version/kind) rejection.
 
@@ -31,6 +31,14 @@ fn assert_state_bits_eq(a: &CalibState, b: &CalibState, label: &str) {
             let xb: Vec<u64> = x.iter().map(|v| v.to_bits()).collect();
             let yb: Vec<u64> = y.iter().map(|v| v.to_bits()).collect();
             assert_eq!(xb, yb, "{label}: fp64 bits");
+        }
+        (
+            CalibState::Sketch { y: x, folds: fx },
+            CalibState::Sketch { y: yv, folds: fy },
+        ) => {
+            assert_eq!(fx, fy, "{label}: fold counts");
+            assert_eq!((x.rows, x.cols), (yv.rows, yv.cols), "{label}: shape");
+            assert_eq!(bits32(&x.data), bits32(&yv.data), "{label}: payload bits");
         }
         (CalibState::None, CalibState::None) => {}
         other => panic!("{label}: kind changed in round-trip: {other:?}"),
@@ -64,7 +72,9 @@ fn real_accumulated_states_roundtrip_across_seeds_and_regimes() {
     assert_eq!(regime_for_layer(1), Regime::NearSingular);
     for seed in [1u64, 7, 42] {
         let src = SyntheticActivations::new(spec.clone(), seed);
-        for kind in [AccumKind::RFactor, AccumKind::Gram, AccumKind::Scales] {
+        let kinds =
+            [AccumKind::RFactor, AccumKind::Gram, AccumKind::Scales, AccumKind::Sketch];
+        for kind in kinds {
             for layer in [0usize, 1] {
                 let chunks = src.capture_batch(0).unwrap();
                 let chunk = chunks
@@ -89,6 +99,11 @@ fn non_finite_payloads_roundtrip_bit_exactly() {
     m.data[3] = f32::NEG_INFINITY;
     m.data[4] = -0.0;
     roundtrip(CalibState::R(m.clone()), AccumKind::RFactor, "non-finite R");
+    roundtrip(
+        CalibState::Sketch { y: m.clone(), folds: u64::MAX },
+        AccumKind::Sketch,
+        "non-finite sketch",
+    );
     roundtrip(CalibState::Gram(m), AccumKind::Gram, "non-finite Gram");
     roundtrip(
         CalibState::Scales {
@@ -124,6 +139,30 @@ fn version_and_kind_mismatches_are_rejected() {
     let mut bad = good.clone();
     bad[1] ^= 0xff;
     assert!(ShardState::decode(&bad, "bad.state").is_err());
+
+    // unknown accumulator-kind tag (byte 7, after magic+version+payload)
+    let mut k9 = good.clone();
+    k9[7] = 9;
+    assert!(ShardState::decode(&k9, "k9.state").is_err());
+
+    // a node whose state kind contradicts the shard header → rejected
+    let mixed = ShardState {
+        kind: AccumKind::RFactor,
+        precision: Precision::F32,
+        source: String::new(),
+        total: 2,
+        start: 0,
+        end: 2,
+        done: 2,
+        nodes: vec![StateNode {
+            layer: 0,
+            stream: "attn".into(),
+            level: 0,
+            index: 0,
+            state: CalibState::Sketch { y: Matrix::zeros(2, 3), folds: 1 },
+        }],
+    };
+    assert!(ShardState::decode(&mixed.encode(), "mixed.state").is_err());
 
     // payload-kind confusion in both directions
     let factors = state::encode_factors(&coala::model::CompressedModel::new("tiny"));
