@@ -1,0 +1,212 @@
+#!/usr/bin/env python3
+"""Perf-regression gate over the crate's BENCH_*.json dumps.
+
+The Rust benches (`cargo bench --bench kernels` / `--bench pipeline`)
+dump per-target stats plus speedup ratios and per-stage breakdowns.
+This tool diffs a fresh dump against the committed baseline in
+`rust/benches/baseline/` and fails CI on a regression.
+
+Baseline files wrap the raw BENCH json with provenance:
+
+    {"source": "bootstrap" | "native", "bench": {...}}
+
+* ``bootstrap`` — committed without trusted absolute timings (the
+  growth containers have no Rust toolchain).  Gated invariants are
+  machine-independent: every baseline record must still exist
+  (coverage), and every speedup ratio must stay above
+  ``baseline_speedup / threshold`` (e.g. the packed GEMM must not
+  fall behind the naive loop).
+* ``native`` — produced by ``perf_gate.py update`` from a real run on
+  the CI machine class.  Adds absolute gating: a target whose
+  ``mean_s`` exceeds ``baseline * threshold`` (default +30 %) fails,
+  with a per-stage diff when both records carry a ``stages`` map.
+
+Modes:
+    check    --bench B.json [--bench ...] --baseline-dir DIR [--threshold X]
+    update   --bench B.json [--bench ...] --baseline-dir DIR [--source native]
+    selftest (no IO: proves the gate rejects an injected 2x slowdown)
+"""
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+DEFAULT_THRESHOLD = 1.30
+# timings below this are indistinguishable from scheduler noise on
+# shared CI runners — never gated, never flagged in stage diffs
+MIN_GATED_MEAN_S = 1e-4
+
+
+def walk_records(bench):
+    """Yield every ``{"name": ...}`` object in a BENCH dump's arrays."""
+    for section, val in sorted(bench.items()):
+        if isinstance(val, list):
+            for rec in val:
+                if isinstance(rec, dict) and "name" in rec:
+                    yield section, rec
+
+
+def index(bench):
+    return {rec["name"]: rec for _, rec in walk_records(bench)}
+
+
+def stage_diff(base_rec, cur_rec, threshold):
+    """Per-stage lines for a regressed target (empty without stages)."""
+    bs, cs = base_rec.get("stages"), cur_rec.get("stages")
+    if not (isinstance(bs, dict) and isinstance(cs, dict)):
+        return []
+    lines = []
+    for stage in sorted(set(bs) | set(cs)):
+        b, c = float(bs.get(stage, 0.0)), float(cs.get(stage, 0.0))
+        if b >= MIN_GATED_MEAN_S:
+            ratio, regressed = c / b, c / b > threshold
+        else:
+            ratio, regressed = float("inf"), c >= MIN_GATED_MEAN_S * 10
+        mark = "  <-- regressed" if regressed else ""
+        lines.append(f"    stage {stage:<18} {b:9.4f}s -> {c:9.4f}s ({ratio:6.2f}x){mark}")
+    return lines
+
+
+def compare(bench, baseline, threshold):
+    """Diff one BENCH dump against its baseline.
+
+    Returns ``(failures, ok_lines)`` — ``failures`` non-empty means the
+    gate must exit non-zero.
+    """
+    source = baseline.get("source", "bootstrap")
+    base, cur = index(baseline.get("bench", {})), index(bench)
+    failures, ok = [], []
+
+    for name in sorted(set(base) - set(cur)):
+        failures.append(f"coverage: baseline target `{name}` missing from the current run")
+
+    for name in sorted(set(base) & set(cur)):
+        b, c = base[name], cur[name]
+        if "speedup" in b and "speedup" in c:
+            floor = float(b["speedup"]) / threshold
+            if float(c["speedup"]) < floor:
+                failures.append(
+                    f"ratio: `{name}` speedup {c['speedup']:.2f}x fell below "
+                    f"{floor:.2f}x (baseline {b['speedup']:.2f}x / threshold {threshold:.2f})"
+                )
+            else:
+                ok.append(f"ratio  {name}: {c['speedup']:.2f}x (floor {floor:.2f}x)")
+        if source == "native" and float(b.get("mean_s", 0.0)) >= MIN_GATED_MEAN_S:
+            limit = float(b["mean_s"]) * threshold
+            mean = float(c.get("mean_s", 0.0))
+            if mean > limit:
+                msg = [
+                    f"timing: `{name}` {mean:.4f}s exceeds {limit:.4f}s "
+                    f"({mean / float(b['mean_s']):.2f}x of baseline {b['mean_s']:.4f}s)"
+                ]
+                msg.extend(stage_diff(b, c, threshold))
+                failures.append("\n".join(msg))
+            else:
+                ok.append(f"timing {name}: {mean:.4f}s (limit {limit:.4f}s)")
+    return failures, ok
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def cmd_check(args):
+    status = 0
+    for bench_path in args.bench:
+        bench_path = Path(bench_path)
+        base_path = Path(args.baseline_dir) / bench_path.name
+        if not base_path.exists():
+            print(f"perf_gate: no baseline at {base_path} — run `update` first", file=sys.stderr)
+            status = 1
+            continue
+        baseline = load(base_path)
+        failures, ok = compare(load(bench_path), baseline, args.threshold)
+        src = baseline.get("source", "bootstrap")
+        print(f"== {bench_path.name} vs {base_path} (source={src}) ==")
+        for line in ok:
+            print(f"  ok {line}")
+        if src == "bootstrap":
+            print("  (bootstrap baseline: absolute timings not gated; ratios + coverage only)")
+        for f in failures:
+            print(f"REGRESSION {f}", file=sys.stderr)
+        if failures:
+            status = 1
+    if status == 0:
+        print("perf gate: no regressions")
+    return status
+
+
+def cmd_update(args):
+    out_dir = Path(args.baseline_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    for bench_path in args.bench:
+        bench_path = Path(bench_path)
+        wrapped = {"source": args.source, "bench": load(bench_path)}
+        out = out_dir / bench_path.name
+        out.write_text(json.dumps(wrapped, indent=1) + "\n")
+        print(f"baseline written: {out} (source={args.source})")
+    return 0
+
+
+def cmd_selftest(_args):
+    """Prove the gate's behavior on synthetic dumps, no files needed."""
+
+    def synth(mean, speedup):
+        return {
+            "kernels": [
+                {
+                    "name": "gemm/packed 256x192x192",
+                    "mean_s": mean,
+                    "stages": {"capture": mean * 0.25, "factorize": mean * 0.75},
+                }
+            ],
+            "ratios": [{"name": "gemm packed/naive 256x192x192", "speedup": speedup}],
+        }
+
+    t = DEFAULT_THRESHOLD
+    native = {"source": "native", "bench": synth(0.1, 2.0)}
+    bootstrap = {"source": "bootstrap", "bench": synth(0.1, 2.0)}
+
+    f, _ = compare(synth(0.1, 2.0), native, t)
+    assert not f, f"identical run must pass: {f}"
+
+    f, _ = compare(synth(0.2, 2.0), native, t)
+    assert any(x.startswith("timing") for x in f), f"2x slowdown must fail: {f}"
+    assert any("stage" in x for x in f), "the failure must carry a per-stage diff"
+    assert any("factorize" in x and "regressed" in x for x in f), f"stage blame missing: {f}"
+
+    f, _ = compare(synth(0.9, 2.0), bootstrap, t)
+    assert not f, f"bootstrap baseline must not gate absolute timings: {f}"
+
+    f, _ = compare(synth(0.1, 1.0), bootstrap, t)
+    assert any(x.startswith("ratio") for x in f), f"halved speedup must fail: {f}"
+
+    f, _ = compare({"kernels": [], "ratios": []}, bootstrap, t)
+    assert len(f) == 2 and all(x.startswith("coverage") for x in f), f"coverage loss: {f}"
+
+    print("perf_gate selftest: pass / 2x-slowdown / bootstrap / ratio / coverage all behave")
+    return 0
+
+
+def main():
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    sub = p.add_subparsers(dest="mode", required=True)
+
+    check = sub.add_parser("check", help="diff BENCH dumps against the committed baseline")
+    update = sub.add_parser("update", help="replace the baseline with the current dumps")
+    sub.add_parser("selftest", help="verify the gate rejects an injected 2x slowdown")
+
+    for s in (check, update):
+        s.add_argument("--bench", action="append", required=True, help="BENCH_*.json (repeatable)")
+        s.add_argument("--baseline-dir", required=True)
+    check.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD)
+    update.add_argument("--source", choices=["native", "bootstrap"], default="native")
+
+    args = p.parse_args()
+    return {"check": cmd_check, "update": cmd_update, "selftest": cmd_selftest}[args.mode](args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

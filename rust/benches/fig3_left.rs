@@ -8,7 +8,12 @@ use coala::util::bench::{bench, BenchOpts};
 
 fn main() {
     let rows = 192usize;
-    let opts = BenchOpts { max_iters: 5, min_iters: 2, ..BenchOpts::default() }.from_env();
+    let opts = BenchOpts { max_iters: 5, min_iters: 2, ..BenchOpts::default() }
+        .from_env()
+        .unwrap_or_else(|e| {
+            eprintln!("error: {e}");
+            std::process::exit(1)
+        });
     println!("== Fig.3 left bench: S with SSᵀ = XXᵀ, X ∈ R^{rows}×k ==");
     for k in [256usize, 512, 1024, 2048, 4096, 8192] {
         let x: Matrix<f32> = Matrix::randn(rows, k, 7);

@@ -9,7 +9,10 @@ use coala::util::bench::{bench, BenchOpts};
 fn main() {
     let rows = 192usize;
     let total_k = 16384usize;
-    let opts = BenchOpts::heavy().from_env();
+    let opts = BenchOpts::heavy().from_env().unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        std::process::exit(1)
+    });
     println!("== Fig.3 right bench: X ∈ R^{rows}×{total_k} in chunks ==");
     for c in [512usize, 1024, 2048, 4096] {
         let chunks: Vec<Matrix<f32>> =

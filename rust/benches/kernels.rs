@@ -105,7 +105,12 @@ fn qr_r_unblocked(a: &Matrix<f32>) -> Matrix<f32> {
 }
 
 fn main() {
-    let opts = BenchOpts::default().from_env();
+    // strict env parsing: a bad COALA_BENCH_FAST value must kill the
+    // bench loudly, not silently run the heavy profile
+    let opts = BenchOpts::default().from_env().unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        std::process::exit(1)
+    });
     let mut gemm = Vec::new();
     let mut qr = Vec::new();
     let mut svd = Vec::new();
@@ -168,7 +173,7 @@ fn main() {
     let (n, c, folds) = (192usize, 512usize, 8usize);
     let chunks: Vec<Matrix<f32>> = (0..folds).map(|i| Matrix::randn(c, n, i as u64)).collect();
     let fold_all = |kind: AccumKind| {
-        let mut acc = make_accumulator(kind, n, AccumBackend::Host, Precision::F32);
+        let mut acc = make_accumulator(kind, n, AccumBackend::Host, Precision::F32).unwrap();
         for ch in &chunks {
             acc.fold_chunk(ch).unwrap();
         }

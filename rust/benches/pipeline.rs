@@ -16,7 +16,7 @@ use coala::calib::dataset::Corpus;
 use coala::calib::synthetic::SyntheticActivations;
 use coala::coala::compressor::{resolve, Compressor, Route};
 use coala::coordinator::scheduler::calibrate_overlapped;
-use coala::coordinator::{CompressionJob, EnginePlan, Pipeline, TsqrTreeRunner};
+use coala::coordinator::{CompressionJob, EnginePlan, Pipeline, StageTimings, TsqrTreeRunner};
 use coala::model::synthetic::{synthetic_manifest, synthetic_weights};
 use coala::model::ModelWeights;
 use coala::runtime::Executor;
@@ -35,8 +35,37 @@ fn record(stats: &Stats, workers: usize) -> Json {
     ])
 }
 
+/// Same record plus the engine's per-stage busy-time breakdown (the
+/// numbers the telemetry sink reports as `stage_s` events) from one
+/// representative run — the perf gate diffs stages, not just totals.
+fn record_with_stages(stats: &Stats, workers: usize, t: &StageTimings) -> Json {
+    let mut rec = vec![
+        ("name", Json::Str(stats.name.clone())),
+        ("workers", Json::Num(workers as f64)),
+        ("iters", Json::Num(stats.iters as f64)),
+        ("mean_s", Json::Num(stats.mean_s)),
+        ("std_s", Json::Num(stats.std_s)),
+        ("min_s", Json::Num(stats.min_s)),
+    ];
+    rec.push((
+        "stages",
+        Json::obj(vec![
+            ("capture", Json::Num(t.calibrate_s)),
+            ("accumulate", Json::Num(t.accumulate_s)),
+            ("merge_reduce", Json::Num(t.merge_s)),
+            ("factorize", Json::Num(t.factorize_s)),
+        ]),
+    ));
+    Json::obj(rec)
+}
+
 fn main() {
-    let opts = BenchOpts::heavy().from_env();
+    // strict env parsing: a bad COALA_BENCH_FAST value must kill the
+    // bench loudly, not silently run the heavy profile
+    let opts = BenchOpts::heavy().from_env().unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        std::process::exit(1)
+    });
 
     // ---- host route: engine plans over worker counts (always runs) ------
     // `small` is the historical baseline; `large` (6 layers, 36
@@ -62,7 +91,9 @@ fn main() {
             let stats = bench(&label, &opts, || {
                 std::hint::black_box(pipe.run_with_source(&job, &src).unwrap());
             });
-            host_records.push(record(&stats, workers));
+            // one representative run for the per-stage breakdown
+            let t = pipe.run_with_source(&job, &src).unwrap().timings;
+            host_records.push(record_with_stages(&stats, workers, &t));
         }
     }
 
@@ -77,14 +108,14 @@ fn main() {
     {
         use coala::calib::accumulate::{AccumBackend, AccumKind};
         use coala::calib::state::ShardState;
-        use coala::coordinator::{engine, ShardPlan, StageTimings};
+        use coala::coordinator::{engine, ShardPlan};
         use coala::tensor::lowp::Precision;
         let spec = ex.manifest.config("small").unwrap().clone();
         let src = SyntheticActivations::new(spec.clone(), 1);
         let total = 8;
         for shards in [1usize, 2, 4, 8] {
             let plan = ShardPlan::new(total, shards).unwrap();
-            let stats = bench(&format!("shard/host small shards={shards}"), &opts, || {
+            let run_once = |t: &mut StageTimings| {
                 let parts: Vec<ShardState> = (0..shards)
                     .map(|i| {
                         let st = engine::accumulate_shard(
@@ -94,7 +125,7 @@ fn main() {
                             AccumBackend::Host,
                             Precision::F32,
                             &EnginePlan::sequential(),
-                            &mut StageTimings::default(),
+                            t,
                             None,
                             "small:host:seed1",
                         )
@@ -102,16 +133,15 @@ fn main() {
                         ShardState::decode(&st.encode(), "<memory>").unwrap()
                     })
                     .collect();
-                std::hint::black_box(
-                    engine::merge_shard_states(
-                        parts,
-                        AccumBackend::Host,
-                        &mut StageTimings::default(),
-                    )
-                    .unwrap(),
-                );
+                engine::merge_shard_states(parts, AccumBackend::Host, t).unwrap()
+            };
+            let stats = bench(&format!("shard/host small shards={shards}"), &opts, || {
+                std::hint::black_box(run_once(&mut StageTimings::default()));
             });
-            shard_records.push(record(&stats, shards));
+            // one representative run for the per-stage breakdown
+            let mut t = StageTimings::default();
+            run_once(&mut t);
+            shard_records.push(record_with_stages(&stats, shards, &t));
         }
     }
 

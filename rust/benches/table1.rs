@@ -16,7 +16,10 @@ fn main() {
     }
     let ex = Executor::new("artifacts").unwrap();
     let corpus = Corpus::load("artifacts").unwrap();
-    let opts = BenchOpts::heavy().from_env();
+    let opts = BenchOpts::heavy().from_env().unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        std::process::exit(1)
+    });
     println!("== Table 1 bench: compression wall-clock ==");
     for cfg_name in ["tiny", "small"] {
         let spec = ex.manifest.config(cfg_name).unwrap().clone();

@@ -14,7 +14,7 @@
 //!   seeded s × rows Gaussian drawn from the chunk's **global batch
 //!   index** b, so the accumulated Y (and everything downstream) is
 //!   bitwise independent of worker count, shard geometry, and merge
-//!   order.  s = O(rank) rows (see [`sketch_rows`]) make each fold
+//!   order.  s = O(rank) rows (see [`SketchCfg::rows_for`]) make each fold
 //!   O(s·c·n) instead of the exact TSQR's O((n+c)·n²); QR of Y divided
 //!   by √s then stands in for R ([`CalibState::r_factor`]) with the
 //!   range-finder error bound of "Low-Rank Approximation, Adaptation,
@@ -159,12 +159,17 @@ pub trait CalibAccumulator {
 /// `precision` emulates the accumulation arithmetic (Table 2's fp16).
 /// Equivalent to [`make_leaf_accumulator`] at leaf index 0 — the right
 /// call for linear streams that fold batch 0, 1, 2, … in order.
+///
+/// Errors if the sketch knobs (`COALA_SKETCH_ROWS` /
+/// `COALA_SKETCH_SEED`) are set but malformed or out of range — loudly,
+/// at construction, so a typo'd shard dies instead of silently
+/// diverging from its siblings.
 pub fn make_accumulator<'a>(
     kind: AccumKind,
     width: usize,
     backend: AccumBackend<'a>,
     precision: Precision,
-) -> Box<dyn CalibAccumulator + 'a> {
+) -> Result<Box<dyn CalibAccumulator + 'a>> {
     make_leaf_accumulator(kind, width, backend, precision, 0)
 }
 
@@ -179,14 +184,19 @@ pub fn make_leaf_accumulator<'a>(
     backend: AccumBackend<'a>,
     precision: Precision,
     leaf_index: usize,
-) -> Box<dyn CalibAccumulator + 'a> {
-    match kind {
+) -> Result<Box<dyn CalibAccumulator + 'a>> {
+    Ok(match kind {
         AccumKind::RFactor => Box::new(RAccumulator::new(width, backend, precision)),
-        AccumKind::Sketch => Box::new(SketchAccumulator::new(width, precision, leaf_index as u64)),
+        AccumKind::Sketch => Box::new(SketchAccumulator::new(
+            width,
+            precision,
+            leaf_index as u64,
+            SketchCfg::from_env()?,
+        )?),
         AccumKind::Gram => Box::new(GramAccumulator::new(width, backend, precision)),
         AccumKind::Scales => Box::new(ScalesAccumulator::new(width, precision)),
         AccumKind::None => Box::new(NullAccumulator),
-    }
+    })
 }
 
 /// Re-open a finished state as an accumulator (resuming a stream, or
@@ -195,18 +205,25 @@ pub fn make_accumulator_from<'a>(
     state: CalibState,
     backend: AccumBackend<'a>,
     precision: Precision,
-) -> Box<dyn CalibAccumulator + 'a> {
-    match state {
+) -> Result<Box<dyn CalibAccumulator + 'a>> {
+    Ok(match state {
         CalibState::R(r) => Box::new(RAccumulator::from_r(r, backend, precision)),
         CalibState::Sketch { y, folds } => {
-            Box::new(SketchAccumulator { precision, y, next_index: folds, folds })
+            let cfg = SketchCfg::from_env()?;
+            Box::new(SketchAccumulator {
+                precision,
+                y,
+                next_index: folds,
+                folds,
+                seed: cfg.seed,
+            })
         }
         CalibState::Gram(g) => Box::new(GramAccumulator { backend, precision, g }),
         CalibState::Scales { sum_abs, rows } => {
             Box::new(ScalesAccumulator { precision, sum_abs, rows })
         }
         CalibState::None => Box::new(NullAccumulator),
-    }
+    })
 }
 
 /// Merge two finished states (the tree-reduction edge as a free
@@ -218,7 +235,7 @@ pub fn merge_states(
     backend: AccumBackend<'_>,
     precision: Precision,
 ) -> Result<CalibState> {
-    let mut acc = make_accumulator_from(a, backend, precision);
+    let mut acc = make_accumulator_from(a, backend, precision)?;
     acc.merge_state(b)?;
     Ok(acc.finish())
 }
@@ -315,28 +332,81 @@ impl CalibAccumulator for RAccumulator<'_> {
 
 // ----------------------------------------------------------- Sketch route
 
-/// Sketch height for `width`-channel chunks: n/2 + 16, clamped to
-/// [1, width].  That sits comfortably above every rank the ratio knob
-/// selects (r ≤ n/2) with the oversampling the range-finder bound wants
-/// (p = s − r ≥ 16 keeps the expected excess residual factor
-/// √(1 + r/(p−1)) below √2 and the tail probability negligible).
-/// Override with `COALA_SKETCH_ROWS`; every worker/shard of a run must
-/// agree on it, which is why `repro::common::Env::source_id` folds the
-/// knob into the run fingerprint.
-pub fn sketch_rows(width: usize) -> usize {
-    let default = (width / 2 + 16).min(width).max(1);
-    match std::env::var("COALA_SKETCH_ROWS") {
-        Ok(v) => v.parse::<usize>().map_or(default, |s| s.clamp(1, width.max(1))),
-        Err(_) => default,
+/// Default base seed of the Ω family ([`SketchCfg::seed`]).
+pub const DEFAULT_SKETCH_SEED: u64 = 0xC0A1A;
+
+/// Parsed-once sketch configuration: `COALA_SKETCH_ROWS` (explicit
+/// sketch height) and `COALA_SKETCH_SEED` (base seed of the Ω family —
+/// override it to draw an independent sketch family, e.g. to estimate
+/// sketch variance across repetitions).
+///
+/// Every worker **and shard** of a run must agree on both knobs — the
+/// sketch Y of divergent shards would silently add incompatible Ω
+/// families — which is why (a) malformed or out-of-range values are a
+/// hard error at accumulator construction rather than the pre-PR-7
+/// silent default/clamp, and (b) `repro::common::Env::source_id` folds
+/// both into the run fingerprint so divergent shard states refuse to
+/// merge.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SketchCfg {
+    /// Explicit row-count override; `None` = the width-derived default
+    /// of [`SketchCfg::rows_for`].
+    pub rows: Option<usize>,
+    /// Base seed of the Ω family.
+    pub seed: u64,
+}
+
+impl Default for SketchCfg {
+    fn default() -> Self {
+        SketchCfg { rows: None, seed: DEFAULT_SKETCH_SEED }
     }
 }
 
-/// Base seed of the Ω family.  Override with `COALA_SKETCH_SEED` to
-/// draw an independent sketch family (e.g. to estimate sketch variance
-/// across repetitions); like `COALA_SKETCH_ROWS`, all shards of one run
-/// must agree.
-pub fn sketch_seed_base() -> u64 {
-    std::env::var("COALA_SKETCH_SEED").ok().and_then(|v| v.parse().ok()).unwrap_or(0xC0A1A)
+impl SketchCfg {
+    /// Read both knobs from the environment, strictly.
+    pub fn from_env() -> Result<SketchCfg> {
+        SketchCfg::validated(
+            crate::util::env::parse::<usize>("COALA_SKETCH_ROWS")?,
+            crate::util::env::parse_or::<u64>("COALA_SKETCH_SEED", DEFAULT_SKETCH_SEED)?,
+        )
+    }
+
+    /// Pure core of [`SketchCfg::from_env`] (`None` = knob unset),
+    /// testable without mutating the process environment.
+    pub fn parse(rows: Option<&str>, seed: Option<&str>) -> Result<SketchCfg> {
+        SketchCfg::validated(
+            rows.map(|v| crate::util::env::parse_value::<usize>("COALA_SKETCH_ROWS", v))
+                .transpose()?,
+            seed.map(|v| crate::util::env::parse_value::<u64>("COALA_SKETCH_SEED", v))
+                .transpose()?
+                .unwrap_or(DEFAULT_SKETCH_SEED),
+        )
+    }
+
+    fn validated(rows: Option<usize>, seed: u64) -> Result<SketchCfg> {
+        if rows == Some(0) {
+            return Err(Error::Config("COALA_SKETCH_ROWS: must be ≥ 1, got `0`".into()));
+        }
+        Ok(SketchCfg { rows, seed })
+    }
+
+    /// Sketch height for `width`-channel chunks.  The default n/2 + 16
+    /// (clamped to [1, width]) sits comfortably above every rank the
+    /// ratio knob selects (r ≤ n/2) with the oversampling the
+    /// range-finder bound wants (p = s − r ≥ 16 keeps the expected
+    /// excess residual factor √(1 + r/(p−1)) below √2 and the tail
+    /// probability negligible).  An explicit override outside
+    /// [1, width] is an error — never a silent clamp.
+    pub fn rows_for(&self, width: usize) -> Result<usize> {
+        match self.rows {
+            None => Ok((width / 2 + 16).min(width).max(1)),
+            Some(r) if r <= width.max(1) => Ok(r),
+            Some(r) => Err(Error::Config(format!(
+                "COALA_SKETCH_ROWS: {r} is out of range for {width}-channel chunks \
+                 (must be in [1, {width}])"
+            ))),
+        }
+    }
 }
 
 /// SplitMix64 finalizer over (base, leaf index) → the xoshiro seed for
@@ -362,16 +432,25 @@ struct SketchAccumulator {
     next_index: u64,
     /// Batch folds absorbed so far (incl. merged siblings).
     folds: u64,
+    /// Base seed of the Ω family ([`SketchCfg::seed`], captured once at
+    /// construction — folds never re-read the environment).
+    seed: u64,
 }
 
 impl SketchAccumulator {
-    fn new(width: usize, precision: Precision, leaf_index: u64) -> SketchAccumulator {
-        SketchAccumulator {
+    fn new(
+        width: usize,
+        precision: Precision,
+        leaf_index: u64,
+        cfg: SketchCfg,
+    ) -> Result<SketchAccumulator> {
+        Ok(SketchAccumulator {
             precision,
-            y: Matrix::zeros(sketch_rows(width), width),
+            y: Matrix::zeros(cfg.rows_for(width)?, width),
             next_index: leaf_index,
             folds: 0,
-        }
+            seed: cfg.seed,
+        })
     }
 
     fn post_round(&mut self) {
@@ -402,7 +481,7 @@ impl CalibAccumulator for SketchAccumulator {
             &xt_q
         };
         let s = self.y.rows;
-        let mut rng = Rng::new(leaf_seed(sketch_seed_base(), self.next_index));
+        let mut rng = Rng::new(leaf_seed(self.seed, self.next_index));
         let omega = Matrix::from_vec(s, xt.rows, rng.normal_vec_f32(s * xt.rows))?;
         self.y = self.y.add(&matmul(&omega, xt)?)?;
         self.next_index += 1;
@@ -600,7 +679,8 @@ mod tests {
     #[test]
     fn host_r_accumulator_satisfies_gram_identity() {
         let cs = chunks(7, 15, 4, 1);
-        let mut acc = make_accumulator(AccumKind::RFactor, 7, AccumBackend::Host, Precision::F32);
+        let mut acc =
+            make_accumulator(AccumKind::RFactor, 7, AccumBackend::Host, Precision::F32).unwrap();
         for c in &cs {
             acc.fold_chunk(c).unwrap();
         }
@@ -613,7 +693,8 @@ mod tests {
     #[test]
     fn host_gram_accumulator_matches_direct() {
         let cs = chunks(6, 11, 3, 10);
-        let mut acc = make_accumulator(AccumKind::Gram, 6, AccumBackend::Host, Precision::F32);
+        let mut acc =
+            make_accumulator(AccumKind::Gram, 6, AccumBackend::Host, Precision::F32).unwrap();
         for c in &cs {
             acc.fold_chunk(c).unwrap();
         }
@@ -625,7 +706,8 @@ mod tests {
     #[test]
     fn scales_accumulator_means_abs() {
         let cs = chunks(5, 8, 2, 20);
-        let mut acc = make_accumulator(AccumKind::Scales, 5, AccumBackend::Host, Precision::F32);
+        let mut acc =
+            make_accumulator(AccumKind::Scales, 5, AccumBackend::Host, Precision::F32).unwrap();
         for c in &cs {
             acc.fold_chunk(c).unwrap();
         }
@@ -647,14 +729,14 @@ mod tests {
         // folding [c0, c1] sequentially == fold c0 | fold c1 then merge
         let cs = chunks(6, 9, 2, 30);
         for kind in [AccumKind::RFactor, AccumKind::Gram, AccumKind::Scales] {
-            let mut seq = make_accumulator(kind, 6, AccumBackend::Host, Precision::F32);
+            let mut seq = make_accumulator(kind, 6, AccumBackend::Host, Precision::F32).unwrap();
             seq.fold_chunk(&cs[0]).unwrap();
             seq.fold_chunk(&cs[1]).unwrap();
             let want = seq.finish();
 
-            let mut a = make_accumulator(kind, 6, AccumBackend::Host, Precision::F32);
+            let mut a = make_accumulator(kind, 6, AccumBackend::Host, Precision::F32).unwrap();
             a.fold_chunk(&cs[0]).unwrap();
-            let mut b = make_accumulator(kind, 6, AccumBackend::Host, Precision::F32);
+            let mut b = make_accumulator(kind, 6, AccumBackend::Host, Precision::F32).unwrap();
             b.fold_chunk(&cs[1]).unwrap();
             let got = merge_states(a.finish(), b.finish(), AccumBackend::Host, Precision::F32)
                 .unwrap();
@@ -692,7 +774,8 @@ mod tests {
 
     #[test]
     fn null_merge_rejects_real_states() {
-        let mut acc = make_accumulator(AccumKind::None, 0, AccumBackend::Host, Precision::F32);
+        let mut acc =
+            make_accumulator(AccumKind::None, 0, AccumBackend::Host, Precision::F32).unwrap();
         assert!(acc.merge_state(CalibState::None).is_ok());
         assert!(acc.merge_state(CalibState::Gram(Matrix::zeros(2, 2))).is_err());
     }
@@ -701,16 +784,18 @@ mod tests {
     fn seeded_accumulator_resumes_stream() {
         // make_accumulator_from(state) ≡ continuing the original stream
         let cs = chunks(6, 9, 3, 60);
-        let mut full = make_accumulator(AccumKind::RFactor, 6, AccumBackend::Host, Precision::F32);
+        let mut full =
+            make_accumulator(AccumKind::RFactor, 6, AccumBackend::Host, Precision::F32).unwrap();
         for c in &cs {
             full.fold_chunk(c).unwrap();
         }
         let want = full.finish();
 
-        let mut first = make_accumulator(AccumKind::RFactor, 6, AccumBackend::Host, Precision::F32);
+        let mut first =
+            make_accumulator(AccumKind::RFactor, 6, AccumBackend::Host, Precision::F32).unwrap();
         first.fold_chunk(&cs[0]).unwrap();
         let mut resumed =
-            make_accumulator_from(first.finish(), AccumBackend::Host, Precision::F32);
+            make_accumulator_from(first.finish(), AccumBackend::Host, Precision::F32).unwrap();
         resumed.fold_chunk(&cs[1]).unwrap();
         resumed.fold_chunk(&cs[2]).unwrap();
         let got = resumed.finish();
@@ -725,7 +810,8 @@ mod tests {
         // leaf-indexed Ω makes split-fold-merge ≡ the linear stream,
         // bitwise, regardless of how the batches were partitioned
         let cs = chunks(6, 9, 4, 70);
-        let mut seq = make_accumulator(AccumKind::Sketch, 6, AccumBackend::Host, Precision::F32);
+        let mut seq =
+            make_accumulator(AccumKind::Sketch, 6, AccumBackend::Host, Precision::F32).unwrap();
         for c in &cs {
             seq.fold_chunk(c).unwrap();
         }
@@ -733,11 +819,13 @@ mod tests {
         assert_eq!(fw, 4);
 
         let mut a =
-            make_leaf_accumulator(AccumKind::Sketch, 6, AccumBackend::Host, Precision::F32, 0);
+            make_leaf_accumulator(AccumKind::Sketch, 6, AccumBackend::Host, Precision::F32, 0)
+                .unwrap();
         a.fold_chunk(&cs[0]).unwrap();
         a.fold_chunk(&cs[1]).unwrap();
         let mut b =
-            make_leaf_accumulator(AccumKind::Sketch, 6, AccumBackend::Host, Precision::F32, 2);
+            make_leaf_accumulator(AccumKind::Sketch, 6, AccumBackend::Host, Precision::F32, 2)
+                .unwrap();
         b.fold_chunk(&cs[2]).unwrap();
         b.fold_chunk(&cs[3]).unwrap();
         let got = merge_states(a.finish(), b.finish(), AccumBackend::Host, Precision::F32).unwrap();
@@ -754,7 +842,8 @@ mod tests {
         // same order of magnitude, finite, right shape.  The tight
         // statistical bound is exercised in tests/engine_determinism.rs.
         let cs = chunks(8, 32, 6, 80);
-        let mut acc = make_accumulator(AccumKind::Sketch, 8, AccumBackend::Host, Precision::F32);
+        let mut acc =
+            make_accumulator(AccumKind::Sketch, 8, AccumBackend::Host, Precision::F32).unwrap();
         for c in &cs {
             acc.fold_chunk(c).unwrap();
         }
@@ -773,7 +862,8 @@ mod tests {
 
     #[test]
     fn sketch_rejects_mismatched_folds_and_siblings() {
-        let mut acc = make_accumulator(AccumKind::Sketch, 6, AccumBackend::Host, Precision::F32);
+        let mut acc =
+            make_accumulator(AccumKind::Sketch, 6, AccumBackend::Host, Precision::F32).unwrap();
         assert!(acc.fold_chunk(&Matrix::randn(4, 5, 1)).is_err());
         assert!(acc.merge_state(CalibState::Gram(Matrix::zeros(6, 6))).is_err());
         let short = CalibState::Sketch { y: Matrix::zeros(2, 6), folds: 1 };
@@ -783,7 +873,8 @@ mod tests {
     #[test]
     fn fp16_emulation_rounds_the_sketch() {
         let cs = chunks(4, 30, 2, 45);
-        let mut acc = make_accumulator(AccumKind::Sketch, 4, AccumBackend::Host, Precision::F16);
+        let mut acc =
+            make_accumulator(AccumKind::Sketch, 4, AccumBackend::Host, Precision::F16).unwrap();
         for c in &cs {
             acc.fold_chunk(c).unwrap();
         }
@@ -796,7 +887,8 @@ mod tests {
     #[test]
     fn fp16_emulation_rounds_the_gram() {
         let cs = chunks(4, 30, 2, 40);
-        let mut acc = make_accumulator(AccumKind::Gram, 4, AccumBackend::Host, Precision::F16);
+        let mut acc =
+            make_accumulator(AccumKind::Gram, 4, AccumBackend::Host, Precision::F16).unwrap();
         for c in &cs {
             acc.fold_chunk(c).unwrap();
         }
@@ -805,5 +897,49 @@ mod tests {
         for v in &g.data {
             assert_eq!(*v, Precision::F16.round(*v));
         }
+    }
+
+    #[test]
+    fn sketch_cfg_defaults() {
+        let cfg = SketchCfg::parse(None, None).unwrap();
+        assert_eq!(cfg, SketchCfg::default());
+        assert_eq!(cfg.seed, DEFAULT_SKETCH_SEED);
+        // width-derived default: n/2 + 16 clamped to [1, n]
+        assert_eq!(cfg.rows_for(8).unwrap(), 8);
+        assert_eq!(cfg.rows_for(64).unwrap(), 48);
+        assert_eq!(cfg.rows_for(0).unwrap(), 1);
+    }
+
+    #[test]
+    fn sketch_cfg_accepts_explicit_knobs() {
+        let cfg = SketchCfg::parse(Some("12"), Some("99")).unwrap();
+        assert_eq!(cfg.rows, Some(12));
+        assert_eq!(cfg.seed, 99);
+        assert_eq!(cfg.rows_for(64).unwrap(), 12);
+    }
+
+    #[test]
+    fn sketch_cfg_rejects_malformed_knobs() {
+        // the pre-PR-7 parser silently fell back to defaults on these
+        for bad in ["abc", "", "-3", "1.5"] {
+            let e = SketchCfg::parse(Some(bad), None).unwrap_err();
+            assert!(e.to_string().contains("COALA_SKETCH_ROWS"), "{bad:?}: {e}");
+        }
+        for bad in ["xyz", "", "-1"] {
+            let e = SketchCfg::parse(None, Some(bad)).unwrap_err();
+            assert!(e.to_string().contains("COALA_SKETCH_SEED"), "{bad:?}: {e}");
+        }
+    }
+
+    #[test]
+    fn sketch_cfg_rejects_out_of_range_rows() {
+        // the pre-PR-7 parser silently clamped these into [1, width]
+        assert!(SketchCfg::parse(Some("0"), None).is_err());
+        let cfg = SketchCfg::parse(Some("100"), None).unwrap();
+        let e = cfg.rows_for(8).unwrap_err();
+        assert!(e.to_string().contains("out of range"), "{e}");
+        // boundary values are fine
+        assert_eq!(SketchCfg::parse(Some("8"), None).unwrap().rows_for(8).unwrap(), 8);
+        assert_eq!(SketchCfg::parse(Some("1"), None).unwrap().rows_for(8).unwrap(), 1);
     }
 }

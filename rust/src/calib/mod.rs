@@ -12,8 +12,8 @@ pub mod state;
 pub mod synthetic;
 
 pub use accumulate::{
-    make_accumulator, make_accumulator_from, make_leaf_accumulator, merge_states, sketch_rows,
-    sketch_seed_base, AccumBackend, AccumKind, CalibAccumulator, CalibState,
+    make_accumulator, make_accumulator_from, make_leaf_accumulator, merge_states, AccumBackend,
+    AccumKind, CalibAccumulator, CalibState, SketchCfg,
 };
 pub use activations::{ActivationCapture, ActivationSource, CalibChunk, DeviceActivationSource};
 pub use dataset::{Corpus, TaskBank};

@@ -439,6 +439,13 @@ impl ShardState {
         write_atomic(path.as_ref(), &self.encode())
     }
 
+    /// Atomic write of pre-encoded bytes.  The engine uses this to time
+    /// codec encode and checkpoint IO as separate telemetry stages
+    /// without double-encoding.
+    pub(crate) fn write_bytes(path: impl AsRef<Path>, bytes: &[u8]) -> Result<()> {
+        write_atomic(path.as_ref(), bytes)
+    }
+
     pub fn read(path: impl AsRef<Path>) -> Result<ShardState> {
         let p = path.as_ref();
         let bytes = std::fs::read(p).map_err(|e| Error::io(p, e))?;

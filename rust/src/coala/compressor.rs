@@ -521,7 +521,7 @@ mod tests {
     /// Accumulate a chunked X stream on the host for a given kind.
     fn accumulate(kind: AccumKind, x: &Matrix<f32>) -> CalibState {
         let xt = x.transpose();
-        let mut acc = make_accumulator(kind, xt.cols, AccumBackend::Host, Precision::F32);
+        let mut acc = make_accumulator(kind, xt.cols, AccumBackend::Host, Precision::F32).unwrap();
         // stream in two chunks to exercise real folding
         let half = xt.rows / 2;
         acc.fold_chunk(&xt.slice(0, half, 0, xt.cols)).unwrap();

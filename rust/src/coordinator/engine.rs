@@ -56,6 +56,7 @@ use crate::error::{Error, Result};
 use crate::model::{CompressedModel, ModelWeights};
 use crate::runtime::executor::Executor;
 use crate::runtime::manifest::ModelSpec;
+use crate::telemetry::TelemetrySink;
 use crate::tensor::lowp::Precision;
 use crate::util::threads::parallel_map;
 use std::collections::{BTreeMap, HashMap};
@@ -74,13 +75,17 @@ pub type CalibStates = BTreeMap<(usize, String), CalibState>;
 pub struct StageTimings {
     pub calibrate_s: f64,
     pub accumulate_s: f64,
+    /// Canonical merge-tree reductions (sibling merges in
+    /// [`insert_node`] plus the orphan fallback in `collect_states`),
+    /// split out from leaf folding so a slow merge kernel is visible.
+    pub merge_s: f64,
     pub factorize_s: f64,
     pub total_s: f64,
 }
 
 /// How many workers each engine stage gets.  Every plan computes
 /// bitwise-identical results; the plan only chooses the parallelism.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct EnginePlan {
     /// Threads calling `ActivationSource::capture_batch` concurrently.
     pub capture_workers: usize,
@@ -92,6 +97,10 @@ pub struct EnginePlan {
     /// accumulation falls behind, capture blocks instead of buffering
     /// unbounded chunks.
     pub queue_cap: usize,
+    /// Where stage timings and counters go.  Observes only — a run with
+    /// telemetry enabled is bitwise-identical to one without.  Defaults
+    /// to disabled (a no-op on the default build).
+    pub telemetry: TelemetrySink,
 }
 
 impl Default for EnginePlan {
@@ -104,13 +113,24 @@ impl EnginePlan {
     /// One worker per stage — the sequential configuration (capture and
     /// accumulate still overlap through the channel).
     pub fn sequential() -> EnginePlan {
-        EnginePlan { capture_workers: 1, accum_shards: 1, factorize_workers: 1, queue_cap: 2 }
+        EnginePlan {
+            capture_workers: 1,
+            accum_shards: 1,
+            factorize_workers: 1,
+            queue_cap: 2,
+            telemetry: TelemetrySink::disabled(),
+        }
     }
 
     /// `workers` threads for every stage (the `--workers` CLI knob).
     pub fn with_workers(workers: usize) -> EnginePlan {
         let w = workers.max(1);
-        EnginePlan { capture_workers: w, accum_shards: w, factorize_workers: w, queue_cap: 2 }
+        EnginePlan {
+            capture_workers: w,
+            accum_shards: w,
+            factorize_workers: w,
+            ..EnginePlan::sequential()
+        }
     }
 
     fn normalized(&self) -> EnginePlan {
@@ -119,6 +139,7 @@ impl EnginePlan {
             accum_shards: self.accum_shards.max(1),
             factorize_workers: self.factorize_workers.max(1),
             queue_cap: self.queue_cap.max(1),
+            telemetry: self.telemetry.clone(),
         }
     }
 }
@@ -346,7 +367,7 @@ pub fn merge_shard_states(
     let slots: Mutex<SlotMap> = Mutex::new(HashMap::new());
     for p in parts {
         for node in p.nodes {
-            insert_node(
+            timings.merge_s += insert_node(
                 &slots,
                 total,
                 &(node.layer, node.stream),
@@ -385,7 +406,14 @@ fn run_windowed(
         std::fs::create_dir_all(&c.dir).map_err(|e| Error::io(&c.dir, e))?;
         let file = c.file(kind, precision, &range, source_id);
         if c.resume && file.exists() {
-            let st = ShardState::read(&file)?;
+            let bytes = {
+                let _t = plan.telemetry.start_timer("checkpoint_resume");
+                std::fs::read(&file).map_err(|e| Error::io(&file, e))?
+            };
+            let st = {
+                let _t = plan.telemetry.start_timer("codec_decode");
+                ShardState::decode(&bytes, &file.display().to_string())?
+            };
             if st.kind != kind || st.precision != precision {
                 return Err(Error::Config(format!(
                     "checkpoint {} holds ({:?}, {:?}), run wants ({kind:?}, {precision:?})",
@@ -430,7 +458,12 @@ fn run_windowed(
         done = w1;
         if let Some(c) = ckpt {
             let st = snapshot(&slots.lock().unwrap(), kind, precision, &range, done, source_id);
-            st.write(c.file(kind, precision, &range, source_id))?;
+            let bytes = {
+                let _t = plan.telemetry.start_timer("codec_encode");
+                st.encode()
+            };
+            let _t = plan.telemetry.start_timer("checkpoint_write");
+            ShardState::write_bytes(c.file(kind, precision, &range, source_id), &bytes)?;
         }
     }
     Ok(slots.into_inner().unwrap())
@@ -497,6 +530,7 @@ fn run_pass(
 
     let mut capture_secs = 0.0;
     let mut accum_secs = 0.0;
+    let mut merge_secs = 0.0;
     let mut capture_err: Option<Error> = None;
     let mut accum_err: Option<Error> = None;
 
@@ -541,8 +575,9 @@ fn run_pass(
             let rx = rx.clone();
             let slots = &slots;
             let cancelled = &cancelled;
-            acc_handles.push(s.spawn(move || -> (f64, Result<()>) {
-                let mut busy = 0.0;
+            acc_handles.push(s.spawn(move || -> (f64, f64, Result<()>) {
+                let mut fold_busy = 0.0;
+                let mut merge_busy = 0.0;
                 let mut failed: Option<Error> = None;
                 loop {
                     let payload = {
@@ -551,13 +586,13 @@ fn run_pass(
                     };
                     let Ok((b, chunks)) = payload else {
                         // channel closed: every batch was delivered
-                        return (busy, failed.map_or(Ok(()), Err));
+                        return (fold_busy, merge_busy, failed.map_or(Ok(()), Err));
                     };
                     if failed.is_some() || cancelled.load(Ordering::Relaxed) {
                         continue; // drain so blocked capture workers exit
                     }
                     let t0 = Instant::now();
-                    let res = (|| -> Result<()> {
+                    let res = (|| -> Result<f64> {
                         // fold every chunk of the batch into its key's
                         // leaf (a source may emit several chunks per
                         // (layer, stream); chunk order within a batch
@@ -567,27 +602,49 @@ fn run_pass(
                         let mut leaf: BTreeMap<(usize, String), Box<dyn CalibAccumulator + '_>> =
                             BTreeMap::new();
                         for c in chunks {
-                            let acc = leaf
-                                .entry((c.layer, c.stream.clone()))
-                                .or_insert_with(|| {
+                            let acc = match leaf.entry((c.layer, c.stream.clone())) {
+                                std::collections::btree_map::Entry::Occupied(e) => e.into_mut(),
+                                std::collections::btree_map::Entry::Vacant(v) => {
                                     // the *global* batch index seeds
                                     // position-dependent kinds (sketch Ω),
                                     // keeping leaves worker/shard blind
-                                    make_leaf_accumulator(kind, c.xt.cols, backend, precision, b)
-                                });
+                                    v.insert(make_leaf_accumulator(
+                                        kind,
+                                        c.xt.cols,
+                                        backend,
+                                        precision,
+                                        b,
+                                    )?)
+                                }
+                            };
                             acc.fold_chunk(&c.xt)?;
                         }
+                        let mut merged = 0.0;
                         for (key, acc) in leaf {
                             // leaf b enters the canonical tree at (0, b)
-                            insert_node(slots, batches, &key, acc.finish(), backend, precision, 0, b)?;
+                            merged += insert_node(
+                                slots,
+                                batches,
+                                &key,
+                                acc.finish(),
+                                backend,
+                                precision,
+                                0,
+                                b,
+                            )?;
                         }
-                        Ok(())
+                        Ok(merged)
                     })();
-                    if let Err(e) = res {
-                        cancelled.store(true, Ordering::Relaxed);
-                        failed = Some(e);
-                    }
-                    busy += t0.elapsed().as_secs_f64();
+                    let merged = match res {
+                        Ok(m) => m,
+                        Err(e) => {
+                            cancelled.store(true, Ordering::Relaxed);
+                            failed = Some(e);
+                            0.0
+                        }
+                    };
+                    merge_busy += merged;
+                    fold_busy += (t0.elapsed().as_secs_f64() - merged).max(0.0);
                 }
             }));
         }
@@ -608,8 +665,9 @@ fn run_pass(
         }
         for h in acc_handles {
             match h.join() {
-                Ok((secs, res)) => {
-                    accum_secs += secs;
+                Ok((fold, merge, res)) => {
+                    accum_secs += fold;
+                    merge_secs += merge;
                     if let Err(e) = res {
                         accum_err.get_or_insert(e);
                     }
@@ -635,6 +693,7 @@ fn run_pass(
 
     timings.calibrate_s += capture_secs;
     timings.accumulate_s += accum_secs;
+    timings.merge_s += merge_secs;
     Ok(())
 }
 
@@ -664,7 +723,7 @@ fn collect_states(
         };
         out.insert(key, state);
     }
-    timings.accumulate_s += t_red.elapsed().as_secs_f64();
+    timings.merge_s += t_red.elapsed().as_secs_f64();
     Ok(out)
 }
 
@@ -694,6 +753,8 @@ fn level_size(batches: usize, level: u32) -> usize {
 /// design exists for.  Leaves enter at (0, batch); shard files re-enter
 /// wherever their subtree stalled, which is why merging shard files
 /// replays the single-process reduction exactly.
+///
+/// Returns seconds spent in sibling merges (the `merge_s` stage).
 #[allow(clippy::too_many_arguments)]
 fn insert_node(
     slots: &Mutex<SlotMap>,
@@ -704,16 +765,17 @@ fn insert_node(
     precision: Precision,
     level: u32,
     index: usize,
-) -> Result<()> {
+) -> Result<f64> {
     let mut level = level;
     let mut index = index;
     let mut state = state;
+    let mut merged = 0.0;
     loop {
         let size = level_size(batches, level);
         if size <= 1 {
             // the root: the only node of its level
             slots.lock().unwrap().insert((key.clone(), level, 0), state);
-            return Ok(());
+            return Ok(merged);
         }
         if index == size - 1 && size % 2 == 1 {
             // odd tail: no sibling at this level — promote unchanged
@@ -727,13 +789,15 @@ fn insert_node(
             Some(other) => {
                 drop(guard); // merge outside the lock
                 let (a, b) = if index % 2 == 0 { (state, other) } else { (other, state) };
+                let t0 = Instant::now();
                 state = merge_states(a, b, backend, precision)?;
+                merged += t0.elapsed().as_secs_f64();
                 level += 1;
                 index /= 2;
             }
             None => {
                 guard.insert((key.clone(), level, index), state);
-                return Ok(());
+                return Ok(merged);
             }
         }
     }
@@ -847,7 +911,12 @@ mod tests {
         for plan in [
             EnginePlan::sequential(),
             EnginePlan::with_workers(3),
-            EnginePlan { capture_workers: 2, accum_shards: 4, factorize_workers: 1, queue_cap: 1 },
+            EnginePlan {
+                capture_workers: 2,
+                accum_shards: 4,
+                queue_cap: 1,
+                ..EnginePlan::sequential()
+            },
         ] {
             let mut t = StageTimings::default();
             let states = calibrate(

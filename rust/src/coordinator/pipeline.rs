@@ -265,7 +265,16 @@ impl<'a> Pipeline<'a> {
             self.plan.factorize_workers,
         )?;
         timings.factorize_s = t2.elapsed().as_secs_f64();
-        timings.total_s = timings.calibrate_s + timings.accumulate_s + timings.factorize_s;
+        timings.total_s =
+            timings.calibrate_s + timings.accumulate_s + timings.merge_s + timings.factorize_s;
+        // report the engine's busy-time breakdown as telemetry stage
+        // records — the engine already tracked these, never re-time
+        let tel = &self.plan.telemetry;
+        tel.stage_s("capture", timings.calibrate_s);
+        tel.stage_s("accumulate", timings.accumulate_s);
+        tel.stage_s("merge_reduce", timings.merge_s);
+        tel.stage_s("factorize", timings.factorize_s);
+        tel.counter("projections_factorized", model.factors.len() as u64);
         Ok(CompressionOutcome { model, budget, timings, mus })
     }
 }

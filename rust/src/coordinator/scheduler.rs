@@ -123,6 +123,7 @@ mod tests {
                         AccumBackend::Device(&ex),
                         crate::tensor::lowp::Precision::F32,
                     )
+                    .unwrap()
                 });
                 acc.fold_chunk(&c.xt).unwrap();
             }

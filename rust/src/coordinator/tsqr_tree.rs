@@ -96,8 +96,8 @@ impl TsqrTreeRunner {
         let plan = EnginePlan {
             capture_workers: 1,
             accum_shards: self.workers,
-            factorize_workers: 1,
             queue_cap: self.workers.max(2),
+            ..EnginePlan::sequential()
         };
         let mut timings = StageTimings::default();
         let mut states = engine::calibrate(

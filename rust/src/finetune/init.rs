@@ -229,9 +229,13 @@ fn init_adapters_with(
                 BTreeMap::new();
             for b in 0..calib_batches {
                 for c in source.capture_batch(b)? {
-                    let entry = accums.entry((c.layer, c.stream.clone())).or_insert_with(
-                        || make_accumulator(kind, c.xt.cols, backend, Precision::F32),
-                    );
+                    use std::collections::btree_map::Entry;
+                    let entry = match accums.entry((c.layer, c.stream.clone())) {
+                        Entry::Occupied(e) => e.into_mut(),
+                        Entry::Vacant(v) => {
+                            v.insert(make_accumulator(kind, c.xt.cols, backend, Precision::F32)?)
+                        }
+                    };
                     entry.fold_chunk(&c.xt)?;
                 }
             }

@@ -224,17 +224,25 @@ pub struct HostFineTuner {
     spec: ModelSpec,
     pub rank: usize,
     workers: usize,
+    telemetry: crate::telemetry::TelemetrySink,
 }
 
 impl HostFineTuner {
     pub fn new(spec: ModelSpec, rank: usize) -> HostFineTuner {
-        HostFineTuner { spec, rank, workers: 1 }
+        HostFineTuner { spec, rank, workers: 1, telemetry: Default::default() }
     }
 
     /// Fan gradient accumulation across up to `workers` threads
     /// (results are identical at any value).
     pub fn with_workers(mut self, workers: usize) -> HostFineTuner {
         self.workers = workers.max(1);
+        self
+    }
+
+    /// Report per-step `trainer_step` timings to `sink` (observation
+    /// only — training is bitwise unchanged).
+    pub fn with_telemetry(mut self, sink: crate::telemetry::TelemetrySink) -> HostFineTuner {
+        self.telemetry = sink;
         self
     }
 }
@@ -267,6 +275,7 @@ impl FineTuner for HostFineTuner {
 
         let mut losses = Vec::with_capacity(steps);
         for i in 0..steps {
+            let _t = self.telemetry.start_timer("trainer_step");
             let pairs = &pair_sets[i % pair_sets.len()];
             let (loss, grads) = model.loss_and_grads(pairs, self.workers)?;
             losses.push(loss as f32);

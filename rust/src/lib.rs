@@ -82,6 +82,23 @@
 //!   are accumulated directly, fanned across `util::threads` workers
 //!   and reduced in canonical token order — training runs, like
 //!   calibration, are bitwise-independent of the worker count.
+//! * [`telemetry`] — per-stage observability, feature-gated
+//!   (`--features telemetry`) and still zero-dependency.  A
+//!   [`telemetry::TelemetrySink`] travels inside
+//!   [`coordinator::engine::EnginePlan`]: the engine's *existing*
+//!   busy-time tracking (`StageTimings`) is exported as JSONL `stage`
+//!   records (capture / accumulate / merge_reduce / factorize) —
+//!   never re-timed — while the stages with no pre-existing
+//!   measurement (codec encode/decode, checkpoint write/resume,
+//!   trainer step) use `start_timer` drop guards at the call site.
+//!   Records carry structured labels (config, method, route, accum,
+//!   workers, shards) and append atomically to the `COALA_TELEMETRY`
+//!   path, so multi-process shard runs can share one file.  The
+//!   default build compiles the sink to a no-op unit struct: zero
+//!   telemetry code paths.  `benches/pipeline.rs` embeds the same
+//!   stage breakdowns in `BENCH_pipeline.json`, and CI's `perf-gate`
+//!   job diffs both bench dumps against the committed baseline
+//!   (`rust/benches/baseline/`) via `python/tools/perf_gate.py`.
 //!
 //! ## Reproducing the tables without artifacts
 //!
@@ -168,6 +185,28 @@
 //!
 //! Nothing else changes: the pipeline, schedulers, repro tables, CLI,
 //! and the cross-method conformance suite pick it up from the registry.
+//!
+//! ## Environment knobs
+//!
+//! Every `COALA_*` variable is read through the strict parsers in
+//! [`util::env`]: unset means the default, and a set-but-malformed
+//! value is a hard error — a knob can never be silently ignored.
+//! *Flags* accept `1`/`true`/`yes` (case-insensitive) for on and
+//! `0`/`false`/`no` (or empty) for off.  “Fingerprint” marks knobs
+//! folded into the run's source fingerprint: every worker/shard of a
+//! run must agree on them, and shard states from runs that disagree
+//! refuse to merge.
+//!
+//! | Variable             | Grammar              | Effect | Fingerprint |
+//! |----------------------|----------------------|--------|-------------|
+//! | `COALA_ARTIFACTS`    | path                 | artifacts dir when `--artifacts` is absent | no |
+//! | `COALA_THREADS`      | integer ≥ 1          | worker count for large host GEMMs (panics loudly at first use if malformed — the call sites cannot return `Result`) | no |
+//! | `COALA_REPRO_FAST`   | flag                 | shrink repro-driver budgets (CI smoke) | no |
+//! | `COALA_BENCH_FAST`   | flag                 | shrink bench budgets (CI perf jobs) | no |
+//! | `COALA_SKETCH_ROWS`  | integer in `[1, width]` | sketch-accumulator row count; out-of-range is an error, not a clamp | **yes** |
+//! | `COALA_SKETCH_SEED`  | u64                  | sketch Ω seed base | **yes** |
+//! | `COALA_GOLDEN_REGEN` | flag                 | regenerate `tests/golden/stability.json` in `cargo test` | no |
+//! | `COALA_TELEMETRY`    | path                 | JSONL telemetry sink (requires `--features telemetry`; setting it on a default build is an error) | no |
 
 pub mod calib;
 pub mod coala;
@@ -179,6 +218,7 @@ pub mod linalg;
 pub mod model;
 pub mod repro;
 pub mod runtime;
+pub mod telemetry;
 pub mod tensor;
 pub mod theory;
 pub mod util;
@@ -188,10 +228,13 @@ pub use error::{Error, Result};
 /// Default artifacts directory (overridable with `--artifacts` / env).
 pub const DEFAULT_ARTIFACTS: &str = "artifacts";
 
-/// Resolve the artifacts directory: CLI flag > env > default.
-pub fn artifacts_dir(flag: Option<&str>) -> String {
+/// Resolve the artifacts directory: CLI flag > env > default.  A set
+/// `COALA_ARTIFACTS` must be a usable value — set-but-empty (or
+/// non-UTF-8) is a hard error, not a silent fall-through to the
+/// default directory.
+pub fn artifacts_dir(flag: Option<&str>) -> Result<String> {
     if let Some(f) = flag {
-        return f.to_string();
+        return Ok(f.to_string());
     }
-    std::env::var("COALA_ARTIFACTS").unwrap_or_else(|_| DEFAULT_ARTIFACTS.to_string())
+    Ok(util::env::string("COALA_ARTIFACTS")?.unwrap_or_else(|| DEFAULT_ARTIFACTS.to_string()))
 }

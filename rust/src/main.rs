@@ -76,7 +76,7 @@ fn main() {
 }
 
 fn dispatch(cmd: &str, args: &Args) -> Result<()> {
-    let dir = coala::artifacts_dir(args.get("artifacts"));
+    let dir = coala::artifacts_dir(args.get("artifacts"))?;
     match cmd {
         "selfcheck" => conformance::selfcheck(&dir),
         "info" => {
@@ -126,7 +126,8 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
                 CompressionJob::new(cfg, comp.method(), args.get_f64("ratio", 0.7)?);
             job.calib_batches = args.get_usize("calib-batches", 8)?;
             let route = args.route()?;
-            let plan = args.engine_plan()?;
+            let accum = args.accum()?;
+            let mut plan = args.engine_plan()?;
             println!(
                 "compressing {cfg} with {} at {:.0}% kept ({:?} route, {} workers) …",
                 comp.name(),
@@ -134,16 +135,27 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
                 route,
                 plan.factorize_workers
             );
+            let kind = resolve_accum_kind(comp.as_ref(), accum)?;
+            let workers = plan.capture_workers;
+            plan.telemetry = coala::telemetry::TelemetrySink::from_env()?.with_labels(|l| {
+                l.config = cfg.to_string();
+                l.method = comp.name();
+                l.route = format!("{route:?}").to_lowercase();
+                l.accum = format!("{kind:?}").to_lowercase();
+                l.workers = workers;
+                l.shards = 1;
+            });
             let pipe = Pipeline::new(&ex, spec.clone(), &w)
                 .with_route(route)
                 .with_plan(plan)
                 .with_checkpoint(args.checkpoint()?)
-                .with_accum(args.accum()?);
+                .with_accum(accum);
             let out = pipe.run(&job, &corpus)?;
+            let t = &out.timings;
             println!(
-                "done in {:.2}s (calibrate {:.2}s / accumulate {:.2}s / factorize {:.2}s)",
-                out.timings.total_s, out.timings.calibrate_s,
-                out.timings.accumulate_s, out.timings.factorize_s
+                "done in {:.2}s (calibrate {:.2}s / accumulate {:.2}s / merge {:.2}s / \
+                 factorize {:.2}s)",
+                t.total_s, t.calibrate_s, t.accumulate_s, t.merge_s, t.factorize_s
             );
             println!("achieved ratio: {:.4}", out.model.achieved_ratio(&w, &spec));
             let rec = out.model.reconstruct_into(&w)?;
@@ -230,14 +242,21 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         "shard" => {
             use coala::repro::common::Env;
             use coala::tensor::lowp::Precision;
-            let env = Env::load(args)?;
+            let mut env = Env::load(args)?;
             let cfg = args.get_or("model", "tiny");
             let (spec, w) = env.weights(cfg)?;
             let comp = resolve(&args.method_spec("coala"))?;
             let kind = resolve_accum_kind(comp.as_ref(), env.accum)?;
             let total = args.get_usize("calib-batches", 8)?;
-            let plan = ShardPlan::new(total, args.get_usize("shard-count", 1)?)?;
+            let shard_count = args.get_usize("shard-count", 1)?;
+            let plan = ShardPlan::new(total, shard_count)?;
             let range = plan.range(args.get_usize("shard-index", 0)?)?;
+            env.plan.telemetry = env.plan.telemetry.clone().with_labels(|l| {
+                l.config = cfg.to_string();
+                l.method = comp.name();
+                l.accum = format!("{kind:?}").to_lowercase();
+                l.shards = shard_count;
+            });
             let out = args.get_or("out", "shard.state");
             println!(
                 "accumulating {} shard: batches [{}, {}) of {total} for {} ({:?} statistic, {} route) …",
@@ -259,26 +278,39 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
                 &env.plan,
                 &mut t,
                 env.checkpoint.as_ref(),
-                &env.source_id(cfg, total),
+                &env.source_id(cfg, total)?,
             )?;
             state.write(out)?;
+            let tel = &env.plan.telemetry;
+            tel.stage_s("capture", t.calibrate_s);
+            tel.stage_s("accumulate", t.accumulate_s);
+            tel.stage_s("merge_reduce", t.merge_s);
             println!(
-                "wrote {out}: {} pending merge states in {:.2}s (capture {:.2}s / accumulate {:.2}s)",
+                "wrote {out}: {} pending merge states in {:.2}s (capture {:.2}s / \
+                 accumulate {:.2}s / merge {:.2}s)",
                 state.nodes.len(),
-                t.calibrate_s + t.accumulate_s,
+                t.calibrate_s + t.accumulate_s + t.merge_s,
                 t.calibrate_s,
-                t.accumulate_s
+                t.accumulate_s,
+                t.merge_s
             );
             Ok(())
         }
         "merge" => {
             use coala::repro::common::Env;
             use coala::tensor::lowp::Precision;
-            let env = Env::load(args)?;
+            let mut env = Env::load(args)?;
             let cfg = args.get_or("model", "tiny");
             let (spec, w) = env.weights(cfg)?;
             let comp = resolve(&args.method_spec("coala"))?;
             let out_path = args.get_or("out", "factors.state");
+            let n_shards =
+                if args.get_bool("from-source") { 1 } else { args.positional[1..].len() };
+            env.plan.telemetry = env.plan.telemetry.clone().with_labels(|l| {
+                l.config = cfg.to_string();
+                l.method = comp.name();
+                l.shards = n_shards;
+            });
             let mut t = StageTimings::default();
             let states = if args.get_bool("from-source") {
                 // the single-process reference run, written in the same
@@ -296,7 +328,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
                     &env.plan,
                     &mut t,
                     env.checkpoint.as_ref(),
-                    &env.source_id(cfg, total),
+                    &env.source_id(cfg, total)?,
                 )?
             } else {
                 let files = &args.positional[1..];
@@ -314,7 +346,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
             let job = CompressionJob::new(cfg, comp.method(), args.get_f64("ratio", 0.5)?);
             let pipe = Pipeline::new(&env.ex, spec.clone(), &w)
                 .with_route(env.route)
-                .with_plan(env.plan);
+                .with_plan(env.plan.clone());
             let outcome = pipe.run_with_accums(&job, &states, t)?;
             coala::calib::state::write_factors(out_path, &outcome.model)?;
             println!(

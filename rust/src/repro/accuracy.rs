@@ -37,7 +37,7 @@ impl<'a> EvalCtx<'a> {
             &self.spec,
             &rec,
             "val",
-            if super::common::fast() { 2 } else { 4 },
+            if super::common::fast()? { 2 } else { 4 },
         )?;
         Ok((scores.average(), ppl, scores.accuracy, scores.stderr))
     }
@@ -48,7 +48,7 @@ impl<'a> EvalCtx<'a> {
             &self.spec,
             &self.weights,
             "val",
-            if super::common::fast() { 2 } else { 4 },
+            if super::common::fast()? { 2 } else { 4 },
         )?;
         Ok((scores.average(), ppl, scores.accuracy, scores.stderr))
     }
@@ -60,12 +60,8 @@ fn limit() -> Option<usize> {
     None
 }
 
-fn calib_batches() -> usize {
-    if super::common::fast() {
-        2
-    } else {
-        8
-    }
+fn calib_batches() -> Result<usize> {
+    Ok(if super::common::fast()? { 2 } else { 8 })
 }
 
 /// Fig. 4: adaptive (Eq. 5, λ sweep) vs constant-μ sweep at 70 % kept.
@@ -85,7 +81,7 @@ pub fn fig4(args: &Args) -> Result<()> {
     for lambda in [0.3, 1.0, 3.0, 10.0] {
         let method = resolve(&format!("coala:lambda={lambda}"))?.method();
         let mut job = CompressionJob::new("tiny", method, ratio);
-        job.calib_batches = calib_batches();
+        job.calib_batches = calib_batches()?;
         let (acc, ppl, _, _) = ctx.score(&job, limit())?;
         t.row(vec!["adaptive λ".into(), format!("{lambda}"), format!("{acc:.1}"), format!("{ppl:.2}")]);
         rows.push(Json::from_f64s(&[1.0, lambda, acc, ppl]));
@@ -93,7 +89,7 @@ pub fn fig4(args: &Args) -> Result<()> {
     for mu in [1e-2, 1e-1, 1.0, 10.0] {
         let method = resolve(&format!("coala:mu={mu}"))?.method();
         let mut job = CompressionJob::new("tiny", method, ratio);
-        job.calib_batches = calib_batches();
+        job.calib_batches = calib_batches()?;
         let (acc, ppl, _, _) = ctx.score(&job, limit())?;
         t.row(vec!["constant μ".into(), format!("{mu}"), format!("{acc:.1}"), format!("{ppl:.2}")]);
         rows.push(Json::from_f64s(&[0.0, mu, acc, ppl]));
@@ -120,7 +116,7 @@ pub fn fig5(args: &Args) -> Result<()> {
             for &lambda in &lambdas {
                 let method = resolve(&format!("coala:lambda={lambda}"))?.method();
                 let mut job = CompressionJob::new(cfg, method, ratio);
-                job.calib_batches = calib_batches();
+                job.calib_batches = calib_batches()?;
                 let (acc, ppl, _, _) = ctx.score(&job, limit())?;
                 t.row(vec![
                     cfg.clone(),
@@ -169,7 +165,7 @@ fn method_rows(
     ]));
     for (name, spec) in methods {
         let mut job = CompressionJob::new(config, resolve(spec)?.method(), ratio);
-        job.calib_batches = calib_batches();
+        job.calib_batches = calib_batches()?;
         job.accum_precision = precision;
         // A Gram-route method collapsing *numerically* on near-singular
         // calibration is a result (the paper's Table 2 story), not a

@@ -15,7 +15,7 @@
 //! compression runs, task banks, and evaluation; they never branch on
 //! the route themselves.
 
-use crate::calib::accumulate::{sketch_seed_base, AccumBackend, AccumKind};
+use crate::calib::accumulate::{AccumBackend, AccumKind, SketchCfg};
 use crate::calib::activations::{chunk_for_proj, ActivationSource, DeviceActivationSource};
 use crate::calib::dataset::{Corpus, TaskBank};
 use crate::calib::synthetic::SyntheticActivations;
@@ -28,6 +28,7 @@ use crate::model::synthetic as synth;
 use crate::model::ModelWeights;
 use crate::runtime::executor::Executor;
 use crate::runtime::manifest::ModelSpec;
+use crate::telemetry::TelemetrySink;
 use crate::tensor::Matrix;
 use crate::util::cli::Args;
 use crate::util::json::Json;
@@ -67,14 +68,23 @@ impl Env {
         // stamp the environment identity into the checkpoint config so
         // a stale checkpoint from a different seed/route/accumulator
         // never resumes
-        let stamp = format!("{:?}:seed{}{}", env.route, env.seed, env.accum_stamp());
+        let stamp = format!("{:?}:seed{}{}", env.route, env.seed, env.accum_stamp()?);
         env.checkpoint = args.checkpoint()?.map(|c| c.with_source(stamp));
-        Ok(env.with_plan(args.engine_plan()?))
+        let mut env = env.with_plan(args.engine_plan()?);
+        // one sink for the whole run (`COALA_TELEMETRY`), stamped with
+        // the environment-level labels; run_job adds the per-job ones
+        let (route, workers) = (env.route, env.plan.capture_workers);
+        env.plan.telemetry = TelemetrySink::from_env()?.with_labels(|l| {
+            l.route = format!("{route:?}").to_lowercase();
+            l.workers = workers;
+            l.shards = 1;
+        });
+        Ok(env)
     }
 
     /// The artifact/PJRT environment (requires `artifacts/` on disk).
     pub fn from_artifacts(args: &Args) -> Result<Env> {
-        let dir = crate::artifacts_dir(args.get("artifacts"));
+        let dir = crate::artifacts_dir(args.get("artifacts"))?;
         Ok(Env {
             ex: Executor::new(&dir)?,
             corpus: Corpus::load(&dir)?,
@@ -150,25 +160,26 @@ impl Env {
     /// family (the two knobs every worker/shard must agree on) so
     /// states produced under different `COALA_SKETCH_ROWS` /
     /// `COALA_SKETCH_SEED` settings can never silently merge.
-    fn accum_stamp(&self) -> String {
+    fn accum_stamp(&self) -> Result<String> {
         if self.accum != Some(AccumKind::Sketch) {
-            return String::new();
+            return Ok(String::new());
         }
-        let rows = std::env::var("COALA_SKETCH_ROWS").unwrap_or_else(|_| "auto".to_string());
-        format!(":sketch:r{rows}:s{}", sketch_seed_base())
+        let cfg = SketchCfg::from_env()?;
+        let rows = cfg.rows.map_or_else(|| "auto".to_string(), |r| r.to_string());
+        Ok(format!(":sketch:r{rows}:s{}", cfg.seed))
     }
 
     /// Fingerprint of this environment's calibration source for a
     /// (config, batch-count) run — stamped into shard state files and
     /// checkpoints so mismatched shards/checkpoints are rejected
     /// instead of silently merged (`coala shard`/`merge` use it).
-    pub fn source_id(&self, config: &str, batches: usize) -> String {
-        format!(
+    pub fn source_id(&self, config: &str, batches: usize) -> Result<String> {
+        Ok(format!(
             "{config}:{:?}:seed{}:b{batches}{}",
             self.route,
             self.seed,
-            self.accum_stamp()
-        )
+            self.accum_stamp()?
+        ))
     }
 
     /// A boxed calibration source for whichever route is active — the
@@ -210,9 +221,16 @@ impl Env {
         // merge — stay strict and reject the mismatch loudly.)
         let comp = compressor_for(&job.method);
         let accum = self.accum.filter(|_| comp.accum_kind() == AccumKind::RFactor);
+        let mut plan = self.plan.clone();
+        let kind = accum.unwrap_or_else(|| comp.accum_kind());
+        plan.telemetry = plan.telemetry.with_labels(|l| {
+            l.config = job.config.clone();
+            l.method = job.method.name();
+            l.accum = format!("{kind:?}").to_lowercase();
+        });
         let pipe = Pipeline::new(&self.ex, spec.clone(), weights)
             .with_route(self.route)
-            .with_plan(self.plan)
+            .with_plan(plan)
             .with_checkpoint(self.checkpoint.clone())
             .with_accum(accum);
         match self.activation_source(spec) {
@@ -316,7 +334,8 @@ impl Env {
         if self.synthetic {
             Box::new(
                 HostFineTuner::new(spec.clone(), rank)
-                    .with_workers(self.plan.factorize_workers),
+                    .with_workers(self.plan.factorize_workers)
+                    .with_telemetry(self.plan.telemetry.clone()),
             )
         } else {
             Box::new(DeviceFineTuner::new(&self.ex, spec, rank))
@@ -381,9 +400,11 @@ pub fn dump(id: &str, value: Json) -> Result<()> {
     Ok(())
 }
 
-/// Fast-mode row/batch scaling: COALA_REPRO_FAST=1 shrinks sweeps.
-pub fn fast() -> bool {
-    std::env::var("COALA_REPRO_FAST").as_deref() == Ok("1")
+/// Fast-mode row/batch scaling: `COALA_REPRO_FAST` (1/true/yes) shrinks
+/// sweeps.  Any other non-empty value is a hard error — a typo'd flag
+/// must not silently run the full sweep (or silently skip it).
+pub fn fast() -> Result<bool> {
+    crate::util::env::flag("COALA_REPRO_FAST")
 }
 
 #[cfg(test)]
@@ -466,9 +487,9 @@ mod tests {
     #[test]
     fn sketch_accum_stamps_the_source_id() {
         let mut env = Env::synthetic(4).unwrap();
-        let plain = env.source_id("tiny", 6);
+        let plain = env.source_id("tiny", 6).unwrap();
         env.accum = Some(AccumKind::Sketch);
-        let sk = env.source_id("tiny", 6);
+        let sk = env.source_id("tiny", 6).unwrap();
         assert_ne!(plain, sk);
         assert!(sk.contains(":sketch:"), "{sk}");
     }

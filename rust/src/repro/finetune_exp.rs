@@ -24,7 +24,7 @@ pub fn table4(args: &Args) -> Result<()> {
     let (spec, weights) = env.weights("tiny")?;
     let rank = env.ex.manifest.ft_rank;
     let steps =
-        if super::common::fast() { 100 } else { args.get_usize("steps", 200)? }.max(1);
+        if super::common::fast()? { 100 } else { args.get_usize("steps", 200)? }.max(1);
     let lr = args.get_f64("lr", 1e-3)?;
     let bank = env.task_bank("ft")?;
     let limit = None;

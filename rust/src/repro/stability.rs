@@ -30,7 +30,7 @@ fn capture_xt(env: &Env, config: &str, proj: &str, batches: usize) -> Result<(Ma
 pub fn fig1(args: &Args) -> Result<()> {
     let env = Env::load(args)?;
     let proj = args.get_or("proj", "l1.wq");
-    let (w, xt) = capture_xt(&env, "tiny", proj, if super::common::fast() { 2 } else { 8 })?;
+    let (w, xt) = capture_xt(&env, "tiny", proj, if super::common::fast()? { 2 } else { 8 })?;
     let x = xt.transpose();
 
     // fp64 ground truth factors
@@ -106,7 +106,7 @@ pub fn fig2(args: &Args) -> Result<()> {
     let mut rows = Vec::new();
     for layer in 0..spec.n_layers {
         let proj = format!("l{layer}.wq");
-        let (_wm, xt) = capture_xt(&env, "tiny", &proj, if super::common::fast() { 2 } else { 8 })?;
+        let (_wm, xt) = capture_xt(&env, "tiny", &proj, if super::common::fast()? { 2 } else { 8 })?;
         let xt64: Matrix<f64> = xt.cast();
         let r = qr_r_square(&xt64)?; // σ(R) = σ(X)
         let svd = crate::linalg::jacobi_svd(&r, 40)?;

@@ -26,7 +26,7 @@ pub fn table1(args: &Args) -> Result<()> {
             env.plan.queue_cap
         );
     }
-    let runs = if super::common::fast() { 1 } else { args.get_usize("runs", 3)? };
+    let runs = if super::common::fast()? { 1 } else { args.get_usize("runs", 3)? };
     let configs = args.get_list("configs", &["tiny", "small"]);
     // (display label, registry spec) — resolved through coala::compressor
     let methods = [
@@ -48,13 +48,13 @@ pub fn table1(args: &Args) -> Result<()> {
             let mut collapsed = false;
             for _ in 0..runs {
                 let mut job = CompressionJob::new(cfg, method, 0.3);
-                job.calib_batches = if super::common::fast() { 2 } else { 8 };
+                job.calib_batches = if super::common::fast()? { 2 } else { 8 };
                 match env.run_job(&model_spec, &w, &job) {
                     Ok(out) => {
                         totals.push(out.timings.total_s);
                         parts = (
                             out.timings.calibrate_s,
-                            out.timings.accumulate_s,
+                            out.timings.accumulate_s + out.timings.merge_s,
                             out.timings.factorize_s,
                         );
                     }
@@ -118,7 +118,7 @@ pub fn table1(args: &Args) -> Result<()> {
 /// chunked Gram accumulation (host linalg, f32).
 pub fn fig3(args: &Args) -> Result<()> {
     let rows = args.get_usize("rows", 192)?;
-    let fast = super::common::fast();
+    let fast = super::common::fast()?;
 
     // ---- left: aspect-ratio sweep -----------------------------------------
     let mut t = Table::new(

@@ -1,0 +1,60 @@
+//! Append-only JSONL file sink.
+//!
+//! One [`Appender`] per output file; lines go out as a single
+//! `write_all` on an `O_APPEND` handle, so concurrent appenders — the
+//! in-process `Mutex` serializes threads, `O_APPEND` serializes
+//! processes (e.g. `coala shard` workers pointed at one file) —
+//! interleave at line granularity rather than mid-record.
+//!
+//! Crash tolerance: if a previous writer died mid-line the file ends
+//! without `\n`; [`Appender::open`] terminates that partial line so
+//! every later record starts on a fresh line and a reader that skips
+//! unparsable lines loses exactly the torn record, nothing after it.
+
+use crate::error::{Error, Result};
+use std::fs::{File, OpenOptions};
+use std::io::{Read as _, Seek, SeekFrom, Write as _};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+#[derive(Debug)]
+pub struct Appender {
+    path: PathBuf,
+    file: Mutex<File>,
+}
+
+impl Appender {
+    /// Open (creating if absent) `path` for appending.
+    pub fn open(path: impl AsRef<Path>) -> Result<Appender> {
+        let p = path.as_ref();
+        let mut file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(p)
+            .map_err(|e| Error::io(p, e))?;
+        let len = file.metadata().map_err(|e| Error::io(p, e))?.len();
+        if len > 0 {
+            let mut tail = File::open(p).map_err(|e| Error::io(p, e))?;
+            tail.seek(SeekFrom::End(-1)).map_err(|e| Error::io(p, e))?;
+            let mut last = [0u8; 1];
+            tail.read_exact(&mut last).map_err(|e| Error::io(p, e))?;
+            if last[0] != b'\n' {
+                file.write_all(b"\n").map_err(|e| Error::io(p, e))?;
+            }
+        }
+        Ok(Appender { path: p.to_path_buf(), file: Mutex::new(file) })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Append one record (without trailing newline) as a single write.
+    pub fn append_line(&self, line: &str) -> Result<()> {
+        let mut buf = Vec::with_capacity(line.len() + 1);
+        buf.extend_from_slice(line.as_bytes());
+        buf.push(b'\n');
+        let mut f = self.file.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
+        f.write_all(&buf).map_err(|e| Error::io(&self.path, e))
+    }
+}

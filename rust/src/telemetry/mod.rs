@@ -1,0 +1,247 @@
+//! `telemetry` — feature-gated, zero-dependency JSONL telemetry.
+//!
+//! The engine already measures per-stage busy time
+//! (`coordinator::engine::StageTimings`); this module gives those
+//! measurements a durable, structured home so perf work stops flying
+//! blind.  With the `telemetry` cargo feature enabled and
+//! `COALA_TELEMETRY=<path>` set, every instrumented stage appends one
+//! JSON object per line to `<path>`:
+//!
+//! ```text
+//! {"kind":"stage","stage":"accumulate","s":0.0123,
+//!  "config":"tiny","method":"coala","route":"host","accum":"exact",
+//!  "workers":4,"shards":1,"pid":4242,"t_unix_s":1754650000.5}
+//! ```
+//!
+//! Instrumented stages: `capture`, `accumulate`, `merge_reduce`,
+//! `factorize` (emitted from the engine's *existing* busy-time tracking
+//! via [`TelemetrySink::stage_s`] — never re-timed), plus
+//! `codec_encode` / `codec_decode`, `checkpoint_write` /
+//! `checkpoint_resume`, and `trainer_step` (timed at the call site via
+//! [`TelemetrySink::start_timer`], since no pre-existing measurement
+//! covers them).  [`TelemetrySink::counter`] records monotonic counts
+//! (e.g. batches folded).
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Zero cost when disabled.**  Without the `telemetry` feature the
+//!    sink is a unit struct and every method is an empty `#[inline]`
+//!    body — the default build contains no telemetry code paths.  With
+//!    the feature but no `COALA_TELEMETRY`, the sink holds no appender
+//!    and every emit returns at one branch.
+//! 2. **Never perturb determinism.**  The sink only *observes* wall
+//!    time; it is carried by `EnginePlan` alongside the worker counts
+//!    and touches no numeric state.  Results remain bitwise-identical
+//!    with telemetry on, off, or pointed at different files.
+//! 3. **Crash-tolerant appends.**  Lines are written with a single
+//!    `write_all` on an `O_APPEND` handle; on open, a file whose last
+//!    byte is not `\n` (a previous writer died mid-line) gets the
+//!    partial line terminated first, so the file stays parsable
+//!    line-by-line after any crash.
+//!
+//! `COALA_TELEMETRY` is parsed through the strict `util::env` helpers
+//! from day one: an empty value is an error, and setting it on a build
+//! *without* the feature is a loud error rather than a silently
+//! ignored knob.
+
+use crate::error::Result;
+
+#[cfg(feature = "telemetry")]
+mod jsonl;
+#[cfg(feature = "telemetry")]
+pub use jsonl::Appender;
+
+/// Structured labels attached to every telemetry record.
+///
+/// `workers` is the engine-plan worker count; `shards` is the
+/// multi-process shard count (1 for single-process runs).  Empty
+/// strings serialize as `""` — a record is always schema-complete.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Labels {
+    pub config: String,
+    pub method: String,
+    pub route: String,
+    pub accum: String,
+    pub workers: usize,
+    pub shards: usize,
+}
+
+// ---------------------------------------------------- enabled build
+
+#[cfg(feature = "telemetry")]
+mod sink {
+    use super::Labels;
+    use crate::error::Result;
+    use crate::util::json::Json;
+    use std::collections::BTreeMap;
+    use std::sync::Arc;
+    use std::time::{Instant, SystemTime, UNIX_EPOCH};
+
+    /// Cloneable handle to the run's JSONL appender plus the label set
+    /// records are stamped with.  Cloning is cheap (one `Arc` bump);
+    /// [`TelemetrySink::with_labels`] refines labels per job without
+    /// touching the shared appender.
+    #[derive(Debug, Clone, Default)]
+    pub struct TelemetrySink {
+        inner: Option<Arc<super::Appender>>,
+        labels: Labels,
+    }
+
+    impl TelemetrySink {
+        /// A sink that drops everything.
+        pub fn disabled() -> TelemetrySink {
+            TelemetrySink::default()
+        }
+
+        /// Open the sink `COALA_TELEMETRY` points at, or a disabled
+        /// sink when the variable is unset.  A set-but-empty value or
+        /// an unopenable path is a hard error.
+        pub fn from_env() -> Result<TelemetrySink> {
+            match crate::util::env::string("COALA_TELEMETRY")? {
+                None => Ok(TelemetrySink::disabled()),
+                Some(path) => TelemetrySink::to_path(&path),
+            }
+        }
+
+        /// Open a sink appending to `path` (used by tests; `from_env`
+        /// is the production entry).
+        pub fn to_path(path: &str) -> Result<TelemetrySink> {
+            Ok(TelemetrySink {
+                inner: Some(Arc::new(super::Appender::open(path)?)),
+                labels: Labels::default(),
+            })
+        }
+
+        pub fn is_enabled(&self) -> bool {
+            self.inner.is_some()
+        }
+
+        /// Refine the label set (builder-style): the closure mutates a
+        /// copy of the current labels, so per-job sinks inherit the
+        /// run-level `route`/`workers` and add `config`/`method`.
+        pub fn with_labels(mut self, f: impl FnOnce(&mut Labels)) -> TelemetrySink {
+            f(&mut self.labels);
+            self
+        }
+
+        /// Record an already-measured stage duration.  This is the
+        /// bridge from the engine's existing `StageTimings` busy-time
+        /// tracking — stages are never re-timed for telemetry.
+        pub fn stage_s(&self, stage: &str, seconds: f64) {
+            self.emit("stage", |o| {
+                o.insert("stage".into(), Json::Str(stage.into()));
+                o.insert("s".into(), Json::Num(seconds));
+            });
+        }
+
+        /// Record a monotonic count.
+        pub fn counter(&self, name: &str, value: u64) {
+            self.emit("counter", |o| {
+                o.insert("name".into(), Json::Str(name.into()));
+                o.insert("value".into(), Json::Num(value as f64));
+            });
+        }
+
+        /// Start a wall-clock timer for a stage that has no existing
+        /// busy-time measurement (codec, checkpoint IO, trainer step).
+        /// The record is emitted when the guard drops.
+        pub fn start_timer(&self, stage: &str) -> StageTimer<'_> {
+            StageTimer { sink: self, stage, start: Instant::now() }
+        }
+
+        fn emit(&self, kind: &str, fill: impl FnOnce(&mut BTreeMap<String, Json>)) {
+            let Some(appender) = &self.inner else { return };
+            let mut o = BTreeMap::new();
+            o.insert("kind".to_string(), Json::Str(kind.into()));
+            fill(&mut o);
+            let l = &self.labels;
+            o.insert("config".to_string(), Json::Str(l.config.clone()));
+            o.insert("method".to_string(), Json::Str(l.method.clone()));
+            o.insert("route".to_string(), Json::Str(l.route.clone()));
+            o.insert("accum".to_string(), Json::Str(l.accum.clone()));
+            o.insert("workers".to_string(), Json::Num(l.workers as f64));
+            o.insert("shards".to_string(), Json::Num(l.shards as f64));
+            o.insert("pid".to_string(), Json::Num(std::process::id() as f64));
+            if let Ok(t) = SystemTime::now().duration_since(UNIX_EPOCH) {
+                o.insert("t_unix_s".to_string(), Json::Num(t.as_secs_f64()));
+            }
+            // Telemetry must never kill the run it observes: a failed
+            // append drops the record with a note on stderr.
+            if let Err(e) = appender.append_line(&Json::Obj(o).dump()) {
+                eprintln!("telemetry: dropped record: {e}");
+            }
+        }
+    }
+
+    /// Drop guard emitting a `stage` record with the elapsed time.
+    pub struct StageTimer<'a> {
+        sink: &'a TelemetrySink,
+        stage: &'a str,
+        start: Instant,
+    }
+
+    impl Drop for StageTimer<'_> {
+        fn drop(&mut self) {
+            self.sink.stage_s(self.stage, self.start.elapsed().as_secs_f64());
+        }
+    }
+}
+
+#[cfg(feature = "telemetry")]
+pub use sink::{StageTimer, TelemetrySink};
+
+// --------------------------------------------------- disabled build
+
+/// No-op sink: the default build compiles every call site against
+/// empty inline bodies, so disabling the feature removes all telemetry
+/// code paths.
+#[cfg(not(feature = "telemetry"))]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct TelemetrySink;
+
+#[cfg(not(feature = "telemetry"))]
+impl TelemetrySink {
+    #[inline]
+    pub fn disabled() -> TelemetrySink {
+        TelemetrySink
+    }
+
+    /// Loud failure instead of a silently ignored knob: setting
+    /// `COALA_TELEMETRY` against a build without the `telemetry`
+    /// feature is a config error.
+    pub fn from_env() -> Result<TelemetrySink> {
+        if std::env::var_os("COALA_TELEMETRY").is_some() {
+            return Err(crate::error::Error::Config(
+                "COALA_TELEMETRY is set but this build lacks the `telemetry` \
+                 feature; rebuild with `--features telemetry` or unset it"
+                    .into(),
+            ));
+        }
+        Ok(TelemetrySink)
+    }
+
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        false
+    }
+
+    #[inline]
+    pub fn with_labels(self, _f: impl FnOnce(&mut Labels)) -> TelemetrySink {
+        self
+    }
+
+    #[inline]
+    pub fn stage_s(&self, _stage: &str, _seconds: f64) {}
+
+    #[inline]
+    pub fn counter(&self, _name: &str, _value: u64) {}
+
+    #[inline]
+    pub fn start_timer(&self, _stage: &str) -> StageTimer {
+        StageTimer
+    }
+}
+
+/// No-op guard for the disabled build.
+#[cfg(not(feature = "telemetry"))]
+pub struct StageTimer;

@@ -6,6 +6,7 @@
 //! iteration count and a minimum wall budget are met; reports mean ±
 //! sample std with min/max, matching how Table 1 reports `± std`.
 
+use crate::error::Result;
 use std::time::{Duration, Instant};
 
 #[derive(Debug, Clone)]
@@ -87,13 +88,26 @@ impl BenchOpts {
         BenchOpts { warmup: 1, min_iters: 3, max_iters: 5, min_wall: Duration::ZERO }
     }
 
-    /// Honour `COALA_BENCH_FAST=1` for CI-ish smoke runs.
-    pub fn from_env(self) -> Self {
-        if std::env::var("COALA_BENCH_FAST").as_deref() == Ok("1") {
+    /// Honour `COALA_BENCH_FAST` (`1`/`true`/`yes`, case-insensitive)
+    /// for CI-ish smoke runs.  Any other non-empty value is a hard
+    /// error — `COALA_BENCH_FAST=fast` used to silently run the full
+    /// sweep.
+    pub fn from_env(self) -> Result<Self> {
+        Ok(if crate::util::env::flag("COALA_BENCH_FAST")? {
             BenchOpts { warmup: 0, min_iters: 1, max_iters: 2, min_wall: Duration::ZERO }
         } else {
             self
-        }
+        })
+    }
+
+    /// Pure core of [`BenchOpts::from_env`], testable without touching
+    /// the process environment.
+    pub fn from_flag_value(self, v: &str) -> Result<Self> {
+        Ok(if crate::util::env::flag_value("COALA_BENCH_FAST", v)? {
+            BenchOpts { warmup: 0, min_iters: 1, max_iters: 2, min_wall: Duration::ZERO }
+        } else {
+            self
+        })
     }
 }
 
@@ -141,6 +155,22 @@ mod tests {
             n = std::hint::black_box(n + 1);
         });
         assert!(s.iters >= 3);
+    }
+
+    #[test]
+    fn fast_flag_grammar() {
+        for on in ["1", "true", "YES"] {
+            let o = BenchOpts::default().from_flag_value(on).unwrap();
+            assert_eq!(o.max_iters, 2, "{on} must select the fast profile");
+        }
+        for off in ["", "0", "no", "False"] {
+            let o = BenchOpts::default().from_flag_value(off).unwrap();
+            assert_eq!(o.max_iters, BenchOpts::default().max_iters, "{off:?}");
+        }
+        for bad in ["2", "fast", "on"] {
+            let e = BenchOpts::default().from_flag_value(bad).unwrap_err();
+            assert!(e.to_string().contains("COALA_BENCH_FAST"), "{e}");
+        }
     }
 
     #[test]

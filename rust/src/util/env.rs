@@ -1,0 +1,151 @@
+//! `util::env` — strict parsing for `COALA_*` environment knobs.
+//!
+//! Every knob the crate reads goes through these helpers so that a knob
+//! can never be *set but ignored*: unset means the default, a parsable
+//! value is used, and anything else is a hard [`Error::Config`] naming
+//! the variable and the offending value.  The pre-PR-7
+//! `.ok().and_then(parse).unwrap_or(default)` pattern silently fell
+//! back to the default on typos — fatal for knobs like
+//! `COALA_SKETCH_ROWS` that every worker and shard of a run must agree
+//! on (a typo'd shard would diverge from its siblings instead of
+//! erroring).
+//!
+//! The `*_value` helpers are pure (no environment access) so unit tests
+//! can cover the whole grammar without mutating process-global state:
+//! the test harness runs tests concurrently in one process, and
+//! `set_var` races with every other test that reads the environment.
+//! End-to-end env-reading rejection tests live in
+//! `rust/tests/env_knobs.rs`, serialized behind one mutex.
+//!
+//! The full knob table (every `COALA_*` variable, its grammar, and
+//! which knobs are fingerprint-relevant) lives in the crate docs
+//! (`lib.rs`, "Environment knobs").
+
+use crate::error::{Error, Result};
+use std::str::FromStr;
+
+/// Read `name` from the environment and parse it as `T`.
+///
+/// Unset → `Ok(None)`.  Set but empty, non-UTF-8, or unparsable →
+/// [`Error::Config`].
+pub fn parse<T: FromStr>(name: &str) -> Result<Option<T>> {
+    match read(name)? {
+        None => Ok(None),
+        Some(v) => parse_value(name, &v).map(Some),
+    }
+}
+
+/// Read `name`, substituting `default` when unset.
+pub fn parse_or<T: FromStr>(name: &str, default: T) -> Result<T> {
+    Ok(parse(name)?.unwrap_or(default))
+}
+
+/// Parse an already-read knob value (pure — testable without touching
+/// the process environment).
+pub fn parse_value<T: FromStr>(name: &str, v: &str) -> Result<T> {
+    let t = v.trim();
+    if t.is_empty() {
+        return Err(Error::Config(format!(
+            "{name} is set but empty; unset it to use the default"
+        )));
+    }
+    t.parse::<T>().map_err(|_| {
+        Error::Config(format!(
+            "{name}: cannot parse `{v}` as {}",
+            std::any::type_name::<T>()
+        ))
+    })
+}
+
+/// Boolean knob: unset or empty → `false`; `1`/`true`/`yes`
+/// (case-insensitive) → `true`; `0`/`false`/`no` → `false`; anything
+/// else is a hard error.
+pub fn flag(name: &str) -> Result<bool> {
+    match read(name)? {
+        None => Ok(false),
+        Some(v) => flag_value(name, &v),
+    }
+}
+
+/// Parse an already-read boolean knob value (pure).
+pub fn flag_value(name: &str, v: &str) -> Result<bool> {
+    match v.trim().to_ascii_lowercase().as_str() {
+        "" => Ok(false),
+        "1" | "true" | "yes" => Ok(true),
+        "0" | "false" | "no" => Ok(false),
+        _ => Err(Error::Config(format!(
+            "{name}: expected 1/true/yes or 0/false/no, got `{v}`"
+        ))),
+    }
+}
+
+/// String knob (e.g. a path): unset → `None`; empty is rejected so a
+/// dangling `COALA_X= cmd` cannot pass an empty path downstream.
+pub fn string(name: &str) -> Result<Option<String>> {
+    match read(name)? {
+        None => Ok(None),
+        Some(v) if v.trim().is_empty() => Err(Error::Config(format!(
+            "{name} is set but empty; unset it to disable"
+        ))),
+        Some(v) => Ok(Some(v)),
+    }
+}
+
+fn read(name: &str) -> Result<Option<String>> {
+    match std::env::var_os(name) {
+        None => Ok(None),
+        Some(os) => os
+            .into_string()
+            .map(Some)
+            .map_err(|_| Error::Config(format!("{name} is not valid UTF-8"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_value_accepts_plain_numbers() {
+        assert_eq!(parse_value::<usize>("K", "42").unwrap(), 42);
+        assert_eq!(parse_value::<u64>("K", " 7 ").unwrap(), 7);
+        assert_eq!(parse_value::<f64>("K", "0.5").unwrap(), 0.5);
+    }
+
+    #[test]
+    fn parse_value_rejects_garbage_and_empty() {
+        for bad in ["abc", "", "  ", "1.5x", "0x10"] {
+            let e = parse_value::<usize>("COALA_SKETCH_ROWS", bad).unwrap_err();
+            assert!(
+                e.to_string().contains("COALA_SKETCH_ROWS"),
+                "error must name the knob: {e}"
+            );
+        }
+    }
+
+    #[test]
+    fn flag_value_grammar() {
+        for yes in ["1", "true", "TRUE", "Yes", "yEs"] {
+            assert!(flag_value("F", yes).unwrap(), "{yes}");
+        }
+        for no in ["", "0", "false", "No", "FALSE"] {
+            assert!(!flag_value("F", no).unwrap(), "{no:?}");
+        }
+        for bad in ["2", "on", "y", "enable", "fast"] {
+            let e = flag_value("COALA_BENCH_FAST", bad).unwrap_err();
+            assert!(e.to_string().contains("COALA_BENCH_FAST"), "{e}");
+        }
+    }
+
+    #[test]
+    fn unset_knobs_fall_through_to_defaults() {
+        // Read-only env access: the variable is never set by any test.
+        assert_eq!(
+            parse_or::<usize>("COALA_TEST_SURELY_UNSET_7", 9).unwrap(),
+            9
+        );
+        assert!(parse::<u64>("COALA_TEST_SURELY_UNSET_7").unwrap().is_none());
+        assert!(!flag("COALA_TEST_SURELY_UNSET_7").unwrap());
+        assert!(string("COALA_TEST_SURELY_UNSET_7").unwrap().is_none());
+    }
+}

@@ -15,9 +15,12 @@
 //!                shrinking-by-halving) for coordinator invariants
 //! * [`table`]  — fixed-width table rendering for the repro reports
 //! * [`threads`]— scoped worker-pool helpers (std::thread based)
+//! * [`env`]    — strict `COALA_*` knob parsing (set-but-malformed is a
+//!                hard error, never a silent default)
 
 pub mod bench;
 pub mod cli;
+pub mod env;
 pub mod json;
 pub mod prng;
 pub mod prop;

@@ -33,14 +33,23 @@ where
     out.into_iter().map(|o| o.expect("worker failed to fill slot")).collect()
 }
 
-/// Number of workers to default to (respects COALA_THREADS).
+/// Number of workers to default to (respects `COALA_THREADS`).
+///
+/// Parsed strictly, once (the call sites are hot GEMM paths): a
+/// malformed or zero `COALA_THREADS` panics with the config error at
+/// first use instead of being silently ignored — the callers cannot
+/// return `Result`, and a typo'd thread count must not quietly run on
+/// the autodetected default.
 pub fn default_workers() -> usize {
-    if let Ok(v) = std::env::var("COALA_THREADS") {
-        if let Ok(n) = v.parse::<usize>() {
-            return n.max(1);
+    static WORKERS: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *WORKERS.get_or_init(|| {
+        match crate::util::env::parse::<usize>("COALA_THREADS") {
+            Ok(Some(0)) => panic!("COALA_THREADS: must be ≥ 1, got `0`"),
+            Ok(Some(n)) => n,
+            Ok(None) => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            Err(e) => panic!("{e}"),
         }
-    }
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    })
 }
 
 #[cfg(test)]

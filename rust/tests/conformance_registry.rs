@@ -19,8 +19,8 @@ fn accumulate_host(
     chunks: usize,
 ) -> CalibState {
     let xt = x.transpose();
-    let mut acc =
-        make_accumulator(comp.accum_kind(), xt.cols, AccumBackend::Host, Precision::F32);
+    let mut acc = make_accumulator(comp.accum_kind(), xt.cols, AccumBackend::Host, Precision::F32)
+        .unwrap();
     let rows_per = xt.rows.div_ceil(chunks);
     let mut r0 = 0;
     while r0 < xt.rows {
@@ -200,7 +200,7 @@ fn regime_chunks_stress_every_method() {
     for regime in [Regime::WellConditioned, Regime::NearSingular, Regime::Spiked] {
         for comp in registry() {
             let mut acc =
-                make_accumulator(comp.accum_kind(), n, AccumBackend::Host, Precision::F32);
+                make_accumulator(comp.accum_kind(), n, AccumBackend::Host, Precision::F32).unwrap();
             for b in 0..2u64 {
                 acc.fold_chunk(&synth_chunk(40, n, regime, 60 + b)).unwrap();
             }

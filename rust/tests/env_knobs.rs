@@ -1,0 +1,138 @@
+//! End-to-end rejection tests for the `COALA_*` environment knobs.
+//!
+//! PR 7's contract: a knob can never be *set but ignored*.  The pure
+//! grammar is unit-tested inside `util::env` / `util::bench` /
+//! `calib::accumulate` without touching the environment; these tests
+//! cover the last step — the env-reading entry points themselves —
+//! which requires `set_var`.  `set_var` is process-global and the test
+//! harness runs tests concurrently in one process, so every test here
+//! serializes behind one mutex and restores the variable before
+//! releasing it.  No other test in the repo sets these variables.
+
+use coala::calib::accumulate::{make_accumulator, AccumBackend, AccumKind};
+use coala::tensor::lowp::Precision;
+use coala::util::bench::BenchOpts;
+use std::sync::Mutex;
+
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+/// Run `f` with `var` set to `value` (`None` = unset), restoring the
+/// previous state afterwards — even if `f` panics, via the guard.
+fn with_env<T>(var: &str, value: Option<&str>, f: impl FnOnce() -> T) -> T {
+    let _lock = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    struct Restore(String, Option<String>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            match &self.1 {
+                Some(v) => std::env::set_var(&self.0, v),
+                None => std::env::remove_var(&self.0),
+            }
+        }
+    }
+    let _restore = Restore(var.to_string(), std::env::var(var).ok());
+    match value {
+        Some(v) => std::env::set_var(var, v),
+        None => std::env::remove_var(var),
+    }
+    f()
+}
+
+fn sketch_accum() -> coala::Result<Box<dyn coala::calib::accumulate::CalibAccumulator + 'static>> {
+    make_accumulator(AccumKind::Sketch, 6, AccumBackend::Host, Precision::F32)
+}
+
+#[test]
+fn sketch_rows_garbage_fails_at_construction() {
+    for bad in ["abc", "1.5", "-3", ""] {
+        let err = with_env("COALA_SKETCH_ROWS", Some(bad), || sketch_accum().unwrap_err());
+        assert!(
+            err.to_string().contains("COALA_SKETCH_ROWS"),
+            "error must name the knob for {bad:?}: {err}"
+        );
+    }
+}
+
+#[test]
+fn sketch_rows_zero_and_overwide_fail_at_construction() {
+    let err = with_env("COALA_SKETCH_ROWS", Some("0"), || sketch_accum().unwrap_err());
+    assert!(err.to_string().contains("must be ≥ 1"), "{err}");
+    // width is 6 here; an explicit 4096-row sketch cannot be satisfied
+    // and must error rather than silently clamp
+    let err = with_env("COALA_SKETCH_ROWS", Some("4096"), || sketch_accum().unwrap_err());
+    assert!(err.to_string().contains("out of range"), "{err}");
+}
+
+#[test]
+fn sketch_rows_valid_value_is_used() {
+    with_env("COALA_SKETCH_ROWS", Some("4"), || {
+        sketch_accum().expect("explicit in-range COALA_SKETCH_ROWS must construct");
+    });
+}
+
+#[test]
+fn sketch_seed_garbage_fails_at_construction() {
+    for bad in ["xyz", "0x10", " "] {
+        let err = with_env("COALA_SKETCH_SEED", Some(bad), || sketch_accum().unwrap_err());
+        assert!(
+            err.to_string().contains("COALA_SKETCH_SEED"),
+            "error must name the knob for {bad:?}: {err}"
+        );
+    }
+}
+
+#[test]
+fn bench_fast_bad_values_are_loud() {
+    for bad in ["2", "on", "enable", "fast"] {
+        let err = with_env("COALA_BENCH_FAST", Some(bad), || {
+            BenchOpts::default().from_env().unwrap_err()
+        });
+        assert!(err.to_string().contains("COALA_BENCH_FAST"), "{bad:?}: {err}");
+    }
+}
+
+#[test]
+fn bench_fast_grammar_is_case_insensitive() {
+    for yes in ["1", "true", "TRUE", "Yes"] {
+        let o = with_env("COALA_BENCH_FAST", Some(yes), || BenchOpts::heavy().from_env().unwrap());
+        assert!(o.max_iters < BenchOpts::heavy().max_iters, "{yes} must shrink the budget");
+    }
+    for no in ["0", "false", "No"] {
+        let o = with_env("COALA_BENCH_FAST", Some(no), || BenchOpts::heavy().from_env().unwrap());
+        assert_eq!(o.max_iters, BenchOpts::heavy().max_iters, "{no} must keep the budget");
+    }
+}
+
+#[test]
+fn golden_regen_flag_rejects_garbage() {
+    let err =
+        with_env("COALA_GOLDEN_REGEN", Some("yep"), || {
+            coala::util::env::flag("COALA_GOLDEN_REGEN").unwrap_err()
+        });
+    assert!(err.to_string().contains("COALA_GOLDEN_REGEN"), "{err}");
+}
+
+#[test]
+fn telemetry_set_but_empty_is_an_error() {
+    // On a telemetry build an empty path is rejected by the strict
+    // string parser; on the default build *any* set value is rejected
+    // because the knob cannot take effect.  Either way: loud.
+    let err = with_env("COALA_TELEMETRY", Some(""), || {
+        coala::telemetry::TelemetrySink::from_env().unwrap_err()
+    });
+    assert!(err.to_string().contains("COALA_TELEMETRY"), "{err}");
+}
+
+#[test]
+fn artifacts_dir_set_but_empty_is_an_error() {
+    let err = with_env("COALA_ARTIFACTS", Some("  "), || {
+        coala::artifacts_dir(None).unwrap_err()
+    });
+    assert!(err.to_string().contains("COALA_ARTIFACTS"), "{err}");
+    let dir = with_env("COALA_ARTIFACTS", Some("/tmp/x"), || coala::artifacts_dir(None).unwrap());
+    assert_eq!(dir, "/tmp/x");
+    // the CLI flag always wins without consulting the environment
+    let dir = with_env("COALA_ARTIFACTS", Some("  "), || {
+        coala::artifacts_dir(Some("flagged")).unwrap()
+    });
+    assert_eq!(dir, "flagged");
+}

@@ -167,7 +167,7 @@ fn host_route_stability_tables_are_deterministic_and_hold_claims() {
         ),
     ]);
     let path = "tests/golden/stability.json";
-    let regen = std::env::var("COALA_GOLDEN_REGEN").as_deref() == Ok("1");
+    let regen = coala::util::env::flag("COALA_GOLDEN_REGEN").unwrap();
     let existing = if regen { None } else { std::fs::read_to_string(path).ok() };
     match existing {
         None => {

@@ -82,7 +82,8 @@ fn real_accumulated_states_roundtrip_across_seeds_and_regimes() {
                     .find(|c| c.layer == layer && c.stream == "attn")
                     .expect("attn chunk");
                 let mut acc =
-                    make_accumulator(kind, chunk.xt.cols, AccumBackend::Host, Precision::F32);
+                    make_accumulator(kind, chunk.xt.cols, AccumBackend::Host, Precision::F32)
+                        .unwrap();
                 acc.fold_chunk(&chunk.xt).unwrap();
                 roundtrip(acc.finish(), kind, &format!("seed {seed} {kind:?} layer {layer}"));
             }
@@ -187,7 +188,8 @@ fn shard_files_survive_disk_and_errors_name_paths() {
     let src = SyntheticActivations::new(spec.clone(), 5);
     let chunks = src.capture_batch(1).unwrap();
     let mut acc =
-        make_accumulator(AccumKind::Gram, chunks[0].xt.cols, AccumBackend::Host, Precision::F32);
+        make_accumulator(AccumKind::Gram, chunks[0].xt.cols, AccumBackend::Host, Precision::F32)
+            .unwrap();
     acc.fold_chunk(&chunks[0].xt).unwrap();
     let st = ShardState {
         kind: AccumKind::Gram,

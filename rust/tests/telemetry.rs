@@ -1,0 +1,208 @@
+#![cfg(feature = "telemetry")]
+//! Telemetry subsystem tests (run with `--features telemetry`).
+//!
+//! Covers the JSONL appender schema, label escaping, torn-tail repair,
+//! the disabled sink being a true no-op, and the determinism contract:
+//! an engine run with telemetry enabled at workers=1 and workers=4
+//! produces bitwise-identical factors and schema-identical telemetry
+//! (only timing/identity fields may differ).
+
+use coala::calib::synthetic::SyntheticActivations;
+use coala::coala::compressor::{resolve, Compressor, Route};
+use coala::coordinator::{CompressionJob, EnginePlan, Pipeline};
+use coala::model::synthetic::{synthetic_manifest, synthetic_weights};
+use coala::runtime::Executor;
+use coala::telemetry::TelemetrySink;
+use coala::util::json::Json;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU32, Ordering};
+
+fn tmp_path(tag: &str) -> PathBuf {
+    static N: AtomicU32 = AtomicU32::new(0);
+    let n = N.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!("coala_tel_{}_{tag}_{n}.jsonl", std::process::id()))
+}
+
+/// Every non-empty line of the file, parsed; panics on any invalid line.
+fn parsed_lines(path: &PathBuf) -> Vec<Json> {
+    std::fs::read_to_string(path)
+        .unwrap()
+        .lines()
+        .filter(|l| !l.is_empty())
+        .map(|l| Json::parse(l).unwrap_or_else(|e| panic!("bad JSONL line `{l}`: {e}")))
+        .collect()
+}
+
+const SCHEMA_KEYS: [&str; 8] =
+    ["kind", "config", "method", "route", "accum", "workers", "shards", "pid"];
+
+#[test]
+fn appender_emits_schema_complete_records() {
+    let path = tmp_path("schema");
+    {
+        let sink = TelemetrySink::to_path(path.to_str().unwrap()).unwrap().with_labels(|l| {
+            l.config = "tiny".into();
+            l.method = "coala".into();
+            l.route = "host".into();
+            l.accum = "exact".into();
+            l.workers = 4;
+            l.shards = 2;
+        });
+        assert!(sink.is_enabled());
+        sink.stage_s("accumulate", 0.125);
+        sink.counter("batches_folded", 6);
+        {
+            let _t = sink.start_timer("codec_encode");
+        }
+    }
+    let recs = parsed_lines(&path);
+    assert_eq!(recs.len(), 3, "one line per emit");
+    for rec in &recs {
+        for key in SCHEMA_KEYS {
+            assert!(rec.req(key).is_ok(), "record missing `{key}`: {rec:?}");
+        }
+        assert_eq!(rec.req("config").unwrap().as_str(), Some("tiny"));
+        assert_eq!(rec.req("workers").unwrap().as_f64(), Some(4.0));
+        assert_eq!(rec.req("shards").unwrap().as_f64(), Some(2.0));
+    }
+    assert_eq!(recs[0].req("stage").unwrap().as_str(), Some("accumulate"));
+    assert_eq!(recs[0].req("s").unwrap().as_f64(), Some(0.125));
+    assert_eq!(recs[1].req("kind").unwrap().as_str(), Some("counter"));
+    assert_eq!(recs[1].req("name").unwrap().as_str(), Some("batches_folded"));
+    assert_eq!(recs[1].req("value").unwrap().as_f64(), Some(6.0));
+    assert_eq!(recs[2].req("stage").unwrap().as_str(), Some("codec_encode"));
+    assert!(recs[2].req("s").unwrap().as_f64().unwrap() >= 0.0, "timer seconds");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn labels_with_quotes_and_newlines_stay_valid_json() {
+    let path = tmp_path("escape");
+    let weird = "we\"ird\\label\nline2\ttab";
+    {
+        let sink = TelemetrySink::to_path(path.to_str().unwrap())
+            .unwrap()
+            .with_labels(|l| l.config = weird.to_string());
+        sink.stage_s("capture", 0.0);
+    }
+    let recs = parsed_lines(&path);
+    assert_eq!(recs.len(), 1, "escaped newline must not split the record");
+    assert_eq!(recs[0].req("config").unwrap().as_str(), Some(weird), "label round-trip");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn torn_tail_is_repaired_on_open() {
+    let path = tmp_path("torn");
+    // a previous writer died mid-record: no trailing newline
+    std::fs::write(&path, "{\"kind\":\"stage\",\"stage\":\"capture\",\"s\":0.").unwrap();
+    {
+        let sink = TelemetrySink::to_path(path.to_str().unwrap()).unwrap();
+        sink.stage_s("accumulate", 1.0);
+    }
+    let text = std::fs::read_to_string(&path).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 2, "torn tail terminated, new record on its own line: {text:?}");
+    // the torn line stays torn (it carries no fabricated data), but it
+    // can no longer corrupt the record appended after it
+    let rec = Json::parse(lines[1]).unwrap();
+    assert_eq!(rec.req("stage").unwrap().as_str(), Some("accumulate"));
+    assert_eq!(rec.req("s").unwrap().as_f64(), Some(1.0));
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn disabled_sink_is_a_no_op() {
+    let sink = TelemetrySink::disabled();
+    assert!(!sink.is_enabled());
+    // none of these may panic or touch the filesystem
+    sink.stage_s("capture", 1.0);
+    sink.counter("batches_folded", 1);
+    let _t = sink.start_timer("trainer_step");
+}
+
+/// The determinism contract end-to-end: telemetry observes, never
+/// perturbs.  workers=1 and workers=4 produce bitwise-identical
+/// factors, and their telemetry differs only in timings/identity.
+#[test]
+fn engine_smoke_is_bitwise_identical_across_workers_with_telemetry_on() {
+    let ex = Executor::from_manifest(synthetic_manifest()).unwrap();
+    let spec = ex.manifest.config("tiny").unwrap().clone();
+    let w = synthetic_weights(&spec, 5);
+    let src = SyntheticActivations::new(spec.clone(), 5);
+    let comp = resolve("coala").unwrap();
+    let mut job = CompressionJob::new("tiny", comp.method(), 0.4);
+    job.calib_batches = 3;
+
+    let mut ref_factors: Option<Vec<(String, Vec<f32>, Vec<f32>)>> = None;
+    let mut ref_schema: Option<Vec<String>> = None;
+    for workers in [1usize, 4] {
+        let path = tmp_path(&format!("engine_w{workers}"));
+        let mut plan = EnginePlan::with_workers(workers);
+        plan.telemetry =
+            TelemetrySink::to_path(path.to_str().unwrap()).unwrap().with_labels(|l| {
+                l.config = "tiny".into();
+                l.method = comp.name();
+                l.route = "host".into();
+                l.accum = "exact".into();
+                l.workers = workers;
+                l.shards = 1;
+            });
+        let pipe = Pipeline::new(&ex, spec.clone(), &w).with_route(Route::Host).with_plan(plan);
+        let out = pipe.run_with_source(&job, &src).unwrap();
+        assert!(out.model.all_finite());
+        let factors: Vec<(String, Vec<f32>, Vec<f32>)> = out
+            .model
+            .factors
+            .iter()
+            .map(|(k, f)| (k.clone(), f.a.data.clone(), f.b.data.clone()))
+            .collect();
+        match &ref_factors {
+            None => ref_factors = Some(factors),
+            Some(fw) => assert_eq!(fw, &factors, "telemetry perturbed the engine at w={workers}"),
+        }
+
+        let recs = parsed_lines(&path);
+        let stages: Vec<&str> = recs
+            .iter()
+            .filter(|r| r.req("kind").unwrap().as_str() == Some("stage"))
+            .map(|r| r.req("stage").unwrap().as_str().unwrap())
+            .collect();
+        for want in ["capture", "accumulate", "merge_reduce", "factorize"] {
+            assert!(stages.contains(&want), "w={workers}: stage `{want}` missing: {stages:?}");
+        }
+        assert!(
+            recs.iter().any(|r| r.req("kind").unwrap().as_str() == Some("counter")
+                && r.req("name").unwrap().as_str() == Some("projections_factorized")),
+            "w={workers}: projections_factorized counter missing"
+        );
+        // schema fingerprint: everything except timing/identity fields
+        // must be identical across worker counts
+        let mut schema: Vec<String> = recs
+            .iter()
+            .map(|r| {
+                let kind = r.req("kind").unwrap().as_str().unwrap().to_string();
+                let what = r
+                    .req("stage")
+                    .or_else(|_| r.req("name"))
+                    .unwrap()
+                    .as_str()
+                    .unwrap()
+                    .to_string();
+                let (config, method, route, accum) = (
+                    r.req("config").unwrap().as_str().unwrap().to_string(),
+                    r.req("method").unwrap().as_str().unwrap().to_string(),
+                    r.req("route").unwrap().as_str().unwrap().to_string(),
+                    r.req("accum").unwrap().as_str().unwrap().to_string(),
+                );
+                format!("{kind}/{what}/{config}/{method}/{route}/{accum}")
+            })
+            .collect();
+        schema.sort();
+        match &ref_schema {
+            None => ref_schema = Some(schema),
+            Some(sw) => assert_eq!(sw, &schema, "telemetry schema differs at w={workers}"),
+        }
+        std::fs::remove_file(&path).ok();
+    }
+}
