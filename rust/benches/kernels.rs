@@ -1,19 +1,20 @@
 //! Bench: the raw-speed host linalg kernels — packed GEMM vs the naive
 //! ikj reference, compact-WY blocked QR vs the unblocked column sweep,
-//! Jacobi SVD, the streaming-TSQR fold, and the sketch accumulator vs
-//! the exact TSQR fold — plus the PJRT-executed factorization artifacts
-//! when a device is available.
+//! the blocked round-robin Jacobi SVD vs the cyclic-sweep reference,
+//! the streaming-TSQR fold, and the sketch accumulator (Gaussian GEMM
+//! and SRHT) vs the exact TSQR fold — plus the PJRT-executed
+//! factorization artifacts when a device is available.
 //!
 //! Size sweeps cover the `large` synthetic config's hot shapes
 //! (≥ 256×192).  Dumps `BENCH_kernels.json` with the per-kernel stats
-//! *and* the blocked-vs-naive / sketch-vs-exact speedup ratios, so the
-//! perf trajectory has committed baselines.  `COALA_BENCH_FAST=1`
-//! shrinks the iteration budget for smoke runs.
+//! *and* the blocked-vs-naive / sketch-vs-exact / srht-vs-gaussian
+//! speedup ratios, so the perf trajectory has committed baselines.
+//! `COALA_BENCH_FAST=1` shrinks the iteration budget for smoke runs.
 
 use coala::calib::accumulate::{
     make_accumulator, AccumBackend, AccumKind, CalibAccumulator, CalibState,
 };
-use coala::linalg::{householder_qr, jacobi_svd, qr_r_square, TsqrFolder};
+use coala::linalg::{householder_qr, jacobi_svd, jacobi_svd_cyclic, qr_r_square, TsqrFolder};
 use coala::runtime::{ops, Executor};
 use coala::tensor::lowp::Precision;
 use coala::tensor::ops::matmul;
@@ -143,7 +144,7 @@ fn main() {
             std::hint::black_box(qr_r_unblocked(&a));
         });
         let s_blocked = bench(&format!("qr/blocked {m}x{n}"), &opts, || {
-            std::hint::black_box(coala::linalg::householder_qr_r(&a).unwrap());
+            std::hint::black_box(coala::linalg::householder_qr_r(&a));
         });
         ratios.push(ratio(&format!("qr blocked/unblocked {m}x{n}"), &s_unblocked, &s_blocked));
         qr.push(record(&s_unblocked));
@@ -164,6 +165,22 @@ fn main() {
         svd.push(record(&bench(&format!("svd/jacobi {n}x{n}"), &opts, || {
             std::hint::black_box(jacobi_svd(&a, 12).unwrap());
         })));
+    }
+    // tall shapes: the blocked path (QR precondition, then round-robin
+    // Jacobi with cached norms on the small square R) vs the pre-PR
+    // cyclic sweep that rotates the full-height columns every pair
+    println!("== SVD: blocked vs naive cyclic on tall inputs ==");
+    for (m, n) in [(256usize, 64usize), (512, 96)] {
+        let a = Matrix::<f32>::randn(m, n, 6);
+        let s_naive = bench(&format!("svd/naive {m}x{n}"), &opts, || {
+            std::hint::black_box(jacobi_svd_cyclic(&a, 12).unwrap());
+        });
+        let s_blocked = bench(&format!("svd/blocked {m}x{n}"), &opts, || {
+            std::hint::black_box(jacobi_svd(&a, 12).unwrap());
+        });
+        ratios.push(ratio(&format!("svd blocked/naive {m}x{n}"), &s_naive, &s_blocked));
+        svd.push(record(&s_naive));
+        svd.push(record(&s_blocked));
     }
 
     // ---- accumulators: sketch fold vs exact TSQR fold --------------------
@@ -188,6 +205,16 @@ fn main() {
     ratios.push(ratio(&format!("accum sketch/exact {n}x{c}x{folds}"), &s_exact, &s_sketch));
     accum.push(record(&s_exact));
     accum.push(record(&s_sketch));
+    // the SRHT variant of the same fold: sign flip + Walsh–Hadamard +
+    // row sample is O(c·log c) per column vs the Gaussian GEMM's O(s·c).
+    // set_var is safe here: harness = false, single-threaded main.
+    std::env::set_var("COALA_SKETCH_KIND", "srht");
+    let s_srht = bench(&format!("accum/sketch-srht {n}x{c}x{folds}"), &opts, || {
+        std::hint::black_box(fold_all(AccumKind::Sketch));
+    });
+    std::env::remove_var("COALA_SKETCH_KIND");
+    ratios.push(ratio(&format!("sketch srht/gaussian {n}x{c}x{folds}"), &s_sketch, &s_srht));
+    accum.push(record(&s_srht));
     // the one-off QR-of-sketch that turns Y into the approximate R
     if let CalibState::Sketch { y, .. } = fold_all(AccumKind::Sketch) {
         accum.push(record(&bench("accum/sketch qr-of-Y", &opts, || {

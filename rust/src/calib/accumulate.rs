@@ -11,16 +11,18 @@
 //!   (B·T × n) chunk of Xᵀ into a square R with RᵀR = XXᵀ;
 //! * **Sketch** (opt-in for the R consumers): a randomized range
 //!   finder — fold each chunk into Y ← Y + Ω_b·chunk where Ω_b is a
-//!   seeded s × rows Gaussian drawn from the chunk's **global batch
+//!   seeded s × rows test matrix drawn from the chunk's **global batch
 //!   index** b, so the accumulated Y (and everything downstream) is
 //!   bitwise independent of worker count, shard geometry, and merge
-//!   order.  s = O(rank) rows (see [`SketchCfg::rows_for`]) make each fold
-//!   O(s·c·n) instead of the exact TSQR's O((n+c)·n²); QR of Y divided
-//!   by √s then stands in for R ([`CalibState::r_factor`]) with the
-//!   range-finder error bound of "Low-Rank Approximation, Adaptation,
-//!   and Other Tales" (PAPERS.md): the expected excess factor over the
-//!   optimal rank-r residual is √(1 + r/(p−1)) for oversampling
-//!   p = s − r;
+//!   order.  Two Ω families ([`SketchKind`], `COALA_SKETCH_KIND`): a
+//!   dense Gaussian (one packed GEMM per fold, O(s·c·n)) and the SRHT
+//!   fast transform (sign flip + Walsh–Hadamard + row sample,
+//!   O(L·log L·n)).  s = O(rank) rows (see [`SketchCfg::rows_for`])
+//!   beat the exact TSQR's O((n+c)·n²); QR of Y divided by √s then
+//!   stands in for R ([`CalibState::r_factor`]) with the range-finder
+//!   error bound of "Low-Rank Approximation, Adaptation, and Other
+//!   Tales" (PAPERS.md): the expected excess factor over the optimal
+//!   rank-r residual is √(1 + r/(p−1)) for oversampling p = s − r;
 //! * **Gram** (SVD-LLM / CorDA): G ← G + chunkᵀ·chunk;
 //! * **Scales** (ASVD): running Σ|x| and row count per input channel.
 //!
@@ -61,10 +63,10 @@ pub enum AccumKind {
 #[derive(Debug, Clone)]
 pub enum CalibState {
     R(Matrix<f32>),
-    /// Accumulated range-finder sketch Y (s × n) plus the number of
-    /// batch folds it has absorbed (so a resumed linear stream keeps
-    /// drawing fresh Ω indices).
-    Sketch { y: Matrix<f32>, folds: u64 },
+    /// Accumulated range-finder sketch Y (s × n), the Ω family it was
+    /// drawn from, and the number of batch folds it has absorbed (so a
+    /// resumed linear stream keeps drawing fresh Ω indices).
+    Sketch { y: Matrix<f32>, folds: u64, kind: SketchKind },
     Gram(Matrix<f32>),
     Scales { sum_abs: Vec<f64>, rows: usize },
     None,
@@ -208,14 +210,26 @@ pub fn make_accumulator_from<'a>(
 ) -> Result<Box<dyn CalibAccumulator + 'a>> {
     Ok(match state {
         CalibState::R(r) => Box::new(RAccumulator::from_r(r, backend, precision)),
-        CalibState::Sketch { y, folds } => {
+        CalibState::Sketch { y, folds, kind } => {
             let cfg = SketchCfg::from_env()?;
+            if cfg.kind != kind {
+                // resuming a gaussian stream under COALA_SKETCH_KIND=srht
+                // (or vice versa) would silently add incompatible Ω
+                // families — the state is self-describing, so refuse
+                return Err(Error::Config(format!(
+                    "COALA_SKETCH_KIND={} but the resumed state was accumulated with the \
+                     {} sketch; unset the knob or match it to the state",
+                    cfg.kind.label(),
+                    kind.label()
+                )));
+            }
             Box::new(SketchAccumulator {
                 precision,
                 y,
                 next_index: folds,
                 folds,
                 seed: cfg.seed,
+                kind,
             })
         }
         CalibState::Gram(g) => Box::new(GramAccumulator { backend, precision, g }),
@@ -335,10 +349,53 @@ impl CalibAccumulator for RAccumulator<'_> {
 /// Default base seed of the Ω family ([`SketchCfg::seed`]).
 pub const DEFAULT_SKETCH_SEED: u64 = 0xC0A1A;
 
+/// Which random family the sketch draws Ω from (`COALA_SKETCH_KIND`).
+/// Fingerprint-relevant: divergent kinds produce incompatible Y, so the
+/// kind is stamped into the state codec and the run fingerprint, and
+/// merge/resume refuse a mismatch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SketchKind {
+    /// Dense s × rows Gaussian per batch — one packed GEMM per fold,
+    /// O(s·c·n).
+    Gaussian,
+    /// Subsampled randomized Hadamard transform: random ±1 sign flip,
+    /// unnormalized Walsh–Hadamard transform over the (zero-padded)
+    /// batch rows, then s row samples with replacement.  O(L·log L·n)
+    /// per fold for L = rows rounded up to a power of two — the fast
+    /// transform replaces the sketch's own GEMM.  Sampled SHD rows have
+    /// iid ±1 entries, so E[ΩᵀΩ] = s·I exactly like the Gaussian family
+    /// and the 1/√s rescale in [`CalibState::r_factor`] is unchanged.
+    Srht,
+}
+
+impl SketchKind {
+    /// Strict parser for the `COALA_SKETCH_KIND` grammar
+    /// (case-insensitive `gaussian` | `srht`); pure, like
+    /// [`crate::util::env::parse_value`].
+    pub fn parse_value(name: &str, v: &str) -> Result<SketchKind> {
+        match v.trim().to_ascii_lowercase().as_str() {
+            "gaussian" => Ok(SketchKind::Gaussian),
+            "srht" => Ok(SketchKind::Srht),
+            _ => Err(Error::Config(format!(
+                "{name}: expected `gaussian` or `srht`, got `{v}`"
+            ))),
+        }
+    }
+
+    /// Lower-case name (fingerprints, error messages).
+    pub fn label(&self) -> &'static str {
+        match self {
+            SketchKind::Gaussian => "gaussian",
+            SketchKind::Srht => "srht",
+        }
+    }
+}
+
 /// Parsed-once sketch configuration: `COALA_SKETCH_ROWS` (explicit
-/// sketch height) and `COALA_SKETCH_SEED` (base seed of the Ω family —
+/// sketch height), `COALA_SKETCH_SEED` (base seed of the Ω family —
 /// override it to draw an independent sketch family, e.g. to estimate
-/// sketch variance across repetitions).
+/// sketch variance across repetitions), and `COALA_SKETCH_KIND`
+/// (Gaussian GEMM sketch vs SRHT fast transform).
 ///
 /// Every worker **and shard** of a run must agree on both knobs — the
 /// sketch Y of divergent shards would silently add incompatible Ω
@@ -354,40 +411,50 @@ pub struct SketchCfg {
     pub rows: Option<usize>,
     /// Base seed of the Ω family.
     pub seed: u64,
+    /// Random family Ω is drawn from.
+    pub kind: SketchKind,
 }
 
 impl Default for SketchCfg {
     fn default() -> Self {
-        SketchCfg { rows: None, seed: DEFAULT_SKETCH_SEED }
+        SketchCfg { rows: None, seed: DEFAULT_SKETCH_SEED, kind: SketchKind::Gaussian }
     }
 }
 
 impl SketchCfg {
-    /// Read both knobs from the environment, strictly.
+    /// Read all three knobs from the environment, strictly.
     pub fn from_env() -> Result<SketchCfg> {
+        let kind = match crate::util::env::string("COALA_SKETCH_KIND")? {
+            None => SketchKind::Gaussian,
+            Some(v) => SketchKind::parse_value("COALA_SKETCH_KIND", &v)?,
+        };
         SketchCfg::validated(
             crate::util::env::parse::<usize>("COALA_SKETCH_ROWS")?,
             crate::util::env::parse_or::<u64>("COALA_SKETCH_SEED", DEFAULT_SKETCH_SEED)?,
+            kind,
         )
     }
 
     /// Pure core of [`SketchCfg::from_env`] (`None` = knob unset),
     /// testable without mutating the process environment.
-    pub fn parse(rows: Option<&str>, seed: Option<&str>) -> Result<SketchCfg> {
+    pub fn parse(rows: Option<&str>, seed: Option<&str>, kind: Option<&str>) -> Result<SketchCfg> {
         SketchCfg::validated(
             rows.map(|v| crate::util::env::parse_value::<usize>("COALA_SKETCH_ROWS", v))
                 .transpose()?,
             seed.map(|v| crate::util::env::parse_value::<u64>("COALA_SKETCH_SEED", v))
                 .transpose()?
                 .unwrap_or(DEFAULT_SKETCH_SEED),
+            kind.map(|v| SketchKind::parse_value("COALA_SKETCH_KIND", v))
+                .transpose()?
+                .unwrap_or(SketchKind::Gaussian),
         )
     }
 
-    fn validated(rows: Option<usize>, seed: u64) -> Result<SketchCfg> {
+    fn validated(rows: Option<usize>, seed: u64, kind: SketchKind) -> Result<SketchCfg> {
         if rows == Some(0) {
             return Err(Error::Config("COALA_SKETCH_ROWS: must be ≥ 1, got `0`".into()));
         }
-        Ok(SketchCfg { rows, seed })
+        Ok(SketchCfg { rows, seed, kind })
     }
 
     /// Sketch height for `width`-channel chunks.  The default n/2 + 16
@@ -435,6 +502,9 @@ struct SketchAccumulator {
     /// Base seed of the Ω family ([`SketchCfg::seed`], captured once at
     /// construction — folds never re-read the environment).
     seed: u64,
+    /// Random family Ω is drawn from ([`SketchCfg::kind`], captured
+    /// once — fingerprint-relevant).
+    kind: SketchKind,
 }
 
 impl SketchAccumulator {
@@ -450,7 +520,47 @@ impl SketchAccumulator {
             next_index: leaf_index,
             folds: 0,
             seed: cfg.seed,
+            kind: cfg.kind,
         })
+    }
+
+    /// Y ← Y + S·H·D·chunk without materializing Ω: sign-flip the
+    /// chunk's rows (D), Walsh–Hadamard over the zero-padded row axis
+    /// (H, unnormalized: entries ±1), take the s sampled rows (S).
+    /// Draw order per batch index is rows sign bits then s sample
+    /// indices, so the fold is a pure function of (seed, batch index,
+    /// chunk) like the Gaussian path.
+    fn fold_srht(&mut self, xt: &Matrix<f32>) -> Result<()> {
+        let (rows, n, s) = (xt.rows, xt.cols, self.y.rows);
+        let l = rows.next_power_of_two().max(1);
+        let mut rng = Rng::new(leaf_seed(self.seed, self.next_index));
+        let signs: Vec<f32> =
+            (0..rows).map(|_| if rng.next_u64() & 1 == 0 { 1.0 } else { -1.0 }).collect();
+        let samples: Vec<usize> = (0..s).map(|_| rng.below(l)).collect();
+        let mut buf = vec![0.0f32; l];
+        for j in 0..n {
+            for (i, b) in buf.iter_mut().enumerate() {
+                *b = if i < rows { signs[i] * xt.get(i, j) } else { 0.0 };
+            }
+            let mut h = 1;
+            while h < l {
+                let mut base = 0;
+                while base < l {
+                    for i in base..base + h {
+                        let (x, y) = (buf[i], buf[i + h]);
+                        buf[i] = x + y;
+                        buf[i + h] = x - y;
+                    }
+                    base += 2 * h;
+                }
+                h *= 2;
+            }
+            for (k, &row) in samples.iter().enumerate() {
+                let v = self.y.get(k, j) + buf[row];
+                self.y.set(k, j, v);
+            }
+        }
+        Ok(())
     }
 
     fn post_round(&mut self) {
@@ -480,10 +590,15 @@ impl CalibAccumulator for SketchAccumulator {
             xt_q = quantize(xt, self.precision);
             &xt_q
         };
-        let s = self.y.rows;
-        let mut rng = Rng::new(leaf_seed(self.seed, self.next_index));
-        let omega = Matrix::from_vec(s, xt.rows, rng.normal_vec_f32(s * xt.rows))?;
-        self.y = self.y.add(&matmul(&omega, xt)?)?;
+        match self.kind {
+            SketchKind::Gaussian => {
+                let s = self.y.rows;
+                let mut rng = Rng::new(leaf_seed(self.seed, self.next_index));
+                let omega = Matrix::from_vec(s, xt.rows, rng.normal_vec_f32(s * xt.rows))?;
+                self.y = self.y.add(&matmul(&omega, xt)?)?;
+            }
+            SketchKind::Srht => self.fold_srht(xt)?,
+        }
         self.next_index += 1;
         self.folds += 1;
         self.post_round();
@@ -492,7 +607,15 @@ impl CalibAccumulator for SketchAccumulator {
 
     fn merge_state(&mut self, other: CalibState) -> Result<()> {
         match other {
-            CalibState::Sketch { y, folds } => {
+            CalibState::Sketch { y, folds, kind } => {
+                if kind != self.kind {
+                    return Err(Error::Config(format!(
+                        "sketch merge: sibling was accumulated with the {} sketch, \
+                         this state with {}",
+                        kind.label(),
+                        self.kind.label()
+                    )));
+                }
                 // shape mismatch (different COALA_SKETCH_ROWS) errors here
                 self.y = self.y.add(&y)?;
                 self.folds += folds;
@@ -507,7 +630,7 @@ impl CalibAccumulator for SketchAccumulator {
     }
 
     fn finish(self: Box<Self>) -> CalibState {
-        CalibState::Sketch { y: self.y, folds: self.folds }
+        CalibState::Sketch { y: self.y, folds: self.folds, kind: self.kind }
     }
 }
 
@@ -815,7 +938,9 @@ mod tests {
         for c in &cs {
             seq.fold_chunk(c).unwrap();
         }
-        let CalibState::Sketch { y: yw, folds: fw } = seq.finish() else { panic!("not Sketch") };
+        let CalibState::Sketch { y: yw, folds: fw, .. } = seq.finish() else {
+            panic!("not Sketch")
+        };
         assert_eq!(fw, 4);
 
         let mut a =
@@ -829,8 +954,9 @@ mod tests {
         b.fold_chunk(&cs[2]).unwrap();
         b.fold_chunk(&cs[3]).unwrap();
         let got = merge_states(a.finish(), b.finish(), AccumBackend::Host, Precision::F32).unwrap();
-        let CalibState::Sketch { y: yg, folds: fg } = got else { panic!("not Sketch") };
+        let CalibState::Sketch { y: yg, folds: fg, kind } = got else { panic!("not Sketch") };
         assert_eq!(fg, 4);
+        assert_eq!(kind, SketchKind::Gaussian);
         let bits_w: Vec<u32> = yw.data.iter().map(|v| v.to_bits()).collect();
         let bits_g: Vec<u32> = yg.data.iter().map(|v| v.to_bits()).collect();
         assert_eq!(bits_w, bits_g);
@@ -866,8 +992,103 @@ mod tests {
             make_accumulator(AccumKind::Sketch, 6, AccumBackend::Host, Precision::F32).unwrap();
         assert!(acc.fold_chunk(&Matrix::randn(4, 5, 1)).is_err());
         assert!(acc.merge_state(CalibState::Gram(Matrix::zeros(6, 6))).is_err());
-        let short = CalibState::Sketch { y: Matrix::zeros(2, 6), folds: 1 };
+        let short =
+            CalibState::Sketch { y: Matrix::zeros(2, 6), folds: 1, kind: SketchKind::Gaussian };
         assert!(acc.merge_state(short).is_err());
+        // kind mismatch: same shape, incompatible Ω family
+        let srht = CalibState::Sketch {
+            y: Matrix::zeros(acc_rows(6), 6),
+            folds: 1,
+            kind: SketchKind::Srht,
+        };
+        let e = acc.merge_state(srht).unwrap_err();
+        assert!(e.to_string().contains("srht"), "{e}");
+    }
+
+    fn acc_rows(width: usize) -> usize {
+        SketchCfg::default().rows_for(width).unwrap()
+    }
+
+    fn srht_accumulator(width: usize, leaf: u64, rows: Option<usize>) -> SketchAccumulator {
+        let cfg = SketchCfg { rows, seed: DEFAULT_SKETCH_SEED, kind: SketchKind::Srht };
+        SketchAccumulator::new(width, Precision::F32, leaf, cfg).unwrap()
+    }
+
+    #[test]
+    fn srht_merge_is_bitwise_single_stream() {
+        // the leaf-indexed draws make split-fold-merge ≡ the linear
+        // stream for the fast-transform family too
+        let cs = chunks(6, 9, 4, 75);
+        let mut seq = srht_accumulator(6, 0, None);
+        for c in &cs {
+            seq.fold_chunk(c).unwrap();
+        }
+        let CalibState::Sketch { y: yw, folds: fw, kind } = Box::new(seq).finish() else {
+            panic!("not Sketch")
+        };
+        assert_eq!((fw, kind), (4, SketchKind::Srht));
+
+        let mut a = srht_accumulator(6, 0, None);
+        a.fold_chunk(&cs[0]).unwrap();
+        a.fold_chunk(&cs[1]).unwrap();
+        let mut b = srht_accumulator(6, 2, None);
+        b.fold_chunk(&cs[2]).unwrap();
+        b.fold_chunk(&cs[3]).unwrap();
+        let mut merged = Box::new(a);
+        merged.merge_state(Box::new(b).finish()).unwrap();
+        let CalibState::Sketch { y: yg, .. } = merged.finish() else { panic!("not Sketch") };
+        let bits_w: Vec<u32> = yw.data.iter().map(|v| v.to_bits()).collect();
+        let bits_g: Vec<u32> = yg.data.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(bits_w, bits_g);
+    }
+
+    #[test]
+    fn srht_r_factor_approximates_exact_gram() {
+        // SHD rows have ±1 entries, so E[ΩᵀΩ] = s·I — the r_factor
+        // rescale is shared with the Gaussian family and R̂ᵀR̂ tracks
+        // XᵀX at the same order of magnitude
+        let cs = chunks(8, 32, 6, 85);
+        let mut acc = srht_accumulator(8, 0, None);
+        for c in &cs {
+            acc.fold_chunk(c).unwrap();
+        }
+        let state = Box::new(acc).finish();
+        let r = state.r_factor().unwrap();
+        assert_eq!((r.rows, r.cols), (8, 8));
+        assert!(r.all_finite());
+        let got = matmul(&r.transpose(), &r).unwrap();
+        let want = gram_t(&full_stack(&cs));
+        assert!(fro(&got.sub(&want).unwrap()) < 2.5 * fro(&want));
+    }
+
+    #[test]
+    fn srht_handles_non_power_of_two_and_single_row_chunks() {
+        for rows in [1usize, 3, 9, 16] {
+            let c: Matrix<f32> = Matrix::randn(rows, 5, 90 + rows as u64);
+            let mut acc = srht_accumulator(5, 0, Some(4));
+            acc.fold_chunk(&c).unwrap();
+            let CalibState::Sketch { y, .. } = Box::new(acc).finish() else {
+                panic!("not Sketch")
+            };
+            assert_eq!((y.rows, y.cols), (4, 5));
+            assert!(y.all_finite());
+        }
+    }
+
+    #[test]
+    fn sketch_kind_grammar() {
+        for (v, want) in [
+            ("gaussian", SketchKind::Gaussian),
+            ("GAUSSIAN", SketchKind::Gaussian),
+            ("srht", SketchKind::Srht),
+            (" SRHT ", SketchKind::Srht),
+        ] {
+            assert_eq!(SketchKind::parse_value("COALA_SKETCH_KIND", v).unwrap(), want, "{v:?}");
+        }
+        for bad in ["", "gauss", "hadamard", "1"] {
+            let e = SketchKind::parse_value("COALA_SKETCH_KIND", bad).unwrap_err();
+            assert!(e.to_string().contains("COALA_SKETCH_KIND"), "{bad:?}: {e}");
+        }
     }
 
     #[test]
@@ -901,9 +1122,10 @@ mod tests {
 
     #[test]
     fn sketch_cfg_defaults() {
-        let cfg = SketchCfg::parse(None, None).unwrap();
+        let cfg = SketchCfg::parse(None, None, None).unwrap();
         assert_eq!(cfg, SketchCfg::default());
         assert_eq!(cfg.seed, DEFAULT_SKETCH_SEED);
+        assert_eq!(cfg.kind, SketchKind::Gaussian);
         // width-derived default: n/2 + 16 clamped to [1, n]
         assert_eq!(cfg.rows_for(8).unwrap(), 8);
         assert_eq!(cfg.rows_for(64).unwrap(), 48);
@@ -912,9 +1134,10 @@ mod tests {
 
     #[test]
     fn sketch_cfg_accepts_explicit_knobs() {
-        let cfg = SketchCfg::parse(Some("12"), Some("99")).unwrap();
+        let cfg = SketchCfg::parse(Some("12"), Some("99"), Some("srht")).unwrap();
         assert_eq!(cfg.rows, Some(12));
         assert_eq!(cfg.seed, 99);
+        assert_eq!(cfg.kind, SketchKind::Srht);
         assert_eq!(cfg.rows_for(64).unwrap(), 12);
     }
 
@@ -922,24 +1145,28 @@ mod tests {
     fn sketch_cfg_rejects_malformed_knobs() {
         // the pre-PR-7 parser silently fell back to defaults on these
         for bad in ["abc", "", "-3", "1.5"] {
-            let e = SketchCfg::parse(Some(bad), None).unwrap_err();
+            let e = SketchCfg::parse(Some(bad), None, None).unwrap_err();
             assert!(e.to_string().contains("COALA_SKETCH_ROWS"), "{bad:?}: {e}");
         }
         for bad in ["xyz", "", "-1"] {
-            let e = SketchCfg::parse(None, Some(bad)).unwrap_err();
+            let e = SketchCfg::parse(None, Some(bad), None).unwrap_err();
             assert!(e.to_string().contains("COALA_SKETCH_SEED"), "{bad:?}: {e}");
+        }
+        for bad in ["gauss", "", "fast"] {
+            let e = SketchCfg::parse(None, None, Some(bad)).unwrap_err();
+            assert!(e.to_string().contains("COALA_SKETCH_KIND"), "{bad:?}: {e}");
         }
     }
 
     #[test]
     fn sketch_cfg_rejects_out_of_range_rows() {
         // the pre-PR-7 parser silently clamped these into [1, width]
-        assert!(SketchCfg::parse(Some("0"), None).is_err());
-        let cfg = SketchCfg::parse(Some("100"), None).unwrap();
+        assert!(SketchCfg::parse(Some("0"), None, None).is_err());
+        let cfg = SketchCfg::parse(Some("100"), None, None).unwrap();
         let e = cfg.rows_for(8).unwrap_err();
         assert!(e.to_string().contains("out of range"), "{e}");
         // boundary values are fine
-        assert_eq!(SketchCfg::parse(Some("8"), None).unwrap().rows_for(8).unwrap(), 8);
-        assert_eq!(SketchCfg::parse(Some("1"), None).unwrap().rows_for(8).unwrap(), 1);
+        assert_eq!(SketchCfg::parse(Some("8"), None, None).unwrap().rows_for(8).unwrap(), 8);
+        assert_eq!(SketchCfg::parse(Some("1"), None, None).unwrap().rows_for(8).unwrap(), 1);
     }
 }

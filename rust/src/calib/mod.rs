@@ -13,7 +13,7 @@ pub mod synthetic;
 
 pub use accumulate::{
     make_accumulator, make_accumulator_from, make_leaf_accumulator, merge_states, AccumBackend,
-    AccumKind, CalibAccumulator, CalibState, SketchCfg,
+    AccumKind, CalibAccumulator, CalibState, SketchCfg, SketchKind,
 };
 pub use activations::{ActivationCapture, ActivationSource, CalibChunk, DeviceActivationSource};
 pub use dataset::{Corpus, TaskBank};

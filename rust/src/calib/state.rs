@@ -38,7 +38,7 @@
 //! complete shard (what `coala shard` emits); `done < end` is a resume
 //! checkpoint.
 
-use crate::calib::accumulate::{AccumKind, CalibState};
+use crate::calib::accumulate::{AccumKind, CalibState, SketchKind};
 use crate::coala::factorize::Factors;
 use crate::error::{Error, Result};
 use crate::finetune::AdapterSet;
@@ -50,8 +50,11 @@ use std::path::Path;
 
 /// File magic: "CALibration State".
 pub const MAGIC: [u8; 4] = *b"CALS";
-/// Codec version this build reads and writes.
-pub const VERSION: u16 = 1;
+/// Codec version this build reads and writes.  Bumped 1 → 2 when the
+/// sketch payload gained its Ω-family byte ([`SketchKind`]) — version-1
+/// sketch states are ambiguous about the family, so they are refused
+/// rather than guessed.
+pub const VERSION: u16 = 2;
 
 const PAYLOAD_SHARD: u8 = 1;
 const PAYLOAD_FACTORS: u8 = 2;
@@ -303,11 +306,27 @@ fn put_state(w: &mut Writer, s: &CalibState) {
             w.size(*rows);
             w.f64s(sum_abs);
         }
-        CalibState::Sketch { y, folds } => {
+        CalibState::Sketch { y, folds, kind } => {
             w.u8(4);
+            w.u8(sketch_kind_tag(*kind));
             w.u64(*folds);
             w.matrix(y);
         }
+    }
+}
+
+fn sketch_kind_tag(k: SketchKind) -> u8 {
+    match k {
+        SketchKind::Gaussian => 0,
+        SketchKind::Srht => 1,
+    }
+}
+
+fn sketch_kind_of(tag: u8, r: &Reader) -> Result<SketchKind> {
+    match tag {
+        0 => Ok(SketchKind::Gaussian),
+        1 => Ok(SketchKind::Srht),
+        t => Err(r.err(format!("unknown sketch-kind tag {t}"))),
     }
 }
 
@@ -322,9 +341,10 @@ fn take_state(r: &mut Reader) -> Result<CalibState> {
             Ok(CalibState::Scales { sum_abs, rows })
         }
         4 => {
+            let kind = sketch_kind_of(r.u8("sketch kind")?, r)?;
             let folds = r.u64("sketch folds")?;
             let y = r.matrix("sketch state")?;
-            Ok(CalibState::Sketch { y, folds })
+            Ok(CalibState::Sketch { y, folds, kind })
         }
         t => Err(r.err(format!("unknown calibration-state tag {t}"))),
     }
@@ -637,7 +657,19 @@ mod tests {
             ),
             (
                 AccumKind::Sketch,
-                CalibState::Sketch { y: nasty_matrix(4, 6, 3), folds: u64::MAX },
+                CalibState::Sketch {
+                    y: nasty_matrix(4, 6, 3),
+                    folds: u64::MAX,
+                    kind: SketchKind::Gaussian,
+                },
+            ),
+            (
+                AccumKind::Sketch,
+                CalibState::Sketch {
+                    y: nasty_matrix(3, 5, 4),
+                    folds: 7,
+                    kind: SketchKind::Srht,
+                },
             ),
             (AccumKind::None, CalibState::None),
         ];
@@ -683,10 +715,11 @@ mod tests {
                     assert_eq!(rx, ry);
                 }
                 (
-                    CalibState::Sketch { y: x, folds: fx },
-                    CalibState::Sketch { y, folds: fy },
+                    CalibState::Sketch { y: x, folds: fx, kind: kx },
+                    CalibState::Sketch { y, folds: fy, kind: ky },
                 ) => {
                     assert_eq!(fx, fy);
+                    assert_eq!(kx, ky);
                     assert_eq!(bits32(&x.data), bits32(&y.data));
                     assert_eq!((x.rows, x.cols), (y.rows, y.cols));
                 }

@@ -73,16 +73,11 @@ pub fn coala_from_x<T: Scalar>(w: &Matrix<T>, x: &Matrix<T>, sweeps: usize) -> R
     coala_factorize(w, &r, sweeps)
 }
 
-/// SVD for any aspect ratio, returning (U, σ) — the transpose trick for
-/// wide matrices (only left vectors are needed by Prop. 1).
+/// SVD for any aspect ratio, returning (U, σ) — only the left vectors
+/// are needed by Prop. 1.  `jacobi_svd` handles wide inputs itself.
 pub(crate) fn svd_any<T: Scalar>(a: &Matrix<T>, sweeps: usize) -> Result<(Matrix<T>, Vec<T>)> {
-    if a.rows >= a.cols {
-        let s = jacobi_svd(a, sweeps)?;
-        Ok((s.u, s.s))
-    } else {
-        let s = jacobi_svd(&a.transpose(), sweeps)?;
-        Ok((s.v, s.s))
-    }
+    let s = jacobi_svd(a, sweeps)?;
+    Ok((s.u, s.s))
 }
 
 #[cfg(test)]

@@ -54,8 +54,7 @@ mod tests {
         let w0 = coala_from_x(&w, &x, 60).unwrap().truncate(r).reconstruct().unwrap();
 
         let wx = matmul(&w, &x).unwrap();
-        let wx_tall = if wx.rows >= wx.cols { wx } else { wx.transpose() };
-        let svd = crate::linalg::jacobi_svd(&wx_tall, 60).unwrap();
+        let svd = crate::linalg::jacobi_svd(&wx, 60).unwrap();
         let gap2 = svd.s[r - 1] * svd.s[r - 1] - svd.s[r] * svd.s[r];
         let c = 2.0 * spectral_norm(&w, 200).powi(2) * fro(&w) / gap2;
 

@@ -252,6 +252,7 @@ impl<'a> Pipeline<'a> {
     ) -> Result<CompressionOutcome> {
         let budget = super::budget::RankBudget::allocate(&self.spec, job.ratio, job.rank_policy)?;
         let t2 = Instant::now();
+        let sweeps_before = crate::linalg::svd_sweep_total();
         let (model, mus) = engine::factorize(
             &job.config,
             &self.spec,
@@ -275,6 +276,10 @@ impl<'a> Pipeline<'a> {
         tel.stage_s("merge_reduce", timings.merge_s);
         tel.stage_s("factorize", timings.factorize_s);
         tel.counter("projections_factorized", model.factors.len() as u64);
+        // Jacobi convergence cost of this factorize stage: the global
+        // sweep counter is a sum of deterministic per-projection counts,
+        // so the delta is worker-count-independent
+        tel.counter("svd_sweeps", crate::linalg::svd_sweep_total() - sweeps_before);
         Ok(CompressionOutcome { model, budget, timings, mus })
     }
 }

@@ -171,8 +171,24 @@
 //! is ascending-k, so results are bitwise worker-count-independent),
 //! and [`linalg::householder_qr_r`] is a compact-WY *blocked* QR whose
 //! trailing updates are two of those GEMMs per panel.
-//! `benches/kernels.rs` sweeps both against their naive/unblocked
-//! references (plus sketch-vs-exact accumulation) and dumps
+//!
+//! [`linalg::jacobi_svd`] is built the same way: tall inputs are QR
+//! preconditioned (Jacobi then runs on the small square R and
+//! U = Q·U_R is one packed GEMM), the rotation kernel caches column
+//! squared-norms instead of rescanning them per pair, and sweeps follow
+//! the Brent–Luk round-robin order, whose rounds are perfect matchings
+//! — so wide Jacobi problems fan the rotations of a round across
+//! `COALA_THREADS` workers with bitwise worker-count-independent
+//! results (the cyclic-order original survives as
+//! [`linalg::jacobi_svd_cyclic`], the property-test oracle and bench
+//! baseline).  The sketch accumulator has a second Ω family for the
+//! same reason: `COALA_SKETCH_KIND=srht` replaces the Gaussian GEMM
+//! fold with sign flip + Walsh–Hadamard + row sampling, O(c·log c) per
+//! column instead of O(s·c).
+//!
+//! `benches/kernels.rs` sweeps all of these against their
+//! naive/unblocked references (GEMM, QR, blocked-vs-cyclic SVD,
+//! SRHT-vs-Gaussian and sketch-vs-exact accumulation) and dumps
 //! `BENCH_kernels.json` with the speedup ratios.
 //!
 //! ### Adding a method
@@ -205,6 +221,9 @@
 //! | `COALA_BENCH_FAST`   | flag                 | shrink bench budgets (CI perf jobs) | no |
 //! | `COALA_SKETCH_ROWS`  | integer in `[1, width]` | sketch-accumulator row count; out-of-range is an error, not a clamp | **yes** |
 //! | `COALA_SKETCH_SEED`  | u64                  | sketch Ω seed base | **yes** |
+//! | `COALA_SKETCH_KIND`  | `gaussian` \| `srht` | sketch Ω family: dense Gaussian GEMM or SRHT fast transform | **yes** |
+//! | `COALA_SVD_PAR_COLS` | integer ≥ 1          | Jacobi column count at which the rotation fan goes parallel (default 192; results are bitwise identical either way) | no |
+//! | `COALA_SVD_QR_PRECOND` | flag (default on)  | QR-precondition tall SVD inputs before the Jacobi iteration | no |
 //! | `COALA_GOLDEN_REGEN` | flag                 | regenerate `tests/golden/stability.json` in `cargo test` | no |
 //! | `COALA_TELEMETRY`    | path                 | JSONL telemetry sink (requires `--features telemetry`; setting it on a default build is an error) | no |
 

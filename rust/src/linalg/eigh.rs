@@ -1,8 +1,32 @@
 //! Symmetric eigendecomposition via the classical (two-sided) Jacobi
 //! eigenvalue algorithm — the SVD-LLM v2 substrate.
+//!
+//! Shares the 2×2 rotation core ([`crate::linalg::svd::jacobi_coeffs`])
+//! with the one-sided SVD, and tracks the off-diagonal Frobenius mass
+//! incrementally: each rotation moves exactly 2·apq² from the
+//! off-diagonal to the diagonal (orthogonal similarity preserves the
+//! Frobenius norm), so `off` is updated per rotation instead of being
+//! rescanned O(n²) every sweep.  An exact recompute confirms
+//! convergence before the loop exits, so fp drift in the running sum
+//! can delay the exit by one cheap check but never produce a wrong
+//! early stop.
 
 use crate::error::{Error, Result};
+use crate::linalg::svd::{jacobi_coeffs, note_sweeps};
 use crate::tensor::{Matrix, Scalar};
+
+fn off_mass<T: Scalar>(a: &Matrix<T>, n: usize) -> f64 {
+    let mut off = 0.0f64;
+    for i in 0..n {
+        for j in 0..n {
+            if i != j {
+                let v = a.get(i, j).to_f64();
+                off += v * v;
+            }
+        }
+    }
+    off
+}
 
 /// Eigendecomposition of a symmetric matrix: S = Q·diag(λ)·Qᵀ.
 /// Returns (λ descending, Q with eigenvectors as columns).
@@ -15,39 +39,38 @@ pub fn eigh<T: Scalar>(s: &Matrix<T>, max_sweeps: usize) -> Result<(Vec<T>, Matr
     let mut q: Matrix<T> = Matrix::eye(n);
     let tol = T::EPSILON.to_f64() * 4.0;
 
+    // ‖S‖²_F is invariant under the similarity rotations, so the
+    // convergence threshold is fixed for the whole iteration
+    let mut off = off_mass(&a, n);
+    let total = off
+        + (0..n)
+            .map(|i| {
+                let v = a.get(i, i).to_f64();
+                v * v
+            })
+            .sum::<f64>();
+    let thresh = tol * tol * total;
+
+    let mut sweeps = 0u64;
     for _ in 0..max_sweeps {
-        // off-diagonal Frobenius mass
-        let mut off = 0.0f64;
-        let mut diag = 0.0f64;
-        for i in 0..n {
-            for j in 0..n {
-                let v = a.get(i, j).to_f64();
-                if i == j {
-                    diag += v * v;
-                } else {
-                    off += v * v;
-                }
+        if off <= thresh {
+            // heal running-sum drift before trusting the exit
+            off = off_mass(&a, n);
+            if off <= thresh {
+                break;
             }
         }
-        if off <= tol * tol * (diag + off) {
-            break;
-        }
+        let mut any = false;
         for p in 0..n {
             for qi in (p + 1)..n {
                 let apq = a.get(p, qi).to_f64();
                 if apq == 0.0 {
                     continue;
                 }
+                any = true;
                 let app = a.get(p, p).to_f64();
                 let aqq = a.get(qi, qi).to_f64();
-                let tau = (aqq - app) / (2.0 * apq);
-                let t = if tau >= 0.0 {
-                    1.0 / (tau + (1.0 + tau * tau).sqrt())
-                } else {
-                    -1.0 / (-tau + (1.0 + tau * tau).sqrt())
-                };
-                let c = 1.0 / (1.0 + t * t).sqrt();
-                let sn = c * t;
+                let (c, sn, _t) = jacobi_coeffs(app, aqq, apq);
                 let (cs_t, sn_t) = (T::from_f64(c), T::from_f64(sn));
                 // A ← JᵀAJ  (rows and columns p, q)
                 for k in 0..n {
@@ -68,9 +91,17 @@ pub fn eigh<T: Scalar>(s: &Matrix<T>, max_sweeps: usize) -> Result<(Vec<T>, Matr
                     q.set(k, p, cs_t * qkp - sn_t * qkq);
                     q.set(k, qi, sn_t * qkp + cs_t * qkq);
                 }
+                // the rotation zeroes a_pq = a_qp; everything else in
+                // rows/cols p,q shuffles mass without changing the sum
+                off = (off - 2.0 * apq * apq).max(0.0);
             }
         }
+        sweeps += 1;
+        if !any {
+            break;
+        }
     }
+    note_sweeps(sweeps);
 
     let mut order: Vec<usize> = (0..n).collect();
     let diag: Vec<f64> = (0..n).map(|i| a.get(i, i).to_f64()).collect();
@@ -135,5 +166,18 @@ mod tests {
     fn non_square_rejected() {
         let a: Matrix<f64> = Matrix::zeros(3, 4);
         assert!(eigh(&a, 5).is_err());
+    }
+
+    #[test]
+    fn already_diagonal_converges_immediately() {
+        let mut d: Matrix<f64> = Matrix::zeros(5, 5);
+        for i in 0..5 {
+            d.set(i, i, (5 - i) as f64);
+        }
+        let (lam, q) = eigh(&d, 40).unwrap();
+        for i in 0..5 {
+            assert_eq!(lam[i], (5 - i) as f64);
+            assert_eq!(q.get(i, i), 1.0);
+        }
     }
 }

@@ -25,6 +25,8 @@ pub mod tsqr;
 pub use cholesky::cholesky;
 pub use eigh::eigh;
 pub use qr::{householder_qr, householder_qr_r, qr_r_square};
-pub use svd::{jacobi_svd, Svd};
+pub use svd::{
+    jacobi_svd, jacobi_svd_cyclic, jacobi_svd_with_workers, svd_sweep_total, Svd,
+};
 pub use triangular::{solve_lower, solve_upper};
 pub use tsqr::{tsqr_sequential, tsqr_tree, TsqrFolder};

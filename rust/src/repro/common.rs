@@ -156,17 +156,18 @@ impl Env {
     }
 
     /// Sketch-accumulator fingerprint fragment: empty for exact kinds;
-    /// for `--accum sketch`, names the sketch geometry and Ω seed
-    /// family (the two knobs every worker/shard must agree on) so
-    /// states produced under different `COALA_SKETCH_ROWS` /
-    /// `COALA_SKETCH_SEED` settings can never silently merge.
+    /// for `--accum sketch`, names the Ω family, sketch geometry, and
+    /// seed (the three knobs every worker/shard must agree on) so
+    /// states produced under different `COALA_SKETCH_KIND` /
+    /// `COALA_SKETCH_ROWS` / `COALA_SKETCH_SEED` settings can never
+    /// silently merge.
     fn accum_stamp(&self) -> Result<String> {
         if self.accum != Some(AccumKind::Sketch) {
             return Ok(String::new());
         }
         let cfg = SketchCfg::from_env()?;
         let rows = cfg.rows.map_or_else(|| "auto".to_string(), |r| r.to_string());
-        Ok(format!(":sketch:r{rows}:s{}", cfg.seed))
+        Ok(format!(":sketch:{}:r{rows}:s{}", cfg.kind.label(), cfg.seed))
     }
 
     /// Fingerprint of this environment's calibration source for a
@@ -491,7 +492,9 @@ mod tests {
         env.accum = Some(AccumKind::Sketch);
         let sk = env.source_id("tiny", 6).unwrap();
         assert_ne!(plain, sk);
-        assert!(sk.contains(":sketch:"), "{sk}");
+        // the stamp names the Ω family too (kind divergence must show
+        // up in the fingerprint, not just rows/seed)
+        assert!(sk.contains(":sketch:gaussian:"), "{sk}");
     }
 
     #[test]

@@ -19,8 +19,7 @@ pub struct GapInfo {
 /// Compute the gap quantities of WX needed by both bounds.
 pub fn gap_info(w: &Matrix<f64>, x: &Matrix<f64>, r: usize) -> Result<GapInfo> {
     let wx = matmul(w, x)?;
-    let tall = if wx.rows >= wx.cols { wx } else { wx.transpose() };
-    let svd = jacobi_svd(&tall, 60)?;
+    let svd = jacobi_svd(&wx, 60)?;
     let s_r = svd.s.get(r - 1).copied().unwrap_or(0.0);
     let s_r1 = svd.s.get(r).copied().unwrap_or(0.0);
     Ok(GapInfo { sigma_r: s_r, sigma_r1: s_r1, gap: s_r - s_r1, gap2: s_r * s_r - s_r1 * s_r1 })
@@ -36,8 +35,7 @@ pub fn theorem1_bound(w: &Matrix<f64>, gap: &GapInfo, mu: f64) -> f64 {
 /// Theorem 5 (full-row-rank X, sharper constant):
 /// ‖W₀ − W_μ‖_F ≤ ‖W‖₂‖W‖_F / (σ_r(WX) − σ_{r+1}(WX)) · μ / σ_n(X).
 pub fn theorem5_bound(w: &Matrix<f64>, x: &Matrix<f64>, gap: &GapInfo, mu: f64) -> Result<f64> {
-    let xt = x.transpose();
-    let svd_x = jacobi_svd(&xt, 60)?; // X is n × k wide: SVD of Xᵀ
+    let svd_x = jacobi_svd(x, 60)?;
     let sigma_min = *svd_x.s.last().unwrap();
     Ok(spectral_norm(w, 200) * fro(w) / gap.gap * mu / sigma_min)
 }

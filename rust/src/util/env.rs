@@ -79,6 +79,16 @@ pub fn flag_value(name: &str, v: &str) -> Result<bool> {
     }
 }
 
+/// Boolean knob with an explicit default for knobs that are *on* unless
+/// disabled (e.g. `COALA_SVD_QR_PRECOND`): unset → `default`, otherwise
+/// the [`flag_value`] grammar (set-but-garbage is still a hard error).
+pub fn flag_or(name: &str, default: bool) -> Result<bool> {
+    match read(name)? {
+        None => Ok(default),
+        Some(v) => flag_value(name, &v),
+    }
+}
+
 /// String knob (e.g. a path): unset → `None`; empty is rejected so a
 /// dangling `COALA_X= cmd` cannot pass an empty path downstream.
 pub fn string(name: &str) -> Result<Option<String>> {
@@ -135,6 +145,13 @@ mod tests {
             let e = flag_value("COALA_BENCH_FAST", bad).unwrap_err();
             assert!(e.to_string().contains("COALA_BENCH_FAST"), "{e}");
         }
+    }
+
+    #[test]
+    fn flag_or_keeps_default_only_when_unset() {
+        // Read-only env access: the variable is never set by any test.
+        assert!(flag_or("COALA_TEST_SURELY_UNSET_8", true).unwrap());
+        assert!(!flag_or("COALA_TEST_SURELY_UNSET_8", false).unwrap());
     }
 
     #[test]

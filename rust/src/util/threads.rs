@@ -20,17 +20,34 @@ where
         out.iter_mut().map(std::sync::Mutex::new).collect();
     std::thread::scope(|s| {
         for _ in 0..workers {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                if i >= n {
-                    break;
+            s.spawn(|| {
+                IN_WORKER.with(|w| w.set(true));
+                loop {
+                    let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let v = f(i);
+                    **slots[i].lock().unwrap() = Some(v);
                 }
-                let v = f(i);
-                **slots[i].lock().unwrap() = Some(v);
             });
         }
     });
     out.into_iter().map(|o| o.expect("worker failed to fill slot")).collect()
+}
+
+thread_local! {
+    static IN_WORKER: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// Whether the current thread is a [`parallel_map`] worker.  Nested
+/// kernels (e.g. the blocked Jacobi SVD under the engine's factorize
+/// fan) consult this to stay sequential instead of oversubscribing the
+/// machine with a second level of threads.  Never affects results —
+/// every parallel kernel in the crate is bitwise worker-count-
+/// independent by construction — only where the threads go.
+pub fn in_worker() -> bool {
+    IN_WORKER.with(|w| w.get())
 }
 
 /// Number of workers to default to (respects `COALA_THREADS`).
@@ -75,5 +92,16 @@ mod tests {
     fn zero_items() {
         let v: Vec<usize> = parallel_map(0, 4, |i| i);
         assert!(v.is_empty());
+    }
+
+    #[test]
+    fn worker_threads_are_marked() {
+        assert!(!in_worker(), "caller thread is not a worker");
+        let marks = parallel_map(8, 4, |_| in_worker());
+        assert!(marks.iter().all(|&m| m), "spawned workers must see the mark");
+        // the sequential fallback runs on the caller thread, unmarked
+        let marks = parallel_map(3, 1, |_| in_worker());
+        assert!(marks.iter().all(|&m| !m));
+        assert!(!in_worker(), "mark must not leak back to the caller");
     }
 }

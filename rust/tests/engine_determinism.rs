@@ -6,7 +6,7 @@
 //! subspace with a 1e-2 noise floor — exactly where an order-dependent
 //! floating-point reduction would leak the worker count into the bits).
 
-use coala::calib::accumulate::{AccumBackend, AccumKind, CalibState};
+use coala::calib::accumulate::{AccumBackend, AccumKind, CalibState, SketchKind};
 use coala::calib::state::ShardState;
 use coala::calib::synthetic::{regime_for_layer, Regime, SyntheticActivations};
 use coala::coala::compressor::{resolve, Compressor, Route};
@@ -36,10 +36,11 @@ fn assert_states_bitwise_eq(want: &CalibStates, got: &CalibStates, label: &str) 
                 assert_eq!(ra, rb, "{label} {k:?}: row counts differ");
             }
             (
-                CalibState::Sketch { y: a, folds: fa },
-                CalibState::Sketch { y: b, folds: fb },
+                CalibState::Sketch { y: a, folds: fa, kind: ka },
+                CalibState::Sketch { y: b, folds: fb, kind: kb },
             ) => {
                 assert_eq!(fa, fb, "{label} {k:?}: sketch fold counts differ");
+                assert_eq!(ka, kb, "{label} {k:?}: sketch kinds differ");
                 assert_eq!(a.data, b.data, "{label} {k:?}: sketch bits differ");
             }
             (CalibState::None, CalibState::None) => {}
@@ -48,8 +49,36 @@ fn assert_states_bitwise_eq(want: &CalibStates, got: &CalibStates, label: &str) 
     }
 }
 
+/// Serializes every test that reads or writes the sketch env knobs —
+/// sketch accumulators re-read `COALA_SKETCH_*` at construction, and
+/// the test harness runs tests concurrently in one process.
+static ENV_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn env_guard() -> std::sync::MutexGuard<'static, ()> {
+    ENV_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Run `f` with `var=value` set, restoring the prior value afterwards
+/// (incl. on panic), under the env lock.
+fn with_env<T>(var: &str, value: &str, f: impl FnOnce() -> T) -> T {
+    let _g = env_guard();
+    struct Restore(String, Option<std::ffi::OsString>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            match &self.1 {
+                Some(v) => std::env::set_var(&self.0, v),
+                None => std::env::remove_var(&self.0),
+            }
+        }
+    }
+    let _r = Restore(var.to_string(), std::env::var_os(var));
+    std::env::set_var(var, value);
+    f()
+}
+
 #[test]
 fn engine_results_are_bitwise_identical_across_worker_counts() {
+    let _env = env_guard(); // the sketch case reads COALA_SKETCH_*
     let ex = Executor::from_manifest(synthetic_manifest()).unwrap();
     let spec = ex.manifest.config("tiny").unwrap().clone();
     // the stress regime really is present: layer 1 is nearly singular
@@ -111,6 +140,7 @@ fn shard_files_merged_out_of_process_match_the_engine_bitwise() {
     // the codec must reproduce the single-process engine run **bitwise**
     // — states *and* factor files — for every accumulator kind, at every
     // shard count, including the nearly singular regime (layer 1).
+    let _env = env_guard(); // the sketch case reads COALA_SKETCH_*
     let ex = Executor::from_manifest(synthetic_manifest()).unwrap();
     let spec = ex.manifest.config("tiny").unwrap().clone();
     assert_eq!(regime_for_layer(1), Regime::NearSingular);
@@ -281,30 +311,36 @@ fn sketch_states_approximate_the_exact_gram_within_bound() {
     // so the relative error is O(1); 2.0 is ~2× the worst case from a
     // 60-seed reference simulation of these shapes, while broken seed
     // plumbing or dropped batches land orders of magnitude away.
-    use coala::tensor::ops::{fro, matmul};
-
+    let _env = env_guard();
     let spec = synthetic_manifest().config("tiny").unwrap().clone();
     let src = SyntheticActivations::new(spec.clone(), 13);
-    let calibrate = |kind| {
-        engine::calibrate(
-            &src,
-            kind,
-            4,
-            AccumBackend::Host,
-            Precision::F32,
-            &EnginePlan::sequential(),
-            &mut StageTimings::default(),
-        )
-        .unwrap()
-    };
-    let exact = calibrate(AccumKind::RFactor);
-    let sketch = calibrate(AccumKind::Sketch);
+    let exact = calibrate_tiny(&src, AccumKind::RFactor);
+    let sketch = calibrate_tiny(&src, AccumKind::Sketch);
+    assert_sketch_tracks_exact(&exact, &sketch, SketchKind::Gaussian);
+}
+
+fn calibrate_tiny(src: &SyntheticActivations, kind: AccumKind) -> CalibStates {
+    engine::calibrate(
+        src,
+        kind,
+        4,
+        AccumBackend::Host,
+        Precision::F32,
+        &EnginePlan::sequential(),
+        &mut StageTimings::default(),
+    )
+    .unwrap()
+}
+
+fn assert_sketch_tracks_exact(exact: &CalibStates, sketch: &CalibStates, want_kind: SketchKind) {
+    use coala::tensor::ops::{fro, matmul};
     assert_eq!(exact.len(), sketch.len());
-    for (k, st) in &sketch {
-        let CalibState::Sketch { folds, .. } = st else {
+    for (k, st) in sketch {
+        let CalibState::Sketch { folds, kind, .. } = st else {
             panic!("{k:?}: expected a sketch state");
         };
         assert_eq!(*folds, 4, "{k:?}: sketch must count every batch");
+        assert_eq!(*kind, want_kind, "{k:?}: wrong Ω family");
         let r_hat = st.r_factor().unwrap();
         let r = exact[k].r().unwrap();
         let got = matmul(&r_hat.transpose(), &r_hat).unwrap();
@@ -314,4 +350,116 @@ fn sketch_states_approximate_the_exact_gram_within_bound() {
         // the exact route must refuse to hand a sketch out as exact R
         assert!(st.r().is_err(), "{k:?}: r() must stay strict");
     }
+}
+
+#[test]
+fn srht_states_approximate_the_exact_gram_within_bound() {
+    // same statistical contract as the Gaussian family: sampled SHD
+    // rows have ±1 entries, so E[ΩᵀΩ] = s·I and R̂ᵀR̂ = YᵀY/s tracks
+    // XᵀX with the same O(1) tolerance at tiny's oversampling
+    with_env("COALA_SKETCH_KIND", "srht", || {
+        let spec = synthetic_manifest().config("tiny").unwrap().clone();
+        let src = SyntheticActivations::new(spec.clone(), 13);
+        let exact = calibrate_tiny(&src, AccumKind::RFactor);
+        let sketch = calibrate_tiny(&src, AccumKind::Sketch);
+        assert_sketch_tracks_exact(&exact, &sketch, SketchKind::Srht);
+    });
+}
+
+#[test]
+fn srht_engine_results_are_bitwise_identical_across_worker_counts() {
+    // the fast-transform sketch inherits the leaf-indexed determinism:
+    // states and factors must be bitwise worker-count-independent
+    with_env("COALA_SKETCH_KIND", "srht", || {
+        let ex = Executor::from_manifest(synthetic_manifest()).unwrap();
+        let spec = ex.manifest.config("tiny").unwrap().clone();
+        let w = synthetic_weights(&spec, 5);
+        let src = SyntheticActivations::new(spec.clone(), 5);
+        let comp = resolve("coala").unwrap();
+        let mut job = CompressionJob::new("tiny", comp.method(), 0.4);
+        job.calib_batches = 3;
+
+        let mut ref_states: Option<CalibStates> = None;
+        let mut ref_factors: Option<Vec<(String, Vec<f32>, Vec<f32>)>> = None;
+        for workers in [1usize, 2, 8] {
+            let label = format!("srht workers={workers}");
+            let pipe = Pipeline::new(&ex, spec.clone(), &w)
+                .with_route(Route::Host)
+                .with_accum(Some(AccumKind::Sketch))
+                .with_plan(EnginePlan::with_workers(workers));
+            let mut t = StageTimings::default();
+            let states = pipe.calibrate_from(&job, &src, &mut t).unwrap();
+            for st in states.values() {
+                let CalibState::Sketch { kind, .. } = st else { panic!("expected sketch") };
+                assert_eq!(*kind, SketchKind::Srht, "{label}: knob did not reach the leaves");
+            }
+            let out = pipe.run_with_source(&job, &src).unwrap();
+            assert!(out.model.all_finite(), "{label}");
+            let factors: Vec<(String, Vec<f32>, Vec<f32>)> = out
+                .model
+                .factors
+                .iter()
+                .map(|(k, f)| (k.clone(), f.a.data.clone(), f.b.data.clone()))
+                .collect();
+            match (&ref_states, &ref_factors) {
+                (None, None) => {
+                    ref_states = Some(states);
+                    ref_factors = Some(factors);
+                }
+                (Some(sw), Some(fw)) => {
+                    assert_states_bitwise_eq(sw, &states, &label);
+                    assert_eq!(fw, &factors, "{label}: compressed factors differ");
+                }
+                _ => unreachable!(),
+            }
+        }
+    });
+}
+
+#[test]
+fn srht_shard_merge_matches_single_process_bitwise() {
+    // shard states travel through the codec (which now stamps the
+    // sketch kind) and must merge back to the single-process bits
+    with_env("COALA_SKETCH_KIND", "srht", || {
+        let spec = synthetic_manifest().config("tiny").unwrap().clone();
+        let src = SyntheticActivations::new(spec.clone(), 9);
+        let total = 6;
+        let want = engine::calibrate(
+            &src,
+            AccumKind::Sketch,
+            total,
+            AccumBackend::Host,
+            Precision::F32,
+            &EnginePlan::sequential(),
+            &mut StageTimings::default(),
+        )
+        .unwrap();
+        for shards in [2usize, 3] {
+            let plan = ShardPlan::new(total, shards).unwrap();
+            let parts: Vec<ShardState> = (0..shards)
+                .map(|i| {
+                    let st = engine::accumulate_shard(
+                        &src,
+                        AccumKind::Sketch,
+                        plan.range(i).unwrap(),
+                        AccumBackend::Host,
+                        Precision::F32,
+                        &EnginePlan::with_workers(1 + i % 3),
+                        &mut StageTimings::default(),
+                        None,
+                        "tiny:host:seed9",
+                    )
+                    .unwrap();
+                    ShardState::decode(&st.encode(), "<memory>").unwrap()
+                })
+                .collect();
+            let got = engine::merge_shard_states(
+                parts,
+                AccumBackend::Host,
+                &mut StageTimings::default(),
+            )
+            .unwrap();
+            assert_states_bitwise_eq(&want, &got, &format!("srht shards={shards}"));
+        }
+    });
 }

@@ -7,10 +7,14 @@
 //! which requires `set_var`.  `set_var` is process-global and the test
 //! harness runs tests concurrently in one process, so every test here
 //! serializes behind one mutex and restores the variable before
-//! releasing it.  No other test in the repo sets these variables.
+//! releasing it.  No other test in *this binary* touches these
+//! variables (each test binary is its own process; the determinism
+//! suite has its own lock for `COALA_SKETCH_KIND`).
 
 use coala::calib::accumulate::{make_accumulator, AccumBackend, AccumKind};
+use coala::linalg::jacobi_svd;
 use coala::tensor::lowp::Precision;
+use coala::tensor::Matrix;
 use coala::util::bench::BenchOpts;
 use std::sync::Mutex;
 
@@ -77,6 +81,73 @@ fn sketch_seed_garbage_fails_at_construction() {
             err.to_string().contains("COALA_SKETCH_SEED"),
             "error must name the knob for {bad:?}: {err}"
         );
+    }
+}
+
+/// A tall factorization small enough to be instant but large enough to
+/// exercise both the QR preconditioner and the rotation schedule.
+fn tiny_svd() -> coala::Result<coala::linalg::Svd<f64>> {
+    jacobi_svd(&Matrix::<f64>::randn(9, 5, 3), 60)
+}
+
+#[test]
+fn svd_par_cols_garbage_fails_at_the_call() {
+    for bad in ["abc", "1.5", "-2", ""] {
+        let err = with_env("COALA_SVD_PAR_COLS", Some(bad), || tiny_svd().unwrap_err());
+        assert!(
+            err.to_string().contains("COALA_SVD_PAR_COLS"),
+            "error must name the knob for {bad:?}: {err}"
+        );
+    }
+    let err = with_env("COALA_SVD_PAR_COLS", Some("0"), || tiny_svd().unwrap_err());
+    assert!(err.to_string().contains("must be ≥ 1"), "{err}");
+}
+
+#[test]
+fn svd_par_cols_engaging_the_fan_changes_no_bits() {
+    // 5 columns ≥ threshold 2 ⇒ the parallel fan engages; the contract
+    // says the result is bitwise identical to the sequential default
+    let fanned = with_env("COALA_SVD_PAR_COLS", Some("2"), || tiny_svd().unwrap());
+    let plain = with_env("COALA_SVD_PAR_COLS", None, || tiny_svd().unwrap());
+    let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<u64>>();
+    assert_eq!(bits(&fanned.s), bits(&plain.s), "σ bits");
+    assert_eq!(bits(&fanned.u.data), bits(&plain.u.data), "U bits");
+    assert_eq!(bits(&fanned.v.data), bits(&plain.v.data), "V bits");
+}
+
+#[test]
+fn svd_qr_precond_garbage_fails_and_off_still_factors() {
+    for bad in ["yep", "2", "enable"] {
+        let err = with_env("COALA_SVD_QR_PRECOND", Some(bad), || tiny_svd().unwrap_err());
+        assert!(err.to_string().contains("COALA_SVD_QR_PRECOND"), "{bad:?}: {err}");
+    }
+    // disabling the preconditioner is a legal A/B switch: same singular
+    // values to fp tolerance, not necessarily the same bits
+    let on = with_env("COALA_SVD_QR_PRECOND", None, || tiny_svd().unwrap());
+    let off = with_env("COALA_SVD_QR_PRECOND", Some("0"), || tiny_svd().unwrap());
+    let scale = 1.0 + on.s[0];
+    for (a, b) in on.s.iter().zip(&off.s) {
+        assert!((a - b).abs() <= 1e-9 * scale, "σ drift: {a} vs {b}");
+    }
+}
+
+#[test]
+fn sketch_kind_garbage_fails_at_construction() {
+    for bad in ["gauss", "fast", "", "hadamard"] {
+        let err = with_env("COALA_SKETCH_KIND", Some(bad), || sketch_accum().unwrap_err());
+        assert!(
+            err.to_string().contains("COALA_SKETCH_KIND"),
+            "error must name the knob for {bad:?}: {err}"
+        );
+    }
+}
+
+#[test]
+fn sketch_kind_valid_values_construct() {
+    for ok in ["gaussian", "srht", "SRHT", " Gaussian "] {
+        with_env("COALA_SKETCH_KIND", Some(ok), || {
+            sketch_accum().unwrap_or_else(|e| panic!("{ok:?} must construct: {e}"));
+        });
     }
 }
 

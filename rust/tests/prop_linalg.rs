@@ -10,11 +10,16 @@
 //! * streaming (`TsqrFolder`) and tree TSQR R-factors agree with the
 //!   direct QR of the stacked matrix up to row signs;
 //! * Jacobi eigh reconstructs its input (V·Λ·Vᵀ ≈ S, VᵀV ≈ I);
+//! * the blocked round-robin Jacobi SVD matches the cyclic-sweep
+//!   reference (singular values to fp tolerance, factors orthonormal,
+//!   A ≈ U·Σ·Vᵀ) on tall, square, wide, and rank-deficient inputs, and
+//!   its output is bitwise independent of the worker count;
 //! * triangular solves round-trip (solve(U, U·X) ≈ X, both triangles).
 
 use coala::linalg::{
-    eigh, householder_qr, householder_qr_r, qr_r_square, solve_lower, solve_upper,
-    tsqr_sequential, tsqr_tree,
+    eigh, householder_qr, householder_qr_r, jacobi_svd, jacobi_svd_cyclic,
+    jacobi_svd_with_workers, qr_r_square, solve_lower, solve_upper, tsqr_sequential,
+    tsqr_tree,
 };
 use coala::tensor::ops::{fro, gram_t, matmul};
 use coala::tensor::Matrix;
@@ -294,6 +299,121 @@ fn eigh_reconstructs_symmetric_input() {
             // eigenvalues of a Gram matrix are non-negative (up to roundoff)
             if lam.iter().any(|l| *l < -1e-9 * (1.0 + fro(&s))) {
                 return Err(format!("negative eigenvalue: {lam:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The SVD contract checks shared by the property tests below: factors
+/// orthonormal, σ descending and non-negative, and A ≈ U·Σ·Vᵀ.
+fn check_svd_contract(
+    a: &Matrix<f64>,
+    svd: &coala::linalg::Svd<f64>,
+    label: &str,
+) -> Result<(), String> {
+    let k = a.rows.min(a.cols);
+    if (svd.u.rows, svd.u.cols) != (a.rows, k) || (svd.v.rows, svd.v.cols) != (a.cols, k) {
+        return Err(format!("{label}: factor shapes"));
+    }
+    for (f, name) in [(&svd.u, "UᵀU"), (&svd.v, "VᵀV")] {
+        let g = matmul(&f.transpose(), f).map_err(|e| e.to_string())?;
+        for i in 0..k {
+            for j in 0..k {
+                let want = if i == j { 1.0 } else { 0.0 };
+                // a zero singular value leaves its U column zero, so
+                // only require orthonormality where σ is nonzero
+                if name == "UᵀU" && (svd.s[i] == 0.0 || svd.s[j] == 0.0) {
+                    continue;
+                }
+                if (g.get(i, j) - want).abs() > 1e-8 {
+                    return Err(format!("{label}: {name}[{i}][{j}] = {}", g.get(i, j)));
+                }
+            }
+        }
+    }
+    for w in svd.s.windows(2) {
+        if w[0] < w[1] {
+            return Err(format!("{label}: σ not descending: {:?}", svd.s));
+        }
+    }
+    if svd.s.iter().any(|s| *s < 0.0) {
+        return Err(format!("{label}: negative σ"));
+    }
+    let mut us = svd.u.clone();
+    for j in 0..k {
+        for i in 0..a.rows {
+            us.set(i, j, us.get(i, j) * svd.s[j]);
+        }
+    }
+    let rec = matmul(&us, &svd.v.transpose()).map_err(|e| e.to_string())?;
+    let err = fro(&rec.sub(a).map_err(|e| e.to_string())?);
+    if err > 1e-8 * (1.0 + fro(a)) {
+        return Err(format!("{label}: ‖A − UΣVᵀ‖ = {err}"));
+    }
+    Ok(())
+}
+
+#[test]
+fn blocked_jacobi_svd_matches_cyclic_reference() {
+    assert_prop(
+        "blocked-svd-vs-cyclic",
+        67,
+        8,
+        // tall, square, and wide shapes; a zeroed column for rank
+        // deficiency on larger inputs
+        |rng| (1 + rng.below(24), 1 + rng.below(24), rng.below(1000)),
+        |&(m, n, seed)| {
+            if m == 0 || n == 0 {
+                return Ok(()); // shrinking can zero a dimension
+            }
+            let mut a: Matrix<f64> = Matrix::randn(m, n, seed as u64);
+            if n > 3 {
+                for i in 0..m {
+                    a.set(i, n / 2, 0.0);
+                }
+            }
+            let blocked = jacobi_svd(&a, 60).map_err(|e| e.to_string())?;
+            check_svd_contract(&a, &blocked, "blocked")?;
+            // reference: the cyclic sweep (transposed for wide inputs —
+            // singular values are transpose-invariant)
+            let reference = if m >= n {
+                jacobi_svd_cyclic(&a, 60).map_err(|e| e.to_string())?
+            } else {
+                jacobi_svd_cyclic(&a.transpose(), 60).map_err(|e| e.to_string())?
+            };
+            let scale = 1.0 + reference.s.first().copied().unwrap_or(0.0);
+            for (i, (b, r)) in blocked.s.iter().zip(&reference.s).enumerate() {
+                if (b - r).abs() > 1e-9 * scale {
+                    return Err(format!("σ[{i}]: blocked {b} vs cyclic {r}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn blocked_jacobi_svd_is_bitwise_worker_independent() {
+    assert_prop(
+        "blocked-svd-worker-bits",
+        71,
+        6,
+        |rng| (1 + rng.below(30), 1 + rng.below(20), 2 + rng.below(7), rng.below(1000)),
+        |&(m, n, w, seed)| {
+            if m == 0 || n == 0 || w < 2 {
+                return Ok(());
+            }
+            let a: Matrix<f64> = Matrix::randn(m, n, seed as u64);
+            let one = jacobi_svd_with_workers(&a, 60, 1).map_err(|e| e.to_string())?;
+            let many = jacobi_svd_with_workers(&a, 60, w).map_err(|e| e.to_string())?;
+            let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<u64>>();
+            if bits(&one.s) != bits(&many.s) {
+                return Err(format!("σ bits differ at w={w}"));
+            }
+            if bits(&one.u.data) != bits(&many.u.data) || bits(&one.v.data) != bits(&many.v.data)
+            {
+                return Err(format!("factor bits differ at w={w}"));
             }
             Ok(())
         },

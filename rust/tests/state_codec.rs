@@ -4,7 +4,7 @@
 //! non-finite payloads — plus header (magic/version/kind) rejection.
 
 use coala::calib::accumulate::{
-    make_accumulator, AccumBackend, AccumKind, CalibState,
+    make_accumulator, AccumBackend, AccumKind, CalibState, SketchKind,
 };
 use coala::calib::activations::ActivationSource;
 use coala::calib::state::{self, ShardState, StateNode};
@@ -33,10 +33,11 @@ fn assert_state_bits_eq(a: &CalibState, b: &CalibState, label: &str) {
             assert_eq!(xb, yb, "{label}: fp64 bits");
         }
         (
-            CalibState::Sketch { y: x, folds: fx },
-            CalibState::Sketch { y: yv, folds: fy },
+            CalibState::Sketch { y: x, folds: fx, kind: kx },
+            CalibState::Sketch { y: yv, folds: fy, kind: ky },
         ) => {
             assert_eq!(fx, fy, "{label}: fold counts");
+            assert_eq!(kx, ky, "{label}: sketch kinds");
             assert_eq!((x.rows, x.cols), (yv.rows, yv.cols), "{label}: shape");
             assert_eq!(bits32(&x.data), bits32(&yv.data), "{label}: payload bits");
         }
@@ -101,9 +102,14 @@ fn non_finite_payloads_roundtrip_bit_exactly() {
     m.data[4] = -0.0;
     roundtrip(CalibState::R(m.clone()), AccumKind::RFactor, "non-finite R");
     roundtrip(
-        CalibState::Sketch { y: m.clone(), folds: u64::MAX },
+        CalibState::Sketch { y: m.clone(), folds: u64::MAX, kind: SketchKind::Gaussian },
         AccumKind::Sketch,
         "non-finite sketch",
+    );
+    roundtrip(
+        CalibState::Sketch { y: m.clone(), folds: 3, kind: SketchKind::Srht },
+        AccumKind::Sketch,
+        "non-finite srht sketch",
     );
     roundtrip(CalibState::Gram(m), AccumKind::Gram, "non-finite Gram");
     roundtrip(
@@ -130,11 +136,15 @@ fn version_and_kind_mismatches_are_rejected() {
     };
     let good = st.encode();
 
-    // version bump → rejected, names the version
-    let mut v2 = good.clone();
-    v2[4] = 2;
-    let e = ShardState::decode(&v2, "v2.state").unwrap_err().to_string();
-    assert!(e.contains("version 2") && e.contains("v2.state"), "{e}");
+    // foreign versions → rejected, names the version; version 1 (pre
+    // sketch-kind byte) is ambiguous about the Ω family, so it is
+    // refused too rather than guessed
+    for old in [1u8, 99] {
+        let mut v = good.clone();
+        v[4] = old;
+        let e = ShardState::decode(&v, "v.state").unwrap_err().to_string();
+        assert!(e.contains(&format!("version {old}")) && e.contains("v.state"), "{e}");
+    }
 
     // magic corruption → rejected
     let mut bad = good.clone();
@@ -160,7 +170,11 @@ fn version_and_kind_mismatches_are_rejected() {
             stream: "attn".into(),
             level: 0,
             index: 0,
-            state: CalibState::Sketch { y: Matrix::zeros(2, 3), folds: 1 },
+            state: CalibState::Sketch {
+                y: Matrix::zeros(2, 3),
+                folds: 1,
+                kind: SketchKind::Gaussian,
+            },
         }],
     };
     assert!(ShardState::decode(&mixed.encode(), "mixed.state").is_err());
@@ -178,6 +192,36 @@ fn version_and_kind_mismatches_are_rejected() {
             "decode accepted a {cut}-byte prefix"
         );
     }
+}
+
+#[test]
+fn unknown_sketch_kind_byte_is_rejected() {
+    let mk = |kind| ShardState {
+        kind: AccumKind::Sketch,
+        precision: Precision::F32,
+        source: "codec-test:seed1".into(),
+        total: 1,
+        start: 0,
+        end: 1,
+        done: 1,
+        nodes: vec![StateNode {
+            layer: 0,
+            stream: "attn".into(),
+            level: 0,
+            index: 0,
+            state: CalibState::Sketch { y: Matrix::zeros(2, 3), folds: 1, kind },
+        }],
+    };
+    let g = mk(SketchKind::Gaussian).encode();
+    let s = mk(SketchKind::Srht).encode();
+    // the kind is exactly one byte of the payload — locate it by diff
+    assert_eq!(g.len(), s.len());
+    let diffs: Vec<usize> = (0..g.len()).filter(|&i| g[i] != s[i]).collect();
+    assert_eq!(diffs.len(), 1, "kind tag must be exactly one byte: {diffs:?}");
+    let mut bad = g.clone();
+    bad[diffs[0]] = 9;
+    let e = ShardState::decode(&bad, "k.state").unwrap_err().to_string();
+    assert!(e.contains("sketch-kind") && e.contains("k.state"), "{e}");
 }
 
 #[test]

@@ -136,6 +136,7 @@ fn engine_smoke_is_bitwise_identical_across_workers_with_telemetry_on() {
 
     let mut ref_factors: Option<Vec<(String, Vec<f32>, Vec<f32>)>> = None;
     let mut ref_schema: Option<Vec<String>> = None;
+    let mut ref_sweeps: Option<f64> = None;
     for workers in [1usize, 4] {
         let path = tmp_path(&format!("engine_w{workers}"));
         let mut plan = EnginePlan::with_workers(workers);
@@ -176,6 +177,25 @@ fn engine_smoke_is_bitwise_identical_across_workers_with_telemetry_on() {
                 && r.req("name").unwrap().as_str() == Some("projections_factorized")),
             "w={workers}: projections_factorized counter missing"
         );
+        // the factorize stage reports its Jacobi convergence cost, and
+        // the count — a sum of deterministic per-projection sweep
+        // totals — is independent of the worker fan (this is the only
+        // test in this binary that runs factorize, so the process-global
+        // counter delta is not polluted by concurrent tests)
+        let sweeps = recs
+            .iter()
+            .find(|r| r.req("kind").unwrap().as_str() == Some("counter")
+                && r.req("name").unwrap().as_str() == Some("svd_sweeps"))
+            .unwrap_or_else(|| panic!("w={workers}: svd_sweeps counter missing"))
+            .req("value")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        assert!(sweeps >= 1.0, "w={workers}: factorize must run at least one Jacobi sweep");
+        match ref_sweeps {
+            None => ref_sweeps = Some(sweeps),
+            Some(sw) => assert_eq!(sw, sweeps, "svd_sweeps differs at w={workers}"),
+        }
         // schema fingerprint: everything except timing/identity fields
         // must be identical across worker counts
         let mut schema: Vec<String> = recs
