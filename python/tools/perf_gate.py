@@ -39,12 +39,21 @@ MIN_GATED_MEAN_S = 1e-4
 
 
 def walk_records(bench):
-    """Yield every ``{"name": ...}`` object in a BENCH dump's arrays."""
+    """Yield every ``{"name": ...}`` object in a BENCH dump's arrays.
+
+    Entries that are not dicts, lack a ``name``, or carry a foreign
+    ``kind`` tag (telemetry records — ``run``/``stage``/``health``/
+    ``counter`` — that a future dump may interleave) are skipped, never
+    fatal, mirroring how ``coala report`` tolerates unknown kinds.
+    """
     for section, val in sorted(bench.items()):
         if isinstance(val, list):
             for rec in val:
-                if isinstance(rec, dict) and "name" in rec:
-                    yield section, rec
+                if not isinstance(rec, dict) or "name" not in rec:
+                    continue
+                if "kind" in rec and rec["kind"] != "bench":
+                    continue
+                yield section, rec
 
 
 def index(bench):
@@ -186,7 +195,24 @@ def cmd_selftest(_args):
     f, _ = compare({"kernels": [], "ratios": []}, bootstrap, t)
     assert len(f) == 2 and all(x.startswith("coverage") for x in f), f"coverage loss: {f}"
 
-    print("perf_gate selftest: pass / 2x-slowdown / bootstrap / ratio / coverage all behave")
+    # unknown record kinds (telemetry lines a future dump interleaves)
+    # must be tolerated on both sides of the diff, never gated
+    noisy = synth(0.1, 2.0)
+    noisy["kernels"] = noisy["kernels"] + [
+        {"kind": "run", "run_id": "deadbeef", "source": "tiny:Host:seed0:b4"},
+        {"kind": "health", "probe": "svd", "name": "not-a-bench-target"},
+        "torn line",
+        7,
+    ]
+    f, _ = compare(noisy, native, t)
+    assert not f, f"unknown record kinds in the current dump must be skipped: {f}"
+    f, _ = compare(synth(0.1, 2.0), {"source": "native", "bench": noisy}, t)
+    assert not f, f"unknown record kinds in the baseline must be skipped: {f}"
+
+    print(
+        "perf_gate selftest: pass / 2x-slowdown / bootstrap / ratio / coverage"
+        " / unknown-kinds all behave"
+    )
     return 0
 
 

@@ -21,6 +21,12 @@ pub fn coala_regularized<T: Scalar>(
     mu: f64,
     sweeps: usize,
 ) -> Result<FullFactors<T>> {
+    // health probe: record the effective μ actually absorbed into R̃
+    if crate::telemetry::health::enabled() {
+        crate::telemetry::health::note(
+            crate::telemetry::health::HealthEvent::new("regularize").num("mu", mu),
+        );
+    }
     coala_factorize(w, &regularized_r(r_factor, mu)?, sweeps)
 }
 

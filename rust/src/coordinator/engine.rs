@@ -56,7 +56,7 @@ use crate::error::{Error, Result};
 use crate::model::{CompressedModel, ModelWeights};
 use crate::runtime::executor::Executor;
 use crate::runtime::manifest::ModelSpec;
-use crate::telemetry::TelemetrySink;
+use crate::telemetry::{health, TelemetrySink};
 use crate::tensor::lowp::Precision;
 use crate::util::threads::parallel_map;
 use std::collections::{BTreeMap, HashMap};
@@ -81,6 +81,13 @@ pub struct StageTimings {
     pub merge_s: f64,
     pub factorize_s: f64,
     pub total_s: f64,
+    /// Worker-seconds capture spent blocked in `send` on the bounded
+    /// channel (accumulate fell behind — the backpressure the
+    /// `queue_cap` knob exists to create, now visible).
+    pub capture_stall_s: f64,
+    /// Worker-seconds accumulate shards spent blocked in `recv`
+    /// waiting for capture to produce (the opposite imbalance).
+    pub accum_idle_s: f64,
 }
 
 /// How many workers each engine stage gets.  Every plan computes
@@ -531,6 +538,8 @@ fn run_pass(
     let mut capture_secs = 0.0;
     let mut accum_secs = 0.0;
     let mut merge_secs = 0.0;
+    let mut capture_stall_secs = 0.0;
+    let mut accum_idle_secs = 0.0;
     let mut capture_err: Option<Error> = None;
     let mut accum_err: Option<Error> = None;
 
@@ -540,30 +549,36 @@ fn run_pass(
             let tx = tx.clone();
             let next = &next_batch;
             let cancelled = &cancelled;
-            cap_handles.push(s.spawn(move || -> (f64, Result<()>) {
+            cap_handles.push(s.spawn(move || -> (f64, f64, Result<()>) {
                 let mut busy = 0.0;
+                let mut stall = 0.0;
                 loop {
                     if cancelled.load(Ordering::Relaxed) {
                         // some stage failed; its error surfaces below
-                        return (busy, Ok(()));
+                        return (busy, stall, Ok(()));
                     }
                     let b = next.fetch_add(1, Ordering::Relaxed);
                     if b >= w1 {
-                        return (busy, Ok(()));
+                        return (busy, stall, Ok(()));
                     }
                     let t0 = Instant::now();
                     let chunks = match source.capture_batch(b) {
                         Ok(c) => c,
                         Err(e) => {
                             cancelled.store(true, Ordering::Relaxed);
-                            return (busy + t0.elapsed().as_secs_f64(), Err(e));
+                            return (busy + t0.elapsed().as_secs_f64(), stall, Err(e));
                         }
                     };
                     busy += t0.elapsed().as_secs_f64();
-                    if tx.send((b, chunks)).is_err() {
+                    // time blocked in send = backpressure from a full
+                    // bounded channel (accumulate is the bottleneck)
+                    let t_send = Instant::now();
+                    let sent = tx.send((b, chunks));
+                    stall += t_send.elapsed().as_secs_f64();
+                    if sent.is_err() {
                         // every accumulate shard died; their error
                         // surfaces below — stop producing
-                        return (busy, Ok(()));
+                        return (busy, stall, Ok(()));
                     }
                 }
             }));
@@ -575,18 +590,23 @@ fn run_pass(
             let rx = rx.clone();
             let slots = &slots;
             let cancelled = &cancelled;
-            acc_handles.push(s.spawn(move || -> (f64, f64, Result<()>) {
+            acc_handles.push(s.spawn(move || -> (f64, f64, f64, Result<()>) {
                 let mut fold_busy = 0.0;
                 let mut merge_busy = 0.0;
+                let mut idle = 0.0;
                 let mut failed: Option<Error> = None;
                 loop {
+                    // time blocked waiting for a payload (receiver
+                    // lock + recv) = capture is the bottleneck
+                    let t_recv = Instant::now();
                     let payload = {
                         let guard = rx.lock().unwrap();
                         guard.recv()
                     };
+                    idle += t_recv.elapsed().as_secs_f64();
                     let Ok((b, chunks)) = payload else {
                         // channel closed: every batch was delivered
-                        return (fold_busy, merge_busy, failed.map_or(Ok(()), Err));
+                        return (fold_busy, merge_busy, idle, failed.map_or(Ok(()), Err));
                     };
                     if failed.is_some() || cancelled.load(Ordering::Relaxed) {
                         continue; // drain so blocked capture workers exit
@@ -652,8 +672,9 @@ fn run_pass(
 
         for h in cap_handles {
             match h.join() {
-                Ok((secs, res)) => {
+                Ok((secs, stall, res)) => {
                     capture_secs += secs;
+                    capture_stall_secs += stall;
                     if let Err(e) = res {
                         capture_err.get_or_insert(e);
                     }
@@ -665,9 +686,10 @@ fn run_pass(
         }
         for h in acc_handles {
             match h.join() {
-                Ok((fold, merge, res)) => {
+                Ok((fold, merge, idle, res)) => {
                     accum_secs += fold;
                     merge_secs += merge;
+                    accum_idle_secs += idle;
                     if let Err(e) = res {
                         accum_err.get_or_insert(e);
                     }
@@ -694,6 +716,8 @@ fn run_pass(
     timings.calibrate_s += capture_secs;
     timings.accumulate_s += accum_secs;
     timings.merge_s += merge_secs;
+    timings.capture_stall_s += capture_stall_secs;
+    timings.accum_idle_s += accum_idle_secs;
     Ok(())
 }
 
@@ -834,6 +858,11 @@ fn reduce_tree(
 /// method across `workers` threads through the `Compressor` registry.
 /// Results assemble in projection order, so the outcome is independent
 /// of the worker count.
+///
+/// With `COALA_HEALTH=1` each projection also flushes the health
+/// events its kernels buffered thread-locally (Jacobi convergence,
+/// applied μ) and a non-finite factor check, all under the span
+/// `factorize/<proj>` — pure observation of already-computed state.
 #[allow(clippy::too_many_arguments)]
 pub fn factorize(
     config: &str,
@@ -846,6 +875,7 @@ pub fn factorize(
     ex: &Executor,
     host_sweeps: usize,
     workers: usize,
+    telemetry: &TelemetrySink,
 ) -> Result<(CompressedModel, BTreeMap<String, f64>)> {
     type ProjResult = Result<(String, Option<f64>, Factors<f32>)>;
     let projs = &spec.compressible;
@@ -863,8 +893,27 @@ pub fn factorize(
             .ok_or_else(|| Error::Config(format!("no accumulator for {proj}")))?;
         let rank = budget.rank(proj)?;
         let comp = compressor_for(method);
+        if health::enabled() {
+            // clear leftovers so the drain below is exactly this
+            // projection's evidence
+            health::drain();
+        }
         let fz = comp.factorize(route, ex, &w, calib, rank, host_sweeps)?;
-        Ok((proj.clone(), fz.mu, fz.factors.truncate(rank)))
+        let factors = fz.factors.truncate(rank);
+        if health::enabled() {
+            let span = format!("factorize/{proj}");
+            for ev in health::drain() {
+                telemetry.health_event(Some(&span), &ev);
+            }
+            let nonfinite = [&factors.a, &factors.b].iter().filter(|m| !m.all_finite()).count();
+            telemetry.health_event(
+                Some(&span),
+                &health::HealthEvent::new("factors")
+                    .num("rank", rank as f64)
+                    .num("nonfinite", nonfinite as f64),
+            );
+        }
+        Ok((proj.clone(), fz.mu, factors))
     });
 
     let mut model = CompressedModel::new(config);

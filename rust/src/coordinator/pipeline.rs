@@ -16,7 +16,7 @@
 //! either the PJRT device route or the pure-Rust host route.  The
 //! pipeline itself never matches on method variants.
 
-use crate::calib::accumulate::{AccumBackend, AccumKind};
+use crate::calib::accumulate::{AccumBackend, AccumKind, CalibState};
 use crate::calib::activations::{ActivationSource, DeviceActivationSource};
 use crate::calib::dataset::Corpus;
 use crate::coala::compressor::{compressor_for, Compressor, Route, HOST_SWEEPS};
@@ -251,6 +251,8 @@ impl<'a> Pipeline<'a> {
         mut timings: StageTimings,
     ) -> Result<CompressionOutcome> {
         let budget = super::budget::RankBudget::allocate(&self.spec, job.ratio, job.rank_policy)?;
+        let tel = &self.plan.telemetry;
+        self.probe_accum_health(accums);
         let t2 = Instant::now();
         let sweeps_before = crate::linalg::svd_sweep_total();
         let (model, mus) = engine::factorize(
@@ -264,23 +266,78 @@ impl<'a> Pipeline<'a> {
             self.ex,
             self.host_sweeps,
             self.plan.factorize_workers,
+            tel,
         )?;
         timings.factorize_s = t2.elapsed().as_secs_f64();
         timings.total_s =
             timings.calibrate_s + timings.accumulate_s + timings.merge_s + timings.factorize_s;
         // report the engine's busy-time breakdown as telemetry stage
         // records — the engine already tracked these, never re-time
-        let tel = &self.plan.telemetry;
         tel.stage_s("capture", timings.calibrate_s);
         tel.stage_s("accumulate", timings.accumulate_s);
         tel.stage_s("merge_reduce", timings.merge_s);
         tel.stage_s("factorize", timings.factorize_s);
+        // bounded-channel backpressure, measured around the engine's
+        // existing send/recv — capture_stall = accumulate was the
+        // bottleneck, accum_idle = capture was
+        tel.stage_s("capture_stall", timings.capture_stall_s);
+        tel.stage_s("accum_idle", timings.accum_idle_s);
         tel.counter("projections_factorized", model.factors.len() as u64);
         // Jacobi convergence cost of this factorize stage: the global
         // sweep counter is a sum of deterministic per-projection counts,
         // so the delta is worker-count-independent
         tel.counter("svd_sweeps", crate::linalg::svd_sweep_total() - sweeps_before);
         Ok(CompressionOutcome { model, budget, timings, mus })
+    }
+
+    /// Health probes over the finished calibration states (when
+    /// `COALA_HEALTH=1`): the diagonal of an accumulated R yields a free
+    /// condition estimate — |r_ii| are the column norms of Q-projected
+    /// data, so max|r_ii|/min|r_ii| lower-bounds cond(R) without any
+    /// factorization — and sketch states report their geometry (rows s
+    /// vs width, Ω family, folds absorbed).  Pure reads of
+    /// already-computed state; zero flops when the knob is off.
+    fn probe_accum_health(&self, accums: &CalibStates) {
+        use crate::telemetry::health::{self, HealthEvent};
+        if !health::enabled() {
+            return;
+        }
+        let tel = &self.plan.telemetry;
+        for ((layer, stream), state) in accums {
+            let span = format!("accumulate/{layer}.{stream}");
+            match state {
+                CalibState::R(r) => {
+                    let n = r.rows.min(r.cols);
+                    let mut dmax = 0.0f64;
+                    let mut dmin = f64::INFINITY;
+                    for i in 0..n {
+                        let d = (r.get(i, i) as f64).abs();
+                        dmax = dmax.max(d);
+                        dmin = dmin.min(d);
+                    }
+                    let cond = if dmin > 0.0 { dmax / dmin } else { f64::INFINITY };
+                    tel.health_event(
+                        Some(&span),
+                        &HealthEvent::new("r_cond")
+                            .num("cond", cond)
+                            .num("diag_max", dmax)
+                            .num("diag_min", dmin)
+                            .num("n", n as f64),
+                    );
+                }
+                CalibState::Sketch { y, folds, kind } => {
+                    tel.health_event(
+                        Some(&span),
+                        &HealthEvent::new("sketch")
+                            .num("rows", y.rows as f64)
+                            .num("width", y.cols as f64)
+                            .num("folds", *folds as f64)
+                            .txt("family", kind.label()),
+                    );
+                }
+                _ => {}
+            }
+        }
     }
 }
 

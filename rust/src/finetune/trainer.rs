@@ -279,6 +279,24 @@ impl FineTuner for HostFineTuner {
             let pairs = &pair_sets[i % pair_sets.len()];
             let (loss, grads) = model.loss_and_grads(pairs, self.workers)?;
             losses.push(loss as f32);
+            // health probe: loss + global gradient norm per step.  The
+            // norm is computed only when the knob is on, from gradients
+            // that exist either way — the update itself never changes.
+            if crate::telemetry::health::enabled() {
+                let mut g2 = 0.0f64;
+                for (ga, gb) in &grads {
+                    for v in ga.data.iter().chain(gb.data.iter()) {
+                        g2 += v * v;
+                    }
+                }
+                self.telemetry.health_event(
+                    None,
+                    &crate::telemetry::health::HealthEvent::new("trainer_step")
+                        .num("step", i as f64)
+                        .num("loss", loss)
+                        .num("grad_norm", g2.sqrt()),
+                );
+            }
             let lr_i = cosine_decay_lr(lr, i, steps);
             adam.begin_step();
             for gi in 0..model.n_projs() {

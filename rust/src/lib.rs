@@ -92,12 +92,29 @@
 //!   measurement (codec encode/decode, checkpoint write/resume,
 //!   trainer step) use `start_timer` drop guards at the call site.
 //!   Records carry structured labels (config, method, route, accum,
-//!   workers, shards) and append atomically to the `COALA_TELEMETRY`
-//!   path, so multi-process shard runs can share one file.  The
-//!   default build compiles the sink to a no-op unit struct: zero
-//!   telemetry code paths.  `benches/pipeline.rs` embeds the same
-//!   stage breakdowns in `BENCH_pipeline.json`, and CI's `perf-gate`
-//!   job diffs both bench dumps against the committed baseline
+//!   workers, shards) **plus a deterministic `run_id` + `span`**: the
+//!   run_id is an FNV-1a hash of the calibration-source fingerprint
+//!   ([`telemetry::run_id_for`]), so all N `coala shard` processes and
+//!   the `coala merge` stitch into one trace with zero coordination,
+//!   distinguished by span (`shard/0` … `merge`; per-projection health
+//!   events use `factorize/<proj>`).  Records append atomically to the
+//!   `COALA_TELEMETRY` path, so multi-process shard runs can share one
+//!   file.  `COALA_HEALTH=1` additionally arms the numerical-health
+//!   probes ([`telemetry::health`]): R-diagonal condition estimates,
+//!   exact σ extremes where an SVD already ran, Jacobi
+//!   sweeps-to-converge, effective μ, sketch geometry, non-finite
+//!   factor detection, and trainer loss/grad-norm traces — all
+//!   observation-only (factors stay bitwise identical with health on
+//!   or off).  `coala report <files…>` ([`telemetry::report`])
+//!   aggregates traces into per-(run_id, stage) summaries, a
+//!   busy-vs-stall breakdown (the engine measures its bounded-channel
+//!   backpressure as `capture_stall`/`accum_idle`), per-shard skew,
+//!   and a health digest, with `--json` for CI.  The default build
+//!   compiles the sink to a no-op unit struct: zero telemetry code
+//!   paths (reading with `coala report` still works — it needs no
+//!   feature).  `benches/pipeline.rs` embeds the same stage breakdowns
+//!   in `BENCH_pipeline.json`, and CI's `perf-gate` job diffs both
+//!   bench dumps against the committed baseline
 //!   (`rust/benches/baseline/`) via `python/tools/perf_gate.py`.
 //!
 //! ## Reproducing the tables without artifacts
@@ -226,6 +243,7 @@
 //! | `COALA_SVD_QR_PRECOND` | flag (default on)  | QR-precondition tall SVD inputs before the Jacobi iteration | no |
 //! | `COALA_GOLDEN_REGEN` | flag                 | regenerate `tests/golden/stability.json` in `cargo test` | no |
 //! | `COALA_TELEMETRY`    | path                 | JSONL telemetry sink (requires `--features telemetry`; setting it on a default build is an error) | no |
+//! | `COALA_HEALTH`       | flag                 | arm the numerical-health probes ([`telemetry::health`]) — observation-only, factors stay bitwise identical (requires `--features telemetry`; setting it on a default build is an error) | no |
 
 pub mod calib;
 pub mod coala;

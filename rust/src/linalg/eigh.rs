@@ -52,11 +52,13 @@ pub fn eigh<T: Scalar>(s: &Matrix<T>, max_sweeps: usize) -> Result<(Vec<T>, Matr
     let thresh = tol * tol * total;
 
     let mut sweeps = 0u64;
+    let mut converged = false;
     for _ in 0..max_sweeps {
         if off <= thresh {
             // heal running-sum drift before trusting the exit
             off = off_mass(&a, n);
             if off <= thresh {
+                converged = true;
                 break;
             }
         }
@@ -98,10 +100,23 @@ pub fn eigh<T: Scalar>(s: &Matrix<T>, max_sweeps: usize) -> Result<(Vec<T>, Matr
         }
         sweeps += 1;
         if !any {
+            converged = true;
             break;
         }
     }
     note_sweeps(sweeps);
+
+    // health probe: sweep count, convergence flag, and the running
+    // off-diagonal mass already exist — pure reads
+    if crate::telemetry::health::enabled() {
+        crate::telemetry::health::note(
+            crate::telemetry::health::HealthEvent::new("eigh")
+                .num("sweeps", sweeps as f64)
+                .num("converged", if converged { 1.0 } else { 0.0 })
+                .num("off_mass", off)
+                .num("n", n as f64),
+        );
+    }
 
     let mut order: Vec<usize> = (0..n).collect();
     let diag: Vec<f64> = (0..n).map(|i| a.get(i, i).to_f64()).collect();

@@ -289,6 +289,7 @@ fn jacobi_core<T: Scalar>(
     let barrier = Barrier::new(w);
     let rotated = AtomicBool::new(false);
     let sweeps_run = AtomicU64::new(0);
+    let converged = AtomicBool::new(false);
 
     let worker = |wid: usize| {
         for _sweep in 0..max_sweeps {
@@ -324,6 +325,9 @@ fn jacobi_core<T: Scalar>(
             let any = rotated.load(Ordering::Relaxed);
             barrier.wait();
             if !any {
+                if wid == 0 {
+                    converged.store(true, Ordering::Relaxed);
+                }
                 break;
             }
             if wid == 0 {
@@ -359,6 +363,21 @@ fn jacobi_core<T: Scalar>(
         .collect();
     let mut order: Vec<usize> = (0..n).collect();
     order.sort_by(|&i, &j| norms_f[j].total_cmp(&norms_f[i]));
+
+    // health probe: σ_max/σ_min are the sorted final column norms, the
+    // sweep count and convergence flag already exist — pure reads
+    if crate::telemetry::health::enabled() {
+        let smax = order.first().map(|&j| norms_f[j]).unwrap_or(0.0);
+        let smin = order.last().map(|&j| norms_f[j]).unwrap_or(0.0);
+        crate::telemetry::health::note(
+            crate::telemetry::health::HealthEvent::new("svd")
+                .num("sweeps", sweeps_run.load(Ordering::Relaxed) as f64)
+                .num("converged", if converged.load(Ordering::Relaxed) { 1.0 } else { 0.0 })
+                .num("sigma_max", smax)
+                .num("sigma_min", smin)
+                .num("cols", n as f64),
+        );
+    }
 
     let mut u = Matrix::zeros(m, n);
     let mut v = Matrix::zeros(n, n);

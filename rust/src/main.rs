@@ -34,6 +34,12 @@
 //!                             (`--from-source` runs that single-process
 //!                             reference and writes the same file
 //!                             format, so `cmp` checks the guarantee)
+//!   report    <telemetry.jsonl> … [--json] [--cond-threshold T]
+//!                             aggregate telemetry JSONL files into
+//!                             per-(run_id, stage) timing summaries, a
+//!                             busy-vs-stall breakdown, per-shard skew,
+//!                             and a numerical-health digest (works on
+//!                             any build — reading needs no feature)
 //!   tsqr-demo --workers 4     out-of-core tree-TSQR demonstration
 //!
 //! `--workers`/`--queue-cap` configure the execution engine
@@ -137,14 +143,19 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
             );
             let kind = resolve_accum_kind(comp.as_ref(), accum)?;
             let workers = plan.capture_workers;
-            plan.telemetry = coala::telemetry::TelemetrySink::from_env()?.with_labels(|l| {
-                l.config = cfg.to_string();
-                l.method = comp.name();
-                l.route = format!("{route:?}").to_lowercase();
-                l.accum = format!("{kind:?}").to_lowercase();
-                l.workers = workers;
-                l.shards = 1;
-            });
+            plan.telemetry = coala::telemetry::TelemetrySink::from_env()?
+                .with_labels(|l| {
+                    l.config = cfg.to_string();
+                    l.method = comp.name();
+                    l.route = format!("{route:?}").to_lowercase();
+                    l.accum = format!("{kind:?}").to_lowercase();
+                    l.workers = workers;
+                    l.shards = 1;
+                    l.span = "run".to_string();
+                })
+                // same fingerprint shape as Env::source_id (the artifact
+                // route has no seed knob, so seed is pinned to 0)
+                .with_run(&format!("{cfg}:{route:?}:seed0:b{}", job.calib_batches));
             let pipe = Pipeline::new(&ex, spec.clone(), &w)
                 .with_route(route)
                 .with_plan(plan)
@@ -250,13 +261,23 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
             let total = args.get_usize("calib-batches", 8)?;
             let shard_count = args.get_usize("shard-count", 1)?;
             let plan = ShardPlan::new(total, shard_count)?;
-            let range = plan.range(args.get_usize("shard-index", 0)?)?;
-            env.plan.telemetry = env.plan.telemetry.clone().with_labels(|l| {
-                l.config = cfg.to_string();
-                l.method = comp.name();
-                l.accum = format!("{kind:?}").to_lowercase();
-                l.shards = shard_count;
-            });
+            let index = args.get_usize("shard-index", 0)?;
+            let range = plan.range(index)?;
+            env.plan.telemetry = env
+                .plan
+                .telemetry
+                .clone()
+                .with_labels(|l| {
+                    l.config = cfg.to_string();
+                    l.method = comp.name();
+                    l.accum = format!("{kind:?}").to_lowercase();
+                    l.shards = shard_count;
+                    l.span = format!("shard/{index}");
+                })
+                // every shard of a run hashes the same source
+                // fingerprint, so all N processes (and the merge) stamp
+                // one run_id — the trace stitches with no coordination
+                .with_run(&env.source_id(cfg, total)?);
             let out = args.get_or("out", "shard.state");
             println!(
                 "accumulating {} shard: batches [{}, {}) of {total} for {} ({:?} statistic, {} route) …",
@@ -285,6 +306,8 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
             tel.stage_s("capture", t.calibrate_s);
             tel.stage_s("accumulate", t.accumulate_s);
             tel.stage_s("merge_reduce", t.merge_s);
+            tel.stage_s("capture_stall", t.capture_stall_s);
+            tel.stage_s("accum_idle", t.accum_idle_s);
             println!(
                 "wrote {out}: {} pending merge states in {:.2}s (capture {:.2}s / \
                  accumulate {:.2}s / merge {:.2}s)",
@@ -310,6 +333,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
                 l.config = cfg.to_string();
                 l.method = comp.name();
                 l.shards = n_shards;
+                l.span = "merge".to_string();
             });
             let mut t = StageTimings::default();
             let states = if args.get_bool("from-source") {
@@ -317,6 +341,8 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
                 // file format — `cmp` against a sharded merge checks
                 // the bitwise guarantee end-to-end
                 let total = args.get_usize("calib-batches", 8)?;
+                env.plan.telemetry =
+                    env.plan.telemetry.clone().with_run(&env.source_id(cfg, total)?);
                 println!("single-process calibration over {total} batches …");
                 let src = env.calib_source(&spec, &w, total)?;
                 engine::calibrate_checkpointed(
@@ -341,6 +367,13 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
                 }
                 println!("merging {} shard state files …", files.len());
                 let parts = files.iter().map(|f| ShardState::read(f)).collect::<Result<Vec<_>>>()?;
+                // the shard files carry the calibration-source
+                // fingerprint the shard processes hashed their run_id
+                // from; reusing it stitches merge into the same trace
+                // (merge_shard_states rejects mixed fingerprints)
+                if let Some(p) = parts.first() {
+                    env.plan.telemetry = env.plan.telemetry.clone().with_run(&p.source);
+                }
                 engine::merge_shard_states(parts, env.accum_backend(), &mut t)?
             };
             let job = CompressionJob::new(cfg, comp.method(), args.get_f64("ratio", 0.5)?);
@@ -361,6 +394,17 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
             // `coala repro --route host` (no id) regenerates everything
             let id = args.positional.get(1).map(String::as_str).unwrap_or("all");
             coala::repro::run(id, args)
+        }
+        "report" => {
+            // analyzer over telemetry JSONL — pure reading, so it works
+            // on any build, including ones without the telemetry feature
+            let files = args.positional[1..].to_vec();
+            let opts = coala::telemetry::report::ReportOptions {
+                json: args.get_bool("json"),
+                cond_threshold: args.get_f64("cond-threshold", 1e8)?,
+            };
+            print!("{}", coala::telemetry::report::render(&files, &opts)?);
+            Ok(())
         }
         "tsqr-demo" => {
             let workers = args.get_usize("workers", 4)?;
@@ -385,7 +429,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         _ => {
             println!(
                 "coala — context-aware low-rank approximation (COALA) coordinator\n\n\
-                 usage: coala <selfcheck|info|methods|compress|eval|finetune|repro|shard|merge|tsqr-demo> [--flags]\n\
+                 usage: coala <selfcheck|info|methods|compress|eval|finetune|repro|shard|merge|report|tsqr-demo> [--flags]\n\
                  see README.md for the full tour"
             );
             Ok(())

@@ -78,6 +78,7 @@ impl Env {
             l.route = format!("{route:?}").to_lowercase();
             l.workers = workers;
             l.shards = 1;
+            l.span = "run".to_string();
         });
         Ok(env)
     }
@@ -224,11 +225,17 @@ impl Env {
         let accum = self.accum.filter(|_| comp.accum_kind() == AccumKind::RFactor);
         let mut plan = self.plan.clone();
         let kind = accum.unwrap_or_else(|| comp.accum_kind());
-        plan.telemetry = plan.telemetry.with_labels(|l| {
-            l.config = job.config.clone();
-            l.method = job.method.name();
-            l.accum = format!("{kind:?}").to_lowercase();
-        });
+        plan.telemetry = plan
+            .telemetry
+            .with_labels(|l| {
+                l.config = job.config.clone();
+                l.method = job.method.name();
+                l.accum = format!("{kind:?}").to_lowercase();
+            })
+            // the calibration-source fingerprint doubles as the trace
+            // id: shard/merge processes of the same run derive the same
+            // run_id with zero coordination
+            .with_run(&self.source_id(&job.config, job.calib_batches)?);
         let pipe = Pipeline::new(&self.ex, spec.clone(), weights)
             .with_route(self.route)
             .with_plan(plan)
@@ -333,10 +340,19 @@ impl Env {
     /// drivers never branch on the route themselves.
     pub fn fine_tuner<'a>(&'a self, spec: &ModelSpec, rank: usize) -> Box<dyn FineTuner + 'a> {
         if self.synthetic {
+            let tel = self
+                .plan
+                .telemetry
+                .clone()
+                .with_labels(|l| {
+                    l.config = spec.name.clone();
+                    l.span = "trainer".to_string();
+                })
+                .with_run(&format!("{}:{:?}:seed{}:ft", spec.name, self.route, self.seed));
             Box::new(
                 HostFineTuner::new(spec.clone(), rank)
                     .with_workers(self.plan.factorize_workers)
-                    .with_telemetry(self.plan.telemetry.clone()),
+                    .with_telemetry(tel),
             )
         } else {
             Box::new(DeviceFineTuner::new(&self.ex, spec, rank))

@@ -1,0 +1,144 @@
+//! Numerical-health probes (`COALA_HEALTH`): per-stage evidence of how
+//! *healthy* the math was, not just how long it took.
+//!
+//! COALA's pitch is numerical stability — avoiding Gram inversion,
+//! surviving nearly singular activations, regularizing thin data — so
+//! the runtime should surface the observable quantities its guarantees
+//! are stated in: condition estimates of the accumulated R, exact
+//! σ_min/σ_max where an SVD already ran, Jacobi sweeps-to-converge and
+//! final off-diagonal mass, the effective regularization μ actually
+//! applied, sketch geometry (rows s vs width, Ω family), non-finite
+//! factor detection, and trainer grad-norm/loss traces.
+//!
+//! Probe sites deep in the kernels (`linalg::svd`, `linalg::eigh`,
+//! `coala::regularized`) have no telemetry handle; they push
+//! [`HealthEvent`]s into a thread-local buffer via [`note`], and the
+//! stage driver that owns a `TelemetrySink` calls [`drain`] and emits
+//! `health` records.  The engine factorizes each projection to
+//! completion on one worker thread, so a drain right after a factorize
+//! call collects exactly that projection's events.  Sites that already
+//! hold a sink (pipeline, trainer) emit directly.
+//!
+//! Contract: **zero flops when off, observation-only when on.**  Every
+//! probe is guarded by [`enabled`] (one relaxed atomic load; constant
+//! `false` on the default build, so the probe blocks compile out) and
+//! only *reads* state the kernel already computed.  Factors stay
+//! bitwise-identical with health on or off.
+//!
+//! `COALA_HEALTH` follows the strict-knob contract: `1|true|yes` /
+//! `0|false|no` (case-insensitive), garbage is a hard error naming the
+//! knob, and setting it at all on a build without the `telemetry`
+//! feature is a loud error — never a silently ignored knob.
+
+use crate::error::Result;
+
+/// One numerical observation from a probe site: a probe name plus
+/// numeric and text fields, flattened into the emitted `health` record.
+#[derive(Debug, Clone)]
+pub struct HealthEvent {
+    pub probe: &'static str,
+    pub num: Vec<(&'static str, f64)>,
+    pub txt: Vec<(&'static str, String)>,
+}
+
+impl HealthEvent {
+    pub fn new(probe: &'static str) -> HealthEvent {
+        HealthEvent { probe, num: Vec::new(), txt: Vec::new() }
+    }
+
+    pub fn num(mut self, key: &'static str, v: f64) -> HealthEvent {
+        self.num.push((key, v));
+        self
+    }
+
+    pub fn txt(mut self, key: &'static str, v: impl Into<String>) -> HealthEvent {
+        self.txt.push((key, v.into()));
+        self
+    }
+}
+
+#[cfg(feature = "telemetry")]
+mod imp {
+    use super::HealthEvent;
+    use std::cell::RefCell;
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static ENABLED: AtomicBool = AtomicBool::new(false);
+
+    thread_local! {
+        static PENDING: RefCell<Vec<HealthEvent>> = RefCell::new(Vec::new());
+    }
+
+    /// One relaxed load — the entire cost of a probe site when off.
+    #[inline]
+    pub fn enabled() -> bool {
+        ENABLED.load(Ordering::Relaxed)
+    }
+
+    /// Direct toggle for tests; production goes through
+    /// [`super::init_from_env`].
+    pub fn set_enabled(on: bool) {
+        ENABLED.store(on, Ordering::Relaxed);
+    }
+
+    /// Buffer one observation on the current thread (no-op when off).
+    pub fn note(ev: HealthEvent) {
+        if enabled() {
+            PENDING.with(|p| p.borrow_mut().push(ev));
+        }
+    }
+
+    /// Take every observation buffered on the current thread.
+    pub fn drain() -> Vec<HealthEvent> {
+        PENDING.with(|p| std::mem::take(&mut *p.borrow_mut()))
+    }
+}
+
+#[cfg(not(feature = "telemetry"))]
+mod imp {
+    use super::HealthEvent;
+
+    /// Constant `false` on the default build: probe blocks compile out.
+    #[inline]
+    pub fn enabled() -> bool {
+        false
+    }
+
+    #[inline]
+    pub fn set_enabled(_on: bool) {}
+
+    #[inline]
+    pub fn note(_ev: HealthEvent) {}
+
+    #[inline]
+    pub fn drain() -> Vec<HealthEvent> {
+        Vec::new()
+    }
+}
+
+pub use imp::{drain, enabled, note, set_enabled};
+
+/// Initialize the probe gate from `COALA_HEALTH` (strict flag grammar;
+/// unset means off).  Called by `TelemetrySink::from_env`, so every
+/// driver entry point arms the probes before any kernel runs.
+#[cfg(feature = "telemetry")]
+pub fn init_from_env() -> Result<bool> {
+    let on = crate::util::env::flag("COALA_HEALTH")?;
+    imp::set_enabled(on);
+    Ok(on)
+}
+
+/// Loud failure instead of a silently ignored knob: setting
+/// `COALA_HEALTH` against a build without the `telemetry` feature is a
+/// config error.
+#[cfg(not(feature = "telemetry"))]
+pub fn init_from_env() -> Result<bool> {
+    if std::env::var_os("COALA_HEALTH").is_some() {
+        return Err(crate::error::Error::Config(
+            "COALA_HEALTH is set but this build lacks the `telemetry` \
+             feature; rebuild with `--features telemetry` or unset it"
+                .into(),
+        ));
+    }
+    Ok(false)
+}

@@ -15,12 +15,19 @@ use crate::error::{Error, Result};
 use std::fs::{File, OpenOptions};
 use std::io::{Read as _, Seek, SeekFrom, Write as _};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
 
 #[derive(Debug)]
 pub struct Appender {
     path: PathBuf,
     file: Mutex<File>,
+    /// Appends that failed since the last success (a dying disk must
+    /// not turn into a stderr flood: the sink warns once via
+    /// [`Appender::note_drop`], counts the rest, and surfaces the
+    /// count as a `records_dropped` counter on the next success).
+    dropped: AtomicU64,
+    warned: AtomicBool,
 }
 
 impl Appender {
@@ -42,11 +49,34 @@ impl Appender {
                 file.write_all(b"\n").map_err(|e| Error::io(p, e))?;
             }
         }
-        Ok(Appender { path: p.to_path_buf(), file: Mutex::new(file) })
+        Ok(Appender {
+            path: p.to_path_buf(),
+            file: Mutex::new(file),
+            dropped: AtomicU64::new(0),
+            warned: AtomicBool::new(false),
+        })
     }
 
     pub fn path(&self) -> &Path {
         &self.path
+    }
+
+    /// Record a failed append: warn on stderr exactly once for this
+    /// appender's lifetime, then just count.
+    pub fn note_drop(&self, err: &Error) {
+        if !self.warned.swap(true, Ordering::Relaxed) {
+            eprintln!(
+                "telemetry: dropping records ({err}); further drops are \
+                 counted and reported on the next successful append"
+            );
+        }
+        self.dropped.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Take the pending drop count (0 if none) — the caller emits it
+    /// as a `records_dropped` counter after a successful append.
+    pub fn take_dropped(&self) -> u64 {
+        self.dropped.swap(0, Ordering::Relaxed)
     }
 
     /// Append one record (without trailing newline) as a single write.

@@ -10,17 +10,51 @@
 //! ```text
 //! {"kind":"stage","stage":"accumulate","s":0.0123,
 //!  "config":"tiny","method":"coala","route":"host","accum":"exact",
+//!  "run_id":"91ab0c5de32f7a18","span":"run",
 //!  "workers":4,"shards":1,"pid":4242,"t_unix_s":1754650000.5}
 //! ```
 //!
+//! ## Record schema
+//!
+//! Every record carries the label set (`config`/`method`/`route`/
+//! `accum`/`workers`/`shards`), `run_id` + `span` (trace stitching),
+//! `pid`, and `t_unix_s`, plus per-kind fields:
+//!
+//! | `kind`    | fields            | meaning                                 |
+//! |-----------|-------------------|-----------------------------------------|
+//! | `run`     | `source`          | one header per process per run; `run_id`|
+//! |           |                   | is the FNV-1a hash of the `source`      |
+//! |           |                   | calibration fingerprint                 |
+//! | `stage`   | `stage`, `s`      | busy seconds of one stage, incl. the    |
+//! |           |                   | backpressure pair `capture_stall` /     |
+//! |           |                   | `accum_idle` (bounded-channel waits)    |
+//! | `counter` | `name`, `value`   | monotonic count (exact u64)             |
+//! | `health`  | `probe`, …        | numerical evidence (see [`health`]):    |
+//! |           |                   | σ extremes, Jacobi sweeps, R condition  |
+//! |           |                   | estimates, μ, sketch geometry,          |
+//! |           |                   | non-finite flags, trainer loss/grads    |
+//!
+//! `run_id` is derived deterministically ([`run_id_for`]) from the
+//! calibration source fingerprint (`config:route:seed:batches[:accum]`)
+//! — no wall-clock entropy — so the JSONL of a multi-process
+//! `coala shard` × N + `coala merge` run stitches into **one trace**:
+//! every shard and the merge stamp the same `run_id`, distinguished by
+//! `span` (`shard/0`, `shard/1`, …, `merge`; per-projection health
+//! events use `factorize/<proj>`; the trainer uses `trainer`).
+//!
+//! `coala report <files...>` ([`report`]) aggregates one or more such
+//! files into per-(run_id, stage) summaries and a health digest.
+//!
 //! Instrumented stages: `capture`, `accumulate`, `merge_reduce`,
 //! `factorize` (emitted from the engine's *existing* busy-time tracking
-//! via [`TelemetrySink::stage_s`] — never re-timed), plus
-//! `codec_encode` / `codec_decode`, `checkpoint_write` /
+//! via [`TelemetrySink::stage_s`] — never re-timed), `capture_stall` /
+//! `accum_idle` (the bounded-channel blocked time measured inside the
+//! engine), plus `codec_encode` / `codec_decode`, `checkpoint_write` /
 //! `checkpoint_resume`, and `trainer_step` (timed at the call site via
 //! [`TelemetrySink::start_timer`], since no pre-existing measurement
 //! covers them).  [`TelemetrySink::counter`] records monotonic counts
-//! (e.g. batches folded).
+//! (e.g. batches folded) exactly — integer values never round-trip
+//! through f64.
 //!
 //! Design constraints, in order:
 //!
@@ -31,20 +65,28 @@
 //!    and every emit returns at one branch.
 //! 2. **Never perturb determinism.**  The sink only *observes* wall
 //!    time; it is carried by `EnginePlan` alongside the worker counts
-//!    and touches no numeric state.  Results remain bitwise-identical
-//!    with telemetry on, off, or pointed at different files.
+//!    and touches no numeric state.  The [`health`] probes
+//!    (`COALA_HEALTH=1`) likewise only *read* state the kernels already
+//!    computed.  Results remain bitwise-identical with telemetry and
+//!    health on, off, or pointed at different files.
 //! 3. **Crash-tolerant appends.**  Lines are written with a single
 //!    `write_all` on an `O_APPEND` handle; on open, a file whose last
 //!    byte is not `\n` (a previous writer died mid-line) gets the
 //!    partial line terminated first, so the file stays parsable
-//!    line-by-line after any crash.
+//!    line-by-line after any crash.  A failing disk warns on stderr
+//!    **once**, then drops are counted and surfaced as a
+//!    `records_dropped` counter on the next successful append — never a
+//!    stderr flood.
 //!
-//! `COALA_TELEMETRY` is parsed through the strict `util::env` helpers
-//! from day one: an empty value is an error, and setting it on a build
-//! *without* the feature is a loud error rather than a silently
-//! ignored knob.
+//! `COALA_TELEMETRY` and `COALA_HEALTH` are parsed through the strict
+//! `util::env` helpers from day one: garbage values are errors, and
+//! setting either on a build *without* the feature is a loud error
+//! rather than a silently ignored knob.
 
 use crate::error::Result;
+
+pub mod health;
+pub mod report;
 
 #[cfg(feature = "telemetry")]
 mod jsonl;
@@ -54,27 +96,48 @@ pub use jsonl::Appender;
 /// Structured labels attached to every telemetry record.
 ///
 /// `workers` is the engine-plan worker count; `shards` is the
-/// multi-process shard count (1 for single-process runs).  Empty
-/// strings serialize as `""` — a record is always schema-complete.
+/// multi-process shard count (1 for single-process runs).  `run_id` is
+/// the deterministic trace id ([`run_id_for`]); `span` names the
+/// process/stage scope inside the trace (`run`, `shard/3`, `merge`,
+/// `trainer`).  Empty strings serialize as `""` — a record is always
+/// schema-complete.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct Labels {
     pub config: String,
     pub method: String,
     pub route: String,
     pub accum: String,
+    pub run_id: String,
+    pub span: String,
     pub workers: usize,
     pub shards: usize,
+}
+
+/// Deterministic trace id: FNV-1a over the calibration source
+/// fingerprint (`config:route:seed:batches[:accum]`).  Every process
+/// of a sharded run hashes the same fingerprint — the shard codec
+/// already refuses to merge states whose fingerprints differ — so
+/// shard and merge records stitch under one id with zero coordination
+/// and zero wall-clock entropy.
+pub fn run_id_for(fingerprint: &str) -> String {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in fingerprint.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    format!("{h:016x}")
 }
 
 // ---------------------------------------------------- enabled build
 
 #[cfg(feature = "telemetry")]
 mod sink {
+    use super::health::HealthEvent;
     use super::Labels;
     use crate::error::Result;
     use crate::util::json::Json;
-    use std::collections::BTreeMap;
-    use std::sync::Arc;
+    use std::collections::{BTreeMap, BTreeSet};
+    use std::sync::{Arc, Mutex, OnceLock};
     use std::time::{Instant, SystemTime, UNIX_EPOCH};
 
     /// Cloneable handle to the run's JSONL appender plus the label set
@@ -87,6 +150,16 @@ mod sink {
         labels: Labels,
     }
 
+    /// One `run` header per (file, run_id) per process: sweeping
+    /// drivers call [`TelemetrySink::with_run`] once per job, and jobs
+    /// sharing a fingerprint must not spam duplicate headers.
+    fn mark_run_emitted(path: &std::path::Path, run_id: &str) -> bool {
+        static EMITTED: OnceLock<Mutex<BTreeSet<(std::path::PathBuf, String)>>> = OnceLock::new();
+        let set = EMITTED.get_or_init(|| Mutex::new(BTreeSet::new()));
+        let mut set = set.lock().unwrap_or_else(|e| e.into_inner());
+        set.insert((path.to_path_buf(), run_id.to_string()))
+    }
+
     impl TelemetrySink {
         /// A sink that drops everything.
         pub fn disabled() -> TelemetrySink {
@@ -95,8 +168,11 @@ mod sink {
 
         /// Open the sink `COALA_TELEMETRY` points at, or a disabled
         /// sink when the variable is unset.  A set-but-empty value or
-        /// an unopenable path is a hard error.
+        /// an unopenable path is a hard error.  Also arms the
+        /// [`super::health`] probes from `COALA_HEALTH` (strict), so
+        /// every driver entry point initializes both knobs together.
         pub fn from_env() -> Result<TelemetrySink> {
+            super::health::init_from_env()?;
             match crate::util::env::string("COALA_TELEMETRY")? {
                 None => Ok(TelemetrySink::disabled()),
                 Some(path) => TelemetrySink::to_path(&path),
@@ -124,6 +200,23 @@ mod sink {
             self
         }
 
+        /// Stamp the deterministic `run_id` derived from the
+        /// calibration source fingerprint onto this sink and emit one
+        /// `run` header record carrying the raw fingerprint (deduped
+        /// per file × run_id within the process).
+        pub fn with_run(self, fingerprint: &str) -> TelemetrySink {
+            let rid = super::run_id_for(fingerprint);
+            let sink = self.with_labels(|l| l.run_id = rid.clone());
+            if let Some(appender) = &sink.inner {
+                if mark_run_emitted(appender.path(), &rid) {
+                    sink.emit("run", |o| {
+                        o.insert("source".into(), Json::Str(fingerprint.into()));
+                    });
+                }
+            }
+            sink
+        }
+
         /// Record an already-measured stage duration.  This is the
         /// bridge from the engine's existing `StageTimings` busy-time
         /// tracking — stages are never re-timed for telemetry.
@@ -134,11 +227,31 @@ mod sink {
             });
         }
 
-        /// Record a monotonic count.
+        /// Record a monotonic count, exactly: the value is serialized
+        /// as an integer literal (`Json::UInt`), never rounded through
+        /// f64 (which silently corrupts counts above 2^53).
         pub fn counter(&self, name: &str, value: u64) {
             self.emit("counter", |o| {
                 o.insert("name".into(), Json::Str(name.into()));
-                o.insert("value".into(), Json::Num(value as f64));
+                o.insert("value".into(), Json::UInt(value));
+            });
+        }
+
+        /// Emit one `health` record (see [`super::health`]).  `span`
+        /// overrides the label span — per-projection evidence lands
+        /// under `factorize/<proj>` while the sink stays shared.
+        pub fn health_event(&self, span: Option<&str>, ev: &HealthEvent) {
+            self.emit("health", |o| {
+                o.insert("probe".into(), Json::Str(ev.probe.into()));
+                for (k, v) in &ev.num {
+                    o.insert((*k).to_string(), Json::Num(*v));
+                }
+                for (k, v) in &ev.txt {
+                    o.insert((*k).to_string(), Json::Str(v.clone()));
+                }
+                if let Some(sp) = span {
+                    o.insert("span".into(), Json::Str(sp.into()));
+                }
             });
         }
 
@@ -153,22 +266,36 @@ mod sink {
             let Some(appender) = &self.inner else { return };
             let mut o = BTreeMap::new();
             o.insert("kind".to_string(), Json::Str(kind.into()));
-            fill(&mut o);
             let l = &self.labels;
             o.insert("config".to_string(), Json::Str(l.config.clone()));
             o.insert("method".to_string(), Json::Str(l.method.clone()));
             o.insert("route".to_string(), Json::Str(l.route.clone()));
             o.insert("accum".to_string(), Json::Str(l.accum.clone()));
+            o.insert("run_id".to_string(), Json::Str(l.run_id.clone()));
+            o.insert("span".to_string(), Json::Str(l.span.clone()));
             o.insert("workers".to_string(), Json::Num(l.workers as f64));
             o.insert("shards".to_string(), Json::Num(l.shards as f64));
             o.insert("pid".to_string(), Json::Num(std::process::id() as f64));
             if let Ok(t) = SystemTime::now().duration_since(UNIX_EPOCH) {
                 o.insert("t_unix_s".to_string(), Json::Num(t.as_secs_f64()));
             }
+            // The fill runs last so a per-record span override wins
+            // over the label default.
+            fill(&mut o);
             // Telemetry must never kill the run it observes: a failed
-            // append drops the record with a note on stderr.
-            if let Err(e) = appender.append_line(&Json::Obj(o).dump()) {
-                eprintln!("telemetry: dropped record: {e}");
+            // append warns once, then drops are counted and surfaced
+            // as a `records_dropped` counter on the next success.
+            match appender.append_line(&Json::Obj(o).dump()) {
+                Err(e) => appender.note_drop(&e),
+                Ok(()) => {
+                    let dropped = appender.take_dropped();
+                    if dropped > 0 {
+                        // One level of recursion only: the inner emit
+                        // sees a zero drop count.  If this append fails
+                        // too, the count restarts from its own drop.
+                        self.counter("records_dropped", dropped);
+                    }
+                }
             }
         }
     }
@@ -207,8 +334,9 @@ impl TelemetrySink {
     }
 
     /// Loud failure instead of a silently ignored knob: setting
-    /// `COALA_TELEMETRY` against a build without the `telemetry`
-    /// feature is a config error.
+    /// `COALA_TELEMETRY` (or `COALA_HEALTH`, via
+    /// [`health::init_from_env`]) against a build without the
+    /// `telemetry` feature is a config error.
     pub fn from_env() -> Result<TelemetrySink> {
         if std::env::var_os("COALA_TELEMETRY").is_some() {
             return Err(crate::error::Error::Config(
@@ -217,6 +345,7 @@ impl TelemetrySink {
                     .into(),
             ));
         }
+        health::init_from_env()?;
         Ok(TelemetrySink)
     }
 
@@ -231,10 +360,18 @@ impl TelemetrySink {
     }
 
     #[inline]
+    pub fn with_run(self, _fingerprint: &str) -> TelemetrySink {
+        self
+    }
+
+    #[inline]
     pub fn stage_s(&self, _stage: &str, _seconds: f64) {}
 
     #[inline]
     pub fn counter(&self, _name: &str, _value: u64) {}
+
+    #[inline]
+    pub fn health_event(&self, _span: Option<&str>, _ev: &health::HealthEvent) {}
 
     #[inline]
     pub fn start_timer(&self, _stage: &str) -> StageTimer {

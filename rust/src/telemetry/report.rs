@@ -1,0 +1,441 @@
+//! `coala report` — offline analyzer for telemetry JSONL traces.
+//!
+//! Parses one or more files produced by [`super::TelemetrySink`]
+//! (possibly from different processes of one sharded run — they stitch
+//! by `run_id`) and summarizes, per `(run_id, stage)`:
+//! count / total / mean / p50 / p99, a busy-vs-stall breakdown
+//! (`capture_stall` / `accum_idle` are waiting, everything else is
+//! work), and per-shard skew (max/min of per-`(pid, span)` stage
+//! totals), plus a health digest over the `health` records: condition
+//! estimates above `--cond-threshold`, non-convergent Jacobi calls,
+//! and non-finite factors/trainer state.
+//!
+//! Torn or malformed lines (a writer died mid-record before the
+//! appender's crash repair ran, or the file was truncated) are
+//! **skipped with a note**, never a crash — a trace is evidence, and
+//! partial evidence still counts.
+//!
+//! This module is deliberately *not* feature-gated: it only reads
+//! files, so the default build can analyze traces produced elsewhere.
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Stages that measure *waiting* on the bounded channel rather than
+/// work; everything else counts as busy time.
+const STALL_STAGES: [&str; 2] = ["capture_stall", "accum_idle"];
+
+#[derive(Debug, Clone, Copy)]
+pub struct ReportOptions {
+    /// Emit machine-readable JSON instead of the text report.
+    pub json: bool,
+    /// `r_cond` estimates above this are flagged as warnings.
+    pub cond_threshold: f64,
+}
+
+impl Default for ReportOptions {
+    fn default() -> ReportOptions {
+        ReportOptions { json: false, cond_threshold: 1e8 }
+    }
+}
+
+#[derive(Debug, Default)]
+struct StageAgg {
+    /// Every observed duration (seconds).
+    samples: Vec<f64>,
+    /// Per-(pid, span) totals — the skew axis across shard processes.
+    by_worker: BTreeMap<(u64, String), f64>,
+}
+
+#[derive(Debug, Default)]
+struct HealthAgg {
+    records: u64,
+    by_probe: BTreeMap<String, u64>,
+    high_cond: u64,
+    max_cond: f64,
+    nonconverged: u64,
+    nonfinite_factors: u64,
+    trainer_nonfinite: u64,
+}
+
+impl HealthAgg {
+    fn errors(&self) -> u64 {
+        self.nonfinite_factors + self.trainer_nonfinite
+    }
+}
+
+#[derive(Debug, Default)]
+struct RunAgg {
+    headers: u64,
+    sources: BTreeSet<String>,
+    stages: BTreeMap<String, StageAgg>,
+    counters: BTreeMap<String, u64>,
+    health: HealthAgg,
+}
+
+#[derive(Debug, Default)]
+struct Report {
+    files: usize,
+    skipped_lines: u64,
+    runs: BTreeMap<String, RunAgg>,
+}
+
+/// Nearest-rank percentile of an already-sorted sample set.
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = (q / 100.0 * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+fn ingest_line(rep: &mut Report, line: &str, opts: &ReportOptions) {
+    let rec = match Json::parse(line) {
+        Ok(v) => v,
+        Err(_) => {
+            rep.skipped_lines += 1;
+            return;
+        }
+    };
+    let field = |k: &str| rec.get(k).and_then(Json::as_str).unwrap_or("").to_string();
+    let num = |k: &str| rec.get(k).and_then(Json::as_f64);
+    let run = rep.runs.entry(field("run_id")).or_default();
+    match field("kind").as_str() {
+        "run" => {
+            run.headers += 1;
+            run.sources.insert(field("source"));
+        }
+        "stage" => {
+            let (stage, s) = (field("stage"), num("s").unwrap_or(0.0));
+            let agg = run.stages.entry(stage).or_default();
+            agg.samples.push(s);
+            let pid = rec.get("pid").and_then(Json::as_u64).unwrap_or(0);
+            *agg.by_worker.entry((pid, field("span"))).or_insert(0.0) += s;
+        }
+        "counter" => {
+            let v = rec.get("value").and_then(Json::as_u64).unwrap_or(0);
+            *run.counters.entry(field("name")).or_insert(0) += v;
+        }
+        "health" => {
+            let h = &mut run.health;
+            h.records += 1;
+            let probe = field("probe");
+            *h.by_probe.entry(probe.clone()).or_insert(0) += 1;
+            if let Some(cond) = num("cond") {
+                if cond > opts.cond_threshold || !cond.is_finite() {
+                    h.high_cond += 1;
+                }
+                if cond > h.max_cond || !cond.is_finite() {
+                    h.max_cond = cond;
+                }
+            }
+            if num("converged") == Some(0.0) {
+                h.nonconverged += 1;
+            }
+            if num("nonfinite").unwrap_or(0.0) > 0.0 {
+                h.nonfinite_factors += num("nonfinite").unwrap_or(0.0) as u64;
+            }
+            // Non-finite floats serialize as JSON null: a trainer
+            // record whose loss/grad vanished into null is an error.
+            if probe == "trainer_step" {
+                let gone = |k: &str| {
+                    matches!(rec.get(k), Some(Json::Null))
+                        || num(k).map(|v| !v.is_finite()).unwrap_or(false)
+                };
+                if gone("loss") || gone("grad_norm") {
+                    h.trainer_nonfinite += 1;
+                }
+            }
+        }
+        // Unknown kinds from future schema revisions are tolerated,
+        // exactly like perf_gate.py tolerates ours.
+        _ => {}
+    }
+}
+
+fn build(paths: &[String], opts: &ReportOptions) -> Result<Report> {
+    if paths.is_empty() {
+        return Err(Error::Config("report: no telemetry files given".into()));
+    }
+    let mut rep = Report::default();
+    for path in paths {
+        let text = std::fs::read_to_string(path).map_err(|e| Error::io(path, e))?;
+        rep.files += 1;
+        for line in text.lines() {
+            if !line.trim().is_empty() {
+                ingest_line(&mut rep, line, opts);
+            }
+        }
+    }
+    Ok(rep)
+}
+
+fn stage_json(name: &str, agg: &StageAgg) -> Json {
+    let mut sorted = agg.samples.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let total: f64 = sorted.iter().sum();
+    let n = sorted.len();
+    let mut pairs = vec![
+        ("stage", Json::Str(name.into())),
+        ("count", Json::UInt(n as u64)),
+        ("total_s", Json::Num(total)),
+        ("mean_s", Json::Num(if n > 0 { total / n as f64 } else { 0.0 })),
+        ("p50_s", Json::Num(percentile(&sorted, 50.0))),
+        ("p99_s", Json::Num(percentile(&sorted, 99.0))),
+    ];
+    if agg.by_worker.len() > 1 {
+        let min = agg.by_worker.values().cloned().fold(f64::INFINITY, f64::min);
+        let max = agg.by_worker.values().cloned().fold(0.0, f64::max);
+        pairs.push(("shard_min_s", Json::Num(min)));
+        pairs.push(("shard_max_s", Json::Num(max)));
+        pairs.push(("skew", Json::Num(if min > 0.0 { max / min } else { f64::INFINITY })));
+    }
+    Json::obj(pairs)
+}
+
+fn run_json(run_id: &str, run: &RunAgg, opts: &ReportOptions) -> Json {
+    let mut busy = 0.0;
+    let mut stall = 0.0;
+    for (stage, agg) in &run.stages {
+        let t: f64 = agg.samples.iter().sum();
+        if STALL_STAGES.contains(&stage.as_str()) {
+            stall += t;
+        } else {
+            busy += t;
+        }
+    }
+    let h = &run.health;
+    Json::obj(vec![
+        ("run_id", Json::Str(run_id.into())),
+        ("headers", Json::UInt(run.headers)),
+        (
+            "sources",
+            Json::Arr(run.sources.iter().map(|s| Json::Str(s.clone())).collect()),
+        ),
+        (
+            "stages",
+            Json::Arr(run.stages.iter().map(|(k, v)| stage_json(k, v)).collect()),
+        ),
+        ("busy_s", Json::Num(busy)),
+        ("stall_s", Json::Num(stall)),
+        (
+            "counters",
+            Json::Obj(run.counters.iter().map(|(k, v)| (k.clone(), Json::UInt(*v))).collect()),
+        ),
+        (
+            "health",
+            Json::obj(vec![
+                ("records", Json::UInt(h.records)),
+                (
+                    "probes",
+                    Json::Obj(
+                        h.by_probe.iter().map(|(k, v)| (k.clone(), Json::UInt(*v))).collect(),
+                    ),
+                ),
+                (
+                    "warnings",
+                    Json::obj(vec![
+                        ("high_cond", Json::UInt(h.high_cond)),
+                        ("max_cond", Json::Num(h.max_cond)),
+                        ("cond_threshold", Json::Num(opts.cond_threshold)),
+                        ("nonconverged", Json::UInt(h.nonconverged)),
+                    ]),
+                ),
+                (
+                    "errors",
+                    Json::obj(vec![
+                        ("nonfinite_factors", Json::UInt(h.nonfinite_factors)),
+                        ("trainer_nonfinite", Json::UInt(h.trainer_nonfinite)),
+                        ("total", Json::UInt(h.errors())),
+                    ]),
+                ),
+            ]),
+        ),
+    ])
+}
+
+fn render_text(rep: &Report, opts: &ReportOptions) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let _ = writeln!(out, "telemetry report: {} file(s), {} run(s)", rep.files, rep.runs.len());
+    if rep.skipped_lines > 0 {
+        let _ = writeln!(
+            out,
+            "note: skipped {} malformed line(s) (torn writes or truncation)",
+            rep.skipped_lines
+        );
+    }
+    for (run_id, run) in &rep.runs {
+        let shown = if run_id.is_empty() { "(none)" } else { run_id };
+        let _ = writeln!(out, "\n== run {shown} ({} header(s)) ==", run.headers);
+        for src in &run.sources {
+            let _ = writeln!(out, "  source: {src}");
+        }
+        let mut busy = 0.0;
+        let mut stall = 0.0;
+        for (stage, agg) in &run.stages {
+            let mut sorted = agg.samples.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+            let total: f64 = sorted.iter().sum();
+            if STALL_STAGES.contains(&stage.as_str()) {
+                stall += total;
+            } else {
+                busy += total;
+            }
+            let mean = if sorted.is_empty() { 0.0 } else { total / sorted.len() as f64 };
+            let _ = write!(
+                out,
+                "  stage {stage:<18} count {:>4}  total {total:9.4}s  mean {mean:9.4}s  \
+                 p50 {:9.4}s  p99 {:9.4}s",
+                sorted.len(),
+                percentile(&sorted, 50.0),
+                percentile(&sorted, 99.0),
+            );
+            if agg.by_worker.len() > 1 {
+                let min = agg.by_worker.values().cloned().fold(f64::INFINITY, f64::min);
+                let max = agg.by_worker.values().cloned().fold(0.0, f64::max);
+                let skew = if min > 0.0 { max / min } else { f64::INFINITY };
+                let _ = write!(out, "  skew {skew:5.2}x over {} worker(s)", agg.by_worker.len());
+            }
+            out.push('\n');
+        }
+        let frac = if busy + stall > 0.0 { 100.0 * stall / (busy + stall) } else { 0.0 };
+        let _ = writeln!(out, "  busy {busy:.4}s, stalled {stall:.4}s ({frac:.1}% waiting)");
+        if !run.counters.is_empty() {
+            let _ = write!(out, "  counters:");
+            for (k, v) in &run.counters {
+                let _ = write!(out, " {k}={v}");
+            }
+            out.push('\n');
+        }
+        let h = &run.health;
+        if h.records > 0 {
+            let _ = write!(out, "  health: {} record(s)", h.records);
+            for (k, v) in &h.by_probe {
+                let _ = write!(out, " {k}={v}");
+            }
+            out.push('\n');
+            let _ = writeln!(
+                out,
+                "    warnings: high_cond={} (max {:.3e}, threshold {:.1e}) nonconverged={}",
+                h.high_cond, h.max_cond, opts.cond_threshold, h.nonconverged
+            );
+            if h.errors() > 0 {
+                let _ = writeln!(
+                    out,
+                    "    ERRORS: nonfinite_factors={} trainer_nonfinite={}",
+                    h.nonfinite_factors, h.trainer_nonfinite
+                );
+            } else {
+                let _ = writeln!(out, "    errors: none");
+            }
+        }
+    }
+    out
+}
+
+/// Analyze `paths` and return the rendered report (text or JSON per
+/// `opts.json`).
+pub fn render(paths: &[String], opts: &ReportOptions) -> Result<String> {
+    let rep = build(paths, opts)?;
+    if !opts.json {
+        return Ok(render_text(&rep, opts));
+    }
+    let j = Json::obj(vec![
+        ("files", Json::UInt(rep.files as u64)),
+        ("skipped_lines", Json::UInt(rep.skipped_lines)),
+        (
+            "runs",
+            Json::Arr(rep.runs.iter().map(|(k, v)| run_json(k, v, opts)).collect()),
+        ),
+    ]);
+    Ok(j.dump())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn line(kind: &str, extra: &[(&str, Json)]) -> String {
+        let mut pairs = vec![
+            ("kind", Json::Str(kind.into())),
+            ("run_id", Json::Str("r1".into())),
+            ("span", Json::Str("run".into())),
+            ("pid", Json::UInt(1)),
+        ];
+        pairs.extend(extra.iter().cloned());
+        Json::obj(pairs).dump()
+    }
+
+    fn ingest(lines: &[String]) -> Report {
+        let mut rep = Report::default();
+        rep.files = 1;
+        for l in lines {
+            ingest_line(&mut rep, l, &ReportOptions::default());
+        }
+        rep
+    }
+
+    #[test]
+    fn malformed_lines_are_skipped_not_fatal() {
+        let rep = ingest(&[
+            line("stage", &[("stage", Json::Str("capture".into())), ("s", Json::Num(0.5))]),
+            r#"{"kind":"stage","stage":"tor"#.to_string(),
+            "not json at all".to_string(),
+        ]);
+        assert_eq!(rep.skipped_lines, 2);
+        assert_eq!(rep.runs["r1"].stages["capture"].samples, vec![0.5]);
+    }
+
+    #[test]
+    fn percentiles_use_nearest_rank() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 50.0), 50.0);
+        assert_eq!(percentile(&v, 99.0), 99.0);
+        assert_eq!(percentile(&[7.0], 99.0), 7.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn health_flags_classify_warnings_and_errors() {
+        let rep = ingest(&[
+            line("health", &[("probe", Json::Str("r_cond".into())), ("cond", Json::Num(1e12))]),
+            line(
+                "health",
+                &[
+                    ("probe", Json::Str("svd".into())),
+                    ("converged", Json::Num(0.0)),
+                    ("sweeps", Json::Num(40.0)),
+                ],
+            ),
+            line(
+                "health",
+                &[("probe", Json::Str("factors".into())), ("nonfinite", Json::Num(2.0))],
+            ),
+            line(
+                "health",
+                &[("probe", Json::Str("trainer_step".into())), ("loss", Json::Null)],
+            ),
+        ]);
+        let h = &rep.runs["r1"].health;
+        assert_eq!(h.high_cond, 1);
+        assert_eq!(h.nonconverged, 1);
+        assert_eq!(h.nonfinite_factors, 2);
+        assert_eq!(h.trainer_nonfinite, 1);
+        assert_eq!(h.errors(), 3);
+    }
+
+    #[test]
+    fn counters_sum_exactly_at_u64_scale() {
+        let rep = ingest(&[
+            line(
+                "counter",
+                &[("name", Json::Str("big".into())), ("value", Json::UInt(u64::MAX - 5))],
+            ),
+            line("counter", &[("name", Json::Str("big".into())), ("value", Json::UInt(5))]),
+        ]);
+        // wrapping is the caller's problem; exactness is ours
+        assert_eq!(rep.runs["r1"].counters["big"], (u64::MAX - 5).wrapping_add(5));
+    }
+}

@@ -1,7 +1,9 @@
 //! Minimal JSON: enough for manifest.json + experiment result dumps.
 //!
 //! Replaces serde_json (not in the offline vendor set).  Supports the
-//! full JSON grammar minus exotic number forms; numbers parse to f64.
+//! full JSON grammar minus exotic number forms.  Non-negative integer
+//! literals parse to [`Json::UInt`] so u64 counters (telemetry) survive
+//! a round trip bit-exactly; everything else parses to f64.
 
 use crate::error::{Error, Result};
 use std::collections::BTreeMap;
@@ -13,6 +15,9 @@ pub enum Json {
     Null,
     Bool(bool),
     Num(f64),
+    /// Exact unsigned integer.  `Num(f64)` silently corrupts values
+    /// above 2^53; u64 counters round-trip through this variant instead.
+    UInt(u64),
     Str(String),
     Arr(Vec<Json>),
     Obj(BTreeMap<String, Json>),
@@ -59,12 +64,26 @@ impl Json {
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
+            Json::UInt(n) => Some(*n as f64),
+            _ => None,
+        }
+    }
+
+    /// Exact unsigned integer: `UInt` as-is, or a `Num` that is a
+    /// non-negative whole number inside the f64-exact range.
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::UInt(n) => Some(*n),
+            Json::Num(n) if n.fract() == 0.0 && *n >= 0.0 && *n < 9.0e15 => Some(*n as u64),
             _ => None,
         }
     }
 
     pub fn as_usize(&self) -> Option<usize> {
-        self.as_f64().map(|f| f as usize)
+        match self {
+            Json::UInt(n) => Some(*n as usize),
+            _ => self.as_f64().map(|f| f as usize),
+        }
     }
 
     pub fn as_arr(&self) -> Option<&[Json]> {
@@ -136,6 +155,9 @@ impl Json {
                 } else {
                     let _ = write!(out, "{n}");
                 }
+            }
+            Json::UInt(n) => {
+                let _ = write!(out, "{n}");
             }
             Json::Str(s) => write_escaped(s, out),
             Json::Arr(a) => {
@@ -246,6 +268,14 @@ impl<'a> Parser<'a> {
         }
         let s = std::str::from_utf8(&self.b[start..self.pos])
             .map_err(|e| Error::Json(e.to_string()))?;
+        // Plain digit runs keep exact u64 precision; anything signed,
+        // fractional, or exponential (and digit runs beyond u64) takes
+        // the f64 path.
+        if s.bytes().all(|b| b.is_ascii_digit()) {
+            if let Ok(u) = s.parse::<u64>() {
+                return Ok(Json::UInt(u));
+            }
+        }
         s.parse::<f64>()
             .map(Json::Num)
             .map_err(|e| Error::Json(format!("bad number `{s}`: {e}")))
@@ -387,6 +417,21 @@ mod tests {
         assert!(Json::parse("{").is_err());
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("12 34").is_err());
+    }
+
+    #[test]
+    fn u64_max_roundtrips_exactly() {
+        let v = Json::UInt(u64::MAX);
+        let s = v.dump();
+        assert_eq!(s, "18446744073709551615");
+        let re = Json::parse(&s).unwrap();
+        assert_eq!(re.as_u64(), Some(u64::MAX));
+        assert_eq!(re, v);
+        // f64 would have rounded: nearby values collapse to one float
+        assert_eq!(u64::MAX as f64, (u64::MAX - 1024) as f64);
+        // beyond u64 the parser falls back to f64 rather than erroring
+        let big = Json::parse("99999999999999999999999").unwrap();
+        assert!(matches!(big, Json::Num(_)));
     }
 
     #[test]

@@ -194,6 +194,43 @@ fn telemetry_set_but_empty_is_an_error() {
 }
 
 #[test]
+fn health_flag_rejects_garbage_on_every_build() {
+    // Garbage is a hard error on *both* builds: the telemetry build's
+    // strict flag grammar rejects it, and the default build rejects the
+    // knob being set at all.
+    for bad in ["2", "on", "armed", " "] {
+        let err = with_env("COALA_HEALTH", Some(bad), || {
+            coala::telemetry::health::init_from_env().unwrap_err()
+        });
+        assert!(
+            err.to_string().contains("COALA_HEALTH"),
+            "error must name the knob for {bad:?}: {err}"
+        );
+    }
+}
+
+#[test]
+fn health_flag_valid_value_arms_or_errs_by_build() {
+    let res = with_env("COALA_HEALTH", Some("1"), coala::telemetry::health::init_from_env);
+    if cfg!(feature = "telemetry") {
+        assert!(res.unwrap(), "COALA_HEALTH=1 must arm the probes");
+        assert!(coala::telemetry::health::enabled());
+        coala::telemetry::health::set_enabled(false);
+    } else {
+        // a set-but-inert knob is a loud error, never silently ignored
+        let err = res.unwrap_err();
+        assert!(err.to_string().contains("COALA_HEALTH"), "{err}");
+        assert!(err.to_string().contains("telemetry"), "must point at the missing feature: {err}");
+    }
+    // unset is plain off on every build
+    let on = with_env("COALA_HEALTH", None, || {
+        coala::telemetry::health::init_from_env().unwrap()
+    });
+    assert!(!on);
+    assert!(!coala::telemetry::health::enabled());
+}
+
+#[test]
 fn artifacts_dir_set_but_empty_is_an_error() {
     let err = with_env("COALA_ARTIFACTS", Some("  "), || {
         coala::artifacts_dir(None).unwrap_err()

@@ -12,10 +12,33 @@ use coala::coala::compressor::{resolve, Compressor, Route};
 use coala::coordinator::{CompressionJob, EnginePlan, Pipeline};
 use coala::model::synthetic::{synthetic_manifest, synthetic_weights};
 use coala::runtime::Executor;
-use coala::telemetry::TelemetrySink;
+use coala::telemetry::health::{self, HealthEvent};
+use coala::telemetry::report::{self, ReportOptions};
+use coala::telemetry::{run_id_for, TelemetrySink};
 use coala::util::json::Json;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Mutex;
+
+/// The health gate is process-global; tests that toggle it or run the
+/// pipeline (whose factorize stage reacts to it) serialize here so one
+/// test's probes never leak into another's trace.
+static HEALTH_LOCK: Mutex<()> = Mutex::new(());
+
+/// Arm the health probes for one scope; the guard disarms on drop even
+/// if the test panics.
+struct HealthOn;
+impl HealthOn {
+    fn new() -> HealthOn {
+        health::set_enabled(true);
+        HealthOn
+    }
+}
+impl Drop for HealthOn {
+    fn drop(&mut self) {
+        health::set_enabled(false);
+    }
+}
 
 fn tmp_path(tag: &str) -> PathBuf {
     static N: AtomicU32 = AtomicU32::new(0);
@@ -33,8 +56,9 @@ fn parsed_lines(path: &PathBuf) -> Vec<Json> {
         .collect()
 }
 
-const SCHEMA_KEYS: [&str; 8] =
-    ["kind", "config", "method", "route", "accum", "workers", "shards", "pid"];
+const SCHEMA_KEYS: [&str; 10] = [
+    "kind", "config", "method", "route", "accum", "run_id", "span", "workers", "shards", "pid",
+];
 
 #[test]
 fn appender_emits_schema_complete_records() {
@@ -126,6 +150,7 @@ fn disabled_sink_is_a_no_op() {
 /// factors, and their telemetry differs only in timings/identity.
 #[test]
 fn engine_smoke_is_bitwise_identical_across_workers_with_telemetry_on() {
+    let _guard = HEALTH_LOCK.lock().unwrap_or_else(|p| p.into_inner());
     let ex = Executor::from_manifest(synthetic_manifest()).unwrap();
     let spec = ex.manifest.config("tiny").unwrap().clone();
     let w = synthetic_weights(&spec, 5);
@@ -169,7 +194,14 @@ fn engine_smoke_is_bitwise_identical_across_workers_with_telemetry_on() {
             .filter(|r| r.req("kind").unwrap().as_str() == Some("stage"))
             .map(|r| r.req("stage").unwrap().as_str().unwrap())
             .collect();
-        for want in ["capture", "accumulate", "merge_reduce", "factorize"] {
+        for want in [
+            "capture",
+            "accumulate",
+            "merge_reduce",
+            "factorize",
+            "capture_stall",
+            "accum_idle",
+        ] {
             assert!(stages.contains(&want), "w={workers}: stage `{want}` missing: {stages:?}");
         }
         assert!(
@@ -202,13 +234,12 @@ fn engine_smoke_is_bitwise_identical_across_workers_with_telemetry_on() {
             .iter()
             .map(|r| {
                 let kind = r.req("kind").unwrap().as_str().unwrap().to_string();
-                let what = r
-                    .req("stage")
-                    .or_else(|_| r.req("name"))
-                    .unwrap()
-                    .as_str()
-                    .unwrap()
-                    .to_string();
+                // stage/counter/health/run records key their "what" on
+                // different fields; fall through so no kind can panic
+                let what = ["stage", "name", "probe", "source"]
+                    .iter()
+                    .find_map(|k| r.req(k).ok().and_then(|v| v.as_str().map(str::to_string)))
+                    .unwrap_or_default();
                 let (config, method, route, accum) = (
                     r.req("config").unwrap().as_str().unwrap().to_string(),
                     r.req("method").unwrap().as_str().unwrap().to_string(),
@@ -225,4 +256,255 @@ fn engine_smoke_is_bitwise_identical_across_workers_with_telemetry_on() {
         }
         std::fs::remove_file(&path).ok();
     }
+}
+
+/// Tentpole schema: `run` headers and `health` records carry the full
+/// label set (run_id + span included), the header carries the raw
+/// fingerprint, and a per-record span override wins over the label.
+#[test]
+fn run_and_health_records_are_schema_complete() {
+    let path = tmp_path("runhealth");
+    let fp = "tiny:Host:seed5:b3";
+    {
+        let sink = TelemetrySink::to_path(path.to_str().unwrap())
+            .unwrap()
+            .with_labels(|l| {
+                l.config = "tiny".into();
+                l.route = "host".into();
+                l.span = "run".into();
+            })
+            .with_run(fp);
+        sink.health_event(
+            Some("factorize/l0.wq"),
+            &HealthEvent::new("svd")
+                .num("sweeps", 7.0)
+                .num("converged", 1.0)
+                .num("sigma_max", 3.5)
+                .num("sigma_min", 0.25)
+                .txt("family", "gaussian"),
+        );
+    }
+    let recs = parsed_lines(&path);
+    assert_eq!(recs.len(), 2, "one run header + one health record");
+    let rid = run_id_for(fp);
+    for rec in &recs {
+        for key in SCHEMA_KEYS {
+            assert!(rec.req(key).is_ok(), "record missing `{key}`: {rec:?}");
+        }
+        assert_eq!(rec.req("run_id").unwrap().as_str(), Some(rid.as_str()));
+    }
+    assert_eq!(recs[0].req("kind").unwrap().as_str(), Some("run"));
+    assert_eq!(recs[0].req("source").unwrap().as_str(), Some(fp));
+    assert_eq!(recs[0].req("span").unwrap().as_str(), Some("run"));
+    assert_eq!(recs[1].req("kind").unwrap().as_str(), Some("health"));
+    assert_eq!(recs[1].req("probe").unwrap().as_str(), Some("svd"));
+    assert_eq!(recs[1].req("span").unwrap().as_str(), Some("factorize/l0.wq"), "override wins");
+    assert_eq!(recs[1].req("sweeps").unwrap().as_f64(), Some(7.0));
+    assert_eq!(recs[1].req("family").unwrap().as_str(), Some("gaussian"));
+    std::fs::remove_file(&path).ok();
+}
+
+/// Span stitching: sinks standing in for two `coala shard` processes
+/// and the `coala merge` all hash the same calibration fingerprint, so
+/// every record in the shared file stamps one run_id — the trace
+/// stitches with zero coordination.
+#[test]
+fn shard_and_merge_sinks_stitch_under_one_run_id() {
+    let path = tmp_path("stitch");
+    let fp = "tiny:Host:seed9:b8";
+    for span in ["shard/0", "shard/1", "merge"] {
+        let sink = TelemetrySink::to_path(path.to_str().unwrap())
+            .unwrap()
+            .with_labels(|l| {
+                l.shards = 2;
+                l.span = span.to_string();
+            })
+            .with_run(fp);
+        sink.stage_s("accumulate", 0.25);
+    }
+    let recs = parsed_lines(&path);
+    let headers = recs
+        .iter()
+        .filter(|r| r.req("kind").unwrap().as_str() == Some("run"))
+        .count();
+    assert!(headers >= 1, "at least one run header");
+    let rids: std::collections::BTreeSet<String> = recs
+        .iter()
+        .map(|r| r.req("run_id").unwrap().as_str().unwrap().to_string())
+        .collect();
+    assert_eq!(rids.len(), 1, "all records share one run_id: {rids:?}");
+    assert_eq!(rids.iter().next().unwrap(), &run_id_for(fp));
+    let spans: std::collections::BTreeSet<String> = recs
+        .iter()
+        .filter(|r| r.req("kind").unwrap().as_str() == Some("stage"))
+        .map(|r| r.req("span").unwrap().as_str().unwrap().to_string())
+        .collect();
+    for want in ["shard/0", "shard/1", "merge"] {
+        assert!(spans.contains(want), "span `{want}` missing: {spans:?}");
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+/// The backpressure blind spot is closed: with queue_cap=1 the engine
+/// reports `capture_stall` and `accum_idle` stage records measured
+/// around its own bounded-channel send/recv.
+#[test]
+fn queue_cap_one_run_reports_backpressure_stages() {
+    let _guard = HEALTH_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let ex = Executor::from_manifest(synthetic_manifest()).unwrap();
+    let spec = ex.manifest.config("tiny").unwrap().clone();
+    let w = synthetic_weights(&spec, 7);
+    let src = SyntheticActivations::new(spec.clone(), 7);
+    let comp = resolve("coala").unwrap();
+    let mut job = CompressionJob::new("tiny", comp.method(), 0.4);
+    job.calib_batches = 3;
+    let path = tmp_path("backpressure");
+    let mut plan = EnginePlan::with_workers(2);
+    plan.queue_cap = 1;
+    plan.telemetry = TelemetrySink::to_path(path.to_str().unwrap()).unwrap();
+    let pipe = Pipeline::new(&ex, spec.clone(), &w).with_route(Route::Host).with_plan(plan);
+    pipe.run_with_source(&job, &src).unwrap();
+    let recs = parsed_lines(&path);
+    for want in ["capture_stall", "accum_idle"] {
+        let rec = recs
+            .iter()
+            .find(|r| r.req("stage").ok().and_then(|v| v.as_str()) == Some(want))
+            .unwrap_or_else(|| panic!("stage `{want}` missing"));
+        let s = rec.req("s").unwrap().as_f64().unwrap();
+        assert!(s >= 0.0, "{want} must be a non-negative duration, got {s}");
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+/// The health contract end-to-end: probes fire when armed (SVD
+/// convergence, R-diagonal condition, per-projection factor checks)
+/// and the factors are bitwise identical with health on or off.
+#[test]
+fn health_probes_fire_and_never_perturb_factors() {
+    let _guard = HEALTH_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let ex = Executor::from_manifest(synthetic_manifest()).unwrap();
+    let spec = ex.manifest.config("tiny").unwrap().clone();
+    let w = synthetic_weights(&spec, 9);
+    let src = SyntheticActivations::new(spec.clone(), 9);
+    let comp = resolve("coala").unwrap();
+    let mut job = CompressionJob::new("tiny", comp.method(), 0.4);
+    job.calib_batches = 2;
+
+    let run = |armed: bool, tag: &str| {
+        let path = tmp_path(tag);
+        let guard = armed.then(HealthOn::new);
+        let mut plan = EnginePlan::with_workers(2);
+        plan.telemetry = TelemetrySink::to_path(path.to_str().unwrap()).unwrap();
+        let pipe = Pipeline::new(&ex, spec.clone(), &w).with_route(Route::Host).with_plan(plan);
+        let out = pipe.run_with_source(&job, &src).unwrap();
+        drop(guard);
+        let factors: Vec<(String, Vec<f32>, Vec<f32>)> = out
+            .model
+            .factors
+            .iter()
+            .map(|(k, f)| (k.clone(), f.a.data.clone(), f.b.data.clone()))
+            .collect();
+        let recs = parsed_lines(&path);
+        std::fs::remove_file(&path).ok();
+        (factors, recs)
+    };
+
+    let (off_factors, off_recs) = run(false, "health_off");
+    let (on_factors, on_recs) = run(true, "health_on");
+    assert_eq!(off_factors, on_factors, "health probes perturbed the factors");
+    assert!(
+        !off_recs.iter().any(|r| r.req("kind").unwrap().as_str() == Some("health")),
+        "health records must not appear when the gate is off"
+    );
+
+    let health: Vec<&Json> = on_recs
+        .iter()
+        .filter(|r| r.req("kind").unwrap().as_str() == Some("health"))
+        .collect();
+    assert!(!health.is_empty(), "armed run emitted no health records");
+    let probes: std::collections::BTreeSet<&str> = health
+        .iter()
+        .map(|r| r.req("probe").unwrap().as_str().unwrap())
+        .collect();
+    for want in ["svd", "r_cond", "factors"] {
+        assert!(probes.contains(want), "probe `{want}` missing: {probes:?}");
+    }
+    for r in &health {
+        let span = r.req("span").unwrap().as_str().unwrap();
+        match r.req("probe").unwrap().as_str().unwrap() {
+            "r_cond" => {
+                assert!(span.starts_with("accumulate/"), "r_cond span `{span}`");
+                assert!(r.req("cond").unwrap().as_f64().unwrap() >= 1.0);
+            }
+            "svd" => {
+                assert!(span.starts_with("factorize/"), "svd span `{span}`");
+                assert!(r.req("sweeps").unwrap().as_f64().unwrap() >= 1.0);
+            }
+            "factors" => {
+                assert!(span.starts_with("factorize/"), "factors span `{span}`");
+                assert_eq!(r.req("nonfinite").unwrap().as_f64(), Some(0.0));
+            }
+            _ => {}
+        }
+    }
+}
+
+/// `coala report --json` over a hand-built fixture: aggregates match,
+/// u64 counters survive exactly, and a torn line is skipped with a
+/// note instead of killing the analysis.
+#[test]
+fn report_json_matches_hand_built_fixture() {
+    let path = tmp_path("report");
+    // "value" below is u64::MAX verbatim — it must survive exactly
+    let lines = [
+        r#"{"kind":"run","run_id":"r1","source":"tiny:Host:seed1:b4"}"#,
+        r#"{"kind":"stage","run_id":"r1","stage":"capture","s":1.0,"span":"shard/0","pid":11}"#,
+        r#"{"kind":"stage","run_id":"r1","stage":"capture","s":3.0,"span":"shard/1","pid":12}"#,
+        r#"{"kind":"stage","run_id":"r1","stage":"capture_stall","s":0.5}"#,
+        r#"{"kind":"counter","run_id":"r1","name":"big","value":18446744073709551615}"#,
+        r#"{"kind":"health","run_id":"r1","probe":"r_cond","cond":1.0e12}"#,
+        r#"{"kind":"health","run_id":"r1","probe":"svd","converged":1.0,"sweeps":9.0}"#,
+        r#"{"kind":"stage","stage":"tor"#, // torn mid-write
+    ];
+    std::fs::write(&path, lines.join("\n")).unwrap();
+
+    let out = report::render(
+        &[path.to_str().unwrap().to_string()],
+        &ReportOptions { json: true, cond_threshold: 1e8 },
+    )
+    .unwrap();
+    let j = Json::parse(&out).unwrap();
+    assert_eq!(j.req("files").unwrap().as_u64(), Some(1));
+    assert_eq!(j.req("skipped_lines").unwrap().as_u64(), Some(1), "torn line skipped with note");
+    let runs = match j.req("runs").unwrap() {
+        Json::Arr(v) => v,
+        other => panic!("runs should be an array: {other:?}"),
+    };
+    assert_eq!(runs.len(), 1);
+    let run = &runs[0];
+    assert_eq!(run.req("run_id").unwrap().as_str(), Some("r1"));
+    assert_eq!(run.req("headers").unwrap().as_u64(), Some(1));
+    assert_eq!(run.req("busy_s").unwrap().as_f64(), Some(4.0));
+    assert_eq!(run.req("stall_s").unwrap().as_f64(), Some(0.5));
+    // u64 counters survive the full emit→parse→aggregate→dump loop
+    assert_eq!(run.req("counters").unwrap().req("big").unwrap().as_u64(), Some(u64::MAX));
+    let stages = match run.req("stages").unwrap() {
+        Json::Arr(v) => v,
+        other => panic!("stages should be an array: {other:?}"),
+    };
+    let capture = stages
+        .iter()
+        .find(|s| s.req("stage").unwrap().as_str() == Some("capture"))
+        .unwrap();
+    assert_eq!(capture.req("count").unwrap().as_u64(), Some(2));
+    assert_eq!(capture.req("total_s").unwrap().as_f64(), Some(4.0));
+    assert_eq!(capture.req("mean_s").unwrap().as_f64(), Some(2.0));
+    assert_eq!(capture.req("p50_s").unwrap().as_f64(), Some(1.0));
+    assert_eq!(capture.req("p99_s").unwrap().as_f64(), Some(3.0));
+    assert_eq!(capture.req("skew").unwrap().as_f64(), Some(3.0), "shard/1 did 3x shard/0's work");
+    let health = run.req("health").unwrap();
+    assert_eq!(health.req("records").unwrap().as_u64(), Some(2));
+    assert_eq!(health.req("warnings").unwrap().req("high_cond").unwrap().as_u64(), Some(1));
+    assert_eq!(health.req("errors").unwrap().req("total").unwrap().as_u64(), Some(0));
+    std::fs::remove_file(&path).ok();
 }
