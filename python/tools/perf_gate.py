@@ -13,9 +13,12 @@ Baseline files wrap the raw BENCH json with provenance:
 * ``bootstrap`` — committed without trusted absolute timings (the
   growth containers have no Rust toolchain).  Gated invariants are
   machine-independent: every baseline record must still exist
-  (coverage), and every speedup ratio must stay above
+  (coverage), every speedup ratio must stay above
   ``baseline_speedup / threshold`` (e.g. the packed GEMM must not
-  fall behind the naive loop).
+  fall behind the naive loop), and a baseline record carrying
+  ``peak_bytes`` (the tracking-allocator watermark the pipeline
+  bench dumps) must keep the field in the current run
+  (memory coverage — the observability must not silently rot).
 * ``native`` — produced by ``perf_gate.py update`` from a real run on
   the CI machine class.  Adds absolute gating: a target whose
   ``mean_s`` exceeds ``baseline * threshold`` (default +30 %) fails,
@@ -92,6 +95,11 @@ def compare(bench, baseline, threshold):
 
     for name in sorted(set(base) & set(cur)):
         b, c = base[name], cur[name]
+        if "peak_bytes" in b and "peak_bytes" not in c:
+            failures.append(
+                f"mem-coverage: baseline target `{name}` records `peak_bytes` "
+                f"but the current run dropped the field"
+            )
         if "speedup" in b and "speedup" in c:
             floor = float(b["speedup"]) / threshold
             if float(c["speedup"]) < floor:
@@ -162,15 +170,16 @@ def cmd_update(args):
 def cmd_selftest(_args):
     """Prove the gate's behavior on synthetic dumps, no files needed."""
 
-    def synth(mean, speedup):
+    def synth(mean, speedup, peak=None):
+        rec = {
+            "name": "gemm/packed 256x192x192",
+            "mean_s": mean,
+            "stages": {"capture": mean * 0.25, "factorize": mean * 0.75},
+        }
+        if peak is not None:
+            rec["peak_bytes"] = peak
         return {
-            "kernels": [
-                {
-                    "name": "gemm/packed 256x192x192",
-                    "mean_s": mean,
-                    "stages": {"capture": mean * 0.25, "factorize": mean * 0.75},
-                }
-            ],
+            "kernels": [rec],
             "ratios": [{"name": "gemm packed/naive 256x192x192", "speedup": speedup}],
         }
 
@@ -195,6 +204,17 @@ def cmd_selftest(_args):
     f, _ = compare({"kernels": [], "ratios": []}, bootstrap, t)
     assert len(f) == 2 and all(x.startswith("coverage") for x in f), f"coverage loss: {f}"
 
+    # memory coverage: once a baseline records peak_bytes, a dump that
+    # drops the field must fail; gaining the field before the baseline
+    # has it must pass (that's how the field rolls out)
+    with_mem = {"source": "bootstrap", "bench": synth(0.1, 2.0, peak=1 << 20)}
+    f, _ = compare(synth(0.1, 2.0), with_mem, t)
+    assert any(x.startswith("mem-coverage") for x in f), f"dropped peak_bytes must fail: {f}"
+    f, _ = compare(synth(0.1, 2.0, peak=2 << 20), with_mem, t)
+    assert not f, f"peak_bytes present on both sides must pass: {f}"
+    f, _ = compare(synth(0.1, 2.0, peak=1 << 20), bootstrap, t)
+    assert not f, f"a new peak_bytes field without a baseline must pass: {f}"
+
     # unknown record kinds (telemetry lines a future dump interleaves)
     # must be tolerated on both sides of the diff, never gated
     noisy = synth(0.1, 2.0)
@@ -211,7 +231,7 @@ def cmd_selftest(_args):
 
     print(
         "perf_gate selftest: pass / 2x-slowdown / bootstrap / ratio / coverage"
-        " / unknown-kinds all behave"
+        " / mem-coverage / unknown-kinds all behave"
     )
     return 0
 

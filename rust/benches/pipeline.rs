@@ -36,9 +36,13 @@ fn record(stats: &Stats, workers: usize) -> Json {
 }
 
 /// Same record plus the engine's per-stage busy-time breakdown (the
-/// numbers the telemetry sink reports as `stage_s` events) from one
-/// representative run — the perf gate diffs stages, not just totals.
-fn record_with_stages(stats: &Stats, workers: usize, t: &StageTimings) -> Json {
+/// numbers the telemetry sink reports as `stage_s` events) and the
+/// allocator peak over one representative run — the perf gate diffs
+/// stages and checks memory coverage, not just totals.  `peak_bytes`
+/// is 0 on the default build (the tracking allocator needs the
+/// `telemetry` feature); the field is always present so the gate's
+/// mem-coverage check can key on it.
+fn record_with_stages(stats: &Stats, workers: usize, t: &StageTimings, peak_bytes: u64) -> Json {
     let mut rec = vec![
         ("name", Json::Str(stats.name.clone())),
         ("workers", Json::Num(workers as f64)),
@@ -46,6 +50,7 @@ fn record_with_stages(stats: &Stats, workers: usize, t: &StageTimings) -> Json {
         ("mean_s", Json::Num(stats.mean_s)),
         ("std_s", Json::Num(stats.std_s)),
         ("min_s", Json::Num(stats.min_s)),
+        ("peak_bytes", Json::UInt(peak_bytes)),
     ];
     rec.push((
         "stages",
@@ -66,6 +71,11 @@ fn main() {
         eprintln!("error: {e}");
         std::process::exit(1)
     });
+
+    // arm the tracking allocator programmatically (no env knob needed):
+    // a no-op on the default build, so `peak_bytes` is 0 there and the
+    // real watermark on `--features telemetry` runs
+    coala::telemetry::alloc::set_armed(true);
 
     // ---- host route: engine plans over worker counts (always runs) ------
     // `small` is the historical baseline; `large` (6 layers, 36
@@ -91,9 +101,12 @@ fn main() {
             let stats = bench(&label, &opts, || {
                 std::hint::black_box(pipe.run_with_source(&job, &src).unwrap());
             });
-            // one representative run for the per-stage breakdown
+            // one representative run for the per-stage breakdown and
+            // the allocator peak
+            let mut mem = coala::telemetry::alloc::MemScope::enter();
             let t = pipe.run_with_source(&job, &src).unwrap().timings;
-            host_records.push(record_with_stages(&stats, workers, &t));
+            let peak = mem.finish().map_or(0, |m| m.peak_bytes);
+            host_records.push(record_with_stages(&stats, workers, &t, peak));
         }
     }
 
@@ -138,10 +151,13 @@ fn main() {
             let stats = bench(&format!("shard/host small shards={shards}"), &opts, || {
                 std::hint::black_box(run_once(&mut StageTimings::default()));
             });
-            // one representative run for the per-stage breakdown
+            // one representative run for the per-stage breakdown and
+            // the allocator peak
+            let mut mem = coala::telemetry::alloc::MemScope::enter();
             let mut t = StageTimings::default();
             run_once(&mut t);
-            shard_records.push(record_with_stages(&stats, shards, &t));
+            let peak = mem.finish().map_or(0, |m| m.peak_bytes);
+            shard_records.push(record_with_stages(&stats, shards, &t, peak));
         }
     }
 

@@ -56,7 +56,7 @@ use crate::error::{Error, Result};
 use crate::model::{CompressedModel, ModelWeights};
 use crate::runtime::executor::Executor;
 use crate::runtime::manifest::ModelSpec;
-use crate::telemetry::{health, TelemetrySink};
+use crate::telemetry::{alloc, health, TelemetrySink};
 use crate::tensor::lowp::Precision;
 use crate::util::threads::parallel_map;
 use std::collections::{BTreeMap, HashMap};
@@ -88,6 +88,20 @@ pub struct StageTimings {
     /// Worker-seconds accumulate shards spent blocked in `recv`
     /// waiting for capture to produce (the opposite imbalance).
     pub accum_idle_s: f64,
+    /// Allocator peak watermark over the calibration window(s)
+    /// (`COALA_ALLOC_STATS=1`; 0 when disarmed).  Capture, accumulate,
+    /// and merge run concurrently and share one working set, so one
+    /// shared watermark is attributed to all of them.
+    pub calib_peak_bytes: u64,
+    /// Live bytes when the last calibration window closed.
+    pub calib_cur_bytes: u64,
+    /// Allocation-count delta over the calibration window(s) — the
+    /// churn the `with_capacity` sweeps exist to shrink.
+    pub calib_allocs: u64,
+    /// High-water mark of batches in flight between capture and
+    /// accumulate (bounded-channel depth; always tracked — two relaxed
+    /// atomic ops per batch).
+    pub queue_depth_hwm: usize,
 }
 
 /// How many workers each engine stage gets.  Every plan computes
@@ -461,7 +475,17 @@ fn run_windowed(
             Some(c) => (done + c.every).min(range.end),
             None => range.end,
         };
+        // one memory scope around the whole capture ∥ accumulate ∥
+        // merge window: the stages share a working set, so the shared
+        // watermark is the honest per-stage attribution (codec and
+        // checkpoint IO below carry their own scopes via StageTimer)
+        let mut mem = alloc::MemScope::enter();
         run_pass(source, kind, &range, done, w1, backend, precision, plan, &slots, timings)?;
+        if let Some(m) = mem.finish() {
+            timings.calib_peak_bytes = timings.calib_peak_bytes.max(m.peak_bytes);
+            timings.calib_cur_bytes = m.cur_bytes;
+            timings.calib_allocs += m.allocs;
+        }
         done = w1;
         if let Some(c) = ckpt {
             let st = snapshot(&slots.lock().unwrap(), kind, precision, &range, done, source_id);
@@ -534,6 +558,11 @@ fn run_pass(
     // each shard owns an Arc share of the receiver, so if every shard
     // dies (even by panic) the channel closes and blocked senders exit
     let rx = Arc::new(Mutex::new(rx));
+    // batches in flight between capture and accumulate (incremented
+    // before send so the pair can never underflow); the high-water
+    // mark is the observed queue pressure the `queue_cap` knob bounds
+    let depth = AtomicUsize::new(0);
+    let depth_hwm = AtomicUsize::new(0);
 
     let mut capture_secs = 0.0;
     let mut accum_secs = 0.0;
@@ -544,11 +573,13 @@ fn run_pass(
     let mut accum_err: Option<Error> = None;
 
     std::thread::scope(|s| {
-        let mut cap_handles = Vec::new();
+        let mut cap_handles = Vec::with_capacity(plan.capture_workers);
         for _ in 0..plan.capture_workers {
             let tx = tx.clone();
             let next = &next_batch;
             let cancelled = &cancelled;
+            let depth = &depth;
+            let depth_hwm = &depth_hwm;
             cap_handles.push(s.spawn(move || -> (f64, f64, Result<()>) {
                 let mut busy = 0.0;
                 let mut stall = 0.0;
@@ -573,11 +604,14 @@ fn run_pass(
                     // time blocked in send = backpressure from a full
                     // bounded channel (accumulate is the bottleneck)
                     let t_send = Instant::now();
+                    let d = depth.fetch_add(1, Ordering::Relaxed) + 1;
+                    depth_hwm.fetch_max(d, Ordering::Relaxed);
                     let sent = tx.send((b, chunks));
                     stall += t_send.elapsed().as_secs_f64();
                     if sent.is_err() {
                         // every accumulate shard died; their error
                         // surfaces below — stop producing
+                        depth.fetch_sub(1, Ordering::Relaxed);
                         return (busy, stall, Ok(()));
                     }
                 }
@@ -585,11 +619,12 @@ fn run_pass(
         }
         drop(tx); // shards see EOF once every capture worker finishes
 
-        let mut acc_handles = Vec::new();
+        let mut acc_handles = Vec::with_capacity(plan.accum_shards);
         for _ in 0..plan.accum_shards {
             let rx = rx.clone();
             let slots = &slots;
             let cancelled = &cancelled;
+            let depth = &depth;
             acc_handles.push(s.spawn(move || -> (f64, f64, f64, Result<()>) {
                 let mut fold_busy = 0.0;
                 let mut merge_busy = 0.0;
@@ -608,6 +643,7 @@ fn run_pass(
                         // channel closed: every batch was delivered
                         return (fold_busy, merge_busy, idle, failed.map_or(Ok(()), Err));
                     };
+                    depth.fetch_sub(1, Ordering::Relaxed);
                     if failed.is_some() || cancelled.load(Ordering::Relaxed) {
                         continue; // drain so blocked capture workers exit
                     }
@@ -718,7 +754,42 @@ fn run_pass(
     timings.merge_s += merge_secs;
     timings.capture_stall_s += capture_stall_secs;
     timings.accum_idle_s += accum_idle_secs;
+    timings.queue_depth_hwm = timings.queue_depth_hwm.max(depth_hwm.load(Ordering::Relaxed));
     Ok(())
+}
+
+/// Emit the calibration-window stage records (`capture`, `accumulate`,
+/// `merge_reduce`, `capture_stall`, `accum_idle`) from an engine's
+/// finished [`StageTimings`], plus the queue-depth high-water counter
+/// and — with `COALA_ALLOC_STATS=1` — the run-end allocator/OS memory
+/// cross-check counters (`alloc_peak_bytes` / `alloc_count` /
+/// `vm_hwm_bytes`; VmHWM from `/proc/self/status` must dominate the
+/// allocator's own peak).  The concurrent calibration stages share one
+/// working set, so all five records carry the same window watermark.
+/// Shared by the pipeline and the `coala shard` driver so a stage
+/// record means the same thing everywhere.
+pub fn emit_stage_records(tel: &TelemetrySink, t: &StageTimings) {
+    let mem = alloc::armed().then(|| alloc::MemStats {
+        peak_bytes: t.calib_peak_bytes,
+        cur_bytes: t.calib_cur_bytes,
+        allocs: t.calib_allocs,
+    });
+    tel.stage_mem("capture", t.calibrate_s, mem);
+    tel.stage_mem("accumulate", t.accumulate_s, mem);
+    tel.stage_mem("merge_reduce", t.merge_s, mem);
+    // bounded-channel backpressure, measured around the engine's
+    // existing send/recv — capture_stall = accumulate was the
+    // bottleneck, accum_idle = capture was
+    tel.stage_mem("capture_stall", t.capture_stall_s, mem);
+    tel.stage_mem("accum_idle", t.accum_idle_s, mem);
+    tel.counter("queue_depth_hwm", t.queue_depth_hwm as u64);
+    if let Some(s) = alloc::snapshot() {
+        tel.counter("alloc_peak_bytes", s.peak_bytes);
+        tel.counter("alloc_count", s.allocs);
+        if let Some(hwm) = alloc::vm_hwm_bytes() {
+            tel.counter("vm_hwm_bytes", hwm);
+        }
+    }
 }
 
 /// Collect the merge-tree roots into per-(layer, stream) states.

@@ -255,6 +255,9 @@ impl<'a> Pipeline<'a> {
         self.probe_accum_health(accums);
         let t2 = Instant::now();
         let sweeps_before = crate::linalg::svd_sweep_total();
+        // factorize runs serially after calibration, so it gets its
+        // own memory scope (a true per-stage peak delta)
+        let mut fz_mem = crate::telemetry::alloc::MemScope::enter();
         let (model, mus) = engine::factorize(
             &job.config,
             &self.spec,
@@ -268,20 +271,14 @@ impl<'a> Pipeline<'a> {
             self.plan.factorize_workers,
             tel,
         )?;
+        let fz_stats = fz_mem.finish();
         timings.factorize_s = t2.elapsed().as_secs_f64();
         timings.total_s =
             timings.calibrate_s + timings.accumulate_s + timings.merge_s + timings.factorize_s;
         // report the engine's busy-time breakdown as telemetry stage
         // records — the engine already tracked these, never re-time
-        tel.stage_s("capture", timings.calibrate_s);
-        tel.stage_s("accumulate", timings.accumulate_s);
-        tel.stage_s("merge_reduce", timings.merge_s);
-        tel.stage_s("factorize", timings.factorize_s);
-        // bounded-channel backpressure, measured around the engine's
-        // existing send/recv — capture_stall = accumulate was the
-        // bottleneck, accum_idle = capture was
-        tel.stage_s("capture_stall", timings.capture_stall_s);
-        tel.stage_s("accum_idle", timings.accum_idle_s);
+        engine::emit_stage_records(tel, &timings);
+        tel.stage_mem("factorize", timings.factorize_s, fz_stats);
         tel.counter("projections_factorized", model.factors.len() as u64);
         // Jacobi convergence cost of this factorize stage: the global
         // sweep counter is a sum of deterministic per-projection counts,

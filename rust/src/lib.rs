@@ -109,13 +109,28 @@
 //!   aggregates traces into per-(run_id, stage) summaries, a
 //!   busy-vs-stall breakdown (the engine measures its bounded-channel
 //!   backpressure as `capture_stall`/`accum_idle`), per-shard skew,
-//!   and a health digest, with `--json` for CI.  The default build
-//!   compiles the sink to a no-op unit struct: zero telemetry code
-//!   paths (reading with `coala report` still works — it needs no
-//!   feature).  `benches/pipeline.rs` embeds the same stage breakdowns
-//!   in `BENCH_pipeline.json`, and CI's `perf-gate` job diffs both
-//!   bench dumps against the committed baseline
-//!   (`rust/benches/baseline/`) via `python/tools/perf_gate.py`.
+//!   and a health digest, with `--json` for CI.
+//!   `COALA_ALLOC_STATS=1` arms the memory layer
+//!   ([`telemetry::alloc`]): a tracking `#[global_allocator]` whose
+//!   scoped watermarks stamp every `stage` record with
+//!   `peak_bytes`/`cur_bytes`, a queue-depth high-water gauge on the
+//!   engine's bounded channel, and a `/proc/self/status` `VmHWM`
+//!   cross-check — observation-only, like the health probes.
+//!   `COALA_MEM_BUDGET_MB` turns stage peaks above the budget into
+//!   `mem_budget` health *warnings* (never aborts).
+//!   `coala report --trace out.json` ([`telemetry::trace`]) exports
+//!   the same JSONL as a Chrome trace-event file — one pid per
+//!   process, one tid per span, memory and queue-depth counter
+//!   tracks — viewable in Perfetto or `chrome://tracing`.  The
+//!   default build compiles the sink to a no-op unit struct and
+//!   installs no global allocator: zero telemetry code paths (reading
+//!   with `coala report`, including `--trace`, still works — it needs
+//!   no feature).  `benches/pipeline.rs` embeds the same stage
+//!   breakdowns plus the allocator peak in `BENCH_pipeline.json`, and
+//!   CI's `perf-gate` job diffs both bench dumps against the
+//!   committed baseline (`rust/benches/baseline/`) via
+//!   `python/tools/perf_gate.py` — including memory coverage (a
+//!   baseline that records `peak_bytes` keeps recording it).
 //!
 //! ## Reproducing the tables without artifacts
 //!
@@ -244,6 +259,8 @@
 //! | `COALA_GOLDEN_REGEN` | flag                 | regenerate `tests/golden/stability.json` in `cargo test` | no |
 //! | `COALA_TELEMETRY`    | path                 | JSONL telemetry sink (requires `--features telemetry`; setting it on a default build is an error) | no |
 //! | `COALA_HEALTH`       | flag                 | arm the numerical-health probes ([`telemetry::health`]) — observation-only, factors stay bitwise identical (requires `--features telemetry`; setting it on a default build is an error) | no |
+//! | `COALA_ALLOC_STATS`  | flag                 | arm the tracking allocator ([`telemetry::alloc`]) — stage records gain `peak_bytes`/`cur_bytes`, observation-only, factors stay bitwise identical (requires `--features telemetry`; setting it on a default build is an error) | no |
+//! | `COALA_MEM_BUDGET_MB` | integer ≥ 1         | soft per-stage memory budget: peaks above it emit `mem_budget` health warnings, never aborts (requires `COALA_ALLOC_STATS=1` and `--features telemetry`; anything else is an error) | no |
 
 pub mod calib;
 pub mod coala;

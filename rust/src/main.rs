@@ -35,11 +35,17 @@
 //!                             reference and writes the same file
 //!                             format, so `cmp` checks the guarantee)
 //!   report    <telemetry.jsonl> … [--json] [--cond-threshold T]
+//!             [--trace out.json]
 //!                             aggregate telemetry JSONL files into
 //!                             per-(run_id, stage) timing summaries, a
 //!                             busy-vs-stall breakdown, per-shard skew,
 //!                             and a numerical-health digest (works on
-//!                             any build — reading needs no feature)
+//!                             any build — reading needs no feature).
+//!                             `--trace` additionally exports the spans
+//!                             as Chrome trace-event JSON for Perfetto
+//!                             / chrome://tracing (one pid per process,
+//!                             one tid per span, memory + queue-depth
+//!                             counter tracks)
 //!   tsqr-demo --workers 4     out-of-core tree-TSQR demonstration
 //!
 //! `--workers`/`--queue-cap` configure the execution engine
@@ -302,12 +308,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
                 &env.source_id(cfg, total)?,
             )?;
             state.write(out)?;
-            let tel = &env.plan.telemetry;
-            tel.stage_s("capture", t.calibrate_s);
-            tel.stage_s("accumulate", t.accumulate_s);
-            tel.stage_s("merge_reduce", t.merge_s);
-            tel.stage_s("capture_stall", t.capture_stall_s);
-            tel.stage_s("accum_idle", t.accum_idle_s);
+            engine::emit_stage_records(&env.plan.telemetry, &t);
             println!(
                 "wrote {out}: {} pending merge states in {:.2}s (capture {:.2}s / \
                  accumulate {:.2}s / merge {:.2}s)",
@@ -403,6 +404,13 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
                 json: args.get_bool("json"),
                 cond_threshold: args.get_f64("cond-threshold", 1e8)?,
             };
+            if let Some(out) = args.get("trace") {
+                // Chrome trace-event export of the same JSONL: load it
+                // in Perfetto / chrome://tracing to *see* the spans
+                let trace = coala::telemetry::trace::export(&files)?;
+                std::fs::write(out, &trace).map_err(|e| Error::io(out, e))?;
+                println!("trace written to {out} (open in Perfetto or chrome://tracing)");
+            }
             print!("{}", coala::telemetry::report::render(&files, &opts)?);
             Ok(())
         }

@@ -1,0 +1,339 @@
+//! Memory observability (`COALA_ALLOC_STATS`): a tracking global
+//! allocator with per-stage peak accounting and an optional budget.
+//!
+//! COALA's first headline scenario is calibration data that exceeds
+//! device memory — the bounded channel, sharded accumulate, windowed
+//! checkpointing, and sketch accumulators all exist to bound the
+//! working set — so the telemetry stack should be able to answer "how
+//! many bytes does a run actually peak at, per stage?" with the same
+//! rigor it answers "how long did it take?".
+//!
+//! With the `telemetry` feature compiled in, the crate installs a
+//! `#[global_allocator]` that wraps `std::alloc::System`.  Disarmed
+//! (the default), every hook is one relaxed atomic load and a passthru
+//! call — the same order of cost as the [`super::health`] probes.
+//! Armed via strict `COALA_ALLOC_STATS=1`, it maintains three relaxed
+//! counters: current live bytes, the peak watermark, and a total
+//! allocation count.  [`MemScope`] snapshots a *per-stage* peak by
+//! resetting the watermark to the live count on entry and restoring
+//! the outer watermark (via `fetch_max`, so the global peak stays
+//! true) on exit.
+//!
+//! Contract — identical to `COALA_HEALTH`: **observation-only.**  The
+//! accounting never branches on, allocates for, or perturbs the data
+//! it observes; factors are bitwise-identical armed or not
+//! (`rust/tests/telemetry.rs` proves it the same way it does for the
+//! health probes).
+//!
+//! Concurrent scopes share the process-wide watermark: the engine's
+//! calibration stages (capture ∥ sharded accumulate ∥ merge) genuinely
+//! share one working set, so the driver opens *one* scope around the
+//! calibration window and attributes the shared peak to all of them,
+//! while serial stages (codec, checkpoint IO, factorize, trainer
+//! steps) get true per-scope deltas.
+//!
+//! `COALA_MEM_BUDGET_MB` (strict `u64`, ≥ 1) arms a soft budget: a
+//! stage whose peak crosses it emits a `budget_exceeded`-counting
+//! `mem_budget` health record — a warning folded into the
+//! `coala report` health summary, **never** an abort.  Setting the
+//! budget without `COALA_ALLOC_STATS=1` is a hard error (there would
+//! be no peaks to compare), as is setting either knob on a build
+//! without the `telemetry` feature.
+//!
+//! A Linux `/proc/self/status` `VmHWM` read ([`vm_hwm_bytes`])
+//! cross-checks the allocator at run end: the OS-level resident
+//! high-water mark must be at least the allocator's peak (it also
+//! counts code, stacks, and allocator slack), so the pair bounds the
+//! true footprint from both sides.
+
+use crate::error::Result;
+
+/// One snapshot of the allocator counters.
+///
+/// From [`snapshot`], `peak_bytes`/`cur_bytes`/`allocs` are
+/// process-lifetime totals; from [`MemScope::finish`], `peak_bytes` is
+/// the scope-local watermark, `cur_bytes` the live count at scope
+/// exit, and `allocs` the count delta inside the scope.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct MemStats {
+    pub peak_bytes: u64,
+    pub cur_bytes: u64,
+    pub allocs: u64,
+}
+
+#[cfg(feature = "telemetry")]
+mod imp {
+    use super::MemStats;
+    use std::alloc::{GlobalAlloc, Layout, System};
+    use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+
+    static ARMED: AtomicBool = AtomicBool::new(false);
+    static CUR: AtomicUsize = AtomicUsize::new(0);
+    static PEAK: AtomicUsize = AtomicUsize::new(0);
+    static ALLOCS: AtomicU64 = AtomicU64::new(0);
+    /// Soft budget in bytes; 0 = unset (`COALA_MEM_BUDGET_MB` rejects 0).
+    static BUDGET: AtomicU64 = AtomicU64::new(0);
+
+    /// System-allocator wrapper counting live/peak bytes when armed.
+    ///
+    /// The hooks must not allocate (they run *inside* the allocator)
+    /// and must not branch on the data being allocated — relaxed
+    /// atomics only, so arming cannot perturb program behavior.
+    struct TrackingAlloc;
+
+    #[global_allocator]
+    static GLOBAL: TrackingAlloc = TrackingAlloc;
+
+    #[inline]
+    fn on_alloc(size: usize) {
+        if ARMED.load(Ordering::Relaxed) {
+            let cur = CUR.fetch_add(size, Ordering::Relaxed) + size;
+            PEAK.fetch_max(cur, Ordering::Relaxed);
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    #[inline]
+    fn on_dealloc(size: usize) {
+        if ARMED.load(Ordering::Relaxed) {
+            // Saturating: blocks allocated before arming deallocate
+            // after it, and the live count must not wrap.
+            let _ = CUR.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |c| {
+                Some(c.saturating_sub(size))
+            });
+        }
+    }
+
+    unsafe impl GlobalAlloc for TrackingAlloc {
+        unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+            let p = System.alloc(layout);
+            if !p.is_null() {
+                on_alloc(layout.size());
+            }
+            p
+        }
+
+        unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+            let p = System.alloc_zeroed(layout);
+            if !p.is_null() {
+                on_alloc(layout.size());
+            }
+            p
+        }
+
+        unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+            System.dealloc(ptr, layout);
+            on_dealloc(layout.size());
+        }
+
+        unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+            let p = System.realloc(ptr, layout, new_size);
+            if !p.is_null() {
+                on_dealloc(layout.size());
+                on_alloc(new_size);
+            }
+            p
+        }
+    }
+
+    #[inline]
+    pub fn armed() -> bool {
+        ARMED.load(Ordering::Relaxed)
+    }
+
+    /// Direct toggle for tests and benches; production goes through
+    /// [`super::init_from_env`].
+    pub fn set_armed(on: bool) {
+        ARMED.store(on, Ordering::Relaxed);
+    }
+
+    pub fn set_budget(bytes: Option<u64>) {
+        BUDGET.store(bytes.unwrap_or(0), Ordering::Relaxed);
+    }
+
+    pub fn budget_bytes() -> Option<u64> {
+        match BUDGET.load(Ordering::Relaxed) {
+            0 => None,
+            b => Some(b),
+        }
+    }
+
+    /// Process-lifetime counters, `None` when disarmed.
+    pub fn snapshot() -> Option<MemStats> {
+        if !armed() {
+            return None;
+        }
+        Some(MemStats {
+            peak_bytes: PEAK.load(Ordering::Relaxed) as u64,
+            cur_bytes: CUR.load(Ordering::Relaxed) as u64,
+            allocs: ALLOCS.load(Ordering::Relaxed),
+        })
+    }
+
+    struct ScopeStart {
+        outer_peak: usize,
+        start_allocs: u64,
+    }
+
+    /// Scoped peak watermark: resets the global watermark to the live
+    /// count on entry, restores `max(scope peak, outer watermark)` on
+    /// exit — so the global peak stays true while the scope observes
+    /// only its own high water.
+    pub struct MemScope {
+        start: Option<ScopeStart>,
+    }
+
+    impl MemScope {
+        pub fn enter() -> MemScope {
+            if !armed() {
+                return MemScope { start: None };
+            }
+            let cur = CUR.load(Ordering::Relaxed);
+            MemScope {
+                start: Some(ScopeStart {
+                    outer_peak: PEAK.swap(cur, Ordering::Relaxed),
+                    start_allocs: ALLOCS.load(Ordering::Relaxed),
+                }),
+            }
+        }
+
+        /// Close the scope: restore the outer watermark and return the
+        /// scope-local stats.  Idempotent (`None` after the first
+        /// call, or when entered disarmed).
+        pub fn finish(&mut self) -> Option<MemStats> {
+            let s = self.start.take()?;
+            // `fetch_max` both reads the scope-local watermark and
+            // restores the outer one in a single atomic op.
+            let scope_peak = PEAK.fetch_max(s.outer_peak, Ordering::Relaxed);
+            Some(MemStats {
+                peak_bytes: scope_peak as u64,
+                cur_bytes: CUR.load(Ordering::Relaxed) as u64,
+                allocs: ALLOCS.load(Ordering::Relaxed).saturating_sub(s.start_allocs),
+            })
+        }
+    }
+
+    impl Drop for MemScope {
+        fn drop(&mut self) {
+            // An abandoned scope must still restore the outer
+            // watermark, or the global peak would under-report.
+            let _ = self.finish();
+        }
+    }
+}
+
+#[cfg(not(feature = "telemetry"))]
+mod imp {
+    use super::MemStats;
+
+    /// Constant `false` on the default build: every call site
+    /// compiles down to nothing and no global allocator is installed.
+    #[inline]
+    pub fn armed() -> bool {
+        false
+    }
+
+    #[inline]
+    pub fn set_armed(_on: bool) {}
+
+    #[inline]
+    pub fn set_budget(_bytes: Option<u64>) {}
+
+    #[inline]
+    pub fn budget_bytes() -> Option<u64> {
+        None
+    }
+
+    #[inline]
+    pub fn snapshot() -> Option<MemStats> {
+        None
+    }
+
+    /// Zero-sized no-op scope for the default build.
+    pub struct MemScope;
+
+    impl MemScope {
+        #[inline]
+        pub fn enter() -> MemScope {
+            MemScope
+        }
+
+        #[inline]
+        pub fn finish(&mut self) -> Option<MemStats> {
+            None
+        }
+    }
+}
+
+pub use imp::{armed, budget_bytes, set_armed, set_budget, snapshot, MemScope};
+
+/// OS-level resident high-water mark from `/proc/self/status`
+/// (`VmHWM`, reported in kB), as a run-end cross-check of the
+/// allocator's own peak: `VmHWM >= alloc peak` always holds (the OS
+/// also counts code, stacks, and allocator slack), so the pair bounds
+/// the true footprint from both sides.  `None` off Linux or when the
+/// proc read fails.
+pub fn vm_hwm_bytes() -> Option<u64> {
+    #[cfg(target_os = "linux")]
+    {
+        let status = std::fs::read_to_string("/proc/self/status").ok()?;
+        for line in status.lines() {
+            if let Some(rest) = line.strip_prefix("VmHWM:") {
+                let kb: u64 = rest.trim().trim_end_matches("kB").trim().parse().ok()?;
+                return Some(kb * 1024);
+            }
+        }
+        None
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        None
+    }
+}
+
+/// Arm the allocator counters from `COALA_ALLOC_STATS` (strict flag
+/// grammar; unset means off) and the soft budget from
+/// `COALA_MEM_BUDGET_MB` (strict `u64`, must be ≥ 1).  A budget
+/// without armed alloc stats is a hard error — there would be no
+/// stage peaks to compare it against.  Called by
+/// `TelemetrySink::from_env`, so every driver entry point arms the
+/// counters before any kernel runs.
+#[cfg(feature = "telemetry")]
+pub fn init_from_env() -> Result<bool> {
+    let on = crate::util::env::flag("COALA_ALLOC_STATS")?;
+    let budget_mb: Option<u64> = crate::util::env::parse("COALA_MEM_BUDGET_MB")?;
+    if let Some(mb) = budget_mb {
+        if mb == 0 {
+            return Err(crate::error::Error::Config(
+                "COALA_MEM_BUDGET_MB must be >= 1 (every stage would exceed a zero budget)"
+                    .into(),
+            ));
+        }
+        if !on {
+            return Err(crate::error::Error::Config(
+                "COALA_MEM_BUDGET_MB is set but COALA_ALLOC_STATS is not; the budget \
+                 compares per-stage allocator peaks, so set COALA_ALLOC_STATS=1 or unset it"
+                    .into(),
+            ));
+        }
+    }
+    imp::set_armed(on);
+    imp::set_budget(budget_mb.map(|mb| mb.saturating_mul(1024 * 1024)));
+    Ok(on)
+}
+
+/// Loud failure instead of a silently ignored knob: setting
+/// `COALA_ALLOC_STATS` or `COALA_MEM_BUDGET_MB` against a build
+/// without the `telemetry` feature is a config error.
+#[cfg(not(feature = "telemetry"))]
+pub fn init_from_env() -> Result<bool> {
+    for knob in ["COALA_ALLOC_STATS", "COALA_MEM_BUDGET_MB"] {
+        if std::env::var_os(knob).is_some() {
+            return Err(crate::error::Error::Config(format!(
+                "{knob} is set but this build lacks the `telemetry` \
+                 feature; rebuild with `--features telemetry` or unset it"
+            )));
+        }
+    }
+    Ok(false)
+}

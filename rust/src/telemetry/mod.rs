@@ -78,15 +78,45 @@
 //!    `records_dropped` counter on the next successful append — never a
 //!    stderr flood.
 //!
-//! `COALA_TELEMETRY` and `COALA_HEALTH` are parsed through the strict
-//! `util::env` helpers from day one: garbage values are errors, and
-//! setting either on a build *without* the feature is a loud error
-//! rather than a silently ignored knob.
+//! ## Memory layer (`COALA_ALLOC_STATS`, `COALA_MEM_BUDGET_MB`)
+//!
+//! [`alloc`] installs a feature-gated tracking `#[global_allocator]`
+//! (relaxed-atomic live/peak/alloc-count accounting, armed by strict
+//! `COALA_ALLOC_STATS=1`).  When armed, every `stage` record gains
+//! `peak_bytes`/`cur_bytes` (exact `u64`): the engine attributes one
+//! shared [`alloc::MemScope`] watermark to the concurrent calibration
+//! stages, serial stages (factorize, codec, checkpoint IO, trainer
+//! steps) get true per-scope deltas via the [`StageTimer`] guard, and
+//! the engine's bounded channel reports a `queue_depth_hwm` counter.
+//! Run-end counters `alloc_peak_bytes` / `alloc_count` /
+//! `vm_hwm_bytes` cross-check the allocator against the OS
+//! (`/proc/self/status` VmHWM).  `COALA_MEM_BUDGET_MB` arms a soft
+//! budget: a stage peak crossing it emits a `mem_budget` health record
+//! — a warning in the `coala report` summary, never an abort.  Same
+//! contract as the health probes: observation-only, factors
+//! bitwise-identical armed or not.
+//!
+//! ## Visual traces (`coala report --trace out.json`)
+//!
+//! [`trace`] exports the span-stitched JSONL into Chrome trace-event
+//! JSON viewable in Perfetto / `chrome://tracing`: one pid per
+//! process/shard, one tid per span, complete events from `stage`
+//! records, counter tracks from `peak_bytes` and queue depth — the
+//! shard-skew and `capture_stall` numbers the report computes, as a
+//! timeline you can look at.
+//!
+//! `COALA_TELEMETRY`, `COALA_HEALTH`, `COALA_ALLOC_STATS`, and
+//! `COALA_MEM_BUDGET_MB` are parsed through the strict `util::env`
+//! helpers from day one: garbage values are errors, and setting any
+//! of them on a build *without* the feature is a loud error rather
+//! than a silently ignored knob.
 
 use crate::error::Result;
 
+pub mod alloc;
 pub mod health;
 pub mod report;
+pub mod trace;
 
 #[cfg(feature = "telemetry")]
 mod jsonl;
@@ -169,10 +199,13 @@ mod sink {
         /// Open the sink `COALA_TELEMETRY` points at, or a disabled
         /// sink when the variable is unset.  A set-but-empty value or
         /// an unopenable path is a hard error.  Also arms the
-        /// [`super::health`] probes from `COALA_HEALTH` (strict), so
-        /// every driver entry point initializes both knobs together.
+        /// [`super::health`] probes from `COALA_HEALTH` and the
+        /// [`super::alloc`] counters from `COALA_ALLOC_STATS` /
+        /// `COALA_MEM_BUDGET_MB` (all strict), so every driver entry
+        /// point initializes the whole knob family together.
         pub fn from_env() -> Result<TelemetrySink> {
             super::health::init_from_env()?;
+            super::alloc::init_from_env()?;
             match crate::util::env::string("COALA_TELEMETRY")? {
                 None => Ok(TelemetrySink::disabled()),
                 Some(path) => TelemetrySink::to_path(&path),
@@ -219,12 +252,40 @@ mod sink {
 
         /// Record an already-measured stage duration.  This is the
         /// bridge from the engine's existing `StageTimings` busy-time
-        /// tracking — stages are never re-timed for telemetry.
+        /// tracking — stages are never re-timed for telemetry.  With
+        /// the allocator armed, the record carries the process-wide
+        /// counters ([`super::alloc::snapshot`]); callers holding a
+        /// scoped measurement use [`TelemetrySink::stage_mem`].
         pub fn stage_s(&self, stage: &str, seconds: f64) {
+            self.stage_mem(stage, seconds, super::alloc::snapshot());
+        }
+
+        /// Record a stage duration plus its memory stats (`None` when
+        /// the allocator is disarmed — the record then carries no
+        /// memory fields).  When a [`super::alloc::budget_bytes`]
+        /// budget is set and the stage peak crosses it, a
+        /// `mem_budget` health record is emitted alongside — a
+        /// warning in the report's health summary, never an abort.
+        pub fn stage_mem(&self, stage: &str, seconds: f64, mem: Option<super::alloc::MemStats>) {
             self.emit("stage", |o| {
                 o.insert("stage".into(), Json::Str(stage.into()));
                 o.insert("s".into(), Json::Num(seconds));
+                if let Some(m) = &mem {
+                    o.insert("peak_bytes".into(), Json::UInt(m.peak_bytes));
+                    o.insert("cur_bytes".into(), Json::UInt(m.cur_bytes));
+                }
             });
+            if let (Some(m), Some(budget)) = (mem, super::alloc::budget_bytes()) {
+                if m.peak_bytes > budget {
+                    self.health_event(
+                        None,
+                        &HealthEvent::new("mem_budget")
+                            .num("peak_bytes", m.peak_bytes as f64)
+                            .num("budget_bytes", budget as f64)
+                            .txt("stage", stage),
+                    );
+                }
+            }
         }
 
         /// Record a monotonic count, exactly: the value is serialized
@@ -257,9 +318,16 @@ mod sink {
 
         /// Start a wall-clock timer for a stage that has no existing
         /// busy-time measurement (codec, checkpoint IO, trainer step).
-        /// The record is emitted when the guard drops.
+        /// The guard also opens a [`super::alloc::MemScope`], so the
+        /// record emitted on drop carries that stage's own peak
+        /// delta when the allocator is armed.
         pub fn start_timer(&self, stage: &str) -> StageTimer<'_> {
-            StageTimer { sink: self, stage, start: Instant::now() }
+            StageTimer {
+                sink: self,
+                stage,
+                start: Instant::now(),
+                mem: super::alloc::MemScope::enter(),
+            }
         }
 
         fn emit(&self, kind: &str, fill: impl FnOnce(&mut BTreeMap<String, Json>)) {
@@ -300,16 +368,19 @@ mod sink {
         }
     }
 
-    /// Drop guard emitting a `stage` record with the elapsed time.
+    /// Drop guard emitting a `stage` record with the elapsed time and
+    /// (allocator armed) the scope's own memory stats.
     pub struct StageTimer<'a> {
         sink: &'a TelemetrySink,
         stage: &'a str,
         start: Instant,
+        mem: super::alloc::MemScope,
     }
 
     impl Drop for StageTimer<'_> {
         fn drop(&mut self) {
-            self.sink.stage_s(self.stage, self.start.elapsed().as_secs_f64());
+            let stats = self.mem.finish();
+            self.sink.stage_mem(self.stage, self.start.elapsed().as_secs_f64(), stats);
         }
     }
 }
@@ -334,9 +405,10 @@ impl TelemetrySink {
     }
 
     /// Loud failure instead of a silently ignored knob: setting
-    /// `COALA_TELEMETRY` (or `COALA_HEALTH`, via
-    /// [`health::init_from_env`]) against a build without the
-    /// `telemetry` feature is a config error.
+    /// `COALA_TELEMETRY` (or `COALA_HEALTH` / `COALA_ALLOC_STATS` /
+    /// `COALA_MEM_BUDGET_MB`, via the sub-module `init_from_env`s)
+    /// against a build without the `telemetry` feature is a config
+    /// error.
     pub fn from_env() -> Result<TelemetrySink> {
         if std::env::var_os("COALA_TELEMETRY").is_some() {
             return Err(crate::error::Error::Config(
@@ -346,6 +418,7 @@ impl TelemetrySink {
             ));
         }
         health::init_from_env()?;
+        alloc::init_from_env()?;
         Ok(TelemetrySink)
     }
 
@@ -366,6 +439,9 @@ impl TelemetrySink {
 
     #[inline]
     pub fn stage_s(&self, _stage: &str, _seconds: f64) {}
+
+    #[inline]
+    pub fn stage_mem(&self, _stage: &str, _seconds: f64, _mem: Option<alloc::MemStats>) {}
 
     #[inline]
     pub fn counter(&self, _name: &str, _value: u64) {}

@@ -46,6 +46,9 @@ struct StageAgg {
     samples: Vec<f64>,
     /// Per-(pid, span) totals — the skew axis across shard processes.
     by_worker: BTreeMap<(u64, String), f64>,
+    /// Highest `peak_bytes` seen on this stage's records
+    /// (`COALA_ALLOC_STATS=1`; 0 when the records carry no memory).
+    peak_bytes_max: u64,
 }
 
 #[derive(Debug, Default)]
@@ -55,6 +58,9 @@ struct HealthAgg {
     high_cond: u64,
     max_cond: f64,
     nonconverged: u64,
+    /// `mem_budget` records: stage peaks that crossed the
+    /// `COALA_MEM_BUDGET_MB` soft budget (a warning, never an abort).
+    budget_exceeded: u64,
     nonfinite_factors: u64,
     trainer_nonfinite: u64,
 }
@@ -112,6 +118,9 @@ fn ingest_line(rep: &mut Report, line: &str, opts: &ReportOptions) {
             agg.samples.push(s);
             let pid = rec.get("pid").and_then(Json::as_u64).unwrap_or(0);
             *agg.by_worker.entry((pid, field("span"))).or_insert(0.0) += s;
+            if let Some(p) = rec.get("peak_bytes").and_then(Json::as_u64) {
+                agg.peak_bytes_max = agg.peak_bytes_max.max(p);
+            }
         }
         "counter" => {
             let v = rec.get("value").and_then(Json::as_u64).unwrap_or(0);
@@ -122,6 +131,9 @@ fn ingest_line(rep: &mut Report, line: &str, opts: &ReportOptions) {
             h.records += 1;
             let probe = field("probe");
             *h.by_probe.entry(probe.clone()).or_insert(0) += 1;
+            if probe == "mem_budget" {
+                h.budget_exceeded += 1;
+            }
             if let Some(cond) = num("cond") {
                 if cond > opts.cond_threshold || !cond.is_finite() {
                     h.high_cond += 1;
@@ -191,6 +203,9 @@ fn stage_json(name: &str, agg: &StageAgg) -> Json {
         pairs.push(("shard_max_s", Json::Num(max)));
         pairs.push(("skew", Json::Num(if min > 0.0 { max / min } else { f64::INFINITY })));
     }
+    if agg.peak_bytes_max > 0 {
+        pairs.push(("peak_bytes_max", Json::UInt(agg.peak_bytes_max)));
+    }
     Json::obj(pairs)
 }
 
@@ -240,6 +255,7 @@ fn run_json(run_id: &str, run: &RunAgg, opts: &ReportOptions) -> Json {
                         ("max_cond", Json::Num(h.max_cond)),
                         ("cond_threshold", Json::Num(opts.cond_threshold)),
                         ("nonconverged", Json::UInt(h.nonconverged)),
+                        ("budget_exceeded", Json::UInt(h.budget_exceeded)),
                     ]),
                 ),
                 (
@@ -298,6 +314,10 @@ fn render_text(rep: &Report, opts: &ReportOptions) -> String {
                 let skew = if min > 0.0 { max / min } else { f64::INFINITY };
                 let _ = write!(out, "  skew {skew:5.2}x over {} worker(s)", agg.by_worker.len());
             }
+            if agg.peak_bytes_max > 0 {
+                let mib = agg.peak_bytes_max as f64 / (1024.0 * 1024.0);
+                let _ = write!(out, "  peak {mib:8.2} MiB");
+            }
             out.push('\n');
         }
         let frac = if busy + stall > 0.0 { 100.0 * stall / (busy + stall) } else { 0.0 };
@@ -318,8 +338,9 @@ fn render_text(rep: &Report, opts: &ReportOptions) -> String {
             out.push('\n');
             let _ = writeln!(
                 out,
-                "    warnings: high_cond={} (max {:.3e}, threshold {:.1e}) nonconverged={}",
-                h.high_cond, h.max_cond, opts.cond_threshold, h.nonconverged
+                "    warnings: high_cond={} (max {:.3e}, threshold {:.1e}) nonconverged={} \
+                 budget_exceeded={}",
+                h.high_cond, h.max_cond, opts.cond_threshold, h.nonconverged, h.budget_exceeded
             );
             if h.errors() > 0 {
                 let _ = writeln!(
@@ -424,6 +445,46 @@ mod tests {
         assert_eq!(h.nonfinite_factors, 2);
         assert_eq!(h.trainer_nonfinite, 1);
         assert_eq!(h.errors(), 3);
+    }
+
+    #[test]
+    fn memory_fields_aggregate_as_peak_max_and_budget_warnings() {
+        let rep = ingest(&[
+            line(
+                "stage",
+                &[
+                    ("stage", Json::Str("factorize".into())),
+                    ("s", Json::Num(0.5)),
+                    ("peak_bytes", Json::UInt(4096)),
+                    ("cur_bytes", Json::UInt(1024)),
+                ],
+            ),
+            line(
+                "stage",
+                &[
+                    ("stage", Json::Str("factorize".into())),
+                    ("s", Json::Num(0.4)),
+                    ("peak_bytes", Json::UInt(16384)),
+                    ("cur_bytes", Json::UInt(512)),
+                ],
+            ),
+            // records without memory fields (allocator disarmed) mix in
+            line("stage", &[("stage", Json::Str("factorize".into())), ("s", Json::Num(0.1))]),
+            line(
+                "health",
+                &[
+                    ("probe", Json::Str("mem_budget".into())),
+                    ("stage", Json::Str("factorize".into())),
+                    ("peak_bytes", Json::Num(16384.0)),
+                    ("budget_bytes", Json::Num(8192.0)),
+                ],
+            ),
+        ]);
+        let run = &rep.runs["r1"];
+        assert_eq!(run.stages["factorize"].peak_bytes_max, 16384);
+        assert_eq!(run.health.budget_exceeded, 1);
+        // a budget crossing is a warning, never an error
+        assert_eq!(run.health.errors(), 0);
     }
 
     #[test]

@@ -1,0 +1,214 @@
+//! Chrome trace-event export (`coala report --trace out.json`).
+//!
+//! Converts span-stitched telemetry JSONL into the Chrome trace-event
+//! JSON format that Perfetto and `chrome://tracing` load directly —
+//! the shard-skew, backpressure, and memory numbers [`super::report`]
+//! aggregates, as a timeline you can look at:
+//!
+//! * one **pid** per process (shard processes of one run stitch side
+//!   by side, labelled by their span set via `process_name` metadata),
+//! * one **tid** per span within a process (`run`, `shard/0`, `merge`,
+//!   `trainer`, …), labelled via `thread_name` metadata,
+//! * one complete (`"ph":"X"`) event per `stage` record — start
+//!   reconstructed as `t_unix_s − s` (the sink stamps records at stage
+//!   *end*), normalized so the earliest stage start of the whole trace
+//!   is `ts = 0`, durations in microseconds,
+//! * counter (`"ph":"C"`) tracks from the memory layer: per-stage
+//!   `peak_bytes`/`cur_bytes` when `COALA_ALLOC_STATS=1` was armed,
+//!   and the engine's `queue_depth_hwm` channel gauge.
+//!
+//! Like the report, this module is *not* feature-gated — it only reads
+//! files, so any build can export traces produced elsewhere.  Torn or
+//! malformed lines are skipped, never fatal; every well-formed `stage`
+//! record maps to exactly one complete event (CI asserts this).
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// One parsed line we know how to draw.
+enum Rec {
+    Stage {
+        pid: u64,
+        span: String,
+        stage: String,
+        s: f64,
+        end_unix_s: f64,
+        run_id: String,
+        peak_bytes: Option<u64>,
+        cur_bytes: Option<u64>,
+    },
+    Counter {
+        pid: u64,
+        span: String,
+        name: String,
+        value: u64,
+        end_unix_s: f64,
+    },
+}
+
+fn parse_line(line: &str) -> Option<Rec> {
+    let rec = Json::parse(line).ok()?;
+    let field = |k: &str| rec.get(k).and_then(Json::as_str).unwrap_or("").to_string();
+    let num = |k: &str| rec.get(k).and_then(Json::as_f64);
+    let pid = rec.get("pid").and_then(Json::as_u64).unwrap_or(0);
+    match field("kind").as_str() {
+        "stage" => Some(Rec::Stage {
+            pid,
+            span: field("span"),
+            stage: field("stage"),
+            s: num("s").unwrap_or(0.0).max(0.0),
+            end_unix_s: num("t_unix_s").unwrap_or(0.0),
+            run_id: field("run_id"),
+            peak_bytes: rec.get("peak_bytes").and_then(Json::as_u64),
+            cur_bytes: rec.get("cur_bytes").and_then(Json::as_u64),
+        }),
+        "counter" => Some(Rec::Counter {
+            pid,
+            span: field("span"),
+            name: field("name"),
+            value: rec.get("value").and_then(Json::as_u64).unwrap_or(0),
+            end_unix_s: num("t_unix_s").unwrap_or(0.0),
+        }),
+        // run headers and health records carry no drawable duration
+        _ => None,
+    }
+}
+
+/// Export telemetry JSONL files as one Chrome trace-event JSON string.
+pub fn export(paths: &[String]) -> Result<String> {
+    if paths.is_empty() {
+        return Err(Error::Config("trace: no telemetry files given".into()));
+    }
+    let mut recs: Vec<Rec> = Vec::new();
+    for path in paths {
+        let text = std::fs::read_to_string(path).map_err(|e| Error::io(path, e))?;
+        recs.extend(text.lines().filter(|l| !l.trim().is_empty()).filter_map(parse_line));
+    }
+
+    // Normalize the time axis: t = 0 at the earliest stage *start*
+    // (records are stamped at stage end, so start = end − duration).
+    let t0 = recs
+        .iter()
+        .filter_map(|r| match r {
+            Rec::Stage { s, end_unix_s, .. } => Some(end_unix_s - s),
+            Rec::Counter { .. } => None,
+        })
+        .fold(f64::INFINITY, f64::min);
+    let t0 = if t0.is_finite() { t0 } else { 0.0 };
+    let us = |unix_s: f64| ((unix_s - t0) * 1e6).max(0.0);
+
+    // tid = 1-based rank of the span within its pid (sorted, so the
+    // mapping is deterministic and survives re-export).
+    let mut spans: BTreeMap<u64, Vec<String>> = BTreeMap::new();
+    for r in &recs {
+        let (Rec::Stage { pid, span, .. } | Rec::Counter { pid, span, .. }) = r;
+        let v = spans.entry(*pid).or_default();
+        if !v.contains(span) {
+            v.push(span.clone());
+        }
+    }
+    for v in spans.values_mut() {
+        v.sort();
+    }
+    let tid_of = |pid: u64, span: &str| -> u64 {
+        spans[&pid].iter().position(|s| s == span).unwrap_or(0) as u64 + 1
+    };
+
+    let mut events: Vec<Json> = Vec::new();
+    // Metadata first: name every process by its span set (a shard
+    // process shows as "coala shard/1", the merge as "coala merge").
+    for (pid, sp) in &spans {
+        events.push(Json::obj(vec![
+            ("ph", Json::Str("M".into())),
+            ("name", Json::Str("process_name".into())),
+            ("pid", Json::UInt(*pid)),
+            ("args", Json::obj(vec![("name", Json::Str(format!("coala {}", sp.join(","))))])),
+        ]));
+        for span in sp {
+            events.push(Json::obj(vec![
+                ("ph", Json::Str("M".into())),
+                ("name", Json::Str("thread_name".into())),
+                ("pid", Json::UInt(*pid)),
+                ("tid", Json::UInt(tid_of(*pid, span))),
+                ("args", Json::obj(vec![("name", Json::Str(span.clone()))])),
+            ]));
+        }
+    }
+
+    for r in &recs {
+        match r {
+            Rec::Stage { pid, span, stage, s, end_unix_s, run_id, peak_bytes, cur_bytes } => {
+                let tid = tid_of(*pid, span);
+                events.push(Json::obj(vec![
+                    ("ph", Json::Str("X".into())),
+                    ("name", Json::Str(stage.clone())),
+                    ("cat", Json::Str("stage".into())),
+                    ("pid", Json::UInt(*pid)),
+                    ("tid", Json::UInt(tid)),
+                    ("ts", Json::Num(us(end_unix_s - s))),
+                    ("dur", Json::Num(s * 1e6)),
+                    ("args", Json::obj(vec![("run_id", Json::Str(run_id.clone()))])),
+                ]));
+                if let (Some(peak), Some(cur)) = (peak_bytes, cur_bytes) {
+                    // one memory sample per instrumented stage, on its
+                    // own per-process counter track
+                    events.push(Json::obj(vec![
+                        ("ph", Json::Str("C".into())),
+                        ("name", Json::Str("memory".into())),
+                        ("pid", Json::UInt(*pid)),
+                        ("tid", Json::UInt(tid)),
+                        ("ts", Json::Num(us(*end_unix_s))),
+                        (
+                            "args",
+                            Json::obj(vec![
+                                ("peak_bytes", Json::UInt(*peak)),
+                                ("cur_bytes", Json::UInt(*cur)),
+                            ]),
+                        ),
+                    ]));
+                }
+            }
+            Rec::Counter { pid, span, name, value, end_unix_s } => {
+                // only gauges draw usefully as counter tracks; cumulative
+                // bookkeeping counters (batches, sweeps, drops) stay in
+                // the report
+                if name != "queue_depth_hwm" {
+                    continue;
+                }
+                events.push(Json::obj(vec![
+                    ("ph", Json::Str("C".into())),
+                    ("name", Json::Str(name.clone())),
+                    ("pid", Json::UInt(*pid)),
+                    ("tid", Json::UInt(tid_of(*pid, span))),
+                    ("ts", Json::Num(us(*end_unix_s))),
+                    ("args", Json::obj(vec![("batches", Json::UInt(*value))])),
+                ]));
+            }
+        }
+    }
+
+    let trace = Json::obj(vec![
+        ("displayTimeUnit", Json::Str("ms".into())),
+        ("traceEvents", Json::Arr(events)),
+    ]);
+    Ok(trace.dump())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn malformed_and_undrawable_lines_are_skipped() {
+        assert!(parse_line("not json").is_none());
+        assert!(parse_line(r#"{"kind":"run","run_id":"r1"}"#).is_none());
+        assert!(parse_line(r#"{"kind":"health","probe":"svd"}"#).is_none());
+        assert!(parse_line(r#"{"kind":"stage","stage":"capture","s":0.5,"pid":7}"#).is_some());
+    }
+
+    #[test]
+    fn export_requires_input_files() {
+        assert!(export(&[]).is_err());
+    }
+}

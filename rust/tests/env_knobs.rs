@@ -41,6 +41,38 @@ fn with_env<T>(var: &str, value: Option<&str>, f: impl FnOnce() -> T) -> T {
     f()
 }
 
+/// Two-variable variant of [`with_env`].  `ENV_LOCK` is not
+/// reentrant, so nesting `with_env` calls deadlocks — knobs that are
+/// only meaningful in combination (`COALA_MEM_BUDGET_MB` requires
+/// `COALA_ALLOC_STATS`) take the lock once and restore both.
+fn with_env2<T>(
+    var1: &str,
+    val1: Option<&str>,
+    var2: &str,
+    val2: Option<&str>,
+    f: impl FnOnce() -> T,
+) -> T {
+    let _lock = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    struct Restore(String, Option<String>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            match &self.1 {
+                Some(v) => std::env::set_var(&self.0, v),
+                None => std::env::remove_var(&self.0),
+            }
+        }
+    }
+    let _r1 = Restore(var1.to_string(), std::env::var(var1).ok());
+    let _r2 = Restore(var2.to_string(), std::env::var(var2).ok());
+    for (var, val) in [(var1, val1), (var2, val2)] {
+        match val {
+            Some(v) => std::env::set_var(var, v),
+            None => std::env::remove_var(var),
+        }
+    }
+    f()
+}
+
 fn sketch_accum() -> coala::Result<Box<dyn coala::calib::accumulate::CalibAccumulator + 'static>> {
     make_accumulator(AccumKind::Sketch, 6, AccumBackend::Host, Precision::F32)
 }
@@ -228,6 +260,103 @@ fn health_flag_valid_value_arms_or_errs_by_build() {
     });
     assert!(!on);
     assert!(!coala::telemetry::health::enabled());
+}
+
+#[test]
+fn alloc_stats_flag_rejects_garbage_on_every_build() {
+    // Same contract as COALA_HEALTH: strict flag grammar on the
+    // telemetry build, set-at-all is an error on the default build.
+    for bad in ["2", "on", "armed", " "] {
+        let err = with_env("COALA_ALLOC_STATS", Some(bad), || {
+            coala::telemetry::alloc::init_from_env().unwrap_err()
+        });
+        assert!(
+            err.to_string().contains("COALA_ALLOC_STATS"),
+            "error must name the knob for {bad:?}: {err}"
+        );
+    }
+}
+
+#[test]
+fn alloc_stats_valid_value_arms_or_errs_by_build() {
+    // The allocator gate is process-global and other tests in this
+    // binary briefly arm it, so observe-and-disarm stays inside the
+    // locked closure.
+    let (res, was_armed) = with_env("COALA_ALLOC_STATS", Some("1"), || {
+        let res = coala::telemetry::alloc::init_from_env();
+        let was_armed = coala::telemetry::alloc::armed();
+        coala::telemetry::alloc::set_armed(false);
+        (res, was_armed)
+    });
+    if cfg!(feature = "telemetry") {
+        assert!(res.unwrap(), "COALA_ALLOC_STATS=1 must arm the counters");
+        assert!(was_armed);
+    } else {
+        let err = res.unwrap_err();
+        assert!(err.to_string().contains("COALA_ALLOC_STATS"), "{err}");
+        assert!(err.to_string().contains("telemetry"), "must point at the missing feature: {err}");
+    }
+    // unset is plain off on every build
+    let (on, was_armed) = with_env("COALA_ALLOC_STATS", None, || {
+        (coala::telemetry::alloc::init_from_env().unwrap(), coala::telemetry::alloc::armed())
+    });
+    assert!(!on);
+    assert!(!was_armed);
+}
+
+#[test]
+fn mem_budget_strict_grammar_is_loud() {
+    // Garbage, fractional, negative, empty, and zero are all hard
+    // errors.  On the default build the error blames COALA_ALLOC_STATS
+    // (the first inert-but-set knob found) — loud either way.
+    for bad in ["abc", "1.5", "-3", "", "0"] {
+        let (err, was_armed) =
+            with_env2("COALA_ALLOC_STATS", Some("1"), "COALA_MEM_BUDGET_MB", Some(bad), || {
+                let err = coala::telemetry::alloc::init_from_env().unwrap_err();
+                (err, coala::telemetry::alloc::armed())
+            });
+        let knob =
+            if cfg!(feature = "telemetry") { "COALA_MEM_BUDGET_MB" } else { "COALA_ALLOC_STATS" };
+        assert!(err.to_string().contains(knob), "error must name {knob} for {bad:?}: {err}");
+        assert!(!was_armed, "a rejected config must not arm the counters ({bad:?})");
+    }
+}
+
+#[test]
+fn mem_budget_without_alloc_stats_is_a_hard_error() {
+    // A budget with no stage peaks to compare against can never take
+    // effect; the feature build demands COALA_ALLOC_STATS=1 alongside,
+    // the default build rejects the set knob outright.
+    let err = with_env2("COALA_ALLOC_STATS", None, "COALA_MEM_BUDGET_MB", Some("512"), || {
+        coala::telemetry::alloc::init_from_env().unwrap_err()
+    });
+    assert!(err.to_string().contains("COALA_MEM_BUDGET_MB"), "{err}");
+    if cfg!(feature = "telemetry") {
+        assert!(
+            err.to_string().contains("COALA_ALLOC_STATS"),
+            "must point at the missing arm flag: {err}"
+        );
+    }
+}
+
+#[test]
+fn mem_budget_valid_value_arms_by_build() {
+    let (res, was_armed, budget) =
+        with_env2("COALA_ALLOC_STATS", Some("1"), "COALA_MEM_BUDGET_MB", Some("512"), || {
+            let res = coala::telemetry::alloc::init_from_env();
+            let state = (coala::telemetry::alloc::armed(), coala::telemetry::alloc::budget_bytes());
+            coala::telemetry::alloc::set_armed(false);
+            coala::telemetry::alloc::set_budget(None);
+            (res, state.0, state.1)
+        });
+    if cfg!(feature = "telemetry") {
+        assert!(res.unwrap(), "valid pair must arm the counters");
+        assert!(was_armed);
+        assert_eq!(budget, Some(512 << 20), "512 MB budget in bytes");
+    } else {
+        let err = res.unwrap_err();
+        assert!(err.to_string().contains("telemetry"), "must point at the missing feature: {err}");
+    }
 }
 
 #[test]
